@@ -1,0 +1,155 @@
+//! THE end-to-end driver (DESIGN.md deliverable (b)/EXPERIMENTS.md):
+//! the full paper pipeline on MBV2-micro with real training budgets.
+//!
+//!   cargo run --release --example compress_mbv2 [-- --budget-frac 0.7
+//!       --pretrain-steps 600 --imp-steps 6 --finetune-steps 240 --kd=true]
+//!
+//! Stages (all cached under artifacts/runs/mbv2_w10/):
+//!   1. pretrain the vanilla network, log the loss curve
+//!   2. latency tables: analytical 2080Ti (fused+eager) AND real
+//!      measured PJRT-CPU
+//!   3. importance probes (embarrassingly parallel mask re-use)
+//!   4. two-stage DP at the budget
+//!   5. finetune the deactivated network (loss curve logged)
+//!   6. merge exactly, evaluate, compare against DepthShrinker
+//! and appends a markdown record to artifacts/reports/compress_mbv2.md.
+
+use std::path::PathBuf;
+
+use repro::baselines::depthshrinker::ds_ladder;
+use repro::coordinator::experiments::{run_ds, run_ours};
+use repro::coordinator::pipeline::{LatencyCfg, Pipeline};
+use repro::coordinator::report::{fmt_acc, fmt_ms, Table};
+use repro::data::synth::SynthSpec;
+use repro::importance::eval::ImportanceConfig;
+use repro::latency::gpu_model::ExecMode;
+use repro::runtime::engine::Engine;
+use repro::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = Engine::new(&root)?;
+    let pipe = Pipeline::new(&engine, "mbv2_w10")?;
+    let mut data = SynthSpec::imagenet100_analog(pipe.entry.input[1]);
+    data.num_classes = pipe.entry.num_classes;
+
+    let pretrain_steps = args.usize_or("pretrain-steps", 600)?;
+    let imp_steps = args.usize_or("imp-steps", 6)?;
+    let ft_steps = args.usize_or("finetune-steps", 240)?;
+    let frac = args.f64_or("budget-frac", 0.70)?;
+    let kd = args.bool_flag("kd");
+
+    println!("== compress_mbv2: full pipeline on mbv2_w10 ==");
+    let t_start = std::time::Instant::now();
+
+    // 1. pretrain
+    let (pre, base_acc) = pipe.pretrain(&data, pretrain_steps, 0.08, 1, false)?;
+    println!("[1/6] pretrained: val acc {}\n", fmt_acc(base_acc));
+
+    // 2. latency tables
+    let fused = pipe.latency_table(&LatencyCfg::default(), false)?;
+    let eager = pipe.latency_table(
+        &LatencyCfg { mode: ExecMode::Eager, ..Default::default() },
+        false,
+    )?;
+    let measured = pipe.latency_table(
+        &LatencyCfg { source: "measured".into(), mode: ExecMode::Fused, batch: 32, scale: 2000.0 },
+        false,
+    )?;
+    let vanilla_sim = pipe.vanilla_latency_ms(&fused)?;
+    let vanilla_eager = pipe.vanilla_latency_ms(&eager)?;
+    let vanilla_cpu = pipe.vanilla_latency_ms(&measured)?;
+    println!(
+        "[2/6] latency tables: sim-fused {} ms, sim-eager {} ms, measured-cpu {} ms\n",
+        fmt_ms(vanilla_sim),
+        fmt_ms(vanilla_eager),
+        fmt_ms(vanilla_cpu)
+    );
+
+    // 3. importance
+    let icfg = ImportanceConfig { steps: imp_steps, lr: 0.01, verbose: true, ..Default::default() };
+    let imp = pipe.importance(&data, &pre, base_acc, &icfg, false)?;
+    println!("[3/6] importance table: {} probes\n", imp.len());
+
+    // 4-6. ours at the budget + DS comparison at the nearest rung
+    let t0 = vanilla_sim * frac;
+    let (ours, out) = run_ours(&pipe, &data, Some(&pre), &fused, &imp, t0, 1.6, ft_steps, kd)?;
+    println!("[4-6/6] ours: {}", out.summary());
+
+    let ladder = ds_ladder(&pipe.cfg, &imp)?;
+    let ds = ladder
+        .iter()
+        .min_by(|a, b| {
+            let la = pipe.merged_latency_ms(
+                &plan_of(a, &pipe, &fused), &fused).unwrap_or(f64::MAX);
+            let lb = pipe.merged_latency_ms(
+                &plan_of(b, &pipe, &fused), &fused).unwrap_or(f64::MAX);
+            (la - ours.lat_ms).abs().partial_cmp(&(lb - ours.lat_ms).abs()).unwrap()
+        })
+        .unwrap();
+    let ds_res = run_ds(&pipe, &data, Some(&pre), &fused, ds, ft_steps, kd)?;
+
+    let mut t = Table::new(
+        &format!("compress_mbv2 @ T0 = {:.2} ms ({}x){}", t0, frac, if kd { " +KD" } else { "" }),
+        &["network", "acc (%)", "sim 2080Ti (ms)", "measured CPU (ms)", "speedup", "depth"],
+    );
+    let l = pipe.cfg.spec.l();
+    let all: Vec<usize> = (1..l).collect();
+    let segs_v = repro::merge::plan::segments_from_s(l, &all);
+    t.row(vec![
+        "mbv2_w10".into(),
+        fmt_acc(base_acc),
+        fmt_ms(vanilla_sim),
+        fmt_ms(measured.network_ms(&segs_v).unwrap()),
+        "1.00x".into(),
+        l.to_string(),
+    ]);
+    for r in [&ds_res, &ours] {
+        let segs = repro::merge::plan::segments_from_s(l, &r.s);
+        t.row(vec![
+            r.name.clone(),
+            r.acc.map(fmt_acc).unwrap_or("-".into()),
+            fmt_ms(r.lat_ms),
+            fmt_ms(measured.network_ms(&segs).unwrap()),
+            format!("{:.2}x", vanilla_sim / r.lat_ms),
+            r.depth.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("total wall time: {:.1} s", t_start.elapsed().as_secs_f64());
+
+    // persist for EXPERIMENTS.md
+    let dir = root.join("reports");
+    std::fs::create_dir_all(&dir)?;
+    let mut md = t.render_markdown();
+    md.push_str(&format!(
+        "\n- pretrain {} steps, importance {} steps/probe, finetune {} steps, kd={}\n\
+         - ours: A={:?}\n- ours: S={:?}\n- wall time {:.1}s\n",
+        pretrain_steps, imp_steps, ft_steps, kd, out.a, out.s,
+        t_start.elapsed().as_secs_f64()
+    ));
+    let path = dir.join("compress_mbv2.md");
+    let old = std::fs::read_to_string(&path).unwrap_or_default();
+    std::fs::write(&path, old + &md)?;
+    println!("appended record to {}", path.display());
+    Ok(())
+}
+
+fn plan_of(
+    ds: &repro::baselines::depthshrinker::DsPattern,
+    pipe: &Pipeline,
+    lat: &repro::latency::table::BlockLatencies,
+) -> repro::coordinator::pipeline::PlanOutcome {
+    repro::coordinator::pipeline::PlanOutcome {
+        arch: pipe.arch.clone(),
+        t0_ms: 0.0,
+        alpha: 0.0,
+        a: ds.a.clone(),
+        s: ds.s.clone(),
+        b: ds.a.clone(),
+        objective: 0.0,
+        est_latency_ms: 0.0,
+        lat_source: lat.source.clone(),
+    }
+}

@@ -1,0 +1,71 @@
+//! Figure 3 data generator: sweep the latency budget T0 and compare the
+//! network merged according to the jointly-optimized S against the
+//! network naively merged according to A (the paper's ablation §5.3 —
+//! "about 30% faster" with S).
+//!
+//!   cargo run --release --example sweep_budgets [-- --arch mbv2_w10
+//!       --points 12]
+
+use std::path::PathBuf;
+
+use repro::coordinator::experiments::{greedy_merge, proxy_importance, segments_ms};
+use repro::coordinator::pipeline::{LatencyCfg, Pipeline};
+use repro::coordinator::report::Table;
+use repro::importance::table::ImpTable;
+use repro::merge::plan::segments_from_s;
+use repro::runtime::engine::Engine;
+use repro::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = Engine::new(&root)?;
+    let arch = args.str_or("arch", "mbv2_w10");
+    let points = args.usize_or("points", 12)?;
+    let pipe = Pipeline::new(&engine, &arch)?;
+    let lat = pipe.latency_table(&LatencyCfg::default(), false)?;
+    let vanilla = pipe.vanilla_latency_ms(&lat)?;
+
+    // trained importance when the pipeline ran; structural proxy else
+    let imp_path = pipe.dir.join("imp_s6.json");
+    let (imp, src) = if imp_path.exists() {
+        (ImpTable::load(&imp_path)?, "trained")
+    } else {
+        (proxy_importance(&pipe.cfg), "proxy")
+    };
+
+    println!("== Figure 3 sweep on {arch} (importance: {src}) ==");
+    println!("vanilla: {vanilla:.2} ms\n");
+    let mut t = Table::new(
+        "latency of merge-by-S vs merge-by-A across budgets",
+        &["T0 (ms)", "by-S (ms)", "by-A (ms)", "A-penalty", "|A|", "|S|"],
+    );
+    let mut csv = String::from("t0_ms,by_s_ms,by_a_ms\n");
+    for n in 0..points {
+        let frac = 0.92 - 0.45 * (n as f64 / (points - 1).max(1) as f64);
+        let t0 = vanilla * frac;
+        let Ok(out) = pipe.plan(&lat, &imp, t0, 1.6, true) else {
+            continue;
+        };
+        let s_segs = segments_from_s(pipe.cfg.spec.l(), &out.s);
+        let a_segs = greedy_merge(&pipe.cfg, &out.a);
+        let s_ms = segments_ms(&lat, &s_segs)?;
+        let a_ms = segments_ms(&lat, &a_segs)?;
+        t.row(vec![
+            format!("{t0:.2}"),
+            format!("{s_ms:.2}"),
+            format!("{a_ms:.2}"),
+            format!("{:+.1}%", 100.0 * (a_ms / s_ms - 1.0)),
+            out.a.len().to_string(),
+            out.s.len().to_string(),
+        ]);
+        csv.push_str(&format!("{t0:.4},{s_ms:.4},{a_ms:.4}\n"));
+    }
+    print!("{}", t.render());
+    let dir = root.join("reports");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("figure3_{arch}.csv"));
+    std::fs::write(&path, csv)?;
+    println!("series written to {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,358 @@
+"""AOT driver: lower every L2 graph to HLO text + write the manifest.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Two passes:
+
+  pass 1 (default)      — per-arch artifacts: init / train / eval / KD /
+                          infer graphs, per-block latency probes
+                          (fused + eager), eager BN/act probes, compose
+                          golden fixtures, arch configs, manifest.
+  pass 2 (--plans-only) — for every artifacts/plans/*.json written by the
+                          rust planner: the padding-reordered finetune
+                          graph and the merged-network infer/eval graphs.
+                          (Re-running `make artifacts` picks these up.)
+
+Python runs ONLY here; the rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import specs as S
+
+TRAIN_BATCH = 16
+EVAL_BATCH = 128
+LATENCY_BATCH = 32
+INFER_BATCHES = (1, 8, 32)
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest: dict = {"archs": {}, "plans": {}, "fixtures": {}}
+        os.makedirs(out_dir, exist_ok=True)
+        os.makedirs(os.path.join(out_dir, "hlo"), exist_ok=True)
+        os.makedirs(os.path.join(out_dir, "archs"), exist_ok=True)
+        os.makedirs(os.path.join(out_dir, "plans"), exist_ok=True)
+        os.makedirs(os.path.join(out_dir, "fixtures"), exist_ok=True)
+
+    def emit(self, name: str, fn, example_args) -> dict:
+        """Lower fn(*example_args) and record its calling convention."""
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        rel = os.path.join("hlo", f"{name}.hlo.txt")
+        with open(os.path.join(self.out_dir, rel), "w") as f:
+            f.write(text)
+        flat, _ = jax.tree_util.tree_flatten(example_args)
+        inputs = [
+            {"shape": list(a.shape), "dtype": str(a.dtype)} for a in flat
+        ]
+        out_flat, _ = jax.tree_util.tree_flatten(
+            jax.eval_shape(fn, *example_args)
+        )
+        outputs = [
+            {"shape": list(a.shape), "dtype": str(a.dtype)} for a in out_flat
+        ]
+        print(f"  emitted {name}: {len(inputs)} in / {len(outputs)} out")
+        return {"file": rel, "inputs": inputs, "outputs": outputs}
+
+    def save(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        # pass 2 merges into an existing manifest
+        if os.path.exists(path):
+            with open(path) as f:
+                old = json.load(f)
+            for k in ("archs", "plans", "fixtures"):
+                old.setdefault(k, {}).update(self.manifest.get(k, {}))
+            self.manifest = old
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"wrote {path}")
+
+
+def _zeros(defs):
+    return [jnp.zeros(shape, F32) for _, shape in defs]
+
+
+def emit_arch(em: Emitter, name: str, *, probes: bool = True):
+    spec = S.BUILDERS[name]()
+    cfg = S.arch_config(spec)
+    cfg_rel = os.path.join("archs", f"{name}.json")
+    with open(os.path.join(em.out_dir, cfg_rel), "w") as f:
+        json.dump(cfg, f, indent=1)
+
+    train_defs, state_defs = M.param_defs(spec)
+    params = _zeros(train_defs)
+    state = _zeros(state_defs)
+    moms = _zeros(train_defs)
+    L = spec.L
+    mask = jnp.zeros((L,), F32)
+    lr = jnp.zeros((), F32)
+
+    entry: dict = {
+        "config": cfg_rel,
+        "L": L,
+        "num_classes": spec.num_classes,
+        "input": [spec.input_ch, spec.input_hw, spec.input_hw],
+        "params": [{"name": n, "shape": list(s)} for n, s in train_defs],
+        "state": [{"name": n, "shape": list(s)} for n, s in state_defs],
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "latency_batch": LATENCY_BATCH,
+        "artifacts": {},
+        "blocks_fused": {},
+        "blocks_eager": {},
+        "bn_probes": {},
+        "act_probes": {},
+    }
+    A = entry["artifacts"]
+
+    xt = jnp.zeros((TRAIN_BATCH, spec.input_ch, spec.input_hw, spec.input_hw), F32)
+    yt = jnp.zeros((TRAIN_BATCH,), I32)
+    xe = jnp.zeros((EVAL_BATCH, spec.input_ch, spec.input_hw, spec.input_hw), F32)
+    ye = jnp.zeros((EVAL_BATCH,), I32)
+
+    def init_fn(seed):
+        p, st = M.init_params(spec, jax.random.PRNGKey(seed))
+        return tuple(p) + tuple(st)
+
+    A["init"] = em.emit(f"{name}_init", init_fn, (jnp.zeros((), I32),))
+
+    train_step = M.make_train_step(spec)
+    A["train_step"] = em.emit(
+        f"{name}_train", train_step, (params, moms, state, xt, yt, mask, lr)
+    )
+
+    kd_step = M.make_kd_train_step(spec)
+    A["kd_step"] = em.emit(
+        f"{name}_kd",
+        kd_step,
+        (params, moms, state, params, state, xt, yt, mask, lr),
+    )
+
+    eval_step = M.make_eval_step(spec)
+    A["eval_step"] = em.emit(
+        f"{name}_eval", eval_step, (params, state, xe, ye, mask)
+    )
+
+    for b in INFER_BATCHES:
+        xb = jnp.zeros((b, spec.input_ch, spec.input_hw, spec.input_hw), F32)
+        infer = M.make_infer(spec)
+        A[f"infer_b{b}"] = em.emit(
+            f"{name}_infer_b{b}", infer, (params, state, xb, mask)
+        )
+
+    if probes:
+        shapes_seen = set()
+        for blk in cfg["blocks"]:
+            key = f'{blk["i"]}_{blk["j"]}'
+            for fused in (True, False):
+                fn, x_shape, w_shape = M.make_block_probe(
+                    blk, batch=LATENCY_BATCH, fused=fused
+                )
+                args = (
+                    jnp.zeros(x_shape, F32),
+                    jnp.zeros(w_shape, F32),
+                ) + ((jnp.zeros((blk["c_out"],), F32),) if fused else ())
+                tag = "fused" if fused else "eager"
+                rec = em.emit(f"{name}_blk_{key}_{tag}", fn, args)
+                entry["blocks_fused" if fused else "blocks_eager"][key] = rec
+            shapes_seen.add((blk["c_out"], blk["h_out"], blk["w_out"]))
+        for c, h, w in sorted(shapes_seen):
+            skey = f"{c}_{h}_{w}"
+            fn, x_shape = M.make_bn_probe(c, h, w, batch=LATENCY_BATCH)
+            cvec = jnp.zeros((c,), F32)
+            entry["bn_probes"][skey] = em.emit(
+                f"{name}_bn_{skey}",
+                fn,
+                (jnp.zeros(x_shape, F32), cvec, cvec, cvec, cvec),
+            )
+            fn, x_shape = M.make_act_probe(c, h, w, batch=LATENCY_BATCH)
+            entry["act_probes"][skey] = em.emit(
+                f"{name}_act_{skey}", fn, (jnp.zeros(x_shape, F32),)
+            )
+
+    em.manifest["archs"][name] = entry
+
+
+def emit_compose_fixtures(em: Emitter):
+    """Golden vectors: rust merge/compose.rs must reproduce these exactly."""
+    rng = np.random.default_rng(7)
+    from .kernels.merge import compose, compose_bias
+
+    cases = []
+    for ci, cm, co, k1, k2, s1 in [
+        (3, 4, 5, 1, 3, 1),
+        (4, 3, 2, 3, 1, 1),
+        (2, 3, 4, 3, 3, 1),
+        (3, 2, 3, 3, 1, 2),
+        (2, 2, 2, 1, 3, 2),
+    ]:
+        t1 = rng.standard_normal((cm, ci, k1, k1)).astype(np.float32)
+        t2 = rng.standard_normal((co, cm, k2, k2)).astype(np.float32)
+        b1 = rng.standard_normal((cm,)).astype(np.float32)
+        b2 = rng.standard_normal((co,)).astype(np.float32)
+        tm = np.asarray(compose(jnp.array(t2), jnp.array(t1), s1=s1))
+        bm = np.asarray(compose_bias(jnp.array(t2), jnp.array(b1), jnp.array(b2)))
+        cases.append(
+            {
+                "s1": s1,
+                "t1": t1.tolist(),
+                "t2": t2.tolist(),
+                "b1": b1.tolist(),
+                "b2": b2.tolist(),
+                "merged_w": tm.tolist(),
+                "merged_b": bm.tolist(),
+            }
+        )
+    rel = os.path.join("fixtures", "compose_golden.json")
+    with open(os.path.join(em.out_dir, rel), "w") as f:
+        json.dump(cases, f)
+    em.manifest["fixtures"]["compose_golden"] = rel
+    print(f"  emitted {rel} ({len(cases)} cases)")
+
+
+def emit_plan(em: Emitter, plan_path: str):
+    """Pass 2: artifacts for one rust-written compression plan.
+
+    Plan JSON (written by `repro plan`):
+      { "name", "arch", "A": [...], "S": [...],
+        "pad_plan": {layer_idx: pad, ...},          # E.2 reordering
+        "merged": {"layers": [...see model.merged_forward...],
+                   "params": [{"name","shape"}...]} }
+    """
+    with open(plan_path) as f:
+        plan = json.load(f)
+    name = plan["name"]
+    spec = S.BUILDERS[plan["arch"]]()
+    pad_plan = {int(k): v for k, v in plan.get("pad_plan", {}).items()}
+
+    train_defs, state_defs = M.param_defs(spec)
+    params, state, moms = _zeros(train_defs), _zeros(state_defs), _zeros(train_defs)
+    mask = jnp.zeros((spec.L,), F32)
+    lr = jnp.zeros((), F32)
+    xt = jnp.zeros((TRAIN_BATCH, spec.input_ch, spec.input_hw, spec.input_hw), F32)
+    yt = jnp.zeros((TRAIN_BATCH,), I32)
+    xe = jnp.zeros((EVAL_BATCH, spec.input_ch, spec.input_hw, spec.input_hw), F32)
+    ye = jnp.zeros((EVAL_BATCH,), I32)
+
+    entry: dict = {"arch": plan["arch"], "artifacts": {}}
+    A = entry["artifacts"]
+
+    # padding-reordered finetune + eval (the function later merged, exactly)
+    step = M.make_train_step(spec, pad_plan=pad_plan)
+    A["finetune"] = em.emit(
+        f"plan_{name}_finetune", step, (params, moms, state, xt, yt, mask, lr)
+    )
+    kd = M.make_kd_train_step(spec, pad_plan=pad_plan)
+    A["finetune_kd"] = em.emit(
+        f"plan_{name}_kd", kd, (params, moms, state, params, state, xt, yt, mask, lr)
+    )
+
+    def eval_reordered(params, state, x, y, mask):
+        logits, _ = M.forward(
+            spec, params, state, x, mask, train=False, use_pallas=False,
+            pad_plan=pad_plan,
+        )
+        logp = jax.nn.log_softmax(logits)
+        onehot = jax.nn.one_hot(y, spec.num_classes)
+        return -jnp.sum(onehot * logp), jnp.sum(
+            (jnp.argmax(logits, axis=-1) == y).astype(F32)
+        )
+
+    A["eval"] = em.emit(
+        f"plan_{name}_eval", eval_reordered, (params, state, xe, ye, mask)
+    )
+
+    # merged network: infer at serving batches + eval
+    mspec = plan["merged"]
+    mparams = [
+        jnp.zeros(tuple(p["shape"]), F32) for p in mspec["params"]
+    ]
+    for b in INFER_BATCHES:
+        xb = jnp.zeros((b, spec.input_ch, spec.input_hw, spec.input_hw), F32)
+        A[f"infer_merged_b{b}"] = em.emit(
+            f"plan_{name}_infer_b{b}", M.make_merged_infer(mspec), (mparams, xb)
+        )
+
+    def eval_merged(params, x, y):
+        logits = M.merged_forward(mspec, params, x)
+        logp = jax.nn.log_softmax(logits)
+        onehot = jax.nn.one_hot(y, spec.num_classes)
+        return -jnp.sum(onehot * logp), jnp.sum(
+            (jnp.argmax(logits, axis=-1) == y).astype(F32)
+        )
+
+    A["eval_merged"] = em.emit(
+        f"plan_{name}_eval_merged", eval_merged, (mparams, xe, ye)
+    )
+    em.manifest["plans"][name] = entry
+
+
+DEFAULT_ARCHS = [
+    "mbv2_w10",
+    "mbv2_w14",
+    "vgg_micro",
+    "mbv2_w10_l1u75",
+    "mbv2_w10_amc70",
+    "mbv2_w14_l1u65",
+    "mbv2_w14_meta10",
+]
+# pruned variants never enter the DP — skip their O(L^2) probe artifacts
+PROBE_ARCHS = {"mbv2_w10", "mbv2_w14", "vgg_micro"}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--archs", default=",".join(DEFAULT_ARCHS))
+    ap.add_argument("--plans-only", action="store_true")
+    args = ap.parse_args()
+
+    em = Emitter(args.out_dir)
+    if not args.plans_only:
+        for name in args.archs.split(","):
+            name = name.strip()
+            if not name:
+                continue
+            print(f"== arch {name}")
+            emit_arch(em, name, probes=name in PROBE_ARCHS)
+        emit_compose_fixtures(em)
+
+    plan_dir = os.path.join(args.out_dir, "plans")
+    if os.path.isdir(plan_dir):
+        for fn in sorted(os.listdir(plan_dir)):
+            if fn.endswith(".json"):
+                print(f"== plan {fn}")
+                emit_plan(em, os.path.join(plan_dir, fn))
+    em.save()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,172 @@
+"""Convolution library for the L2 graphs.
+
+Three conv implementations, chosen per graph (DESIGN.md §5):
+
+  * Pallas im2col + tiled-matmul (L1 kernel) — the MXU-oriented hot path.
+    Used in the batch-1 serving artifacts and the kernel benches.  On
+    this CPU-only image it runs in interpret mode, whose wall-clock is an
+    emulation artifact — latency *tables* therefore come from the
+    XLA-fused path and the analytical GPU model instead.
+  * lax.conv_general_dilated — dense convs in train/eval/probe graphs
+    ("TensorRT-analog": XLA fuses conv+bias+act into one kernel).
+  * shift-multiply depthwise — XLA-CPU's feature_group_count path is
+    ~25x slower than 9 shifted fused multiply-adds; depthwise convs are
+    exactly the memory-bound ops the paper's method eliminates, so we
+    give the *baseline* its best-possible implementation.
+
+Train/eval graphs run NHWC internally (~2x faster pointwise convs on
+CPU); parameters stay OIHW everywhere so the rust side sees one layout.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.matmul import matmul_vjp
+
+
+def im2col(x: jax.Array, k: int, stride: int, pad: int):
+    """Extract conv patches: (N, C, H, W) -> (N*OH*OW, C*k*k)."""
+    patches = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(k, k),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (N, C*k*k, OH, OW)
+    n, ckk, oh, ow = patches.shape
+    cols = patches.transpose(0, 2, 3, 1).reshape(n * oh * ow, ckk)
+    return cols, (n, oh, ow)
+
+
+def _conv_pallas(x, w, stride, pad):
+    co, ci, kh, kw = w.shape
+    cols, (n, oh, ow) = im2col(x, kh, stride, pad)
+    wmat = w.reshape(co, ci * kh * kw).T
+    out = matmul_vjp(cols, wmat)
+    return out.reshape(n, oh, ow, co).transpose(0, 3, 1, 2)
+
+
+def _conv_dw_shift(x, w, stride, pad, layout):
+    """Depthwise conv as k*k shifted multiply-adds (w: (C, 1, k, k)).
+
+    For stride > 1 we compute stride 1 and subsample: the gradient of a
+    single strided output slice is one efficient interior-pad op, whereas
+    strided *input* slices under autodiff become k*k scatters (~4x slower
+    measured on XLA-CPU).
+    """
+    if stride > 1:
+        full = _conv_dw_shift(x, w, 1, pad, layout)
+        return (
+            full[:, :, ::stride, ::stride]
+            if layout == "NCHW"
+            else full[:, ::stride, ::stride, :]
+        )
+    c, _, kh, kw = w.shape
+    if layout == "NCHW":
+        xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+        h, wd = x.shape[2] + 2 * pad, x.shape[3] + 2 * pad
+        oh = (h - kh) // stride + 1
+        ow = (wd - kw) // stride + 1
+        out = jnp.zeros((x.shape[0], c, oh, ow), x.dtype)
+        for dy in range(kh):
+            for dx in range(kw):
+                sl = xp[:, :, dy : dy + (oh - 1) * stride + 1 : stride,
+                        dx : dx + (ow - 1) * stride + 1 : stride]
+                out = out + sl * w[:, 0, dy, dx][None, :, None, None]
+    else:  # NHWC
+        xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+        h, wd = x.shape[1] + 2 * pad, x.shape[2] + 2 * pad
+        oh = (h - kh) // stride + 1
+        ow = (wd - kw) // stride + 1
+        out = jnp.zeros((x.shape[0], oh, ow, c), x.dtype)
+        for dy in range(kh):
+            for dx in range(kw):
+                sl = xp[:, dy : dy + (oh - 1) * stride + 1 : stride,
+                        dx : dx + (ow - 1) * stride + 1 : stride, :]
+                out = out + sl * w[:, 0, dy, dx][None, None, None, :]
+    return out
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    groups: int = 1,
+    use_pallas: bool = False,
+    layout: str = "NCHW",
+) -> jax.Array:
+    """Conv with OIHW weights; activations in `layout`."""
+    c_axis = 1 if layout == "NCHW" else 3
+    if groups > 1 and groups == x.shape[c_axis] and w.shape[0] == groups:
+        out = _conv_dw_shift(x, w, stride, pad, layout)
+    elif groups == 1 and use_pallas:
+        if layout != "NCHW":
+            raise ValueError("pallas conv path is NCHW-only")
+        out = _conv_pallas(x, w, stride, pad)
+    else:
+        dn = (layout, "OIHW", layout)
+        out = lax.conv_general_dilated(
+            x,
+            w,
+            window_strides=(stride, stride),
+            padding=[(pad, pad), (pad, pad)],
+            dimension_numbers=dn,
+            feature_group_count=groups,
+        )
+    if b is not None:
+        shape = [1, 1, 1, 1]
+        shape[c_axis] = b.shape[0]
+        out = out + b.reshape(shape)
+    return out
+
+
+def batch_norm(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    running_mean: jax.Array,
+    running_var: jax.Array,
+    *,
+    train: bool,
+    momentum: float = 0.9,
+    eps: float = 1e-5,
+    layout: str = "NCHW",
+):
+    """BatchNorm over the channel dim; returns (y, new_mean, new_var)."""
+    axes = (0, 2, 3) if layout == "NCHW" else (0, 1, 2)
+    c_axis = 1 if layout == "NCHW" else 3
+    if train:
+        mean = jnp.mean(x, axis=axes)
+        var = jnp.var(x, axis=axes)
+        new_mean = momentum * running_mean + (1.0 - momentum) * mean
+        new_var = momentum * running_var + (1.0 - momentum) * var
+    else:
+        mean, var = running_mean, running_var
+        new_mean, new_var = running_mean, running_var
+    shape = [1, 1, 1, 1]
+    shape[c_axis] = x.shape[c_axis]
+    inv = lax.rsqrt(var + eps).reshape(shape)
+    y = (x - mean.reshape(shape)) * inv * gamma.reshape(shape) + beta.reshape(shape)
+    return y, new_mean, new_var
+
+
+def masked_act(x: jax.Array, m: jax.Array) -> jax.Array:
+    """The paper's search-space primitive: act(x) = m*relu6(x) + (1-m)*x.
+
+    m is a scalar in {0, 1} (one entry of the activation-mask vector);
+    because replacing sigma with id never changes shapes, a single AOT
+    artifact covers every (A, B, d) pattern the DP explores — including
+    *adding* a ReLU6 at linear-bottleneck boundaries (Appendix B.1).
+    """
+    return m * jnp.clip(x, 0.0, 6.0) + (1.0 - m) * x
+
+
+def max_pool_2x2(x: jax.Array, layout: str = "NCHW") -> jax.Array:
+    dims = (1, 1, 2, 2) if layout == "NCHW" else (1, 2, 2, 1)
+    return lax.reduce_window(x, -jnp.inf, lax.max, dims, dims, "VALID")

@@ -1,0 +1,122 @@
+"""L1 Pallas kernel: tiled matmul — the MXU hot-spot of the merged network.
+
+Every dense convolution in the L2 graphs is lowered to `matmul` below via
+im2col (see `compile.convlib`).  The paper's depth-compression insight on
+TPU terms: a chain of thin, memory-bound ops (depthwise convs, pointwise
+convs) is replaced by ONE large dense conv == one large matmul that the
+MXU systolic array can actually saturate.  The HBM<->VMEM schedule the
+paper expressed with TensorRT kernel fusion is expressed here with a
+3-D (m, n, k) grid of BlockSpecs and an f32 VMEM accumulator.
+
+`interpret=True` always: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret-mode lowers the kernel to plain HLO (a fori-loop
+of dynamic-sliced block matmuls) that the rust runtime executes.
+Correctness is pinned against `kernels.ref.matmul_ref` by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default tile sizes.  On a real TPU these would be multiples of the
+# (8, 128) f32 register tiling and sized so x-tile + y-tile + acc-tile
+# (3 * 128*128*4 B = 192 KiB) sit comfortably in 16 MiB VMEM with room
+# for double buffering.  See DESIGN.md §Hardware-Adaptation.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    """One (m, n, k) grid step: acc += x_tile @ y_tile; flush at last k."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k")
+)
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+) -> jax.Array:
+    """Compute ``x @ y`` with the Pallas tiled kernel.
+
+    Inputs of arbitrary (M, K) x (K, N) are zero-padded up to tile
+    multiples; the result is sliced back.  f32 accumulation throughout.
+    """
+    if x.ndim != 2 or y.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape} @ {y.shape}")
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+
+    bm = min(block_m, _ceil_to(m, 8))
+    bn = min(block_n, _ceil_to(n, 8))
+    bk = min(block_k, _ceil_to(k, 8))
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    n_k = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: dX = g @ Y^T, dY = X^T @ g — all three matmuls run
+# on the same Pallas kernel so the AOT'd backward pass exercises it too.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def matmul_vjp(x: jax.Array, y: jax.Array) -> jax.Array:
+    return matmul(x, y)
+
+
+def _fwd(x, y):
+    return matmul(x, y), (x, y)
+
+
+def _bwd(res, g):
+    x, y = res
+    return matmul(g, y.T), matmul(x.T, g)
+
+
+matmul_vjp.defvjp(_fwd, _bwd)

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: convolution-kernel composition (the merge operator).
+
+The paper's central algebraic tool is that two consecutive convolutions
+(cross-correlations in DL convention) compose into one:
+
+    y = x (*) th1 ; z = y (*) th2   ==>   z = x (*) th'   with
+    th'[o, i, w] = sum_m sum_v th2[o, m, v] * th1[m, i, w - s1*v]
+
+i.e. th' is the *convolution* (not correlation) of the two kernels along
+the spatial dims, summed over the middle channel m, with th2's taps
+dilated by the first conv's stride s1.  Merged kernel size
+k' = s1*(k2-1) + k1, merged stride s' = s1*s2.
+
+This Pallas kernel parallelizes over the merged kernel's spatial taps
+(wy, wx): each grid cell reduces over the valid (vy, vx) shifts with a
+(Co x Cm) @ (Cm x Ci) matmul — the merge is itself a batched-small-matmul
+on the MXU.  interpret=True for CPU-PJRT execution; the pure-jnp oracle
+is `kernels.ref.compose_ref` and the pure-rust mirror is
+`rust/src/merge/compose.rs` (cross-checked by an integration test).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compose_kernel(t2_ref, t1_ref, o_ref, *, k1: int, k2: int, s1: int):
+    wy = pl.program_id(0)
+    wx = pl.program_id(1)
+    t2 = t2_ref[...]  # (Co, Cm, k2, k2)
+    t1 = t1_ref[...]  # (Cm, Ci, k1, k1)
+    co, _cm = t2.shape[0], t2.shape[1]
+    ci = t1.shape[1]
+    acc = jnp.zeros((co, ci), jnp.float32)
+    for vy in range(k2):
+        for vx in range(k2):
+            uy = wy - s1 * vy
+            ux = wx - s1 * vx
+            valid = (uy >= 0) & (uy < k1) & (ux >= 0) & (ux < k1)
+            uy_c = jnp.clip(uy, 0, k1 - 1)
+            ux_c = jnp.clip(ux, 0, k1 - 1)
+            a = t2[:, :, vy, vx]  # (Co, Cm)
+            b = t1[:, :, uy_c, ux_c]  # (Cm, Ci)
+            term = jnp.dot(a, b, preferred_element_type=jnp.float32)
+            acc = acc + jnp.where(valid, term, 0.0)
+    o_ref[...] = acc[:, :, None, None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("s1",))
+def compose(t2: jax.Array, t1: jax.Array, *, s1: int = 1) -> jax.Array:
+    """Merged kernel of ``conv(th2) o conv(th1)`` (th1 applied first).
+
+    Args:
+      t2: second conv kernel, shape (Co, Cm, k2, k2), dense (groups=1).
+      t1: first conv kernel, shape (Cm, Ci, k1, k1), dense (groups=1).
+      s1: stride of the first conv (dilates th2's taps).
+
+    Returns:
+      Merged kernel of shape (Co, Ci, k', k') with k' = s1*(k2-1) + k1.
+    """
+    co, cm2, k2, _ = t2.shape
+    cm1, ci, k1, _ = t1.shape
+    if cm1 != cm2:
+        raise ValueError(f"middle-channel mismatch: {t2.shape} o {t1.shape}")
+    kp = s1 * (k2 - 1) + k1
+    return pl.pallas_call(
+        functools.partial(_compose_kernel, k1=k1, k2=k2, s1=s1),
+        grid=(kp, kp),
+        in_specs=[
+            pl.BlockSpec((co, cm2, k2, k2), lambda wy, wx: (0, 0, 0, 0)),
+            pl.BlockSpec((cm1, ci, k1, k1), lambda wy, wx: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((co, ci, 1, 1), lambda wy, wx: (0, 0, wy, wx)),
+        out_shape=jax.ShapeDtypeStruct((co, ci, kp, kp), t2.dtype),
+        interpret=True,
+    )(t2, t1)
+
+
+def compose_bias(t2: jax.Array, b1: jax.Array, b2: jax.Array) -> jax.Array:
+    """Merged bias: b'[o] = b2[o] + sum_{m,vy,vx} th2[o,m,vy,vx] * b1[m].
+
+    Exact under padding reordering (all zero-padding applied before the
+    first conv of the segment) — see Appendix E.2 and DESIGN.md §5.
+    """
+    return b2 + jnp.einsum("omyx,m->o", t2, b1)

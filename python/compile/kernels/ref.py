@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Everything here is written with `jax.lax` / `jnp` primitives only (no
+Pallas), in the most literal form possible, so that a disagreement
+between kernel and oracle always indicts the kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.matmul(x, y)
+
+
+def conv2d_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    groups: int = 1,
+) -> jax.Array:
+    """NCHW cross-correlation via lax.conv_general_dilated."""
+    out = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups,
+    )
+    if b is not None:
+        out = out + b[None, :, None, None]
+    return out
+
+
+def expand_grouped(w: jax.Array, groups: int) -> jax.Array:
+    """Expand a grouped-conv kernel (O, I/g, k, k) to dense (O, I, k, k).
+
+    Merging a grouped conv with a neighbour requires the dense form: the
+    dense kernel is block-diagonal over the group partition.
+    """
+    if groups == 1:
+        return w
+    o, ig, kh, kw = w.shape
+    og = o // groups
+    i = ig * groups
+    dense = jnp.zeros((o, i, kh, kw), w.dtype)
+    for g in range(groups):
+        dense = dense.at[
+            g * og : (g + 1) * og, g * ig : (g + 1) * ig
+        ].set(w[g * og : (g + 1) * og])
+    return dense
+
+
+def compose_ref(t2: jax.Array, t1: jax.Array, *, s1: int = 1) -> jax.Array:
+    """Literal-loop oracle for the merged kernel.
+
+    th'[o,i,wy,wx] = sum_m sum_{vy,vx} th2[o,m,vy,vx] th1[m,i,wy-s1*vy,wx-s1*vx]
+    """
+    co, cm, k2, _ = t2.shape
+    _, ci, k1, _ = t1.shape
+    kp = s1 * (k2 - 1) + k1
+    out = jnp.zeros((co, ci, kp, kp), jnp.float32)
+    for vy in range(k2):
+        for vx in range(k2):
+            for uy in range(k1):
+                for ux in range(k1):
+                    wy = s1 * vy + uy
+                    wx = s1 * vx + ux
+                    out = out.at[:, :, wy, wx].add(
+                        jnp.einsum("om,mi->oi", t2[:, :, vy, vx], t1[:, :, uy, ux])
+                    )
+    return out
+
+
+def compose_bias_ref(t2: jax.Array, b1: jax.Array, b2: jax.Array) -> jax.Array:
+    return b2 + jnp.einsum("omyx,m->o", t2, b1)

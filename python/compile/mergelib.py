@@ -1,0 +1,159 @@
+"""Merge engine (python mirror): BN fusion, kernel composition, skip
+fusion, padding reordering — Appendix E of the paper.
+
+The runtime implementation lives in `rust/src/merge/` (it must run on
+finetuned weights without python); this module exists to (a) prove
+end-to-end merge exactness in pytest against the L2 graphs, and (b) emit
+golden fixtures that pin the rust implementation to the same numbers.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import specs as S
+from .kernels.ref import compose_ref, expand_grouped
+
+BN_EPS = 1e-5
+
+
+def bn_fuse(w, gamma, beta, mean, var, eps: float = BN_EPS):
+    """Fold BN into the preceding conv: returns (w', b')."""
+    w = np.asarray(w, np.float32)
+    scale = np.asarray(gamma) / np.sqrt(np.asarray(var) + eps)
+    w2 = w * scale[:, None, None, None]
+    b2 = np.asarray(beta) - np.asarray(mean) * scale
+    return w2.astype(np.float32), b2.astype(np.float32)
+
+
+def fused_dense_layer(spec: S.NetworkSpec, params, state, l: int):
+    """Layer l as a dense conv with bias (BN folded, groups expanded)."""
+    ly = spec.layer(l)
+    li = l - 1
+    w = np.asarray(params[3 * li])
+    gamma, beta = params[3 * li + 1], params[3 * li + 2]
+    mean, var = state[2 * li], state[2 * li + 1]
+    w, b = bn_fuse(w, gamma, beta, mean, var)
+    w = np.asarray(expand_grouped(w, ly.groups))
+    return w, b
+
+
+def compose_np(t2, t1, s1: int):
+    """Merged kernel (numpy path via the jnp oracle)."""
+    import jax.numpy as jnp
+
+    return np.asarray(compose_ref(jnp.asarray(t2), jnp.asarray(t1), s1=s1))
+
+
+def merge_segment(spec: S.NetworkSpec, params, state, i: int, j: int):
+    """Compose layers i+1..j into one (w, b); applies skip fusion (E.1).
+
+    Exact under padding reordering (E.2): the caller must evaluate the
+    merged conv with pad' from `merged_geometry`, which is what both
+    `model.merged_forward` and the rust runtime do.
+    """
+    geo = S.merged_geometry(spec, i, j)
+    if geo is None:
+        raise ValueError(f"segment ({i}, {j}] is not merge-legal")
+    w_acc, b_acc = fused_dense_layer(spec, params, state, i + 1)
+    s_acc = spec.layer(i + 1).stride
+    for l in range(i + 2, j + 1):
+        w_l, b_l = fused_dense_layer(spec, params, state, l)
+        w_acc = compose_np(w_l, w_acc, s_acc)
+        b_acc = b_l + np.einsum("omyx,m->o", w_l, b_acc).astype(np.float32)
+        s_acc *= spec.layer(l).stride
+    if geo.skip_fuse:
+        # identity branch as a conv tap at (pad', pad') — RepVGG-style
+        c = geo.pad
+        assert c < geo.k, "identity tap must sit inside the merged kernel"
+        w_acc = np.array(w_acc, np.float32)
+        for o in range(geo.c_out):
+            w_acc[o, o, c, c] += 1.0
+    assert w_acc.shape == (geo.c_out, geo.c_in, geo.k, geo.k), (
+        w_acc.shape,
+        geo,
+    )
+    return w_acc.astype(np.float32), np.asarray(b_acc, np.float32), geo
+
+
+def segments_from_S(spec: S.NetworkSpec, S_set: list[int]):
+    """Consecutive pairs of {0} u S u {L}."""
+    pts = [0] + sorted(S_set) + [spec.L]
+    return list(zip(pts[:-1], pts[1:]))
+
+
+def pad_plan_from_S(spec: S.NetworkSpec, S_set: list[int]) -> dict[int, int]:
+    """Padding reordering (E.2): hoist each segment's padding to its
+    first conv.  Returns {layer_idx: pad_override}."""
+    plan: dict[int, int] = {}
+    for i, j in segments_from_S(spec, S_set):
+        if j - i == 1:
+            continue
+        geo = S.merged_geometry(spec, i, j)
+        assert geo is not None, f"S contains non-mergeable segment ({i},{j}]"
+        plan[i + 1] = geo.pad
+        for l in range(i + 2, j + 1):
+            plan[l] = 0
+    return plan
+
+
+def build_merged(spec: S.NetworkSpec, params, state, S_set: list[int], A_set: list[int]):
+    """Full merged network: (mspec dict, merged param list).
+
+    mspec matches `model.merged_forward`'s expectation; the activation of
+    a segment ending at j is ON iff j in A (or j == L with a non-id last
+    activation).
+    """
+    segs = segments_from_S(spec, S_set)
+    seg_of_boundary = {j: n for n, (_, j) in enumerate(segs)}
+    seg_of_boundary[0] = -1
+    layers = []
+    mparams = []
+    for i, j in segs:
+        geo = S.merged_geometry(spec, i, j)
+        assert geo is not None, f"S contains non-mergeable segment ({i},{j}]"
+        act_on = j in A_set or (
+            j == spec.L and spec.layer(j).act == S.ACT_RELU6
+        )
+        add_from_seg = None
+        if j - i == 1:
+            # unmerged layer kept as-is: grouped kernel, explicit add
+            ly = spec.layer(j)
+            li = j - 1
+            wg, bd = bn_fuse(
+                np.asarray(params[3 * li]), params[3 * li + 1],
+                params[3 * li + 2], state[2 * li], state[2 * li + 1],
+            )
+            mparams += [wg, bd]
+            if geo.add_from is not None:
+                assert geo.add_from in seg_of_boundary, (
+                    f"residual source {geo.add_from} is not a segment boundary"
+                )
+                add_from_seg = seg_of_boundary[geo.add_from]
+        else:
+            w, b, _ = merge_segment(spec, params, state, i, j)
+            mparams += [w, b]
+        layers.append(
+            {
+                "i": i,
+                "j": j,
+                "c_in": geo.c_in,
+                "c_out": geo.c_out,
+                "k": geo.k,
+                "stride": geo.stride,
+                "pad": geo.pad,
+                "groups": geo.groups,
+                "act": 1 if act_on else 0,
+                "pool_after": geo.pool_after,
+                "add_from_seg": add_from_seg,
+            }
+        )
+    mparams += [np.asarray(params[-2]), np.asarray(params[-1])]
+    defs = []
+    for n, ml in enumerate(layers):
+        defs.append({"name": f"mw{n}", "shape": list(mparams[2 * n].shape)})
+        defs.append({"name": f"mb{n}", "shape": list(mparams[2 * n + 1].shape)})
+    defs.append({"name": "fc_w", "shape": list(mparams[-2].shape)})
+    defs.append({"name": "fc_b", "shape": list(mparams[-1].shape)})
+    mspec = {"layers": layers, "params": defs}
+    return mspec, mparams

@@ -1,0 +1,402 @@
+"""L2: the model family — masked CNN fwd/bwd, train/eval/KD/infer steps.
+
+Every graph here is lowered ONCE by `aot.py` to HLO text and executed by
+the rust runtime; parameters are threaded as explicit flat tuples so the
+artifact calling convention is deterministic and recorded in the
+manifest (see `param_defs`).
+
+The activation-mask input is the key trick (DESIGN.md §5): replacing a
+sigma with id never changes shapes, so a single train-step artifact
+serves every deactivation pattern the DP, the importance stage, and the
+DepthShrinker baseline ever probe.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .convlib import batch_norm, conv2d, masked_act, max_pool_2x2
+from .specs import ACT_RELU6, NetworkSpec
+
+BN_MOMENTUM = 0.9
+SGD_MOMENTUM = 0.9
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout
+# ---------------------------------------------------------------------------
+
+
+def param_defs(spec: NetworkSpec) -> tuple[list[tuple[str, tuple]], list[tuple[str, tuple]]]:
+    """(trainable defs, bn-state defs) in the artifact calling order."""
+    train: list[tuple[str, tuple]] = []
+    state: list[tuple[str, tuple]] = []
+    for ly in spec.layers:
+        train.append((f"w{ly.idx}", (ly.c_out, ly.c_in // ly.groups, ly.k, ly.k)))
+        train.append((f"gamma{ly.idx}", (ly.c_out,)))
+        train.append((f"beta{ly.idx}", (ly.c_out,)))
+        state.append((f"mean{ly.idx}", (ly.c_out,)))
+        state.append((f"var{ly.idx}", (ly.c_out,)))
+    last = spec.layers[-1]
+    train.append(("fc_w", (last.c_out, spec.num_classes)))
+    train.append(("fc_b", (spec.num_classes,)))
+    return train, state
+
+
+def init_params(spec: NetworkSpec, key: jax.Array):
+    """He-init conv weights, unit BN, zero-mean/unit-var running stats."""
+    train_defs, state_defs = param_defs(spec)
+    params = []
+    for name, shape in train_defs:
+        key, sub = jax.random.split(key)
+        if name.startswith("w"):
+            fan_in = shape[1] * shape[2] * shape[3]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+            )
+        elif name.startswith("gamma"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.startswith("beta") or name == "fc_b":
+            params.append(jnp.zeros(shape, jnp.float32))
+        elif name == "fc_w":
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(1.0 / shape[0])
+            )
+    state = []
+    for name, shape in state_defs:
+        state.append(
+            jnp.zeros(shape, jnp.float32)
+            if name.startswith("mean")
+            else jnp.ones(shape, jnp.float32)
+        )
+    return params, state
+
+
+def default_mask(spec: NetworkSpec) -> list[float]:
+    """The vanilla network: mask 1 at relu6 positions, 0 at id."""
+    return [1.0 if ly.act == ACT_RELU6 else 0.0 for ly in spec.layers]
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    spec: NetworkSpec,
+    params: Sequence[jax.Array],
+    state: Sequence[jax.Array],
+    x: jax.Array,
+    mask: jax.Array,
+    *,
+    train: bool,
+    use_pallas: bool,
+    pad_plan: Optional[dict[int, int]] = None,
+    layout: str = "NHWC",
+):
+    """Masked forward pass.
+
+    x arrives NCHW (the artifact interface); internally the graph runs in
+    `layout` (NHWC is ~2x faster on XLA-CPU; the Pallas path is NCHW).
+
+    pad_plan: optional {layer idx -> padding override} implementing the
+    paper's padding reordering (E.2) for a chosen merge set S — padding
+    of every merge segment is hoisted to its first conv so that the
+    finetuned function is EXACTLY the function later merged.
+    Returns (logits, new_state list).
+    """
+    if use_pallas and layout != "NCHW":
+        layout = "NCHW"
+    cur = x if layout == "NCHW" else jnp.transpose(x, (0, 2, 3, 1))
+    outs = {0: cur}
+    new_state = list(state)
+    for ly in spec.layers:
+        li = ly.idx - 1
+        pad = ly.pad if pad_plan is None else pad_plan.get(ly.idx, ly.pad)
+        w = params[3 * li]
+        gamma, beta = params[3 * li + 1], params[3 * li + 2]
+        mean, var = state[2 * li], state[2 * li + 1]
+        y = conv2d(
+            cur, w, None, stride=ly.stride, pad=pad, groups=ly.groups,
+            use_pallas=use_pallas, layout=layout,
+        )
+        y, nm, nv = batch_norm(
+            y, gamma, beta, mean, var, train=train, momentum=BN_MOMENTUM,
+            layout=layout,
+        )
+        new_state[2 * li], new_state[2 * li + 1] = nm, nv
+        if ly.add_from is not None:
+            y = y + outs[ly.add_from]
+        y = masked_act(y, mask[li])
+        if ly.pool_after:
+            y = max_pool_2x2(y, layout)
+        outs[ly.idx] = y
+        cur = y
+    pool_axes = (2, 3) if layout == "NCHW" else (1, 2)
+    pooled = jnp.mean(cur, axis=pool_axes)  # global average pool
+    logits = pooled @ params[-2] + params[-1]
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# Losses and steps
+# ---------------------------------------------------------------------------
+
+
+def _ce_loss(logits: jax.Array, y: jax.Array, num_classes: int, smooth: float):
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(y, num_classes)
+    target = onehot * (1.0 - smooth) + smooth / num_classes
+    return -jnp.mean(jnp.sum(target * logp, axis=-1))
+
+
+def _ncorrect(logits: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+
+def _sgd_update(params, moms, grads, decay_mask, weight_decay, lr):
+    new_params, new_moms = [], []
+    for p, m, g, dm in zip(params, moms, grads, decay_mask):
+        g = g + weight_decay * dm * p
+        m2 = SGD_MOMENTUM * m + g
+        new_params.append(p - lr * m2)
+        new_moms.append(m2)
+    return new_params, new_moms
+
+
+def _decay_mask(spec: NetworkSpec) -> list[float]:
+    train_defs, _ = param_defs(spec)
+    return [
+        1.0 if name.startswith("w") or name == "fc_w" else 0.0
+        for name, _ in train_defs
+    ]
+
+
+def make_train_step(
+    spec: NetworkSpec,
+    *,
+    weight_decay: float = 1e-5,
+    label_smooth: float = 0.1,
+    use_pallas: bool = False,
+    pad_plan: Optional[dict[int, int]] = None,
+):
+    """SGD-momentum train step over the masked network.
+
+    Signature (all flat):
+      (params..., moms..., state..., x, y, mask, lr)
+        -> (params'..., moms'..., state'..., loss, ncorrect)
+    """
+    decay_mask = _decay_mask(spec)
+
+    def loss_fn(params, state, x, y, mask):
+        logits, new_state = forward(
+            spec, params, state, x, mask,
+            train=True, use_pallas=use_pallas, pad_plan=pad_plan,
+            layout="NCHW",  # backward pass ~2x faster than NHWC on XLA-CPU
+        )
+        loss = _ce_loss(logits, y, spec.num_classes, label_smooth)
+        return loss, (new_state, _ncorrect(logits, y))
+
+    def step(params, moms, state, x, y, mask, lr):
+        (loss, (new_state, ncorrect)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(list(params), list(state), x, y, mask)
+        new_params, new_moms = _sgd_update(
+            params, moms, grads, decay_mask, weight_decay, lr
+        )
+        return new_params, new_moms, new_state, loss, ncorrect
+
+    return step
+
+
+def make_kd_train_step(
+    spec: NetworkSpec,
+    *,
+    weight_decay: float = 1e-5,
+    label_smooth: float = 0.1,
+    kd_alpha: float = 0.9,
+    kd_tau: float = 1.0,
+    use_pallas: bool = False,
+    pad_plan: Optional[dict[int, int]] = None,
+):
+    """Knowledge-distillation finetune step (paper Table 4).
+
+    loss = (1-alpha)*CE + alpha*tau^2*KL(teacher/tau || student/tau);
+    teacher = frozen pretrained vanilla network (eval mode, default mask).
+    Signature: (params..., moms..., state..., t_params..., t_state...,
+                x, y, mask, lr) -> (params'..., moms'..., state'..., loss, ncorrect)
+    """
+    t_mask = jnp.array(default_mask(spec), jnp.float32)
+    decay_mask = _decay_mask(spec)
+
+    def loss_fn(params, state, t_params, t_state, x, y, mask):
+        logits, new_state = forward(
+            spec, params, state, x, mask,
+            train=True, use_pallas=use_pallas, pad_plan=pad_plan,
+            layout="NCHW",
+        )
+        t_logits, _ = forward(
+            spec, t_params, t_state, x, t_mask, train=False,
+            use_pallas=use_pallas,
+        )
+        t_logits = jax.lax.stop_gradient(t_logits)
+        ce = _ce_loss(logits, y, spec.num_classes, label_smooth)
+        s_logp = jax.nn.log_softmax(logits / kd_tau)
+        t_prob = jax.nn.softmax(t_logits / kd_tau)
+        kl = jnp.mean(jnp.sum(t_prob * (jnp.log(t_prob + 1e-9) - s_logp), axis=-1))
+        loss = (1.0 - kd_alpha) * ce + kd_alpha * kd_tau**2 * kl
+        return loss, (new_state, _ncorrect(logits, y))
+
+    def step(params, moms, state, t_params, t_state, x, y, mask, lr):
+        (loss, (new_state, ncorrect)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(list(params), list(state), list(t_params), list(t_state), x, y, mask)
+        new_params, new_moms = _sgd_update(
+            params, moms, grads, decay_mask, weight_decay, lr
+        )
+        return new_params, new_moms, new_state, loss, ncorrect
+
+    return step
+
+
+def make_eval_step(spec: NetworkSpec, *, use_pallas: bool = False):
+    """(params..., state..., x, y, mask) -> (loss_sum, ncorrect)."""
+
+    def step(params, state, x, y, mask):
+        logits, _ = forward(
+            spec, params, state, x, mask, train=False, use_pallas=use_pallas
+        )
+        logp = jax.nn.log_softmax(logits)
+        onehot = jax.nn.one_hot(y, spec.num_classes)
+        loss_sum = -jnp.sum(onehot * logp)
+        return loss_sum, _ncorrect(logits, y)
+
+    return step
+
+
+def make_infer(spec: NetworkSpec, *, use_pallas: bool = True):
+    """(params..., state..., x, mask) -> logits.  The serving graph."""
+
+    def fn(params, state, x, mask):
+        logits, _ = forward(
+            spec, params, state, x, mask, train=False, use_pallas=use_pallas
+        )
+        return logits
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Merged networks (post-compression serving graphs)
+# ---------------------------------------------------------------------------
+
+
+def merged_forward(
+    mspec: dict, params: Sequence[jax.Array], x: jax.Array, *, use_pallas: bool = False
+):
+    """Forward through a merged network description (from a plan JSON).
+
+    mspec["layers"]: [{c_in, c_out, k, stride, pad, groups, act (0/1),
+    pool_after, add_from_seg}] — BN already fused; merged segments have
+    their skips folded into kernels (E.1) while unmerged singleton layers
+    keep an explicit residual add (add_from_seg: -1 = network input, n =
+    output of segment n).  params = [w1, b1, ..., fc_w, fc_b].  This is
+    the paper's compressed network: a short chain of dense convs, each
+    running on the Pallas matmul kernel.
+    """
+    layout = "NCHW" if use_pallas else "NHWC"
+    cur = x if layout == "NCHW" else jnp.transpose(x, (0, 2, 3, 1))
+    seg_out = {-1: cur}
+    for li, ml in enumerate(mspec["layers"]):
+        w, b = params[2 * li], params[2 * li + 1]
+        cur = conv2d(
+            cur, w, b, stride=ml["stride"], pad=ml["pad"],
+            groups=ml.get("groups", 1),
+            use_pallas=use_pallas and ml.get("groups", 1) == 1,
+            layout=layout,
+        )
+        afs = ml.get("add_from_seg")
+        if afs is not None:
+            cur = cur + seg_out[afs]
+        if ml["act"]:
+            cur = jnp.clip(cur, 0.0, 6.0)
+        if ml.get("pool_after"):
+            cur = max_pool_2x2(cur, layout)
+        seg_out[li] = cur
+    pool_axes = (2, 3) if layout == "NCHW" else (1, 2)
+    pooled = jnp.mean(cur, axis=pool_axes)
+    return pooled @ params[-2] + params[-1]
+
+
+def make_merged_infer(mspec: dict, *, use_pallas: bool = False):
+    def fn(params, x):
+        return merged_forward(mspec, params, x, use_pallas=use_pallas)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Single-op probe graphs (latency table T[i, j] + eager decomposition)
+# ---------------------------------------------------------------------------
+
+
+def make_block_probe(blk: dict, *, batch: int, fused: bool):
+    """Graph for one merged-block latency probe.
+
+    fused=True  — TensorRT-analog: conv+bias+relu6 in one graph (XLA fuses).
+    fused=False — eager-analog: conv only; BN/act are separate artifacts
+    (`make_bn_probe` / `make_act_probe`) executed back-to-back by rust.
+
+    Probes take x NCHW and run NHWC internally (same impl the end-to-end
+    graphs use, so T[i,j] sums match end-to-end latency).
+    """
+    groups = blk.get("groups", 1)
+
+    def fused_fn(x, w, b):
+        xh = jnp.transpose(x, (0, 2, 3, 1))
+        y = conv2d(
+            xh, w, b,
+            stride=blk["stride"], pad=blk["pad"], groups=groups,
+            layout="NHWC",
+        )
+        y = jnp.clip(y, 0.0, 6.0)
+        return jnp.transpose(y, (0, 3, 1, 2))
+
+    def eager_fn(x, w):
+        xh = jnp.transpose(x, (0, 2, 3, 1))
+        y = conv2d(
+            xh, w, None,
+            stride=blk["stride"], pad=blk["pad"], groups=groups,
+            layout="NHWC",
+        )
+        return jnp.transpose(y, (0, 3, 1, 2))
+
+    fn = fused_fn if fused else eager_fn
+
+    x_shape = (batch, blk["c_in"], blk["h_in"], blk["w_in"])
+    w_shape = (blk["c_out"], blk["c_in"] // groups, blk["k"], blk["k"])
+    return fn, x_shape, w_shape
+
+
+def make_bn_probe(c: int, h: int, w: int, *, batch: int):
+    """Standalone BN-inference op (eager-mode latency decomposition)."""
+
+    def fn(x, gamma, beta, mean, var):
+        inv = jax.lax.rsqrt(var + 1e-5)[None, :, None, None]
+        return (x - mean[None, :, None, None]) * inv * gamma[
+            None, :, None, None
+        ] + beta[None, :, None, None]
+
+    return fn, (batch, c, h, w)
+
+
+def make_act_probe(c: int, h: int, w: int, *, batch: int):
+    """Standalone ReLU6 op (eager-mode latency decomposition)."""
+
+    def fn(x):
+        return jnp.clip(x, 0.0, 6.0)
+
+    return fn, (batch, c, h, w)

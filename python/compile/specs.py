@@ -1,0 +1,431 @@
+"""Architecture IR, builders, and merge-segment enumeration.
+
+This module is the single source of truth for network structure and for
+the paper's search-space rules (Appendix B.2, E.1):
+
+  * which contiguous segments (i, j] may be merged into ONE convolution
+    (latency blocks, paper: "171 different blocks" for MBV2);
+  * which (i, j, d_i, d_j) combinations are valid importance probes
+    (paper: "315 different blocks", Appendix B.1 extended space).
+
+`aot.py` serializes everything (layers with resolved feature-map
+sizes, legal blocks with merged-conv geometry, importance probes) to
+`artifacts/archs/*.json`, which the rust coordinator consumes at
+runtime — there is deliberately no second implementation of these
+rules anywhere.
+
+Indexing follows the paper: layers 1..L; a segment (i, j] means layers
+i+1..j; out[0] is the network input.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+ACT_RELU6 = "relu6"
+ACT_ID = "id"
+
+# Merged kernels above this size explode latency and VMEM footprint; the
+# paper applies the equivalent cut (B.2: no k>1 conv after a stride-2
+# conv) plus TensorRT's practical kernel limits.
+MAX_MERGED_K = 9
+
+
+@dataclass
+class Layer:
+    """One convolution layer (paper's f_theta_l + sigma_l)."""
+
+    idx: int  # 1-based, paper indexing
+    c_in: int
+    c_out: int
+    k: int
+    stride: int
+    pad: int
+    groups: int
+    act: str  # "relu6" | "id"
+    add_from: Optional[int] = None  # residual: out[idx] += out[add_from]
+    pool_after: bool = False  # 2x2 max-pool after activation (VGG)
+    irb: Optional[int] = None  # inverted-residual-block id (reporting)
+    # resolved feature-map geometry (filled by _resolve)
+    h_in: int = 0
+    w_in: int = 0
+    h_out: int = 0
+    w_out: int = 0
+
+
+@dataclass
+class NetworkSpec:
+    name: str
+    input_ch: int
+    input_hw: int
+    num_classes: int
+    layers: list[Layer] = field(default_factory=list)
+
+    @property
+    def L(self) -> int:
+        return len(self.layers)
+
+    def layer(self, l: int) -> Layer:
+        """1-based accessor (paper indexing)."""
+        return self.layers[l - 1]
+
+    def _resolve(self) -> None:
+        h = w = self.input_hw
+        for ly in self.layers:
+            ly.h_in, ly.w_in = h, w
+            h = (h + 2 * ly.pad - ly.k) // ly.stride + 1
+            w = (w + 2 * ly.pad - ly.k) // ly.stride + 1
+            ly.h_out, ly.w_out = h, w
+            if ly.pool_after:
+                h //= 2
+                w //= 2
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "input_ch": self.input_ch,
+            "input_hw": self.input_hw,
+            "num_classes": self.num_classes,
+            "layers": [dataclasses.asdict(l) for l in self.layers],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+
+def _ch(c: float, width: float) -> int:
+    """Width-multiplied channel count, rounded to a multiple of 4."""
+    return max(4, int(round(c * width / 4.0)) * 4)
+
+
+def mbv2_micro(width: float = 1.0, num_classes: int = 100, hw: int = 24) -> NetworkSpec:
+    """MobileNetV2-micro: genuine inverted-residual architecture at 32x32.
+
+    Same layer algebra as MobileNetV2 (Sandler et al., 2018): expansion-6
+    pw -> dw 3x3 -> linear pw bottleneck, residual adds when stride 1 and
+    matching channels, ReLU6 activations, id at block ends.  Scaled to 9
+    IRBs / ~28 convs at 24x24 so the full paper pipeline runs on one CPU core.
+    """
+    # (expansion t, out channels, stride).  Mirrors real MBV2's topology
+    # properties: residual IRBs (stride 1, matching channels) at 3/5/7,
+    # stride-2 stage transitions, and two non-residual adjacencies
+    # (stem..IRB2, IRB8..head) where cross-block merging is legal — the
+    # region DepthShrinker's within-block search space cannot reach
+    # (paper Figure 4).
+    cfg = [
+        (1, 16, 1),
+        (6, 24, 1),
+        (6, 24, 1),
+        (6, 32, 2),
+        (6, 32, 1),
+        (6, 64, 2),
+        (6, 64, 1),
+        (6, 80, 1),
+        (6, 96, 1),
+    ]
+    spec = NetworkSpec(
+        name=f"mbv2_w{int(width * 10):02d}",
+        input_ch=3,
+        input_hw=hw,
+        num_classes=num_classes,
+    )
+    idx = 0
+
+    def add(c_in, c_out, k, stride, pad, groups, act, add_from=None, irb=None):
+        nonlocal idx
+        idx += 1
+        spec.layers.append(
+            Layer(idx, c_in, c_out, k, stride, pad, groups, act, add_from, False, irb)
+        )
+
+    stem = _ch(24, width)
+    add(3, stem, 3, 1, 1, 1, ACT_RELU6, irb=0)
+    c_prev = stem
+    for b, (t, c, s) in enumerate(cfg, start=1):
+        c_out = _ch(c, width)
+        hidden = c_prev * t
+        block_in_idx = idx  # out[block_in_idx] is the residual source
+        residual = s == 1 and c_prev == c_out
+        if t != 1:
+            add(c_prev, hidden, 1, 1, 0, 1, ACT_RELU6, irb=b)  # pw expand
+        add(hidden, hidden, 3, s, 1, hidden, ACT_RELU6, irb=b)  # dw
+        add(  # pw project: LINEAR bottleneck (act = id)
+            hidden,
+            c_out,
+            1,
+            1,
+            0,
+            1,
+            ACT_ID,
+            add_from=block_in_idx if residual else None,
+            irb=b,
+        )
+        c_prev = c_out
+    head = _ch(256, width)
+    add(c_prev, head, 1, 1, 0, 1, ACT_RELU6, irb=len(cfg) + 1)  # head conv
+    spec._resolve()
+    return spec
+
+
+def vgg_micro(num_classes: int = 100, hw: int = 24) -> NetworkSpec:
+    """VGG-micro: plain 3x3 stacks + max-pools (Appendix C.4 analog).
+
+    Exercises the >=2-adjacent-large-kernel merge case and therefore the
+    padding-reordering machinery (E.2) that MBV2 never triggers.
+    """
+    cfg = [32, 32, "M", 64, 64, "M", 128, 128, 128, "M", 160, 160]
+    spec = NetworkSpec(
+        name="vgg_micro", input_ch=3, input_hw=hw, num_classes=num_classes
+    )
+    c_prev = 3
+    idx = 0
+    for v in cfg:
+        if v == "M":
+            spec.layers[-1].pool_after = True
+            continue
+        idx += 1
+        spec.layers.append(Layer(idx, c_prev, v, 3, 1, 1, 1, ACT_RELU6))
+        c_prev = v
+    spec._resolve()
+    return spec
+
+
+def mbv2_micro_pruned(
+    width: float, keeps: list[float], tag: str, num_classes: int = 100
+) -> NetworkSpec:
+    """Channel-pruned MBV2-micro (Appendix C.3 baselines, Table 8).
+
+    `keeps[b]` scales the hidden (expanded) width of IRB b — the paper's
+    uniform-L1 protocol prunes the first conv of each inverted residual
+    block and leaves the rest; AMC/MetaPruning analogs use per-block
+    ratio profiles.  Block in/out channels are untouched so residuals
+    stay valid.  Weight *selection* (which channels survive, by L1 norm
+    of the pretrained weight) happens in rust (`baselines/channel_pruning.rs`).
+    """
+    base = mbv2_micro(width, num_classes=num_classes)
+    spec = NetworkSpec(
+        name=f"{base.name}_{tag}",
+        input_ch=base.input_ch,
+        input_hw=base.input_hw,
+        num_classes=num_classes,
+    )
+    for ly in base.layers:
+        spec.layers.append(Layer(**{**dataclasses.asdict(ly)}))
+    # IRB b spans layers with irb == b; scale the expanded hidden dim.
+    for b, keep in enumerate(keeps, start=1):
+        idxs = [ly.idx for ly in spec.layers if ly.irb == b]
+        # t=1 blocks have no expand conv: their "hidden" is the block
+        # input itself, which cannot be pruned without touching the
+        # previous block's output channels.
+        if len(idxs) < 3 or keep >= 1.0:
+            continue
+        hidden_layers = idxs[:-1]  # expand pw (if any) + dw
+        old_hidden = spec.layer(hidden_layers[-1]).c_out
+        new_hidden = max(4, int(old_hidden * keep / 4) * 4)
+        for li in hidden_layers:
+            ly = spec.layer(li)
+            if ly.c_out == old_hidden:
+                ly.c_out = new_hidden
+            if ly.c_in == old_hidden:
+                ly.c_in = new_hidden
+            if ly.groups == old_hidden:
+                ly.groups = new_hidden
+        # the projection conv consumes the pruned hidden dim
+        proj = spec.layer(idxs[-1])
+        if proj.c_in == old_hidden:
+            proj.c_in = new_hidden
+    spec._resolve()
+    return spec
+
+
+# Per-IRB keep-ratio profiles for the Table 8 baselines.  Uniform-L1
+# mirrors the paper's protocol (75% / 65%); the AMC and MetaPruning
+# profiles follow the shallow-heavy/deep-light shape of the released
+# ratio tables of those papers, scaled to 9 IRBs.
+PRUNE_SCHEMES = {
+    "l1u75": [0.75] * 9,
+    "l1u65": [0.65] * 9,
+    "amc70": [1.0, 0.9, 0.7, 0.8, 0.6, 0.7, 0.5, 0.6, 0.5],
+    "meta10": [1.0, 0.8, 0.8, 0.7, 0.7, 0.6, 0.6, 0.7, 0.5],
+}
+
+BUILDERS = {
+    "mbv2_w10": lambda: mbv2_micro(1.0),
+    "mbv2_w14": lambda: mbv2_micro(1.4),
+    "vgg_micro": lambda: vgg_micro(),
+    "mbv2_w10_l1u75": lambda: mbv2_micro_pruned(1.0, PRUNE_SCHEMES["l1u75"], "l1u75"),
+    "mbv2_w10_amc70": lambda: mbv2_micro_pruned(1.0, PRUNE_SCHEMES["amc70"], "amc70"),
+    "mbv2_w14_l1u65": lambda: mbv2_micro_pruned(1.4, PRUNE_SCHEMES["l1u65"], "l1u65"),
+    "mbv2_w14_meta10": lambda: mbv2_micro_pruned(1.4, PRUNE_SCHEMES["meta10"], "meta10"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Merge-segment legality + geometry (Appendix B.2 / E.1 / E.2)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MergedBlock:
+    """Geometry of the single conv equivalent to segment (i, j]."""
+
+    i: int
+    j: int
+    c_in: int
+    c_out: int
+    k: int
+    stride: int
+    pad: int
+    groups: int
+    h_in: int
+    w_in: int
+    h_out: int
+    w_out: int
+    skip_fuse: bool  # residual add folded into the merged kernel (E.1)
+    pool_after: bool
+    # singleton segments may keep their residual add as an explicit op;
+    # the source is an original layer index (0 = network input)
+    add_from: Optional[int] = None
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def merged_geometry(spec: NetworkSpec, i: int, j: int) -> Optional[MergedBlock]:
+    """Merged-conv geometry for segment (i, j], or None if illegal.
+
+    A singleton segment (j == i+1) is always legal: nothing is merged,
+    the layer (including any residual add) is kept as-is.
+
+    Legality rules for multi-layer segments (Appendix B.2 + E.1):
+      R1  no residual add lands strictly inside the segment, EXCEPT an add
+          on layer j sourced at out[i] (full-body skip fusion), which
+          requires merged stride 1 and c_in == c_out;
+      R2  no layer strictly inside is a residual *source* (its output must
+          be materialized for a later add);
+      R3  no max-pool strictly inside;
+      R4  no k>1 conv after accumulated stride > 1 (kernel-size explosion);
+      R5  merged kernel size <= MAX_MERGED_K.
+    Geometry (E.2 padding reordering):
+      k'   = 1 + sum_l (k_l - 1) * prefix_stride(l)
+      pad' = sum_l pad_l * prefix_stride(l)
+      s'   = prod_l stride_l
+    """
+    assert 0 <= i < j <= spec.L
+    taps = {ly.add_from for ly in spec.layers if ly.add_from is not None}
+    kp, sp, pp = 1, 1, 0
+    skip_fuse = False
+    add_from = None
+    singleton = j == i + 1
+    for l in range(i + 1, j + 1):
+        ly = spec.layer(l)
+        if ly.add_from is not None:
+            if singleton:
+                add_from = ly.add_from  # kept as an explicit op
+            elif l == j and ly.add_from == i:
+                skip_fuse = True  # legality of shapes checked below
+            else:
+                return None  # R1
+        if l != j and l in taps and l != i:
+            return None  # R2 (interior residual source)
+        if ly.pool_after and l != j:
+            return None  # R3
+        if not singleton and sp > 1 and ly.k > 1:
+            return None  # R4 (sp is the prefix stride BEFORE layer l)
+        kp += (ly.k - 1) * sp
+        pp += ly.pad * sp
+        sp *= ly.stride
+        if not singleton and kp > MAX_MERGED_K:
+            return None  # R5
+    first, last = spec.layer(i + 1), spec.layer(j)
+    if skip_fuse and (sp != 1 or first.c_in != last.c_out):
+        return None
+    groups = first.groups if singleton else 1
+    return MergedBlock(
+        i=i,
+        j=j,
+        c_in=first.c_in,
+        c_out=last.c_out,
+        k=kp,
+        stride=sp,
+        pad=pp,
+        groups=groups,
+        h_in=first.h_in,
+        w_in=first.w_in,
+        h_out=last.h_out,
+        w_out=last.w_out,
+        skip_fuse=skip_fuse,
+        pool_after=last.pool_after,
+        add_from=add_from,
+    )
+
+
+def enumerate_blocks(spec: NetworkSpec) -> list[MergedBlock]:
+    """All merge-legal segments — the domain of the latency table T[i,j]."""
+    out = []
+    for i in range(0, spec.L):
+        for j in range(i + 1, spec.L + 1):
+            g = merged_geometry(spec, i, j)
+            if g is not None:
+                out.append(g)
+    return out
+
+
+@dataclass
+class ImportanceProbe:
+    """One importance measurement I[i, j, a, b] (Appendix B.1)."""
+
+    i: int
+    j: int
+    a: int  # activation state at boundary i (1 = on)
+    b: int  # activation state at boundary j
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def enumerate_probes(spec: NetworkSpec) -> list[ImportanceProbe]:
+    """Valid (i, j, d_i, d_j) probes over merge-legal blocks.
+
+    Endpoint rules (Algorithm 3 preamble + B.2):
+      * d = 0 is forbidden at a boundary whose original activation is
+        non-id (removing it there == not a boundary at all);
+      * d = 1 at an originally-id boundary ADDS a ReLU6 (the B.1
+        extension);
+      * blocks with id on both edges and d_j = 0 are excluded (B.2:
+        they "unnecessarily degrade performance");
+      * virtual boundaries 0 and L have no activation choice (a=1, b=1).
+    """
+    probes = []
+    for blk in enumerate_blocks(spec):
+        i, j = blk.i, blk.j
+        sig_i = None if i == 0 else spec.layer(i).act
+        sig_j = None if j == spec.L else spec.layer(j).act
+        a_choices = [1] if i == 0 or sig_i != ACT_ID else [0, 1]
+        b_choices = [1] if j == spec.L or sig_j != ACT_ID else [0, 1]
+        for a in a_choices:
+            for b in b_choices:
+                if sig_i == ACT_ID and sig_j == ACT_ID and b == 0:
+                    continue  # both-edges-id exclusion (B.2)
+                probes.append(ImportanceProbe(i, j, a, b))
+    return probes
+
+
+def arch_config(spec: NetworkSpec) -> dict:
+    """Full architecture config consumed by aot.py AND the rust side."""
+    return {
+        "spec": spec.to_json(),
+        "blocks": [b.to_json() for b in enumerate_blocks(spec)],
+        "probes": [p.to_json() for p in enumerate_probes(spec)],
+    }
+
+
+def dump_arch_config(spec: NetworkSpec, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(arch_config(spec), f, indent=1)

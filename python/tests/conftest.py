@@ -1,0 +1,41 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import numpy as np
+import pytest
+
+from compile import specs as S
+
+
+@pytest.fixture(scope="session")
+def tiny_spec():
+    """A 6-layer mini inverted-residual net (fast to trace/compile).
+
+    Topology: stem 3x3 -> [pw expand, dw 3x3, pw project(+res)] -> pw head,
+    i.e. the full layer algebra of MBV2-micro at toy size.
+    """
+    spec = S.NetworkSpec(name="tiny", input_ch=3, input_hw=12, num_classes=7)
+    Ly = S.Layer
+    spec.layers = [
+        Ly(1, 3, 8, 3, 1, 1, 1, S.ACT_RELU6),
+        Ly(2, 8, 24, 1, 1, 0, 1, S.ACT_RELU6),
+        Ly(3, 24, 24, 3, 1, 1, 24, S.ACT_RELU6),
+        Ly(4, 24, 8, 1, 1, 0, 1, S.ACT_ID, add_from=1),
+        Ly(5, 8, 16, 1, 1, 0, 1, S.ACT_RELU6),
+        Ly(6, 16, 16, 3, 2, 1, 1, S.ACT_RELU6),
+    ]
+    spec._resolve()
+    return spec
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(42)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,107 @@
+"""AOT lowering: HLO text generation + manifest calling conventions."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def test_to_hlo_text_basic():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "f32[2,2]" in text
+
+
+def test_to_hlo_text_pallas_kernel_lowers():
+    """interpret-mode Pallas must lower to plain HLO (no custom-call)."""
+    from compile.kernels.matmul import matmul
+
+    spec = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    lowered = jax.jit(lambda a, b: (matmul(a, b),)).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "custom-call" not in text.lower().replace("custom_call", "custom-call")
+
+
+def test_emitter_records_calling_convention(tmp_path, tiny_spec):
+    em = aot.Emitter(str(tmp_path))
+
+    def fn(x, mask):
+        return (x * mask[0],)
+
+    rec = em.emit(
+        "t", fn, (jnp.zeros((2, 3), jnp.float32), jnp.zeros((4,), jnp.float32))
+    )
+    assert rec["inputs"] == [
+        {"shape": [2, 3], "dtype": "float32"},
+        {"shape": [4], "dtype": "float32"},
+    ]
+    assert rec["outputs"] == [{"shape": [2, 3], "dtype": "float32"}]
+    assert os.path.exists(os.path.join(str(tmp_path), rec["file"]))
+    em.save()
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert set(man) >= {"archs", "plans", "fixtures"}
+
+
+def test_emit_tiny_train_step_artifact(tmp_path, tiny_spec):
+    """Lower a real train step and sanity-check the HLO text."""
+    em = aot.Emitter(str(tmp_path))
+    spec = tiny_spec
+    train_defs, state_defs = M.param_defs(spec)
+    params = [jnp.zeros(s, jnp.float32) for _, s in train_defs]
+    state = [jnp.zeros(s, jnp.float32) for _, s in state_defs]
+    moms = [jnp.zeros(s, jnp.float32) for _, s in train_defs]
+    step = M.make_train_step(spec)
+    rec = em.emit(
+        "tiny_train",
+        step,
+        (
+            params,
+            moms,
+            state,
+            jnp.zeros((4, 3, 12, 12), jnp.float32),
+            jnp.zeros((4,), jnp.int32),
+            jnp.zeros((spec.L,), jnp.float32),
+            jnp.zeros((), jnp.float32),
+        ),
+    )
+    n = len(train_defs)
+    assert len(rec["inputs"]) == 2 * n + len(state_defs) + 4
+    assert len(rec["outputs"]) == 2 * n + len(state_defs) + 2
+    text = (tmp_path / rec["file"]).read_text()
+    assert "ENTRY" in text
+
+
+def test_manifest_merge_on_second_pass(tmp_path):
+    em = aot.Emitter(str(tmp_path))
+    em.manifest["archs"]["a"] = {"x": 1}
+    em.save()
+    em2 = aot.Emitter(str(tmp_path))
+    em2.manifest["plans"]["p"] = {"y": 2}
+    em2.save()
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert man["archs"]["a"] == {"x": 1}
+    assert man["plans"]["p"] == {"y": 2}
+
+
+def test_compose_fixture_content(tmp_path):
+    em = aot.Emitter(str(tmp_path))
+    aot.emit_compose_fixtures(em)
+    cases = json.loads((tmp_path / "fixtures" / "compose_golden.json").read_text())
+    assert len(cases) >= 5
+    c = cases[0]
+    t1 = np.array(c["t1"], np.float32)
+    t2 = np.array(c["t2"], np.float32)
+    merged = np.array(c["merged_w"], np.float32)
+    k1, k2, s1 = t1.shape[-1], t2.shape[-1], c["s1"]
+    assert merged.shape[-1] == s1 * (k2 - 1) + k1

@@ -1,0 +1,168 @@
+"""convlib paths (pallas / lax / shift-multiply dw, NCHW / NHWC) vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import convlib as C
+from compile.kernels import ref
+
+
+def _nhwc(x):
+    return jnp.transpose(x, (0, 2, 3, 1))
+
+
+def _nchw(x):
+    return jnp.transpose(x, (0, 3, 1, 2))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    ci=st.integers(1, 8),
+    co=st.integers(1, 8),
+    k=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    pad=st.sampled_from([0, 1]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_conv_paths_agree(ci, co, k, stride, pad, seed):
+    if k - 1 > 2 * pad + 3:  # avoid degenerate outputs
+        return
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.standard_normal((2, ci, 9, 9)), jnp.float32)
+    w = jnp.array(rng.standard_normal((co, ci, k, k)), jnp.float32)
+    b = jnp.array(rng.standard_normal((co,)), jnp.float32)
+    want = np.asarray(ref.conv2d_ref(x, w, b, stride=stride, pad=pad))
+    lax_nchw = np.asarray(
+        C.conv2d(x, w, b, stride=stride, pad=pad, layout="NCHW")
+    )
+    np.testing.assert_allclose(lax_nchw, want, rtol=1e-4, atol=1e-4)
+    lax_nhwc = np.asarray(
+        _nchw(C.conv2d(_nhwc(x), w, b, stride=stride, pad=pad, layout="NHWC"))
+    )
+    np.testing.assert_allclose(lax_nhwc, want, rtol=1e-4, atol=1e-4)
+    pallas = np.asarray(
+        C.conv2d(x, w, b, stride=stride, pad=pad, use_pallas=True)
+    )
+    np.testing.assert_allclose(pallas, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.integers(1, 12),
+    stride=st.sampled_from([1, 2]),
+    layout=st.sampled_from(["NCHW", "NHWC"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_depthwise_shift_matches_grouped_conv(c, stride, layout, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.standard_normal((2, c, 8, 8)), jnp.float32)
+    w = jnp.array(rng.standard_normal((c, 1, 3, 3)), jnp.float32)
+    want = np.asarray(ref.conv2d_ref(x, w, stride=stride, pad=1, groups=c))
+    if layout == "NCHW":
+        got = np.asarray(C.conv2d(x, w, stride=stride, pad=1, groups=c))
+    else:
+        got = np.asarray(
+            _nchw(C.conv2d(_nhwc(x), w, stride=stride, pad=1, groups=c, layout="NHWC"))
+        )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_depthwise_5x5_and_pad2():
+    rng = np.random.default_rng(3)
+    c = 4
+    x = jnp.array(rng.standard_normal((1, c, 10, 10)), jnp.float32)
+    w = jnp.array(rng.standard_normal((c, 1, 5, 5)), jnp.float32)
+    want = np.asarray(ref.conv2d_ref(x, w, stride=1, pad=2, groups=c))
+    got = np.asarray(C.conv2d(x, w, stride=1, pad=2, groups=c))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_grouped_nondepthwise_falls_back_to_lax():
+    rng = np.random.default_rng(4)
+    x = jnp.array(rng.standard_normal((1, 6, 6, 6)), jnp.float32)
+    w = jnp.array(rng.standard_normal((6, 3, 3, 3)), jnp.float32)  # groups=2
+    want = np.asarray(ref.conv2d_ref(x, w, pad=1, groups=2))
+    got = np.asarray(C.conv2d(x, w, pad=1, groups=2))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_requires_nchw():
+    with pytest.raises(ValueError):
+        C.conv2d(
+            jnp.zeros((1, 4, 4, 3)), jnp.zeros((2, 3, 1, 1)),
+            use_pallas=True, layout="NHWC",
+        )
+
+
+@pytest.mark.parametrize("layout", ["NCHW", "NHWC"])
+@pytest.mark.parametrize("train", [True, False])
+def test_batch_norm(layout, train):
+    rng = np.random.default_rng(5)
+    c = 5
+    xn = rng.standard_normal((4, c, 6, 6)).astype(np.float32) * 2 + 1
+    x = jnp.array(xn if layout == "NCHW" else xn.transpose(0, 2, 3, 1))
+    gamma = jnp.array(rng.standard_normal(c), jnp.float32)
+    beta = jnp.array(rng.standard_normal(c), jnp.float32)
+    rm = jnp.array(rng.standard_normal(c), jnp.float32)
+    rv = jnp.array(np.abs(rng.standard_normal(c)) + 0.5, jnp.float32)
+    y, nm, nv = C.batch_norm(x, gamma, beta, rm, rv, train=train, layout=layout)
+    mean = xn.mean(axis=(0, 2, 3)) if train else np.asarray(rm)
+    var = xn.var(axis=(0, 2, 3)) if train else np.asarray(rv)
+    yn = np.asarray(y) if layout == "NCHW" else np.asarray(y).transpose(0, 3, 1, 2)
+    want = (
+        (xn - mean[None, :, None, None])
+        / np.sqrt(var[None, :, None, None] + 1e-5)
+        * np.asarray(gamma)[None, :, None, None]
+        + np.asarray(beta)[None, :, None, None]
+    )
+    np.testing.assert_allclose(yn, want, rtol=1e-3, atol=1e-3)
+    if train:
+        np.testing.assert_allclose(
+            np.asarray(nm), 0.9 * np.asarray(rm) + 0.1 * mean, rtol=1e-4, atol=1e-4
+        )
+    else:
+        np.testing.assert_array_equal(np.asarray(nm), np.asarray(rm))
+
+
+def test_masked_act_semantics():
+    x = jnp.array([-2.0, -0.5, 0.0, 3.0, 7.0])
+    # m=1: relu6
+    np.testing.assert_allclose(
+        np.asarray(C.masked_act(x, jnp.float32(1.0))),
+        [0.0, 0.0, 0.0, 3.0, 6.0],
+    )
+    # m=0: identity
+    np.testing.assert_allclose(np.asarray(C.masked_act(x, jnp.float32(0.0))), np.asarray(x))
+    # fractional m interpolates (used only at {0,1} in practice)
+    np.testing.assert_allclose(
+        np.asarray(C.masked_act(x, jnp.float32(0.5))),
+        0.5 * np.clip(np.asarray(x), 0, 6) + 0.5 * np.asarray(x),
+        rtol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("layout", ["NCHW", "NHWC"])
+def test_max_pool(layout):
+    rng = np.random.default_rng(6)
+    xn = rng.standard_normal((2, 3, 8, 8)).astype(np.float32)
+    x = jnp.array(xn if layout == "NCHW" else xn.transpose(0, 2, 3, 1))
+    y = C.max_pool_2x2(x, layout)
+    yn = np.asarray(y) if layout == "NCHW" else np.asarray(y).transpose(0, 3, 1, 2)
+    want = xn.reshape(2, 3, 4, 2, 4, 2).max(axis=(3, 5))
+    np.testing.assert_allclose(yn, want)
+
+
+def test_im2col_shapes_and_content():
+    rng = np.random.default_rng(7)
+    x = jnp.array(rng.standard_normal((2, 3, 5, 5)), jnp.float32)
+    cols, (n, oh, ow) = C.im2col(x, 3, 1, 1)
+    assert (n, oh, ow) == (2, 5, 5)
+    assert cols.shape == (2 * 5 * 5, 3 * 9)
+    # conv via explicit matmul on the patches must equal the oracle
+    w = jnp.array(rng.standard_normal((4, 3, 3, 3)), jnp.float32)
+    out = (np.asarray(cols) @ np.asarray(w.reshape(4, -1)).T).reshape(2, 5, 5, 4)
+    want = np.asarray(ref.conv2d_ref(x, w, pad=1)).transpose(0, 2, 3, 1)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)

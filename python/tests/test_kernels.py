@@ -1,0 +1,192 @@
+"""L1 Pallas kernels vs pure-jnp oracles — the core correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.matmul import matmul, matmul_vjp
+from compile.kernels.merge import compose, compose_bias
+
+
+# ---------------------------------------------------------------------------
+# Tiled matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_shapes(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    y = rng.standard_normal((k, n)).astype(np.float32)
+    got = np.asarray(matmul(jnp.array(x), jnp.array(y)))
+    want = np.asarray(ref.matmul_ref(jnp.array(x), jnp.array(y)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "m,k,n", [(128, 128, 128), (256, 64, 128), (130, 100, 7), (1, 1, 1)]
+)
+def test_matmul_tile_boundaries(m, k, n):
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    y = rng.standard_normal((k, n)).astype(np.float32)
+    got = np.asarray(matmul(jnp.array(x), jnp.array(y)))
+    np.testing.assert_allclose(got, x @ y, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_custom_block_sizes():
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((96, 48)).astype(np.float32)
+    y = rng.standard_normal((48, 40)).astype(np.float32)
+    got = np.asarray(
+        matmul(jnp.array(x), jnp.array(y), block_m=32, block_n=16, block_k=16)
+    )
+    np.testing.assert_allclose(got, x @ y, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((2, 3, 4)), jnp.zeros((4, 5)))
+
+
+def test_matmul_vjp_gradients():
+    rng = np.random.default_rng(2)
+    x = jnp.array(rng.standard_normal((17, 9)), jnp.float32)
+    y = jnp.array(rng.standard_normal((9, 13)), jnp.float32)
+
+    def f(x, y):
+        return jnp.sum(matmul_vjp(x, y) ** 2)
+
+    gx, gy = jax.grad(f, argnums=(0, 1))(x, y)
+    # reference gradients of sum((xy)^2): 2*(xy)y^T and 2*x^T(xy)
+    z = np.asarray(x) @ np.asarray(y)
+    np.testing.assert_allclose(np.asarray(gx), 2 * z @ np.asarray(y).T, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gy), 2 * np.asarray(x).T @ z, rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_dtype_preserved():
+    x = jnp.ones((4, 4), jnp.float32)
+    assert matmul(x, x).dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Kernel composition (the merge operator)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ci=st.integers(1, 6),
+    cm=st.integers(1, 6),
+    co=st.integers(1, 6),
+    k1=st.sampled_from([1, 3]),
+    k2=st.sampled_from([1, 3]),
+    s1=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_compose_matches_ref(ci, cm, co, k1, k2, s1, seed):
+    rng = np.random.default_rng(seed)
+    t1 = jnp.array(rng.standard_normal((cm, ci, k1, k1)), jnp.float32)
+    t2 = jnp.array(rng.standard_normal((co, cm, k2, k2)), jnp.float32)
+    got = np.asarray(compose(t2, t1, s1=s1))
+    want = np.asarray(ref.compose_ref(t2, t1, s1=s1))
+    assert got.shape == (co, ci, s1 * (k2 - 1) + k1, s1 * (k2 - 1) + k1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    k1=st.sampled_from([1, 3]),
+    k2=st.sampled_from([1, 3, 5]),
+    s1=st.sampled_from([1, 2]),
+    s2=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_compose_equals_sequential_convs(k1, k2, s1, s2, seed):
+    """The defining property: conv(th') == conv(th2) o conv(th1)."""
+    rng = np.random.default_rng(seed)
+    ci, cm, co = 3, 4, 2
+    H = 4 + k1 + s1 * (k2 + 2)  # big enough for valid composition
+    x = jnp.array(rng.standard_normal((2, ci, H, H)), jnp.float32)
+    t1 = jnp.array(rng.standard_normal((cm, ci, k1, k1)), jnp.float32)
+    t2 = jnp.array(rng.standard_normal((co, cm, k2, k2)), jnp.float32)
+    seq = ref.conv2d_ref(ref.conv2d_ref(x, t1, stride=s1), t2, stride=s2)
+    tm = compose(t2, t1, s1=s1)
+    merged = ref.conv2d_ref(x, tm, stride=s1 * s2)
+    np.testing.assert_allclose(
+        np.asarray(seq), np.asarray(merged), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_compose_bias_matches_ref():
+    rng = np.random.default_rng(5)
+    t2 = jnp.array(rng.standard_normal((4, 3, 3, 3)), jnp.float32)
+    b1 = jnp.array(rng.standard_normal((3,)), jnp.float32)
+    b2 = jnp.array(rng.standard_normal((4,)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(compose_bias(t2, b1, b2)),
+        np.asarray(ref.compose_bias_ref(t2, b1, b2)),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_compose_bias_is_exact_with_sequential_convs():
+    """Bias composition under full (reordered) padding semantics."""
+    rng = np.random.default_rng(6)
+    ci, cm, co, H = 2, 3, 2, 10
+    x = jnp.array(rng.standard_normal((1, ci, H, H)), jnp.float32)
+    t1 = jnp.array(rng.standard_normal((cm, ci, 3, 3)), jnp.float32)
+    t2 = jnp.array(rng.standard_normal((co, cm, 3, 3)), jnp.float32)
+    b1 = jnp.array(rng.standard_normal((cm,)), jnp.float32)
+    b2 = jnp.array(rng.standard_normal((co,)), jnp.float32)
+    # padding reordered: all zero-padding before the first conv
+    xp = jnp.pad(x, ((0, 0), (0, 0), (2, 2), (2, 2)))
+    seq = ref.conv2d_ref(ref.conv2d_ref(xp, t1, b=b1), t2, b=b2)
+    tm = compose(t2, t1, s1=1)
+    bm = compose_bias(t2, b1, b2)
+    merged = ref.conv2d_ref(xp, tm, b=bm)
+    np.testing.assert_allclose(
+        np.asarray(seq), np.asarray(merged), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_compose_channel_mismatch_raises():
+    with pytest.raises(ValueError):
+        compose(jnp.zeros((2, 3, 1, 1)), jnp.zeros((4, 2, 1, 1)))
+
+
+def test_expand_grouped_blockdiag():
+    rng = np.random.default_rng(8)
+    w = jnp.array(rng.standard_normal((6, 1, 3, 3)), jnp.float32)  # dw, C=6
+    dense = np.asarray(ref.expand_grouped(w, 6))
+    assert dense.shape == (6, 6, 3, 3)
+    for o in range(6):
+        for i in range(6):
+            if o == i:
+                np.testing.assert_array_equal(dense[o, i], np.asarray(w)[o, 0])
+            else:
+                np.testing.assert_array_equal(dense[o, i], 0)
+
+
+def test_expand_grouped_conv_equivalence():
+    """Grouped conv == dense conv with the expanded kernel."""
+    rng = np.random.default_rng(9)
+    x = jnp.array(rng.standard_normal((2, 6, 8, 8)), jnp.float32)
+    w = jnp.array(rng.standard_normal((6, 3, 3, 3)), jnp.float32)  # groups=2
+    grouped = ref.conv2d_ref(x, w, pad=1, groups=2)
+    dense = ref.conv2d_ref(x, ref.expand_grouped(w, 2), pad=1)
+    np.testing.assert_allclose(
+        np.asarray(grouped), np.asarray(dense), rtol=1e-4, atol=1e-5
+    )

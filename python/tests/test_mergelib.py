@@ -1,0 +1,186 @@
+"""Merge engine exactness — the paper's Appendix E, end to end."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import mergelib as ML
+from compile import model as M
+from compile import specs as S
+
+
+def _rand_net(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    params, state = M.init_params(spec, jax.random.PRNGKey(seed))
+    # perturb BN state so fusion is non-trivial
+    state = [
+        jnp.array(
+            rng.standard_normal(s.shape) * 0.1 + (1.0 if i % 2 else 0.0),
+            jnp.float32,
+        )
+        for i, s in enumerate(state)
+    ]
+    params = [
+        p + 0.01 * jnp.array(rng.standard_normal(p.shape), jnp.float32)
+        for p in params
+    ]
+    return params, state
+
+
+def test_bn_fuse_exact():
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((4, 3, 3, 3)).astype(np.float32)
+    gamma = rng.standard_normal(4).astype(np.float32)
+    beta = rng.standard_normal(4).astype(np.float32)
+    mean = rng.standard_normal(4).astype(np.float32)
+    var = (np.abs(rng.standard_normal(4)) + 0.5).astype(np.float32)
+    from compile.kernels.ref import conv2d_ref
+
+    x = jnp.array(rng.standard_normal((2, 3, 6, 6)), jnp.float32)
+    y = np.asarray(conv2d_ref(x, jnp.array(w), pad=1))
+    bn = (y - mean[None, :, None, None]) / np.sqrt(
+        var[None, :, None, None] + 1e-5
+    ) * gamma[None, :, None, None] + beta[None, :, None, None]
+    wf, bf = ML.bn_fuse(w, gamma, beta, mean, var)
+    fused = np.asarray(conv2d_ref(x, jnp.array(wf), jnp.array(bf), pad=1))
+    np.testing.assert_allclose(fused, bn, rtol=1e-3, atol=1e-4)
+
+
+def test_pad_plan_hoists_padding(tiny_spec):
+    plan = ML.pad_plan_from_S(tiny_spec, [1, 4, 5])
+    # segment (1,4] = layers 2,3,4 (pw,dw,pw): pad 1 hoisted to layer 2
+    assert plan[2] == 1 and plan[3] == 0 and plan[4] == 0
+    # singletons untouched
+    assert 1 not in plan and 5 not in plan
+
+
+def test_segments_from_S(tiny_spec):
+    assert ML.segments_from_S(tiny_spec, [2, 4]) == [(0, 2), (2, 4), (4, 6)]
+    assert ML.segments_from_S(tiny_spec, []) == [(0, 6)]
+
+
+def test_merge_segment_rejects_illegal(tiny_spec):
+    params, state = _rand_net(tiny_spec)
+    with pytest.raises(ValueError):
+        # crosses the residual add interior
+        ML.merge_segment(tiny_spec, params, state, 2, 5)
+
+
+@pytest.mark.parametrize(
+    "S_set,A_set",
+    [
+        ([1, 4, 5], [4]),          # merge the IRB body, skip-fuse case
+        ([1, 2, 3, 4, 5], [1, 3]), # everything singleton (identity merge)
+        ([1, 4], [1, 4]),          # body merge + pw/stride-2-conv cross merge
+    ],
+)
+def test_tiny_merge_equivalence(tiny_spec, S_set, A_set):
+    """merged network == padding-reordered masked network, exactly."""
+    spec = tiny_spec
+    params, state = _rand_net(spec, seed=3)
+    mask = np.zeros(spec.L, np.float32)
+    for a in A_set:
+        mask[a - 1] = 1.0
+    mask[spec.L - 1] = 1.0 if spec.layer(spec.L).act == S.ACT_RELU6 else 0.0
+    pad_plan = ML.pad_plan_from_S(spec, S_set)
+    rng = np.random.default_rng(4)
+    x = jnp.array(rng.standard_normal((2, 3, 12, 12)), jnp.float32)
+    ref_logits, _ = M.forward(
+        spec, params, state, x, jnp.array(mask),
+        train=False, use_pallas=False, pad_plan=pad_plan,
+    )
+    mspec, mparams = ML.build_merged(spec, params, state, S_set, A_set)
+    got = M.merged_forward(mspec, [jnp.array(p) for p in mparams], x)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref_logits), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_mbv2_full_merge_equivalence():
+    """The headline exactness property on the real MBV2-micro topology,
+    including skip fusion, cross-block merges, stride-2 merges."""
+    spec = S.BUILDERS["mbv2_w10"]()
+    params, state = _rand_net(spec, seed=5)
+    S_set = [2, 4, 6, 9, 12, 15, 18, 21, 24, 27]
+    A_set = [2, 6, 9, 15, 21]
+    mask = np.zeros(spec.L, np.float32)
+    for a in A_set:
+        mask[a - 1] = 1.0
+    mask[spec.L - 1] = 1.0
+    pad_plan = ML.pad_plan_from_S(spec, S_set)
+    rng = np.random.default_rng(6)
+    x = jnp.array(rng.standard_normal((2, 3, spec.input_hw, spec.input_hw)), jnp.float32)
+    ref_logits, _ = M.forward(
+        spec, params, state, x, jnp.array(mask),
+        train=False, use_pallas=False, pad_plan=pad_plan,
+    )
+    mspec, mparams = ML.build_merged(spec, params, state, S_set, A_set)
+    got = M.merged_forward(mspec, [jnp.array(p) for p in mparams], x)
+    err = float(jnp.max(jnp.abs(got - ref_logits)))
+    scale = float(jnp.std(ref_logits))
+    assert err < 1e-3 * max(scale, 1.0), (err, scale)
+    # depth actually compressed
+    assert len(mspec["layers"]) < spec.L
+
+
+def test_vgg_merge_equivalence_needs_padding_reorder():
+    """Without the E.2 reordering the merged net MUST differ (Figure 5)."""
+    spec = S.BUILDERS["vgg_micro"]()
+    params, state = _rand_net(spec, seed=7)
+    S_set = [2, 4, 7]  # merge pairs/triples of 3x3 convs (L=9)
+    A_set = [2, 4, 7]
+    mask = np.ones(spec.L, np.float32)
+    # interior activations off
+    for i, j in ML.segments_from_S(spec, S_set):
+        for l in range(i + 1, j):
+            mask[l - 1] = 0.0
+    pad_plan = ML.pad_plan_from_S(spec, S_set)
+    rng = np.random.default_rng(8)
+    x = jnp.array(rng.standard_normal((2, 3, spec.input_hw, spec.input_hw)), jnp.float32)
+    reordered, _ = M.forward(
+        spec, params, state, x, jnp.array(mask),
+        train=False, use_pallas=False, pad_plan=pad_plan,
+    )
+    plain, _ = M.forward(
+        spec, params, state, x, jnp.array(mask), train=False, use_pallas=False
+    )
+    mspec, mparams = ML.build_merged(spec, params, state, S_set, A_set)
+    got = M.merged_forward(mspec, [jnp.array(p) for p in mparams], x)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(reordered), rtol=1e-3, atol=1e-4
+    )
+    drift = float(jnp.max(jnp.abs(plain - reordered)))
+    assert drift > 1e-3, "expected boundary drift without reordering"
+
+
+def test_skip_fuse_identity_tap(tiny_spec):
+    """Skip fusion: merged kernel center gains +1 on the diagonal."""
+    spec = tiny_spec
+    params, state = _rand_net(spec, seed=9)
+    w, b, geo = ML.merge_segment(spec, params, state, 1, 4)
+    assert geo.skip_fuse
+    w_nofuse = ML.compose_np(
+        ML.fused_dense_layer(spec, params, state, 4)[0],
+        ML.compose_np(
+            ML.fused_dense_layer(spec, params, state, 3)[0],
+            ML.fused_dense_layer(spec, params, state, 2)[0],
+            1,
+        ),
+        1,
+    )
+    diff = w - w_nofuse
+    c = geo.pad
+    for o in range(geo.c_out):
+        for i in range(geo.c_in):
+            expect = 1.0 if o == i else 0.0
+            np.testing.assert_allclose(diff[o, i, c, c], expect, atol=1e-5)
+
+
+def test_build_merged_param_defs_match(tiny_spec):
+    spec = tiny_spec
+    params, state = _rand_net(spec, seed=10)
+    mspec, mparams = ML.build_merged(spec, params, state, [1, 4, 5], [4])
+    assert len(mspec["params"]) == len(mparams)
+    for d, p in zip(mspec["params"], mparams):
+        assert list(p.shape) == d["shape"]

@@ -1,0 +1,196 @@
+"""Architecture IR, legality rules, and search-space enumeration."""
+
+import numpy as np
+import pytest
+
+from compile import specs as S
+
+
+def test_builders_resolve_shapes():
+    for name, b in S.BUILDERS.items():
+        spec = b()
+        h = w = spec.input_hw
+        c = spec.input_ch
+        for ly in spec.layers:
+            assert ly.c_in == c, f"{name} layer {ly.idx}: c_in chain broken"
+            assert ly.h_in == h and ly.w_in == w
+            h = (h + 2 * ly.pad - ly.k) // ly.stride + 1
+            w = (w + 2 * ly.pad - ly.k) // ly.stride + 1
+            assert (ly.h_out, ly.w_out) == (h, w)
+            if ly.pool_after:
+                h, w = h // 2, w // 2
+            c = ly.c_out
+        assert h >= 1 and w >= 1
+
+
+def test_mbv2_has_linear_bottlenecks_and_residuals():
+    spec = S.BUILDERS["mbv2_w10"]()
+    projects = [ly for ly in spec.layers if ly.act == S.ACT_ID]
+    assert len(projects) == 9  # one per IRB
+    residuals = [ly for ly in spec.layers if ly.add_from is not None]
+    assert len(residuals) == 3  # IRBs 3, 5, 7
+    for ly in residuals:
+        src = spec.layer(ly.add_from)
+        assert src.c_out == ly.c_out, "residual needs matching channels"
+
+
+def test_width_multiplier_scales_channels():
+    w10 = S.BUILDERS["mbv2_w10"]()
+    w14 = S.BUILDERS["mbv2_w14"]()
+    assert w14.layer(2).c_out > w10.layer(2).c_out
+    assert w10.L == w14.L
+
+
+def test_singleton_segments_always_legal():
+    for name in ("mbv2_w10", "vgg_micro"):
+        spec = S.BUILDERS[name]()
+        for i in range(spec.L):
+            geo = S.merged_geometry(spec, i, i + 1)
+            assert geo is not None, f"{name}: singleton ({i},{i+1}] rejected"
+            ly = spec.layer(i + 1)
+            assert (geo.k, geo.stride, geo.pad, geo.groups) == (
+                ly.k,
+                ly.stride,
+                ly.pad,
+                ly.groups,
+            )
+            assert geo.add_from == ly.add_from
+
+
+def test_merged_geometry_formulas():
+    spec = S.BUILDERS["vgg_micro"]()
+    # two 3x3 s1 p1 convs -> k'=5, pad'=2, s'=1
+    geo = S.merged_geometry(spec, 0, 2)
+    assert (geo.k, geo.pad, geo.stride) == (5, 2, 1)
+    # three 3x3 -> 7x7
+    geo3 = S.merged_geometry(spec, 4, 7)
+    assert (geo3.k, geo3.pad) == (7, 3)
+
+
+def test_residual_add_blocks_interior_merges():
+    spec = S.BUILDERS["mbv2_w10"]()
+    adds = [ly.idx for ly in spec.layers if ly.add_from is not None]
+    j = adds[0]
+    # segment ending past the add with the add interior is illegal
+    assert S.merged_geometry(spec, j - 2, j + 1) is None
+    # full-body segment (skip fuse) is legal
+    src = spec.layer(j).add_from
+    geo = S.merged_geometry(spec, src, j)
+    assert geo is not None and geo.skip_fuse
+
+
+def test_tap_blocks_merges_across_residual_source():
+    spec = S.BUILDERS["mbv2_w10"]()
+    taps = sorted({ly.add_from for ly in spec.layers if ly.add_from is not None})
+    m = taps[1]  # an interior residual source
+    assert S.merged_geometry(spec, m - 1, m + 1) is None
+
+
+def test_pool_blocks_interior_merges():
+    spec = S.BUILDERS["vgg_micro"]()
+    pooled = [ly.idx for ly in spec.layers if ly.pool_after]
+    p = pooled[0]
+    assert S.merged_geometry(spec, p - 1, p + 1) is None
+    # but a segment ENDING at the pooled layer is fine
+    assert S.merged_geometry(spec, p - 2, p) is not None
+
+
+def test_stride_then_k_rule():
+    spec = S.NetworkSpec(name="t", input_ch=3, input_hw=16, num_classes=4)
+    spec.layers = [
+        S.Layer(1, 3, 8, 3, 2, 1, 1, S.ACT_RELU6),
+        S.Layer(2, 8, 8, 3, 1, 1, 1, S.ACT_RELU6),
+    ]
+    spec._resolve()
+    assert S.merged_geometry(spec, 0, 2) is None  # k>1 after stride-2
+    # k=1 after stride 2 is fine
+    spec.layers[1] = S.Layer(2, 8, 8, 1, 1, 0, 1, S.ACT_RELU6)
+    spec._resolve()
+    geo = S.merged_geometry(spec, 0, 2)
+    assert geo is not None and (geo.k, geo.stride) == (3, 2)
+
+
+def test_max_merged_kernel_cap():
+    spec = S.NetworkSpec(name="t", input_ch=3, input_hw=32, num_classes=4)
+    spec.layers = [
+        S.Layer(i, 3 if i == 1 else 8, 8, 3, 1, 1, 1, S.ACT_RELU6)
+        for i in range(1, 7)
+    ]
+    spec._resolve()
+    # 5 stacked 3x3 -> k'=11 > 9 illegal; 4 stacked -> k'=9 legal
+    assert S.merged_geometry(spec, 0, 5) is None
+    geo = S.merged_geometry(spec, 0, 4)
+    assert geo is not None and geo.k == 9
+
+
+def test_enumerate_blocks_includes_cross_irb(tiny_spec):
+    spec = S.BUILDERS["mbv2_w10"]()
+    blocks = S.enumerate_blocks(spec)
+    cross = [
+        b
+        for b in blocks
+        if b.j - b.i > 1 and spec.layer(b.i + 1).irb != spec.layer(b.j).irb
+    ]
+    assert len(cross) >= 10, "search space must exceed DepthShrinker's"
+    keys = {(b.i, b.j) for b in blocks}
+    assert len(keys) == len(blocks), "duplicate blocks"
+
+
+def test_probe_rules():
+    spec = S.BUILDERS["mbv2_w10"]()
+    probes = S.enumerate_probes(spec)
+    blocks = {(b.i, b.j): b for b in S.enumerate_blocks(spec)}
+    for p in probes:
+        assert (p.i, p.j) in blocks, "probe over non-mergeable block"
+        sig_i = None if p.i == 0 else spec.layer(p.i).act
+        sig_j = None if p.j == spec.L else spec.layer(p.j).act
+        if sig_i == S.ACT_RELU6:
+            assert p.a == 1, "cannot drop a non-id boundary activation"
+        if sig_j == S.ACT_RELU6:
+            assert p.b == 1
+        if sig_i == S.ACT_ID and sig_j == S.ACT_ID:
+            assert p.b == 1, "both-edges-id blocks excluded (B.2)"
+        if p.i == 0:
+            assert p.a == 1
+        if p.j == spec.L:
+            assert p.b == 1
+
+
+def test_extended_space_adds_relu_at_bottlenecks():
+    """B.1: probes with a=1 exist at originally-id boundaries."""
+    spec = S.BUILDERS["mbv2_w10"]()
+    probes = S.enumerate_probes(spec)
+    id_bounds = {ly.idx for ly in spec.layers if ly.act == S.ACT_ID}
+    added = [p for p in probes if p.i in id_bounds and p.a == 1]
+    assert added, "extended search space missing"
+
+
+def test_pruned_builders_shrink_hidden_dims():
+    base = S.BUILDERS["mbv2_w10"]()
+    pruned = S.BUILDERS["mbv2_w10_l1u75"]()
+    assert pruned.L == base.L
+    shrunk = 0
+    for lb, lp in zip(base.layers, pruned.layers):
+        assert lp.c_out <= lb.c_out
+        if lp.c_out < lb.c_out:
+            shrunk += 1
+        # residual endpoints keep their channels
+        if lb.add_from is not None:
+            assert lp.c_out == lb.c_out
+    assert shrunk >= 8
+    # chain consistency
+    for a, b in zip(pruned.layers[:-1], pruned.layers[1:]):
+        assert b.c_in == a.c_out
+
+
+def test_arch_config_roundtrip(tmp_path):
+    spec = S.BUILDERS["vgg_micro"]()
+    path = tmp_path / "vgg.json"
+    S.dump_arch_config(spec, str(path))
+    import json
+
+    cfg = json.loads(path.read_text())
+    assert cfg["spec"]["name"] == "vgg_micro"
+    assert len(cfg["spec"]["layers"]) == spec.L
+    assert {b["i"] for b in cfg["blocks"]} <= set(range(spec.L))
+    assert all("a" in p and "b" in p for p in cfg["probes"])

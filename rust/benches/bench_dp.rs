@@ -1,0 +1,65 @@
+//! DP micro-benchmarks: the paper claims the two-stage DP solves
+//! "within a few seconds"; here it is microseconds-to-milliseconds at
+//! paper scale (L = 52, T0 in the thousands of ticks).
+
+use repro::coordinator::experiments::proxy_importance;
+use repro::dp::{extended, stage1, stage2};
+use repro::model::spec::testutil::tiny_config;
+use repro::util::bench::{black_box, Bencher};
+use repro::util::rng::Rng;
+
+fn random_instance(l: usize, seed: u64) -> (stage1::LatTable, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let mut t = stage1::LatTable::new(l);
+    let mut imp = vec![f64::NEG_INFINITY; (l + 1) * (l + 1) * 4];
+    for i in 0..l {
+        for j in i + 1..=l {
+            if j == i + 1 || rng.uniform() < 0.5 {
+                t.set(i, j, 5 + rng.below(200) as u64);
+                for a in 0..2 {
+                    for b in 0..2 {
+                        imp[((i * (l + 1) + j) * 2 + a) * 2 + b] =
+                            -(rng.uniform() as f64) * (j - i) as f64;
+                    }
+                }
+            }
+        }
+    }
+    (t, imp)
+}
+
+fn main() {
+    println!("# bench_dp — Algorithm 1 / 2 / 3+4 at paper scale");
+    for l in [28usize, 52, 104] {
+        let (t, _) = random_instance(l, 1);
+        Bencher::new(&format!("stage1 (Algorithm 1) L={l}")).run(|| {
+            black_box(stage1::solve(&t));
+        });
+    }
+    for (l, t0) in [(28usize, 2000u64), (52, 4000), (52, 8000)] {
+        let (t, imp) = random_instance(l, 2);
+        let s1 = stage1::solve(&t);
+        let f = |i: usize, j: usize| imp[((i * (l + 1) + j) * 2 + 1) * 2 + 1];
+        Bencher::new(&format!("stage2 (Algorithm 2) L={l} T0={t0}")).run(|| {
+            black_box(stage2::solve(l, &s1, &f, t0));
+        });
+        let f4 = |i: usize, j: usize, a: u8, b: u8| {
+            imp[((i * (l + 1) + j) * 2 + a as usize) * 2 + b as usize]
+        };
+        Bencher::new(&format!("extended (Algorithms 3+4) L={l} T0={t0}")).run(|| {
+            black_box(extended::solve(l, &s1, &f4, t0));
+        });
+    }
+    // realistic structured instance (tiny IRB net + proxy importance)
+    let cfg = tiny_config();
+    let imp = proxy_importance(&cfg);
+    let mut t = stage1::LatTable::new(cfg.spec.l());
+    for b in &cfg.blocks {
+        t.set(b.i, b.j, 10 + (b.j - b.i) as u64);
+    }
+    let s1 = stage1::solve(&t);
+    let f4 = |i: usize, j: usize, a: u8, b: u8| imp.get(i, j, a, b);
+    Bencher::new("extended on structured IRB instance").run(|| {
+        black_box(extended::solve(cfg.spec.l(), &s1, &f4, 80));
+    });
+}

@@ -1,0 +1,34 @@
+//! Analytical latency model benchmarks + the calibration numbers the
+//! cross-GPU tables rest on (DESIGN.md §2 substitution).
+
+use repro::latency::devices::{ALL, RTX_2080_TI};
+use repro::latency::gpu_model::{op_latency_ms, ConvGeom, ExecMode};
+use repro::util::bench::{black_box, Bencher};
+
+fn main() {
+    println!("# bench_latency_model");
+    let g = ConvGeom {
+        c_in: 96, c_out: 96, k: 3, stride: 1, groups: 1,
+        h_in: 24, w_in: 24, h_out: 24, w_out: 24,
+    };
+    Bencher::new("op_latency_ms single conv").run(|| {
+        black_box(op_latency_ms(&RTX_2080_TI, &g, 128, ExecMode::Fused, true, true));
+    });
+    // calibration print: the dw-vs-dense crossover on every device
+    println!("\n## dw+pw chain vs merged dense, bs128 (the paper's premise)");
+    for dev in ALL {
+        let dw = ConvGeom { c_in: 96, c_out: 96, k: 3, stride: 1, groups: 96, h_in: 24, w_in: 24, h_out: 24, w_out: 24 };
+        let pw = ConvGeom { c_in: 96, c_out: 24, k: 1, stride: 1, groups: 1, h_in: 24, w_in: 24, h_out: 24, w_out: 24 };
+        let dense = ConvGeom { c_in: 96, c_out: 24, k: 3, stride: 1, groups: 1, h_in: 24, w_in: 24, h_out: 24, w_out: 24 };
+        let chain = op_latency_ms(dev, &dw, 128, ExecMode::Fused, true, true)
+            + op_latency_ms(dev, &pw, 128, ExecMode::Fused, true, true);
+        let merged = op_latency_ms(dev, &dense, 128, ExecMode::Fused, true, true);
+        println!(
+            "  {:<10} chain {:.4} ms  merged {:.4} ms  speedup {:.2}x",
+            dev.name,
+            chain,
+            merged,
+            chain / merged
+        );
+    }
+}

@@ -1,0 +1,45 @@
+//! Merge-engine micro-benchmarks: kernel composition (th2 * th1), BN
+//! fusion, grouped-kernel expansion (Appendix E engine hot paths).
+
+use repro::merge::compose::{bn_fuse, compose, expand_grouped};
+use repro::tensor::Tensor;
+use repro::util::bench::{black_box, Bencher};
+use repro::util::rng::Rng;
+
+fn randt(shape: &[usize], rng: &mut Rng) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    for v in t.data.iter_mut() {
+        *v = rng.normal();
+    }
+    t
+}
+
+fn main() {
+    println!("# bench_merge — Appendix E engine");
+    let mut rng = Rng::new(3);
+    // the merge shapes that dominate MBV2 compression
+    let cases = [
+        ("pw(96->24) o dw3x3(96)", (96usize, 96usize, 24usize, 3usize, 1usize, 1usize)),
+        ("dw3x3(96) o pw(16->96)", (16, 96, 96, 1, 3, 1)),
+        ("pw(96->24) o 3x3(16->96)", (16, 96, 24, 3, 1, 1)),
+        ("stride-2 body compose (144ch)", (24, 144, 32, 3, 1, 2)),
+        ("vgg 3x3 o 3x3 -> 5x5 (64ch)", (64, 64, 64, 3, 3, 1)),
+        ("wide tail compose (480ch)", (80, 480, 96, 3, 1, 1)),
+    ];
+    for (name, (ci, cm, co, k1, k2, s1)) in cases {
+        let t1 = randt(&[cm, ci, k1, k1], &mut rng);
+        let t2 = randt(&[co, cm, k2, k2], &mut rng);
+        Bencher::new(&format!("compose {name}")).run(|| {
+            black_box(compose(&t2, &t1, s1).unwrap());
+        });
+    }
+    let w = randt(&[480, 80, 1, 1], &mut rng);
+    let v: Vec<f32> = (0..480).map(|_| rng.normal().abs() + 0.5).collect();
+    Bencher::new("bn_fuse 480ch pointwise").run(|| {
+        black_box(bn_fuse(&w, &v, &v, &v, &v, 1e-5).unwrap());
+    });
+    let dw = randt(&[480, 1, 3, 3], &mut rng);
+    Bencher::new("expand_grouped dw480").run(|| {
+        black_box(expand_grouped(&dw, 480));
+    });
+}

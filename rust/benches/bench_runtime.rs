@@ -1,0 +1,77 @@
+//! Real PJRT runtime benchmarks: artifact execution latency (the actual
+//! request path), block probes, and the L1 Pallas artifact vs the plain
+//! XLA artifact at batch 1.  Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use repro::runtime::engine::Engine;
+use repro::tensor::Tensor;
+use repro::trainer::sgd::TrainState;
+use repro::util::bench::Bencher;
+
+fn main() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        println!("bench_runtime: artifacts missing — run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::new(&root).unwrap();
+    let entry = engine.manifest.arch("mbv2_w10").unwrap().clone();
+    println!("# bench_runtime — PJRT CPU ({})", engine.platform());
+
+    // infer graphs at the three serving batch sizes (vanilla network)
+    let ts = TrainState::init(&engine, &entry, 1).unwrap();
+    let mask: Vec<f32> = vec![1.0; entry.l];
+    let mask_t = Tensor::from_vec(&[entry.l], mask).unwrap();
+    for b in [1usize, 8, 32] {
+        let name = format!("infer_b{b}");
+        let def = entry.artifact(&name).unwrap().clone();
+        let hw = entry.input[1];
+        let x = Tensor::zeros(&[b, 3, hw, hw]);
+        let lits: Vec<xla::Literal> = ts
+            .params
+            .iter()
+            .chain(ts.state.iter())
+            .map(|l| Tensor::from_literal(l).unwrap().to_literal().unwrap())
+            .collect();
+        let x_lit = x.to_literal().unwrap();
+        let m_lit = mask_t.to_literal().unwrap();
+        let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
+        inputs.push(&x_lit);
+        inputs.push(&m_lit);
+        // warm compile
+        engine.exec_borrowed(&def, &inputs).unwrap();
+        let tag = if b == 1 { " (Pallas conv path)" } else { "" };
+        Bencher::new(&format!("{name}{tag}")).run(|| {
+            engine.exec_borrowed(&def, &inputs).unwrap();
+        });
+    }
+
+    // block probes: the paper's T[i,j] measurement primitive
+    for (key, kind) in [((1usize, 4usize), "merged IRB body"), ((4, 5), "singleton pw")] {
+        if let Some(def) = entry.blocks_fused.get(&key) {
+            let inputs = engine.zero_inputs(def);
+            let refs: Vec<&Tensor> = inputs.iter().collect();
+            let lits = engine.to_literals(def, &refs).unwrap();
+            let lit_refs: Vec<&xla::Literal> = lits.iter().collect();
+            engine.exec_borrowed(def, &lit_refs).unwrap();
+            Bencher::new(&format!("block probe ({},{}] {kind}", key.0, key.1)).run(|| {
+                engine.exec_borrowed(def, &lit_refs).unwrap();
+            });
+        }
+    }
+
+    // literal round-trip overhead (host <-> device)
+    let t = Tensor::zeros(&[32, 3, 24, 24]);
+    Bencher::new("tensor -> literal -> tensor roundtrip").run(|| {
+        let l = t.to_literal().unwrap();
+        let _ = Tensor::from_literal(&l).unwrap();
+    });
+    let s = engine.stats.borrow();
+    println!(
+        "engine stats: {} compiles, {} executions, {:.1} ms total exec",
+        s.compiles,
+        s.executions,
+        s.exec_ns as f64 / 1e6
+    );
+}

@@ -1,0 +1,179 @@
+//! Channel-pruning baselines (paper Appendix C.3, Table 8): uniform-L1,
+//! AMC-ratio, MetaPruning-ratio.
+//!
+//! The pruned architectures (smaller hidden dims per IRB) are emitted by
+//! python (`specs.mbv2_micro_pruned`) with their own AOT artifacts; this
+//! module does the weight *selection*: which channels of the pretrained
+//! base network survive, by L1-norm of the expand conv's output
+//! channels (Li et al., 2017), mapped into the pruned net's parameters.
+
+use anyhow::{bail, Result};
+
+use crate::model::spec::NetworkSpec;
+use crate::tensor::Tensor;
+use crate::trainer::params::ParamSet;
+
+/// Top-k channel indices of `w` (OIHW) by L1 norm of each output slice.
+pub fn topk_channels_by_l1(w: &Tensor, k: usize) -> Vec<usize> {
+    let co = w.shape[0];
+    let per = w.len() / co;
+    let mut scored: Vec<(usize, f32)> = (0..co)
+        .map(|o| {
+            let s: f32 = w.data[o * per..(o + 1) * per].iter().map(|x| x.abs()).sum();
+            (o, s)
+        })
+        .collect();
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut idx: Vec<usize> = scored[..k].iter().map(|&(o, _)| o).collect();
+    idx.sort_unstable();
+    idx
+}
+
+fn slice_rows(w: &Tensor, rows: &[usize]) -> Tensor {
+    let per = w.len() / w.shape[0];
+    let mut shape = w.shape.clone();
+    shape[0] = rows.len();
+    let mut out = Tensor::zeros(&shape);
+    for (n, &r) in rows.iter().enumerate() {
+        out.data[n * per..(n + 1) * per].copy_from_slice(&w.data[r * per..(r + 1) * per]);
+    }
+    out
+}
+
+fn slice_cols(w: &Tensor, cols: &[usize]) -> Tensor {
+    // OIHW: slice the I dim
+    let (o, _i, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let mut out = Tensor::zeros(&[o, cols.len(), kh, kw]);
+    for oo in 0..o {
+        for (n, &c) in cols.iter().enumerate() {
+            for y in 0..kh {
+                for x in 0..kw {
+                    *out.at4_mut(oo, n, y, x) = w.at4(oo, c, y, x);
+                }
+            }
+        }
+    }
+    out
+}
+
+fn slice_vec(v: &Tensor, idx: &[usize]) -> Tensor {
+    Tensor::from_vec(&[idx.len()], idx.iter().map(|&i| v.data[i]).collect()).unwrap()
+}
+
+/// Map pretrained base-network parameters into a pruned architecture.
+///
+/// For each layer whose c_out shrank, the kept channels are the top-k by
+/// L1 norm of the base conv weight; dependent dims (the next layer's
+/// c_in, depthwise groups, BN vectors) follow the same index set.
+pub fn prune_params(
+    base: &NetworkSpec,
+    pruned: &NetworkSpec,
+    ps: &ParamSet,
+) -> Result<ParamSet> {
+    if base.l() != pruned.l() {
+        bail!("layer count mismatch");
+    }
+    let mut out = ParamSet::new();
+    // kept output-channel indices per layer (None = all kept)
+    let mut kept: Vec<Option<Vec<usize>>> = vec![None; base.l() + 1];
+    for l in 1..=base.l() {
+        let lb = base.layer(l);
+        let lp = pruned.layer(l);
+        let w = ps.get(&format!("w{l}"))?;
+        // input mapping from the previous layer
+        let in_map = if l > 1 { kept[l - 1].clone() } else { None };
+        let mut wl = w.clone();
+        if lb.is_depthwise() {
+            // depthwise: out channels == in channels; follow the in map
+            if let Some(map) = &in_map {
+                if lp.c_out != map.len() {
+                    bail!("dw layer {l}: pruned c_out {} != kept {}", lp.c_out, map.len());
+                }
+                wl = slice_rows(&wl, map);
+                kept[l] = Some(map.clone());
+            } else {
+                kept[l] = None;
+            }
+        } else {
+            if let Some(map) = &in_map {
+                wl = slice_cols(&wl, map);
+            }
+            if lp.c_out < lb.c_out {
+                let rows = topk_channels_by_l1(w, lp.c_out);
+                wl = slice_rows(&wl, &rows);
+                kept[l] = Some(rows);
+            } else {
+                kept[l] = None;
+            }
+        }
+        out.insert(format!("w{l}"), wl);
+        // BN params follow the output-channel map
+        for nm in ["gamma", "beta", "mean", "var"] {
+            let v = ps.get(&format!("{nm}{l}"))?;
+            let sliced = match &kept[l] {
+                Some(map) => slice_vec(v, map),
+                None => v.clone(),
+            };
+            out.insert(format!("{nm}{l}"), sliced);
+        }
+    }
+    // classifier: input dim follows the last layer's map
+    let fc_w = ps.get("fc_w")?;
+    let fc = match &kept[base.l()] {
+        Some(map) => {
+            let (ci, nc) = (fc_w.shape[0], fc_w.shape[1]);
+            let mut t = Tensor::zeros(&[map.len(), nc]);
+            for (n, &r) in map.iter().enumerate() {
+                t.data[n * nc..(n + 1) * nc]
+                    .copy_from_slice(&fc_w.data[r * nc..(r + 1) * nc]);
+            }
+            let _ = ci;
+            t
+        }
+        None => fc_w.clone(),
+    };
+    out.insert("fc_w".into(), fc);
+    out.insert("fc_b".into(), ps.get("fc_b")?.clone());
+    // validate against the pruned spec
+    for l in 1..=pruned.l() {
+        let lp = pruned.layer(l);
+        let w = out.get(&format!("w{l}"))?;
+        let want = vec![lp.c_out, lp.c_in / lp.groups, lp.k, lp.k];
+        if w.shape != want {
+            bail!("layer {l}: pruned weight shape {:?} != spec {:?}", w.shape, want);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn topk_picks_largest_l1() {
+        let w = Tensor::from_vec(
+            &[3, 1, 1, 2],
+            vec![0.1, 0.1, 5.0, 5.0, 1.0, -3.0],
+        )
+        .unwrap();
+        assert_eq!(topk_channels_by_l1(&w, 2), vec![1, 2]);
+        assert_eq!(topk_channels_by_l1(&w, 1), vec![1]);
+    }
+
+    #[test]
+    fn slicing_keeps_values() {
+        let mut rng = Rng::new(1);
+        let mut w = Tensor::zeros(&[4, 3, 1, 1]);
+        for v in w.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let r = slice_rows(&w, &[1, 3]);
+        assert_eq!(r.shape, vec![2, 3, 1, 1]);
+        assert_eq!(r.at4(0, 2, 0, 0), w.at4(1, 2, 0, 0));
+        let c = slice_cols(&w, &[0, 2]);
+        assert_eq!(c.shape, vec![4, 2, 1, 1]);
+        assert_eq!(c.at4(3, 1, 0, 0), w.at4(3, 2, 0, 0));
+    }
+}

@@ -1,0 +1,212 @@
+//! DepthShrinker baseline (Fu et al., ICML 2022) — the paper's main
+//! comparison.
+//!
+//! DS's search space is strictly smaller than ours: it only removes the
+//! activations INSIDE one inverted residual block and merges that block
+//! into a single dense conv — it can never merge across block
+//! boundaries (paper Figure 4).  We reproduce it inside our (A, S)
+//! framework: a DS pattern deactivates k IRBs; kept layers stay
+//! unmerged singletons.
+//!
+//! The DS search phase trains per-activation gates jointly; our analog
+//! ranks IRBs by the measured importance of deactivating each block
+//! (same ImpTable the DP consumes), which reproduces its selection
+//! behaviour without a second training system (App. C.1 reproduction).
+
+use anyhow::{bail, Result};
+
+use crate::importance::table::ImpTable;
+use crate::model::spec::{ArchConfig, ACT_RELU6};
+
+/// The layer span (i, j] of an IRB's mergeable body.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IrbSpan {
+    pub irb: usize,
+    pub i: usize,
+    pub j: usize,
+}
+
+/// Enumerate IRB body spans that are merge-legal as one block.
+pub fn irb_spans(cfg: &ArchConfig) -> Vec<IrbSpan> {
+    let mut spans = Vec::new();
+    let l = cfg.spec.l();
+    let mut cur: Option<(usize, usize, usize)> = None; // (irb, first, last)
+    for ly in &cfg.spec.layers {
+        let Some(irb) = ly.irb else { continue };
+        match cur {
+            Some((b, first, last)) if b == irb => cur = Some((b, first, last.max(ly.idx))),
+            Some((b, first, last)) => {
+                spans.push((b, first, last));
+                cur = Some((irb, ly.idx, ly.idx));
+                let _ = (b, first, last);
+            }
+            None => cur = Some((irb, ly.idx, ly.idx)),
+        }
+    }
+    if let Some((b, first, last)) = cur {
+        spans.push((b, first, last));
+    }
+    spans
+        .into_iter()
+        .filter(|&(_, first, last)| first < last) // need >= 2 layers to merge
+        .map(|(irb, first, last)| IrbSpan { irb, i: first - 1, j: last })
+        .filter(|s| s.j <= l && cfg.mergeable(s.i, s.j))
+        .collect()
+}
+
+/// A DS compression pattern: which IRBs are deactivated+merged.
+#[derive(Debug, Clone)]
+pub struct DsPattern {
+    pub name: String,
+    pub deactivated: Vec<IrbSpan>,
+    pub a: Vec<usize>,
+    pub s: Vec<usize>,
+}
+
+/// Build the (A, S) sets for a set of deactivated IRB spans.
+///
+/// A = original relu6 positions outside deactivated bodies;
+/// S = all interior boundaries except inside deactivated bodies.
+pub fn ds_pattern(cfg: &ArchConfig, name: &str, deact: &[IrbSpan]) -> Result<DsPattern> {
+    let l = cfg.spec.l();
+    for s in deact {
+        if !cfg.mergeable(s.i, s.j) {
+            bail!("IRB span ({}, {}] is not mergeable", s.i, s.j);
+        }
+    }
+    let interior = |x: usize| deact.iter().any(|s| x > s.i && x < s.j);
+    let mut a = Vec::new();
+    let mut s_set = Vec::new();
+    for b in 1..l {
+        if interior(b) {
+            continue;
+        }
+        s_set.push(b);
+        if cfg.spec.layer(b).act == ACT_RELU6 {
+            a.push(b);
+        }
+    }
+    Ok(DsPattern { name: name.to_string(), deactivated: deact.to_vec(), a, s: s_set })
+}
+
+/// Importance of deactivating a whole IRB body (endpoints at original
+/// states), from the same table the DP uses.
+pub fn irb_importance(cfg: &ArchConfig, imp: &ImpTable, span: &IrbSpan) -> f64 {
+    imp.imp_base(cfg, span.i, span.j)
+}
+
+/// Reproduced DS search (App. C.1): keep the `k_active` most damaging
+/// blocks activated, deactivate the rest — i.e. deactivate the
+/// `n - k_active` blocks with the LEAST accuracy damage.
+pub fn ds_search(
+    cfg: &ArchConfig,
+    imp: &ImpTable,
+    k_active: usize,
+    name: &str,
+) -> Result<DsPattern> {
+    let mut spans = irb_spans(cfg);
+    if spans.is_empty() {
+        bail!("architecture has no mergeable IRB bodies");
+    }
+    if k_active > spans.len() {
+        bail!("k_active {} > {} mergeable IRBs", k_active, spans.len());
+    }
+    // least damage (highest importance) deactivated first
+    spans.sort_by(|x, y| {
+        irb_importance(cfg, imp, y)
+            .partial_cmp(&irb_importance(cfg, imp, x))
+            .unwrap()
+    });
+    let deact: Vec<IrbSpan> = spans[..spans.len() - k_active].to_vec();
+    ds_pattern(cfg, name, &deact)
+}
+
+/// The fixed DS-A..E compression ladder, scaled to this architecture:
+/// progressively fewer active IRBs (paper used 12/9/7 of 17 on MBV2;
+/// we sweep the same fractions of our IRB count).
+pub fn ds_ladder(cfg: &ArchConfig, imp: &ImpTable) -> Result<Vec<DsPattern>> {
+    let n = irb_spans(cfg).len();
+    let fracs = [0.75, 0.6, 0.45, 0.3, 0.15];
+    let names = ["DS-A", "DS-B", "DS-C", "DS-D", "DS-E"];
+    let mut out = Vec::new();
+    let mut seen = Vec::new();
+    for (f, name) in fracs.iter().zip(names) {
+        let k = ((n as f64) * f).round() as usize;
+        if seen.contains(&k) {
+            continue;
+        }
+        seen.push(k);
+        out.push(ds_search(cfg, imp, k, name)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::testutil::tiny_config;
+
+    fn fake_imp(cfg: &ArchConfig) -> ImpTable {
+        let mut t = ImpTable::new(0.8, "fake");
+        for blk in &cfg.blocks {
+            let a = if blk.i == 0 || cfg.spec.layer(blk.i).act == ACT_RELU6 { 1 } else { 0 };
+            let b = if blk.j == cfg.spec.l() || cfg.spec.layer(blk.j).act == ACT_RELU6 {
+                1
+            } else {
+                0
+            };
+            // bigger blocks hurt more
+            t.insert(blk.i, blk.j, a, b, -0.01 * (blk.j - blk.i) as f64);
+        }
+        t
+    }
+
+    #[test]
+    fn spans_cover_mergeable_irbs() {
+        let cfg = tiny_config();
+        let spans = irb_spans(&cfg);
+        // tiny net: IRB1 body (1,4] is mergeable; IRB2 (4,6] is mergeable
+        assert!(spans.contains(&IrbSpan { irb: 1, i: 1, j: 4 }));
+        assert!(spans.contains(&IrbSpan { irb: 2, i: 4, j: 6 }));
+    }
+
+    #[test]
+    fn pattern_builds_a_and_s() {
+        let cfg = tiny_config();
+        let spans = irb_spans(&cfg);
+        let p = ds_pattern(&cfg, "DS-X", &spans[..1]).unwrap();
+        // deactivated body (1,4]: boundaries 2,3 removed from S
+        assert!(!p.s.contains(&2) && !p.s.contains(&3));
+        assert!(p.s.contains(&1) && p.s.contains(&4) && p.s.contains(&5));
+        // A = relu6 positions outside the body
+        assert!(p.a.contains(&1) && p.a.contains(&5));
+        assert!(!p.a.contains(&2));
+    }
+
+    #[test]
+    fn search_deactivates_least_damaging() {
+        let cfg = tiny_config();
+        let mut imp = fake_imp(&cfg);
+        // make IRB2 (4,6] nearly free to remove
+        imp.insert(4, 6, 1, 1, -0.001);
+        let p = ds_search(&cfg, &imp, 1, "DS-T").unwrap();
+        assert_eq!(p.deactivated.len(), 1);
+        assert_eq!((p.deactivated[0].i, p.deactivated[0].j), (4, 6));
+    }
+
+    #[test]
+    fn ds_cannot_merge_across_blocks() {
+        // structural assertion of the Figure-4 contrast: every DS merge
+        // segment lies within one IRB
+        let cfg = tiny_config();
+        let imp = fake_imp(&cfg);
+        for p in ds_ladder(&cfg, &imp).unwrap() {
+            for span in &p.deactivated {
+                let irbs: std::collections::BTreeSet<_> = (span.i + 1..=span.j)
+                    .map(|l| cfg.spec.layer(l).irb)
+                    .collect();
+                assert_eq!(irbs.len(), 1, "DS merged across IRBs: {:?}", span);
+            }
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! Shared experiment harness logic for the paper-table benches and the
+//! examples: method runners (ours / DepthShrinker / channel pruning),
+//! the merge-by-A ablation (Figure 3), and a proxy importance table for
+//! latency-only experiments.
+
+use anyhow::{anyhow, Result};
+
+use crate::baselines::depthshrinker::DsPattern;
+use crate::coordinator::pipeline::{Pipeline, PlanOutcome};
+use crate::data::synth::SynthSpec;
+use crate::importance::table::ImpTable;
+use crate::latency::table::BlockLatencies;
+use crate::merge::plan::segments_from_s;
+use crate::model::cost;
+use crate::model::spec::{ArchConfig, ACT_RELU6};
+use crate::trainer::params::ParamSet;
+
+/// A structural proxy for I[i,j,a,b] used when no trained importance
+/// table is cached (latency-shape experiments: Figures 3/4, cross-GPU
+/// tables).  Removing more interior activations costs more; adding a
+/// ReLU6 at an id boundary recovers a little (B.1); deeper layers
+/// matter slightly less — the qualitative structure the paper reports.
+pub fn proxy_importance(cfg: &ArchConfig) -> ImpTable {
+    let mut t = ImpTable::new(0.0, "proxy(structural)");
+    let l_total = cfg.spec.l() as f64;
+    for p in &cfg.probes {
+        let interior: usize = (p.i + 1..p.j)
+            .filter(|&l| cfg.spec.layer(l).act == ACT_RELU6)
+            .count();
+        let depth_discount = 1.0 - 0.3 * (p.i as f64 / l_total);
+        let mut v = -0.012 * interior as f64 * depth_discount;
+        // endpoint bonuses: keeping/adding an activation helps
+        if p.b == 1 {
+            v += 0.002;
+        }
+        if p.a == 1 {
+            v += 0.001;
+        }
+        t.insert(p.i, p.j, p.a, p.b, v);
+    }
+    t
+}
+
+/// Greedy maximal merging between consecutive boundary points — the
+/// "merge according to A" ablation of Figure 3 (no stage-1 DP).
+pub fn greedy_merge(cfg: &ArchConfig, boundaries: &[usize]) -> Vec<(usize, usize)> {
+    let mut segs = Vec::new();
+    for (lo, hi) in segments_from_s(cfg.spec.l(), boundaries) {
+        let mut start = lo;
+        while start < hi {
+            // longest legal merge starting at `start` within (lo, hi]
+            let mut end = start + 1;
+            for cand in (start + 1..=hi).rev() {
+                if cfg.mergeable(start, cand) {
+                    end = cand;
+                    break;
+                }
+            }
+            segs.push((start, end));
+            start = end;
+        }
+    }
+    segs
+}
+
+/// End-to-end latency of a segment list under a table.
+pub fn segments_ms(lat: &BlockLatencies, segs: &[(usize, usize)]) -> Result<f64> {
+    lat.network_ms(segs)
+        .ok_or_else(|| anyhow!("latency table missing a segment"))
+}
+
+#[derive(Debug, Clone)]
+pub struct MethodResult {
+    pub name: String,
+    /// None when run latency-only (no trained importance available)
+    pub acc: Option<f64>,
+    pub lat_ms: f64,
+    pub depth: usize,
+    pub mflops: f64,
+    pub peak_mem_mb: f64,
+    pub a: Vec<usize>,
+    pub s: Vec<usize>,
+}
+
+pub fn result_for_sets(
+    pipe: &Pipeline,
+    lat: &BlockLatencies,
+    name: &str,
+    a: &[usize],
+    s: &[usize],
+    acc: Option<f64>,
+    batch: usize,
+) -> Result<MethodResult> {
+    let segs = segments_from_s(pipe.cfg.spec.l(), s);
+    let lat_ms = segments_ms(lat, &segs)?;
+    let blocks: Vec<_> = segs
+        .iter()
+        .map(|&(i, j)| pipe.cfg.block(i, j).unwrap().clone())
+        .collect();
+    let c = cost::merged_cost(&blocks);
+    Ok(MethodResult {
+        name: name.to_string(),
+        acc,
+        lat_ms,
+        depth: segs.len(),
+        mflops: c.flops as f64 / 1e6,
+        peak_mem_mb: c.peak_act_elems as f64 * 4.0 * batch as f64 / 1e6,
+        a: a.to_vec(),
+        s: s.to_vec(),
+    })
+}
+
+pub fn vanilla_result(
+    pipe: &Pipeline,
+    lat: &BlockLatencies,
+    acc: Option<f64>,
+    batch: usize,
+) -> Result<MethodResult> {
+    let l = pipe.cfg.spec.l();
+    let all: Vec<usize> = (1..l).collect();
+    let a: Vec<usize> = (1..l)
+        .filter(|&x| pipe.cfg.spec.layer(x).act == ACT_RELU6)
+        .collect();
+    result_for_sets(pipe, lat, &pipe.arch, &a, &all, acc, batch)
+}
+
+/// Full "ours" runner: DP plan + (optional) finetune + merged eval.
+#[allow(clippy::too_many_arguments)]
+pub fn run_ours(
+    pipe: &Pipeline,
+    data: &SynthSpec,
+    pretrained: Option<&ParamSet>,
+    lat: &BlockLatencies,
+    imp: &ImpTable,
+    t0_ms: f64,
+    alpha: f64,
+    finetune_steps: usize,
+    kd: bool,
+) -> Result<(MethodResult, PlanOutcome)> {
+    let out = pipe.plan(lat, imp, t0_ms, alpha, true)?;
+    let acc = match pretrained {
+        Some(pre) if finetune_steps > 0 => {
+            let mask = pipe.mask_for_a(&out.a);
+            let (fine, _macc, _log) =
+                pipe.finetune(data, pre, mask, finetune_steps, 0.02, kd, 11)?;
+            let net = pipe.merge(&fine, &out)?;
+            Some(pipe.eval_merged(&net, data)?.acc)
+        }
+        _ => None,
+    };
+    let name = format!("Ours(T0={t0_ms:.2})");
+    let r = result_for_sets(pipe, lat, &name, &out.a, &out.s, acc, lat.batch)?;
+    Ok((r, out))
+}
+
+/// DepthShrinker runner: same finetune/merge protocol, DS's (A, S).
+pub fn run_ds(
+    pipe: &Pipeline,
+    data: &SynthSpec,
+    pretrained: Option<&ParamSet>,
+    lat: &BlockLatencies,
+    pattern: &DsPattern,
+    finetune_steps: usize,
+    kd: bool,
+) -> Result<MethodResult> {
+    let acc = match pretrained {
+        Some(pre) if finetune_steps > 0 => {
+            let mask = pipe.mask_for_a(&pattern.a);
+            let (fine, _macc, _log) =
+                pipe.finetune(data, pre, mask, finetune_steps, 0.02, kd, 13)?;
+            let out = PlanOutcome {
+                arch: pipe.arch.clone(),
+                t0_ms: 0.0,
+                alpha: 0.0,
+                a: pattern.a.clone(),
+                s: pattern.s.clone(),
+                b: pattern.a.clone(),
+                objective: 0.0,
+                est_latency_ms: 0.0,
+                lat_source: lat.source.clone(),
+            };
+            let net = pipe.merge(&fine, &out)?;
+            Some(pipe.eval_merged(&net, data)?.acc)
+        }
+        _ => None,
+    };
+    result_for_sets(pipe, lat, &pattern.name, &pattern.a, &pattern.s, acc, lat.batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::testutil::tiny_config;
+
+    #[test]
+    fn proxy_importance_covers_all_probes() {
+        let cfg = tiny_config();
+        let t = proxy_importance(&cfg);
+        assert_eq!(t.len(), cfg.probes.len());
+        // removing more activations must cost more
+        let small = t.get(1, 3, 1, 1);
+        let big = t.get(1, 4, 1, 1);
+        assert!(big < small);
+    }
+
+    #[test]
+    fn greedy_merge_respects_legality() {
+        let cfg = tiny_config();
+        // A = {1, 4}: gaps (0,1], (1,4], (4,6] — all fully mergeable
+        let segs = greedy_merge(&cfg, &[1, 4]);
+        assert_eq!(segs, vec![(0, 1), (1, 4), (4, 6)]);
+        // A = {} — (0,6] not mergeable as one: greedy splits legally
+        let segs = greedy_merge(&cfg, &[]);
+        assert!(segs.iter().all(|&(i, j)| cfg.mergeable(i, j)));
+        let covered: usize = segs.iter().map(|&(i, j)| j - i).sum();
+        assert_eq!(covered, 6);
+    }
+}

@@ -1,0 +1,254 @@
+//! Chained merged-network executor: runs a compressed network through
+//! its per-block AOT conv probes (one PJRT executable per merged conv)
+//! with the cheap glue — bias, relu6, residual adds, max-pool, global
+//! pool, classifier — on the host.
+//!
+//! This is what lets the pipeline evaluate ANY (A, S) the DP emits with
+//! pass-1 artifacts only (no python in the loop); the per-plan fused
+//! `infer_merged` artifacts from pass 2 remain the fast serving path.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::merge::plan::MergedNet;
+use crate::runtime::engine::Engine;
+use crate::runtime::manifest::ArchEntry;
+use crate::tensor::Tensor;
+
+pub struct MergedExec<'e> {
+    pub engine: &'e Engine,
+    pub entry: ArchEntry,
+    pub net: MergedNet,
+    /// probe batch (fixed at AOT time); inputs are padded up to it
+    pub batch: usize,
+}
+
+impl<'e> MergedExec<'e> {
+    pub fn new(engine: &'e Engine, entry: &ArchEntry, net: MergedNet) -> Result<MergedExec<'e>> {
+        for ml in &net.layers {
+            if !entry.blocks_eager.contains_key(&(ml.i, ml.j)) {
+                bail!("no eager probe for merged block ({}, {}]", ml.i, ml.j);
+            }
+        }
+        Ok(MergedExec { engine, entry: entry.clone(), net, batch: entry.latency_batch })
+    }
+
+    /// Logits for a batch (any size; internally padded to probe batch).
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        let n = x.shape[0];
+        if n > self.batch {
+            bail!("batch {} exceeds probe batch {}", n, self.batch);
+        }
+        let mut cur = pad_batch(x, self.batch)?;
+        let mut seg_out: Vec<Tensor> = Vec::with_capacity(self.net.layers.len());
+        for (li, ml) in self.net.layers.iter().enumerate() {
+            let probe = self
+                .entry
+                .blocks_eager
+                .get(&(ml.i, ml.j))
+                .ok_or_else(|| anyhow!("missing probe ({}, {}]", ml.i, ml.j))?;
+            let w = &self.net.params[2 * li];
+            let b = &self.net.params[2 * li + 1];
+            // eager probe = bare conv (x, w); bias applied host-side
+            let out = self.engine.exec(probe, &[&cur, w])?;
+            let mut y = out.into_iter().next().unwrap();
+            add_bias(&mut y, &b.data);
+            if let Some(src) = ml.add_from_seg {
+                if src < 0 {
+                    bail!("residual from the network input is not supported");
+                }
+                add_inplace(&mut y, &seg_out[src as usize])?;
+            }
+            if ml.act {
+                relu6(&mut y);
+            }
+            if ml.pool_after {
+                y = max_pool_2x2(&y);
+            }
+            seg_out.push(y.clone());
+            cur = y;
+        }
+        let pooled = global_avg_pool(&cur);
+        let logits = fc(
+            &pooled,
+            &self.net.params[self.net.params.len() - 2],
+            &self.net.params[self.net.params.len() - 1],
+        )?;
+        slice_batch(&logits, n)
+    }
+
+    /// Validation accuracy via the chained executor.
+    pub fn eval(
+        &self,
+        batcher: &crate::data::batcher::Batcher,
+    ) -> Result<crate::trainer::eval::EvalResult> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for nb in 0..batcher.val_batches(self.batch) {
+            let (x, y, valid) = batcher.val_batch(nb, self.batch);
+            let logits = self.forward(&x)?;
+            let nc = logits.shape[1];
+            for b in 0..valid {
+                let row = &logits.data[b * nc..(b + 1) * nc];
+                let pred = argmax(row);
+                if pred == y.data[b] as usize {
+                    correct += 1;
+                }
+            }
+            total += valid;
+        }
+        Ok(crate::trainer::eval::EvalResult {
+            acc: correct as f64 / total.max(1) as f64,
+            avg_loss: f64::NAN,
+            n: total,
+        })
+    }
+}
+
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (n, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = n;
+        }
+    }
+    best
+}
+
+fn pad_batch(x: &Tensor, batch: usize) -> Result<Tensor> {
+    if x.shape[0] == batch {
+        return Ok(x.clone());
+    }
+    let mut shape = x.shape.clone();
+    shape[0] = batch;
+    let mut out = Tensor::zeros(&shape);
+    out.data[..x.len()].copy_from_slice(&x.data);
+    Ok(out)
+}
+
+fn slice_batch(x: &Tensor, n: usize) -> Result<Tensor> {
+    let per: usize = x.shape[1..].iter().product();
+    let mut shape = x.shape.clone();
+    shape[0] = n;
+    Tensor::from_vec(&shape, x.data[..n * per].to_vec())
+}
+
+fn add_bias(y: &mut Tensor, b: &[f32]) {
+    let (n, c, h, w) = (y.shape[0], y.shape[1], y.shape[2], y.shape[3]);
+    for bi in 0..n {
+        for ci in 0..c {
+            let base = ((bi * c + ci) * h) * w;
+            for e in 0..h * w {
+                y.data[base + e] += b[ci];
+            }
+        }
+    }
+}
+
+fn relu6(y: &mut Tensor) {
+    for v in y.data.iter_mut() {
+        *v = v.clamp(0.0, 6.0);
+    }
+}
+
+fn add_inplace(y: &mut Tensor, other: &Tensor) -> Result<()> {
+    if y.shape != other.shape {
+        bail!("residual shape mismatch {:?} vs {:?}", y.shape, other.shape);
+    }
+    for (a, b) in y.data.iter_mut().zip(&other.data) {
+        *a += b;
+    }
+    Ok(())
+}
+
+fn max_pool_2x2(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    for b in 0..n {
+        for ch in 0..c {
+            for y in 0..oh {
+                for xx in 0..ow {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            m = m.max(x.at4(b, ch, 2 * y + dy, 2 * xx + dx));
+                        }
+                    }
+                    *out.at4_mut(b, ch, y, xx) = m;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn global_avg_pool(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = Tensor::zeros(&[n, c]);
+    let inv = 1.0 / (h * w) as f32;
+    for b in 0..n {
+        for ch in 0..c {
+            let base = ((b * c + ch) * h) * w;
+            let s: f32 = x.data[base..base + h * w].iter().sum();
+            out.data[b * c + ch] = s * inv;
+        }
+    }
+    out
+}
+
+fn fc(x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (n, ci) = (x.shape[0], x.shape[1]);
+    let (wi, nc) = (w.shape[0], w.shape[1]);
+    if ci != wi {
+        bail!("fc dim mismatch {ci} vs {wi}");
+    }
+    let mut out = Tensor::zeros(&[n, nc]);
+    for bi in 0..n {
+        for o in 0..nc {
+            let mut acc = b.data[o];
+            for i in 0..ci {
+                acc += x.data[bi * ci + i] * w.data[i * nc + o];
+            }
+            out.data[bi * nc + o] = acc;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_ops() {
+        let mut y = Tensor::from_vec(&[1, 2, 2, 2], vec![-1., 0., 3., 9., 1., 1., 1., 1.]).unwrap();
+        add_bias(&mut y, &[1.0, -1.0]);
+        assert_eq!(y.data, vec![0., 1., 4., 10., 0., 0., 0., 0.]);
+        relu6(&mut y);
+        assert_eq!(y.data, vec![0., 1., 4., 6., 0., 0., 0., 0.]);
+        let p = max_pool_2x2(&y);
+        assert_eq!(p.shape, vec![1, 2, 1, 1]);
+        assert_eq!(p.data, vec![6., 0.]);
+        let g = global_avg_pool(&y);
+        assert_eq!(g.data, vec![11.0 / 4.0, 0.0]);
+    }
+
+    #[test]
+    fn fc_and_argmax() {
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]).unwrap();
+        let w = Tensor::from_vec(&[2, 3], vec![1., 0., 0., 0., 1., 0.]).unwrap();
+        let b = Tensor::from_vec(&[3], vec![0., 0., 5.]).unwrap();
+        let out = fc(&x, &w, &b).unwrap();
+        assert_eq!(out.data, vec![1.0, 2.0, 5.0]);
+        assert_eq!(argmax(&out.data), 2);
+    }
+
+    #[test]
+    fn pad_and_slice_roundtrip() {
+        let x = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let p = pad_batch(&x, 4).unwrap();
+        assert_eq!(p.shape, vec![4, 3]);
+        let s = slice_batch(&p, 2).unwrap();
+        assert_eq!(s.data, x.data);
+    }
+}

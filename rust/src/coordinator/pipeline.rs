@@ -1,0 +1,351 @@
+//! The end-to-end compression pipeline — the paper's §5.1 process as a
+//! resumable state machine with on-disk caching per stage:
+//!
+//!   pretrain -> latency table T[i,j] -> importance table I[i,j,a,b]
+//!     -> two-stage DP (plan) -> finetune (masked or plan-reordered)
+//!     -> merge -> evaluate merged network.
+//!
+//! Every stage caches its output under `<artifacts>/runs/<arch>/` keyed
+//! by its configuration, so table harnesses can share pretraining and
+//! tables across budgets and methods.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::data::batcher::Batcher;
+use crate::data::synth::SynthSpec;
+use crate::dp::{extended, stage1, stage2};
+use crate::importance::eval::{ImportanceConfig, ImportanceEvaluator};
+use crate::importance::normalize;
+use crate::importance::table::ImpTable;
+use crate::latency::gpu_model::ExecMode;
+use crate::latency::measured::Measured;
+use crate::latency::table::{Analytical, BlockLatencies, LatencySource};
+use crate::merge::plan::{build_merged, plan_json, segments_from_s, MergedNet};
+use crate::model::spec::ArchConfig;
+use crate::coordinator::merged_exec::MergedExec;
+use crate::runtime::engine::Engine;
+use crate::runtime::manifest::ArchEntry;
+use crate::trainer::eval::{eval_masked, EvalResult};
+use crate::trainer::params::ParamSet;
+use crate::trainer::sgd::{TrainConfig, TrainState, Trainer};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct LatencyCfg {
+    /// "sim:<device>" or "measured"
+    pub source: String,
+    pub mode: ExecMode,
+    pub batch: usize,
+    /// integer ticks per ms for the DP (paper §5.1)
+    pub scale: f64,
+}
+
+impl Default for LatencyCfg {
+    fn default() -> Self {
+        LatencyCfg { source: "sim:rtx2080ti".into(), mode: ExecMode::Fused, batch: 128, scale: 200.0 }
+    }
+}
+
+pub struct Pipeline<'e> {
+    pub engine: &'e Engine,
+    pub arch: String,
+    pub entry: ArchEntry,
+    pub cfg: ArchConfig,
+    pub dir: PathBuf,
+    pub verbose: bool,
+}
+
+impl<'e> Pipeline<'e> {
+    pub fn new(engine: &'e Engine, arch: &str) -> Result<Pipeline<'e>> {
+        let entry = engine.manifest.arch(arch)?.clone();
+        let cfg = ArchConfig::load(&engine.manifest.root.join(&entry.config))?;
+        let dir = engine.manifest.root.join("runs").join(arch);
+        std::fs::create_dir_all(&dir)?;
+        Ok(Pipeline { engine, arch: arch.to_string(), entry, cfg, dir, verbose: true })
+    }
+
+    // -- stage 0: pretraining ------------------------------------------------
+
+    /// Train the vanilla network (or load the cached checkpoint).
+    /// Returns (params+state, val accuracy).
+    pub fn pretrain(
+        &self,
+        data: &SynthSpec,
+        steps: usize,
+        lr: f64,
+        seed: i32,
+        force: bool,
+    ) -> Result<(ParamSet, f64)> {
+        let ckpt = self.dir.join(format!("pretrained_s{steps}.rpr"));
+        let meta = self.dir.join(format!("pretrained_s{steps}.json"));
+        if !force && ckpt.exists() && meta.exists() {
+            let ps = ParamSet::load(&ckpt)?;
+            let acc = Json::from_file(&meta)?.get("acc")?.f64()?;
+            if self.verbose {
+                println!("[pretrain] cached: acc {acc:.4} ({})", ckpt.display());
+            }
+            return Ok((ps, acc));
+        }
+        let mut ts = TrainState::init(self.engine, &self.entry, seed)?;
+        let mut batcher = Batcher::new(data.clone(), self.entry.train_batch, seed as u64, true);
+        let mask = self.cfg.spec.default_mask();
+        let mut trainer = Trainer::new(self.engine, &self.entry, mask.clone());
+        trainer.verbose = self.verbose;
+        let cfg = TrainConfig::finetune(steps, lr);
+        let step_def = self.entry.artifact("train_step")?;
+        if self.verbose {
+            println!("[pretrain] {} steps on {}...", steps, data.num_classes);
+        }
+        let log = trainer.run(step_def, &mut ts, &mut batcher, &cfg, None)?;
+        let eval_def = self.entry.artifact("eval_step")?;
+        let r = eval_masked(self.engine, eval_def, &ts, &mask, &batcher, self.entry.eval_batch)?;
+        let ps = ts.to_param_set(&self.entry)?;
+        ps.save(&ckpt)?;
+        std::fs::write(
+            &meta,
+            Json::obj_from(vec![
+                ("acc", Json::num(r.acc)),
+                ("final_loss", Json::num(log.final_loss)),
+                ("steps", Json::int(steps as i64)),
+            ])
+            .to_string(),
+        )?;
+        if self.verbose {
+            println!("[pretrain] done: val acc {:.4}, loss {:.4}", r.acc, log.final_loss);
+        }
+        Ok((ps, r.acc))
+    }
+
+    // -- stage 1: latency table ----------------------------------------------
+
+    pub fn latency_table(&self, lcfg: &LatencyCfg, force: bool) -> Result<BlockLatencies> {
+        let tag = format!(
+            "lat_{}_{}_b{}.json",
+            lcfg.source.replace([':', '/'], "_"),
+            if lcfg.mode == ExecMode::Fused { "fused" } else { "eager" },
+            lcfg.batch
+        );
+        let path = self.dir.join(tag);
+        if !force && path.exists() {
+            return BlockLatencies::load(&path);
+        }
+        let mut src: Box<dyn LatencySource + '_> = if lcfg.source == "measured" {
+            Box::new(Measured::new(self.engine, &self.arch, lcfg.mode))
+        } else if let Some(dev) = lcfg.source.strip_prefix("sim:") {
+            let dev = crate::latency::devices::by_name(dev)
+                .ok_or_else(|| anyhow!("unknown device {dev:?}"))?;
+            Box::new(Analytical { dev, mode: lcfg.mode })
+        } else {
+            return Err(anyhow!("latency source must be 'measured' or 'sim:<device>'"));
+        };
+        if self.verbose {
+            println!("[latency] measuring {} blocks via {}...", self.cfg.blocks.len(), src.name());
+        }
+        let bl = BlockLatencies::measure(&self.cfg, src.as_mut(), lcfg.batch, lcfg.scale)?;
+        bl.save(&path)?;
+        Ok(bl)
+    }
+
+    // -- stage 2: importance table --------------------------------------------
+
+    pub fn importance(
+        &self,
+        data: &SynthSpec,
+        pretrained: &ParamSet,
+        base_acc: f64,
+        icfg: &ImportanceConfig,
+        force: bool,
+    ) -> Result<ImpTable> {
+        let path = self.dir.join(format!("imp_s{}.json", icfg.steps));
+        if !force && path.exists() {
+            return ImpTable::load(&path);
+        }
+        if self.verbose {
+            println!(
+                "[importance] {} probes x {} steps (base acc {:.4})...",
+                self.cfg.probes.len(),
+                icfg.steps,
+                base_acc
+            );
+        }
+        let ev = ImportanceEvaluator {
+            engine: self.engine,
+            arch: self.entry.clone(),
+            cfg: self.cfg.clone(),
+            pretrained: pretrained.clone(),
+            icfg: icfg.clone(),
+        };
+        let mut batcher = Batcher::new(data.clone(), self.entry.train_batch, icfg.seed, false);
+        let table = ev.eval_all(&mut batcher, base_acc)?;
+        table.save(&path)?;
+        Ok(table)
+    }
+
+    // -- stage 3: the two-stage DP --------------------------------------------
+
+    /// Solve for (A, S[, B]) under `t0_ms`.  `alpha` applies the B.3
+    /// normalization to a copy of the table.
+    pub fn plan(
+        &self,
+        lat: &BlockLatencies,
+        imp: &ImpTable,
+        t0_ms: f64,
+        alpha: f64,
+        extended_space: bool,
+    ) -> Result<PlanOutcome> {
+        let mut imp = imp.clone();
+        if alpha != 0.0 {
+            normalize::normalize(&mut imp, alpha);
+        }
+        let l = self.cfg.spec.l();
+        let t = lat.to_lat_table(l);
+        let s1 = stage1::solve(&t);
+        let t0 = lat.ms_to_ticks(t0_ms);
+        let (a, s, b, objective, latency) = if extended_space {
+            let f = |i: usize, j: usize, da: u8, db: u8| imp.get(i, j, da, db);
+            let sol = extended::solve(l, &s1, &f, t0)
+                .ok_or_else(|| anyhow!("budget {t0_ms} ms infeasible"))?;
+            (sol.a, sol.s, sol.b, sol.objective, sol.latency)
+        } else {
+            let f = |i: usize, j: usize| imp.imp_base(&self.cfg, i, j);
+            let sol = stage2::solve(l, &s1, &f, t0)
+                .ok_or_else(|| anyhow!("budget {t0_ms} ms infeasible"))?;
+            let b = sol.a.clone();
+            (sol.a, sol.s, b, sol.objective, sol.latency)
+        };
+        Ok(PlanOutcome {
+            arch: self.arch.clone(),
+            t0_ms,
+            alpha,
+            a,
+            s,
+            b,
+            objective,
+            est_latency_ms: lat.ticks_to_ms(latency),
+            lat_source: lat.source.clone(),
+        })
+    }
+
+    /// Write the plan JSON that `make plans` (aot pass 2) consumes.
+    pub fn write_plan(&self, out: &PlanOutcome, name: &str) -> Result<PathBuf> {
+        let dir = self.engine.manifest.root.join("plans");
+        std::fs::create_dir_all(&dir)?;
+        let j = plan_json(name, &self.arch, &self.cfg, &out.s, &out.a)?;
+        let path = dir.join(format!("{name}.json"));
+        std::fs::write(&path, j.to_string())?;
+        Ok(path)
+    }
+
+    // -- stage 4: finetune ------------------------------------------------------
+
+    /// Mask for a chosen A (extended semantics: relu6 exactly at A, plus
+    /// the original non-id last-layer activation).
+    pub fn mask_for_a(&self, a: &[usize]) -> Vec<f32> {
+        let l = self.cfg.spec.l();
+        let mut mask = vec![0.0f32; l];
+        for &x in a {
+            if x >= 1 && x < l {
+                mask[x - 1] = 1.0;
+            }
+        }
+        mask[l - 1] = if self.cfg.spec.layer(l).act == crate::model::spec::ACT_RELU6 {
+            1.0
+        } else {
+            0.0
+        };
+        mask
+    }
+
+    /// Finetune the masked network from the pretrained weight.
+    /// `kd` distills from the pretrained teacher (paper Table 4).
+    pub fn finetune(
+        &self,
+        data: &SynthSpec,
+        pretrained: &ParamSet,
+        mask: Vec<f32>,
+        steps: usize,
+        lr: f64,
+        kd: bool,
+        seed: u64,
+    ) -> Result<(ParamSet, f64, crate::trainer::sgd::TrainLog)> {
+        let mut ts = TrainState::from_checkpoint(&self.entry, pretrained)?;
+        let teacher = if kd {
+            Some(TrainState::from_checkpoint(&self.entry, pretrained)?)
+        } else {
+            None
+        };
+        let mut batcher = Batcher::new(data.clone(), self.entry.train_batch, seed, true);
+        let mut trainer = Trainer::new(self.engine, &self.entry, mask.clone());
+        trainer.verbose = self.verbose;
+        let cfg = TrainConfig::finetune(steps, lr);
+        let step_def = if kd {
+            self.entry.artifact("kd_step")?
+        } else {
+            self.entry.artifact("train_step")?
+        };
+        let log = trainer.run(step_def, &mut ts, &mut batcher, &cfg, teacher.as_ref())?;
+        let eval_def = self.entry.artifact("eval_step")?;
+        let r = eval_masked(self.engine, eval_def, &ts, &mask, &batcher, self.entry.eval_batch)?;
+        Ok((ts.to_param_set(&self.entry)?, r.acc, log))
+    }
+
+    // -- stage 5: merge + evaluate ------------------------------------------------
+
+    pub fn merge(&self, finetuned: &ParamSet, out: &PlanOutcome) -> Result<MergedNet> {
+        build_merged(&self.cfg, finetuned, &out.s, &out.a)
+            .context("building merged network")
+    }
+
+    /// Accuracy of the merged network via the chained executor.
+    pub fn eval_merged(&self, net: &MergedNet, data: &SynthSpec) -> Result<EvalResult> {
+        let exec = MergedExec::new(self.engine, &self.entry, net.clone_shallow())?;
+        let batcher = Batcher::new(data.clone(), self.entry.train_batch, 0, false);
+        exec.eval(&batcher)
+    }
+
+    /// End-to-end latency (ms) of the merged network under a table.
+    pub fn merged_latency_ms(&self, out: &PlanOutcome, lat: &BlockLatencies) -> Result<f64> {
+        let segs = segments_from_s(self.cfg.spec.l(), &out.s);
+        lat.network_ms(&segs)
+            .ok_or_else(|| anyhow!("latency table missing a merged segment"))
+    }
+
+    /// Latency of the UNCOMPRESSED network under a table (all singleton).
+    pub fn vanilla_latency_ms(&self, lat: &BlockLatencies) -> Result<f64> {
+        let segs: Vec<(usize, usize)> =
+            (0..self.cfg.spec.l()).map(|i| (i, i + 1)).collect();
+        lat.network_ms(&segs)
+            .ok_or_else(|| anyhow!("latency table missing a singleton"))
+    }
+}
+
+impl MergedNet {
+    /// Cheap structural clone (params are cloned; fine at these sizes).
+    pub fn clone_shallow(&self) -> MergedNet {
+        MergedNet { layers: self.layers.clone(), params: self.params.clone() }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PlanOutcome {
+    pub arch: String,
+    pub t0_ms: f64,
+    pub alpha: f64,
+    pub a: Vec<usize>,
+    pub s: Vec<usize>,
+    pub b: Vec<usize>,
+    pub objective: f64,
+    pub est_latency_ms: f64,
+    pub lat_source: String,
+}
+
+impl PlanOutcome {
+    pub fn summary(&self) -> String {
+        format!(
+            "A={:?} S={:?} | est {:.3} ms (budget {:.3}) obj {:+.4} [{}]",
+            self.a, self.s, self.est_latency_ms, self.t0_ms, self.objective, self.lat_source
+        )
+    }
+}

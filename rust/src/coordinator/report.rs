@@ -1,0 +1,116 @@
+//! Table renderers — paper-style rows for the experiment harnesses and
+//! EXPERIMENTS.md.
+
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (n, c) in row.iter().enumerate() {
+                w[n] = w[n].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Monospace rendering for the terminal.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let _ = writeln!(out, "== {}", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            for (n, c) in cells.iter().enumerate() {
+                let _ = write!(out, "| {:<width$} ", c, width = w[n]);
+            }
+            let _ = writeln!(out, "|");
+        };
+        line(&mut out, &self.headers);
+        let total: usize = w.iter().map(|x| x + 3).sum::<usize>() + 1;
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    /// GitHub-flavored markdown (for EXPERIMENTS.md).
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}\n", self.title);
+        let _ = writeln!(out, "| {} |", self.headers.join(" | "));
+        let _ = writeln!(
+            out,
+            "|{}|",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            let _ = writeln!(out, "| {} |", row.join(" | "));
+        }
+        out
+    }
+}
+
+pub fn fmt_ms(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn fmt_acc(x: f64) -> String {
+    format!("{:.2}", 100.0 * x)
+}
+
+pub fn fmt_speedup(base: f64, x: f64) -> String {
+    format!("{:.2}x", base / x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Table 1 analog", &["Network", "Acc (%)", "Lat (ms)"]);
+        t.row(vec!["MBV2-1.0".into(), "87.58".into(), "19.25".into()]);
+        t.row(vec!["Ours".into(), "87.69".into(), "12.53".into()]);
+        let s = t.render();
+        assert!(s.contains("Table 1 analog"));
+        assert!(s.lines().count() >= 4);
+        let md = t.render_markdown();
+        assert!(md.contains("| Network | Acc (%) | Lat (ms) |"));
+        assert!(md.contains("| Ours | 87.69 | 12.53 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn rejects_bad_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_ms(19.254), "19.25");
+        assert_eq!(fmt_acc(0.8758), "87.58");
+        assert_eq!(fmt_speedup(19.26, 13.67), "1.41x");
+    }
+}

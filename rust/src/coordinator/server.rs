@@ -1,0 +1,233 @@
+//! Batched inference server (thread-based substrate: no tokio offline).
+//!
+//! Clients submit single images through an MPSC channel; the serving
+//! loop drains up to `max_batch` requests or waits at most `max_wait`,
+//! pads the batch to the AOT graph's batch size, runs ONE PJRT
+//! execution, and replies with per-request predictions + latency.
+//! The PJRT engine stays on the serving thread (it is not Send); the
+//! load-generator threads only touch channels.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::merged_exec::argmax;
+use crate::runtime::engine::Engine;
+use crate::runtime::manifest::ArtifactDef;
+use crate::tensor::Tensor;
+
+pub struct Request {
+    /// CHW image
+    pub image: Vec<f32>,
+    pub submitted: Instant,
+    pub reply: Sender<Reply>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Reply {
+    pub pred: usize,
+    /// end-to-end latency from submit to reply
+    pub latency: Duration,
+    pub batch_size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub served: usize,
+    pub batches: usize,
+    pub latencies_ms: Vec<f64>,
+    pub wall: Duration,
+}
+
+impl ServeStats {
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.latencies_ms.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[((v.len() - 1) as f64 * p) as usize]
+    }
+
+    pub fn throughput(&self) -> f64 {
+        self.served as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        self.served as f64 / self.batches.max(1) as f64
+    }
+}
+
+/// Serving loop over a *static-graph* infer artifact.
+///
+/// `param_lits` are the leading artifact inputs (params [+state] [+mask]
+/// depending on the graph); the batch image tensor is the remaining
+/// input.  `mask_tail` carries trailing inputs after x (e.g. the
+/// activation mask of the vanilla infer graph).
+pub struct Server<'e> {
+    pub engine: &'e Engine,
+    pub infer: ArtifactDef,
+    pub head: Vec<xla::Literal>,
+    pub tail: Vec<xla::Literal>,
+    pub graph_batch: usize,
+    pub image_elems: usize,
+    pub cfg: ServerConfig,
+}
+
+impl<'e> Server<'e> {
+    pub fn new(
+        engine: &'e Engine,
+        infer: &ArtifactDef,
+        head: Vec<xla::Literal>,
+        tail: Vec<xla::Literal>,
+        cfg: ServerConfig,
+    ) -> Result<Server<'e>> {
+        let x_pos = head.len();
+        if x_pos >= infer.inputs.len() {
+            bail!("infer artifact has no image input slot");
+        }
+        let xdef = &infer.inputs[x_pos];
+        if xdef.shape.len() != 4 {
+            bail!("expected NCHW image input, got {:?}", xdef.shape);
+        }
+        let graph_batch = xdef.shape[0];
+        let image_elems: usize = xdef.shape[1..].iter().product();
+        if cfg.max_batch > graph_batch {
+            bail!("max_batch {} exceeds graph batch {}", cfg.max_batch, graph_batch);
+        }
+        Ok(Server {
+            engine,
+            infer: infer.clone(),
+            head,
+            tail,
+            graph_batch,
+            image_elems,
+            cfg,
+        })
+    }
+
+    /// Run until `rx` disconnects; returns serving statistics.
+    pub fn run(&self, rx: Receiver<Request>) -> Result<ServeStats> {
+        let mut stats = ServeStats::default();
+        let t0 = Instant::now();
+        let xdef = &self.infer.inputs[self.head.len()];
+        loop {
+            // block for the first request of a batch
+            let first = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => break,
+            };
+            let mut batch = vec![first];
+            let deadline = Instant::now() + self.cfg.max_wait;
+            while batch.len() < self.cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => batch.push(r),
+                    Err(_) => break,
+                }
+            }
+            // assemble padded batch tensor
+            let mut x = Tensor::zeros(&xdef.shape);
+            for (n, r) in batch.iter().enumerate() {
+                if r.image.len() != self.image_elems {
+                    bail!("request image has {} elems, want {}", r.image.len(), self.image_elems);
+                }
+                x.data[n * self.image_elems..(n + 1) * self.image_elems]
+                    .copy_from_slice(&r.image);
+            }
+            let x_lit = x.to_literal()?;
+            let mut inputs: Vec<&xla::Literal> = self.head.iter().collect();
+            inputs.push(&x_lit);
+            inputs.extend(self.tail.iter());
+            let out = self.engine.exec_borrowed(&self.infer, &inputs)?;
+            let logits = Tensor::from_literal(&out[0])?;
+            let nc = logits.shape[1];
+            let bs = batch.len();
+            for (n, r) in batch.into_iter().enumerate() {
+                let pred = argmax(&logits.data[n * nc..(n + 1) * nc]);
+                let latency = r.submitted.elapsed();
+                stats.served += 1;
+                stats.latencies_ms.push(latency.as_secs_f64() * 1e3);
+                let _ = r.reply.send(Reply { pred, latency, batch_size: bs });
+            }
+            stats.batches += 1;
+        }
+        stats.wall = t0.elapsed();
+        Ok(stats)
+    }
+}
+
+/// Spawn `clients` load-generator threads, each sending `per_client`
+/// requests with `think_ms` pacing; returns the request receiver plus
+/// join handles (images are procedurally generated inside the threads).
+pub fn spawn_load(
+    data: &crate::data::synth::SynthSpec,
+    clients: usize,
+    per_client: usize,
+    think_ms: u64,
+) -> (Receiver<Request>, Vec<std::thread::JoinHandle<usize>>) {
+    let (tx, rx) = channel::<Request>();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let tx = tx.clone();
+        let data = data.clone();
+        handles.push(std::thread::spawn(move || {
+            let elems = 3 * data.hw * data.hw;
+            let mut correct = 0usize;
+            for n in 0..per_client {
+                let mut img = vec![0f32; elems];
+                let idx = c * per_client + n;
+                let label = crate::data::synth::sample_into(
+                    &data,
+                    crate::data::synth::Split::Val,
+                    idx % data.val_len(),
+                    &mut img,
+                );
+                let (rtx, rrx) = channel();
+                let req = Request { image: img, submitted: Instant::now(), reply: rtx };
+                if tx.send(req).is_err() {
+                    break;
+                }
+                if let Ok(rep) = rrx.recv() {
+                    if rep.pred == label {
+                        correct += 1;
+                    }
+                }
+                if think_ms > 0 {
+                    std::thread::sleep(Duration::from_millis(think_ms));
+                }
+            }
+            correct
+        }));
+    }
+    drop(tx);
+    (rx, handles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let mut s = ServeStats::default();
+        s.latencies_ms = vec![1.0, 2.0, 3.0, 4.0, 100.0];
+        s.served = 5;
+        s.batches = 2;
+        s.wall = Duration::from_secs(1);
+        assert_eq!(s.percentile_ms(0.5), 3.0);
+        assert!(s.percentile_ms(0.95) >= 4.0);
+        assert_eq!(s.throughput(), 5.0);
+        assert_eq!(s.mean_batch(), 2.5);
+    }
+}

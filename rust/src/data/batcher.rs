@@ -1,0 +1,153 @@
+//! Batch assembly: shuffled train batches and sequential val batches as
+//! host tensors ready for the AOT train/eval artifacts.
+
+use crate::data::synth::{random_erase, sample_into, Split, SynthSpec};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub struct Batcher {
+    pub spec: SynthSpec,
+    pub batch: usize,
+    pub augment: bool,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    epoch: usize,
+}
+
+impl Batcher {
+    pub fn new(spec: SynthSpec, batch: usize, seed: u64, augment: bool) -> Batcher {
+        let order: Vec<usize> = (0..spec.train_len()).collect();
+        let mut b = Batcher { spec, batch, augment, order, cursor: 0, rng: Rng::new(seed), epoch: 0 };
+        b.shuffle();
+        b
+    }
+
+    fn shuffle(&mut self) {
+        // Fisher-Yates
+        for i in (1..self.order.len()).rev() {
+            let j = self.rng.below(i + 1);
+            self.order.swap(i, j);
+        }
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// steps per epoch
+    pub fn steps_per_epoch(&self) -> usize {
+        self.order.len() / self.batch
+    }
+
+    /// Next shuffled train batch: (x [B,3,H,W], y [B]).
+    pub fn next_train(&mut self) -> (Tensor, Tensor) {
+        let hw = self.spec.hw;
+        let mut x = Tensor::zeros(&[self.batch, 3, hw, hw]);
+        let mut y = Tensor::zeros(&[self.batch]);
+        let stride = 3 * hw * hw;
+        for b in 0..self.batch {
+            if self.cursor >= self.order.len() {
+                self.cursor = 0;
+                self.epoch += 1;
+                self.shuffle();
+            }
+            let idx = self.order[self.cursor];
+            self.cursor += 1;
+            let label = sample_into(
+                &self.spec,
+                Split::Train,
+                idx,
+                &mut x.data[b * stride..(b + 1) * stride],
+            );
+            y.data[b] = label as f32;
+        }
+        if self.augment {
+            random_erase(&mut x, &mut self.rng, 0.25);
+        }
+        (x, y)
+    }
+
+    /// Val batch `n` (sequential, deterministic); final partial batches
+    /// are padded and the pad rows get label = num_classes, which
+    /// one-hots to a zero row in the eval graph — they contribute
+    /// nothing to loss_sum or ncorrect.  `valid` is the real count.
+    pub fn val_batch(&self, n: usize, batch: usize) -> (Tensor, Tensor, usize) {
+        let hw = self.spec.hw;
+        let total = self.spec.val_len();
+        let start = n * batch;
+        let valid = batch.min(total.saturating_sub(start));
+        let mut x = Tensor::zeros(&[batch, 3, hw, hw]);
+        let mut y = Tensor::zeros(&[batch]);
+        let stride = 3 * hw * hw;
+        for b in 0..batch {
+            if b < valid {
+                let label = sample_into(
+                    &self.spec,
+                    Split::Val,
+                    start + b,
+                    &mut x.data[b * stride..(b + 1) * stride],
+                );
+                y.data[b] = label as f32;
+            } else {
+                y.data[b] = self.spec.num_classes as f32; // pad sentinel
+            }
+        }
+        (x, y, valid)
+    }
+
+    pub fn val_batches(&self, batch: usize) -> usize {
+        self.spec.val_len().div_ceil(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_have_right_shapes() {
+        let spec = SynthSpec::quickstart(8);
+        let mut b = Batcher::new(spec, 16, 1, false);
+        let (x, y) = b.next_train();
+        assert_eq!(x.shape, vec![16, 3, 8, 8]);
+        assert_eq!(y.shape, vec![16]);
+        assert!(y.data.iter().all(|&l| l >= 0.0 && l < 10.0));
+    }
+
+    #[test]
+    fn epoch_wraps_and_reshuffles() {
+        let spec = SynthSpec::quickstart(8); // 640 train samples
+        let mut b = Batcher::new(spec, 64, 2, false);
+        assert_eq!(b.steps_per_epoch(), 10);
+        for _ in 0..10 {
+            b.next_train();
+        }
+        assert_eq!(b.epoch(), 0);
+        b.next_train();
+        assert_eq!(b.epoch(), 1);
+    }
+
+    #[test]
+    fn val_batches_cover_everything_once() {
+        let spec = SynthSpec::quickstart(8); // 320 val
+        let b = Batcher::new(spec.clone(), 16, 3, false);
+        let nb = b.val_batches(128);
+        assert_eq!(nb, 3);
+        let (_, _, v0) = b.val_batch(0, 128);
+        let (_, _, v2) = b.val_batch(2, 128);
+        assert_eq!(v0, 128);
+        assert_eq!(v2, 320 - 256);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = SynthSpec::quickstart(8);
+        let mut a = Batcher::new(spec.clone(), 8, 7, false);
+        let mut b = Batcher::new(spec, 8, 7, false);
+        let (xa, ya) = a.next_train();
+        let (xb, yb) = b.next_train();
+        assert_eq!(xa.data, xb.data);
+        assert_eq!(ya.data, yb.data);
+    }
+}

@@ -1,0 +1,208 @@
+//! Brute-force oracles for the DP solvers (tests only, exponential).
+//!
+//! Enumerate every A (and (A, B) in the extended space) directly from
+//! the problem definition (paper Eq. 6 / Eq. 16) — no recurrences — so
+//! agreement with dp/stage2.rs and dp/extended.rs is real evidence of
+//! Propositions 4.1 / 4.2.
+
+use super::stage1::{LatTable, Stage1};
+use super::stage2::{Solution, NEG_INF};
+
+/// Base space: maximize sum I over the A-partition subject to
+/// sum T_opt over A-segments < t0.  imp[i][j] = NEG_INF marks invalid.
+pub fn solve_base(
+    l_total: usize,
+    t: &LatTable,
+    imp: &[Vec<f64>],
+    t0: u64,
+) -> Option<Solution> {
+    let s1 = super::stage1::solve(t);
+    let mut best: Option<Solution> = None;
+    // enumerate subsets A of [1, L-1]
+    let m = l_total.saturating_sub(1);
+    for bits in 0..(1u32 << m) {
+        let mut a = Vec::new();
+        for p in 0..m {
+            if bits & (1 << p) != 0 {
+                a.push(p + 1);
+            }
+        }
+        let mut pts = vec![0usize];
+        pts.extend(&a);
+        pts.push(l_total);
+        let mut obj = 0.0;
+        let mut lat: u64 = 0;
+        let mut ok = true;
+        for w in pts.windows(2) {
+            let v = imp[w[0]][w[1]];
+            if v == NEG_INF || !s1.feasible(w[0], w[1]) {
+                ok = false;
+                break;
+            }
+            obj += v;
+            lat = lat.saturating_add(s1.t_opt(w[0], w[1]));
+        }
+        if !ok || lat >= t0 {
+            continue;
+        }
+        if best.as_ref().map_or(true, |b| obj > b.objective) {
+            let mut s = a.clone();
+            for w in pts.windows(2) {
+                s.extend(s1.s_opt(w[0], w[1]));
+            }
+            s.sort_unstable();
+            s.dedup();
+            best = Some(Solution { a, s, objective: obj, latency: lat });
+        }
+    }
+    best
+}
+
+/// Extended space (Appendix B.1): maximize I(A, B) over A subset of B,
+/// where imp4[i][j][a][b] carries the (d_i, d_j)-indexed importances.
+/// Returns (A, B, S, objective, latency).
+pub struct ExtSolution {
+    pub a: Vec<usize>,
+    pub b: Vec<usize>,
+    pub s: Vec<usize>,
+    pub objective: f64,
+    pub latency: u64,
+}
+
+pub fn solve_extended(
+    l_total: usize,
+    t: &LatTable,
+    imp4: &dyn Fn(usize, usize, u8, u8) -> f64,
+    t0: u64,
+) -> Option<ExtSolution> {
+    let s1: Stage1 = super::stage1::solve(t);
+    let m = l_total.saturating_sub(1);
+    let mut best: Option<ExtSolution> = None;
+    for b_bits in 0..(1u32 << m) {
+        let mut b_set = Vec::new();
+        for p in 0..m {
+            if b_bits & (1 << p) != 0 {
+                b_set.push(p + 1);
+            }
+        }
+        let mut pts = vec![0usize];
+        pts.extend(&b_set);
+        pts.push(l_total);
+        // enumerate A subset of B via per-boundary activation bits
+        let nb = b_set.len();
+        for a_bits in 0..(1u32 << nb) {
+            let state = |bound: usize| -> u8 {
+                if bound == 0 || bound == l_total {
+                    1
+                } else {
+                    let pos = b_set.iter().position(|&x| x == bound).unwrap();
+                    ((a_bits >> pos) & 1) as u8
+                }
+            };
+            let mut obj = 0.0;
+            let mut ok = true;
+            for w in pts.windows(2) {
+                let v = imp4(w[0], w[1], state(w[0]), state(w[1]));
+                if v == NEG_INF {
+                    ok = false;
+                    break;
+                }
+                obj += v;
+            }
+            if !ok {
+                continue;
+            }
+            // merging may cross id joints (state-0 boundaries): the
+            // latency-optimal S splits only at state-1 (= A) positions
+            let a: Vec<usize> = b_set
+                .iter()
+                .enumerate()
+                .filter(|(p, _)| a_bits & (1 << p) != 0)
+                .map(|(_, &x)| x)
+                .collect();
+            let mut apts = vec![0usize];
+            apts.extend(&a);
+            apts.push(l_total);
+            let mut lat: u64 = 0;
+            let mut feasible = true;
+            for w in apts.windows(2) {
+                if !s1.feasible(w[0], w[1]) {
+                    feasible = false;
+                    break;
+                }
+                lat = lat.saturating_add(s1.t_opt(w[0], w[1]));
+            }
+            if !feasible || lat >= t0 {
+                continue;
+            }
+            if best.as_ref().map_or(true, |bb| obj > bb.objective) {
+                let mut s = a.clone();
+                for w in apts.windows(2) {
+                    s.extend(s1.s_opt(w[0], w[1]));
+                }
+                s.sort_unstable();
+                s.dedup();
+                best = Some(ExtSolution {
+                    a,
+                    b: b_set.clone(),
+                    s,
+                    objective: obj,
+                    latency: lat,
+                });
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_oracle_tiny_instance() {
+        let mut t = LatTable::new(2);
+        t.set(0, 1, 5);
+        t.set(1, 2, 5);
+        t.set(0, 2, 8);
+        let mut imp = vec![vec![NEG_INF; 3]; 3];
+        imp[0][1] = 0.0;
+        imp[1][2] = 0.0;
+        imp[0][2] = -1.0;
+        // budget 9: only merging fits (lat 8 < 9, split needs 10);
+        // budget 11: the split (lat 10, obj 0) becomes feasible and wins
+        let m = solve_base(2, &t, &imp, 9).unwrap();
+        assert!(m.a.is_empty());
+        assert_eq!(m.latency, 8);
+        let k = solve_base(2, &t, &imp, 11).unwrap();
+        assert_eq!(k.a, vec![1]);
+        assert_eq!(k.objective, 0.0);
+    }
+
+    #[test]
+    fn extended_oracle_prefers_added_activation() {
+        let mut t = LatTable::new(2);
+        t.set(0, 1, 5);
+        t.set(1, 2, 5);
+        t.set(0, 2, 8);
+        // boundary 1 with activation ON is worth more
+        let f = |i: usize, j: usize, _a: u8, b: u8| -> f64 {
+            match (i, j) {
+                (0, 1) => {
+                    if b == 1 {
+                        0.5
+                    } else {
+                        0.0
+                    }
+                }
+                (1, 2) => 0.0,
+                (0, 2) => -1.0,
+                _ => NEG_INF,
+            }
+        };
+        let sol = solve_extended(2, &t, &f, 20).unwrap();
+        assert_eq!(sol.b, vec![1]);
+        assert_eq!(sol.a, vec![1]);
+        assert!((sol.objective - 0.5).abs() < 1e-12);
+    }
+}

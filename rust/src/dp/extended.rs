@@ -1,0 +1,372 @@
+//! Extended-space DP (paper Appendix B.1, Algorithms 3 & 4).
+//!
+//! The extension lets block boundaries carry an explicit activation
+//! state d in {0, 1} — in MobileNetV2 this ADDS a ReLU6 at linear
+//! bottleneck boundaries, which DepthShrinker showed helps.  Stage 3
+//! (Algorithm 3) optimally re-partitions a block range into importance
+//! blocks joined at id boundaries; stage 4 (Algorithm 4) runs the
+//! budgeted DP over (boundary, state) pairs.
+
+use super::stage1::{Stage1, INF};
+use super::stage2::NEG_INF;
+
+/// (d_i, d_j)-indexed importance of block (i, j].  NEG_INF = invalid.
+pub trait Importance4 {
+    fn imp4(&self, i: usize, j: usize, a: u8, b: u8) -> f64;
+}
+
+impl<F: Fn(usize, usize, u8, u8) -> f64> Importance4 for F {
+    fn imp4(&self, i: usize, j: usize, a: u8, b: u8) -> f64 {
+        self(i, j, a, b)
+    }
+}
+
+/// Output of Algorithm 3.
+pub struct Stage3 {
+    l: usize,
+    /// i_opt[k][l][a][b]
+    i_opt: Vec<f64>,
+    /// joint[k][l][a][b] = m: last block is (m, l] with id joint at m;
+    /// m == k means "single block"
+    joint: Vec<usize>,
+}
+
+impl Stage3 {
+    #[inline]
+    fn idx(&self, k: usize, l: usize, a: u8, b: u8) -> usize {
+        ((k * (self.l + 1) + l) * 2 + a as usize) * 2 + b as usize
+    }
+
+    pub fn i_opt(&self, k: usize, l: usize, a: u8, b: u8) -> f64 {
+        self.i_opt[self.idx(k, l, a, b)]
+    }
+
+    /// Interior id-joint boundaries of the optimal partition (B_opt).
+    pub fn b_opt(&self, k: usize, l: usize, a: u8, b: u8) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut hi = l;
+        let mut bb = b;
+        while hi > k {
+            let m = self.joint[self.idx(k, hi, a, bb)];
+            if m == k {
+                break;
+            }
+            out.push(m);
+            hi = m;
+            bb = 0; // joints are id boundaries
+        }
+        out.reverse();
+        out
+    }
+}
+
+/// Algorithm 3: O(L^3) over the 4 endpoint-state combinations.
+pub fn solve_stage3<I: Importance4>(l_total: usize, imp: &I) -> Stage3 {
+    let mut s3 = Stage3 {
+        l: l_total,
+        i_opt: vec![NEG_INF; (l_total + 1) * (l_total + 1) * 4],
+        joint: vec![0; (l_total + 1) * (l_total + 1) * 4],
+    };
+    for l in 1..=l_total {
+        for k in (0..l).rev() {
+            for a in 0..2u8 {
+                for b in 0..2u8 {
+                    // single block
+                    let mut best = imp.imp4(k, l, a, b);
+                    let mut best_m = k;
+                    // split at an id joint m: (k, m] with (a, 0) + block (m, l] with (0, b)
+                    for m in k + 1..l {
+                        let head = s3.i_opt(k, m, a, 0);
+                        let tail = imp.imp4(m, l, 0, b);
+                        if head == NEG_INF || tail == NEG_INF {
+                            continue;
+                        }
+                        let cand = head + tail;
+                        if cand > best {
+                            best = cand;
+                            best_m = m;
+                        }
+                    }
+                    let idx = s3.idx(k, l, a, b);
+                    s3.i_opt[idx] = best;
+                    s3.joint[idx] = best_m;
+                }
+            }
+        }
+    }
+    s3
+}
+
+#[derive(Debug, Clone)]
+pub struct ExtSolution {
+    pub a: Vec<usize>,
+    pub b: Vec<usize>,
+    pub s: Vec<usize>,
+    pub objective: f64,
+    pub latency: u64,
+}
+
+/// Algorithm 4: budgeted DP over (boundary, activation-state).
+pub fn solve<I: Importance4>(
+    l_total: usize,
+    s1: &Stage1,
+    imp: &I,
+    t0: u64,
+) -> Option<ExtSolution> {
+    let s3 = solve_stage3(l_total, imp);
+    let t0 = t0 as usize;
+    let n_t = t0 + 1;
+    // D[l][t][a]; parents (k, alpha)
+    let idx = |l: usize, t: usize, a: usize| (l * n_t + t) * 2 + a;
+    let mut d = vec![NEG_INF; (l_total + 1) * n_t * 2];
+    let mut par_k = vec![usize::MAX; (l_total + 1) * n_t * 2];
+    let mut par_a = vec![0u8; (l_total + 1) * n_t * 2];
+    for t in 0..n_t {
+        // boundary 0 is the network input: its "state" is fixed; both
+        // slots hold 0 so k=0 transitions read D[0, t, alpha=1] too
+        d[idx(0, t, 0)] = 0.0;
+        d[idx(0, t, 1)] = 0.0;
+    }
+    for l in 1..=l_total {
+        let t_min = s1.t_opt(0, l);
+        if t_min >= INF {
+            continue;
+        }
+        for t in (t_min as usize + 1)..n_t {
+            for a in 0..2usize {
+                let mut best = NEG_INF;
+                let mut bk = usize::MAX;
+                let mut ba = 0u8;
+                for k in 0..l {
+                    let seg = s1.t_opt(k, l);
+                    if seg >= INF || s1.t_opt(0, k) >= INF {
+                        continue;
+                    }
+                    if s1.t_opt(0, k).saturating_add(seg) >= t as u64 {
+                        continue;
+                    }
+                    let rem = t - seg as usize;
+                    // boundary 0 has exactly one (virtual, on) state
+                    let alphas: &[u8] = if k == 0 { &[1] } else { &[0, 1] };
+                    for &alpha in alphas {
+                        let prev = d[idx(k, rem, alpha as usize)];
+                        if prev == NEG_INF {
+                            continue;
+                        }
+                        let gain = s3.i_opt(k, l, alpha, a as u8);
+                        if gain == NEG_INF {
+                            continue;
+                        }
+                        let cand = prev + gain;
+                        if cand > best {
+                            best = cand;
+                            bk = k;
+                            ba = alpha;
+                        }
+                    }
+                }
+                d[idx(l, t, a)] = best;
+                par_k[idx(l, t, a)] = bk;
+                par_a[idx(l, t, a)] = ba;
+            }
+        }
+    }
+    // final state at l = L is fixed "on" (sigma_L handled by the probes)
+    let a_last: usize = if d[idx(l_total, t0, 1)] >= d[idx(l_total, t0, 0)] { 1 } else { 0 };
+    if d[idx(l_total, t0, a_last)] == NEG_INF {
+        return None;
+    }
+    let objective = d[idx(l_total, t0, a_last)];
+    let mut a_set = Vec::new();
+    let mut b_set = Vec::new();
+    let mut s_set = Vec::new();
+    let mut latency = 0u64;
+    let (mut l, mut t, mut a) = (l_total, t0, a_last);
+    while l > 0 {
+        let k = par_k[idx(l, t, a)];
+        let alpha = par_a[idx(l, t, a)];
+        if k == usize::MAX {
+            return None;
+        }
+        // within-range id joints become B boundaries ONLY: merging may
+        // cross an id joint, so S does not split there (Algorithm 4)
+        for m in s3.b_opt(k, l, alpha, a as u8) {
+            b_set.push(m);
+        }
+        latency += s1.t_opt(k, l);
+        s_set.extend(s1.s_opt(k, l));
+        if k > 0 {
+            b_set.push(k);
+            s_set.push(k);
+            if alpha == 1 {
+                a_set.push(k);
+            }
+        }
+        t -= s1.t_opt(k, l) as usize;
+        l = k;
+        a = alpha as usize;
+    }
+    a_set.sort_unstable();
+    b_set.sort_unstable();
+    b_set.dedup();
+    s_set.sort_unstable();
+    s_set.dedup();
+    Some(ExtSolution { a: a_set, b: b_set, s: s_set, objective, latency })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dp::brute;
+    use crate::dp::stage1::{self, LatTable};
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    /// Random (T, I4) instance with probe-rule-shaped invalidity.
+    fn random_instance(
+        rng: &mut Rng,
+        l: usize,
+    ) -> (LatTable, Vec<f64>, Vec<bool>) {
+        let mut t = LatTable::new(l);
+        let mut valid = vec![false; (l + 1) * (l + 1)];
+        let mut imp = vec![NEG_INF; (l + 1) * (l + 1) * 4];
+        // random per-boundary "original activation is id" flags
+        let orig_id: Vec<bool> = (0..=l).map(|_| rng.uniform() < 0.5).collect();
+        for i in 0..l {
+            for j in i + 1..=l {
+                let mergeable = j == i + 1 || rng.uniform() < 0.6;
+                if !mergeable {
+                    continue;
+                }
+                t.set(i, j, 1 + rng.below(30) as u64);
+                valid[i * (l + 1) + j] = true;
+                for a in 0..2u8 {
+                    for b in 0..2u8 {
+                        // probe rules (specs.enumerate_probes)
+                        if i == 0 && a == 0 {
+                            continue;
+                        }
+                        if j == l && b == 0 {
+                            continue;
+                        }
+                        if i > 0 && !orig_id[i] && a == 0 {
+                            continue;
+                        }
+                        if j < l && !orig_id[j] && b == 0 {
+                            continue;
+                        }
+                        if i > 0 && j < l && orig_id[i] && orig_id[j] && b == 0 {
+                            continue;
+                        }
+                        let v = -(rng.uniform() as f64) * (j - i) as f64
+                            + 0.1 * (a as f64 + b as f64);
+                        imp[((i * (l + 1) + j) * 2 + a as usize) * 2 + b as usize] = v;
+                    }
+                }
+            }
+        }
+        (t, imp, valid)
+    }
+
+    #[test]
+    fn matches_brute_force_oracle() {
+        forall(30, 41, |rng| {
+            let l = 2 + rng.below(5);
+            let (t, imp, _valid) = random_instance(rng, l);
+            let s1 = stage1::solve(&t);
+            let t0 = 5 + rng.below(100) as u64;
+            let f = |i: usize, j: usize, a: u8, b: u8| -> f64 {
+                imp[((i * (l + 1) + j) * 2 + a as usize) * 2 + b as usize]
+            };
+            let got = solve(l, &s1, &f, t0);
+            let want = brute::solve_extended(l, &t, &f, t0);
+            match (got, want) {
+                (None, None) => Ok(()),
+                (Some(g), Some(w)) => {
+                    crate::prop_assert!(
+                        (g.objective - w.objective).abs() < 1e-9,
+                        "objective {} != brute {} (B={:?} vs {:?}, A={:?} vs {:?}, t0={t0})",
+                        g.objective,
+                        w.objective,
+                        g.b,
+                        w.b,
+                        g.a,
+                        w.a
+                    );
+                    crate::prop_assert!(g.latency < t0, "budget violated");
+                    Ok(())
+                }
+                (g, w) => Err(format!(
+                    "feasibility mismatch: dp={:?} brute={:?} t0={t0}",
+                    g.map(|x| x.objective),
+                    w.map(|x| x.objective)
+                )),
+            }
+        });
+    }
+
+    #[test]
+    fn a_subset_of_b_and_of_s() {
+        forall(20, 42, |rng| {
+            let l = 3 + rng.below(4);
+            let (t, imp, _) = random_instance(rng, l);
+            let s1 = stage1::solve(&t);
+            let f = |i: usize, j: usize, a: u8, b: u8| -> f64 {
+                imp[((i * (l + 1) + j) * 2 + a as usize) * 2 + b as usize]
+            };
+            if let Some(sol) = solve(l, &s1, &f, 100) {
+                for x in &sol.a {
+                    crate::prop_assert!(sol.b.contains(x), "A not in B");
+                    // A positions are real activations: merging cannot
+                    // cross them, so they must be S boundaries
+                    crate::prop_assert!(sol.s.contains(x), "A not in S");
+                }
+                // note: B \ A (id joints) need NOT be in S — merging may
+                // cross an id joint (Algorithm 4)
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stage3_single_block_base() {
+        let f = |i: usize, j: usize, _a: u8, _b: u8| -> f64 {
+            if j == i + 1 {
+                -1.0
+            } else {
+                NEG_INF
+            }
+        };
+        let s3 = solve_stage3(3, &f);
+        // (0,3] must split into three singleton blocks at id joints
+        assert!((s3.i_opt(0, 3, 1, 1) - -3.0).abs() < 1e-12);
+        assert_eq!(s3.b_opt(0, 3, 1, 1), vec![1, 2]);
+    }
+
+    #[test]
+    fn added_activation_wins_when_valuable() {
+        // two layers; boundary 1 originally id; activation there adds value
+        let mut t = LatTable::new(2);
+        t.set(0, 1, 5);
+        t.set(1, 2, 5);
+        t.set(0, 2, 6);
+        let s1 = stage1::solve(&t);
+        let f = |i: usize, j: usize, _a: u8, b: u8| -> f64 {
+            match (i, j) {
+                (0, 1) => {
+                    if b == 1 {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                }
+                (1, 2) => 0.0,
+                (0, 2) => 0.2,
+                _ => NEG_INF,
+            }
+        };
+        let sol = solve(2, &s1, &f, 100).unwrap();
+        assert_eq!(sol.a, vec![1]);
+        assert!((sol.objective - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,229 @@
+//! Stage-1 DP (paper Algorithm 1): optimal merge pattern and latency
+//! for every contiguous block.
+//!
+//!   T_opt[k, l] = min_{S subset of (k, l)} sum of T over the segments
+//!   S_opt[k, l] = the argmin split set
+//!
+//! `T[i][j]` is the integer-scaled latency of merging layers i+1..j into
+//! ONE convolution (INF if the segment is not merge-legal).  O(L^3).
+
+/// Integer latency cost; INF marks non-mergeable segments.
+pub type Cost = u64;
+pub const INF: Cost = u64::MAX / 4;
+
+/// Dense upper-triangular latency table T[i][j] for 0 <= i < j <= L.
+#[derive(Debug, Clone)]
+pub struct LatTable {
+    pub l: usize,
+    /// flattened (L+1) x (L+1); entry [i][j] valid for i < j
+    t: Vec<Cost>,
+}
+
+impl LatTable {
+    pub fn new(l: usize) -> LatTable {
+        LatTable { l, t: vec![INF; (l + 1) * (l + 1)] }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> Cost {
+        self.t[i * (self.l + 1) + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: Cost) {
+        assert!(i < j && j <= self.l, "bad segment ({i},{j}]");
+        self.t[i * (self.l + 1) + j] = v;
+    }
+}
+
+/// Output of Algorithm 1: optimal block latencies + parent pointers.
+#[derive(Debug, Clone)]
+pub struct Stage1 {
+    pub l: usize,
+    t_opt: Vec<Cost>,
+    /// split[k][l] = m: last segment is (m, l]; m == k means single merge
+    split: Vec<usize>,
+}
+
+impl Stage1 {
+    #[inline]
+    pub fn t_opt(&self, k: usize, l: usize) -> Cost {
+        self.t_opt[k * (self.l + 1) + l]
+    }
+
+    /// Reconstruct S_opt[k, l] (interior split points, ascending).
+    pub fn s_opt(&self, k: usize, l: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut hi = l;
+        while hi > k {
+            let m = self.split[k * (self.l + 1) + hi];
+            if m == k {
+                break;
+            }
+            out.push(m);
+            hi = m;
+        }
+        out.reverse();
+        out
+    }
+
+    pub fn feasible(&self, k: usize, l: usize) -> bool {
+        self.t_opt(k, l) < INF
+    }
+}
+
+/// Algorithm 1.  T must have finite entries for all singleton segments
+/// (every layer can always stand alone).
+pub fn solve(t: &LatTable) -> Stage1 {
+    let l_total = t.l;
+    let n = l_total + 1;
+    let mut t_opt = vec![0 as Cost; n * n];
+    let mut split = vec![0usize; n * n];
+    for l in 1..=l_total {
+        for k in (0..l).rev() {
+            // m' = k means "merge (k, l] as a single conv"
+            let mut best = t.get(k, l);
+            let mut best_m = k;
+            for m in k + 1..l {
+                let cand = t_opt[k * n + m].saturating_add(t.get(m, l));
+                if cand < best {
+                    best = cand;
+                    best_m = m;
+                }
+            }
+            t_opt[k * n + l] = best;
+            split[k * n + l] = best_m;
+        }
+    }
+    Stage1 { l: l_total, t_opt, split }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn random_table(rng: &mut Rng, l: usize, merge_p: f32) -> LatTable {
+        let mut t = LatTable::new(l);
+        for i in 0..l {
+            for j in i + 1..=l {
+                if j == i + 1 {
+                    t.set(i, j, 1 + rng.below(50) as Cost);
+                } else if rng.uniform() < merge_p {
+                    t.set(i, j, 1 + rng.below(100) as Cost);
+                }
+            }
+        }
+        t
+    }
+
+    /// Brute-force min over all partitions of (k, l].
+    fn brute_min(t: &LatTable, k: usize, l: usize) -> Cost {
+        if k == l {
+            return 0;
+        }
+        let mut best = INF;
+        for m in k..l {
+            let head = if m == k { 0 } else { brute_min(t, k, m) };
+            let seg = t.get(m, l);
+            if head < INF && seg < INF {
+                best = best.min(head + seg);
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        forall(30, 21, |rng| {
+            let l = 3 + rng.below(6);
+            let t = random_table(rng, l, 0.5);
+            let s1 = solve(&t);
+            for k in 0..l {
+                for j in k + 1..=l {
+                    let want = brute_min(&t, k, j);
+                    crate::prop_assert!(
+                        s1.t_opt(k, j) == want,
+                        "T_opt[{k},{j}] = {} != brute {}",
+                        s1.t_opt(k, j),
+                        want
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn s_opt_reconstruction_consistent() {
+        forall(30, 22, |rng| {
+            let l = 3 + rng.below(6);
+            let t = random_table(rng, l, 0.4);
+            let s1 = solve(&t);
+            for k in 0..l {
+                for j in k + 1..=l {
+                    if !s1.feasible(k, j) {
+                        continue;
+                    }
+                    let s = s1.s_opt(k, j);
+                    // segments implied by S must sum to T_opt
+                    let mut pts = vec![k];
+                    pts.extend(&s);
+                    pts.push(j);
+                    let mut total: Cost = 0;
+                    for w in pts.windows(2) {
+                        crate::prop_assert!(
+                            t.get(w[0], w[1]) < INF,
+                            "S_opt contains illegal segment ({}, {}]",
+                            w[0],
+                            w[1]
+                        );
+                        total += t.get(w[0], w[1]);
+                    }
+                    crate::prop_assert!(
+                        total == s1.t_opt(k, j),
+                        "S_opt[{k},{j}] sums to {total} != {}",
+                        s1.t_opt(k, j)
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prefers_single_merge_when_cheaper() {
+        let mut t = LatTable::new(3);
+        t.set(0, 1, 10);
+        t.set(1, 2, 10);
+        t.set(2, 3, 10);
+        t.set(0, 2, 5);
+        t.set(0, 3, 4);
+        t.set(1, 3, 5);
+        let s1 = solve(&t);
+        assert_eq!(s1.t_opt(0, 3), 4);
+        assert!(s1.s_opt(0, 3).is_empty());
+    }
+
+    #[test]
+    fn splits_when_merge_hurts() {
+        // the paper's 100->1->100 pointwise example: merging explodes cost
+        let mut t = LatTable::new(2);
+        t.set(0, 1, 3);
+        t.set(1, 2, 3);
+        t.set(0, 2, 1000);
+        let s1 = solve(&t);
+        assert_eq!(s1.t_opt(0, 2), 6);
+        assert_eq!(s1.s_opt(0, 2), vec![1]);
+    }
+
+    #[test]
+    fn base_cases() {
+        let mut t = LatTable::new(1);
+        t.set(0, 1, 7);
+        let s1 = solve(&t);
+        assert_eq!(s1.t_opt(0, 0), 0);
+        assert_eq!(s1.t_opt(0, 1), 7);
+        assert!(s1.s_opt(0, 1).is_empty());
+    }
+}

@@ -1,0 +1,260 @@
+//! Stage-2 DP (paper Algorithm 2): jointly optimal activation-keep set
+//! A and merge set S under an integer latency budget T0.
+//!
+//!   D[l, t] = max_k  D[k, t - T_opt[k, l]] + I[k, l]
+//!             s.t.   T_opt[0, k] + T_opt[k, l] < t
+//!
+//! Exactness: paper Propositions 4.1 / 4.2 — verified here against a
+//! brute-force oracle in dp/brute.rs.  O(L^2 * T0).
+
+use super::stage1::{Stage1, INF};
+
+pub const NEG_INF: f64 = f64::NEG_INFINITY;
+
+/// Importance of a contiguous block (k, l] with both endpoint
+/// activations kept on.  NEG_INF marks invalid blocks.
+pub trait Importance {
+    fn imp(&self, k: usize, l: usize) -> f64;
+}
+
+impl<F: Fn(usize, usize) -> f64> Importance for F {
+    fn imp(&self, k: usize, l: usize) -> f64 {
+        self(k, l)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Solution {
+    /// activation layers kept (ascending, subset of S)
+    pub a: Vec<usize>,
+    /// merge boundaries (ascending)
+    pub s: Vec<usize>,
+    /// surrogate objective value sum I
+    pub objective: f64,
+    /// total latency of the merged network (integer-scaled)
+    pub latency: u64,
+}
+
+/// Algorithm 2.  `t0` is the integer budget (strict: latency < t0).
+pub fn solve<I: Importance>(l_total: usize, s1: &Stage1, imp: &I, t0: u64) -> Option<Solution> {
+    let t0 = t0 as usize;
+    let n_t = t0 + 1;
+    // D[l][t], parent k (usize::MAX = none/base)
+    let mut d = vec![NEG_INF; (l_total + 1) * n_t];
+    let mut par = vec![usize::MAX; (l_total + 1) * n_t];
+    for t in 0..n_t {
+        d[t] = 0.0; // D[0, t] = 0
+    }
+    for l in 1..=l_total {
+        let t_min = s1.t_opt(0, l);
+        if t_min >= INF {
+            continue;
+        }
+        for t in (t_min as usize + 1)..n_t {
+            let mut best = NEG_INF;
+            let mut best_k = usize::MAX;
+            for k in 0..l {
+                let seg = s1.t_opt(k, l);
+                if seg >= INF || s1.t_opt(0, k) >= INF {
+                    continue;
+                }
+                // feasibility: T_opt[0,k] + T_opt[k,l] < t
+                if s1.t_opt(0, k).saturating_add(seg) >= t as u64 {
+                    continue;
+                }
+                let rem = t - seg as usize;
+                let prev = d[k * n_t + rem];
+                if prev == NEG_INF {
+                    continue;
+                }
+                let cand = prev + imp.imp(k, l);
+                if cand > best {
+                    best = cand;
+                    best_k = k;
+                }
+            }
+            d[l * n_t + t] = best;
+            par[l * n_t + t] = best_k;
+        }
+    }
+    // reconstruct from (L, T0)
+    let mut l = l_total;
+    let mut t = t0;
+    if d[l * n_t + t] == NEG_INF {
+        return None;
+    }
+    let objective = d[l * n_t + t];
+    let mut a = Vec::new();
+    let mut s = Vec::new();
+    let mut latency: u64 = 0;
+    while l > 0 {
+        let k = par[l * n_t + t];
+        if k == usize::MAX {
+            return None; // inconsistent table
+        }
+        latency += s1.t_opt(k, l);
+        s.extend(s1.s_opt(k, l));
+        if k > 0 {
+            a.push(k);
+            s.push(k);
+        }
+        t -= s1.t_opt(k, l) as usize;
+        l = k;
+    }
+    a.sort_unstable();
+    s.sort_unstable();
+    s.dedup();
+    Some(Solution { a, s, objective, latency })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dp::brute;
+    use crate::dp::stage1::{self, LatTable};
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    pub fn random_instance(
+        rng: &mut Rng,
+        l: usize,
+    ) -> (LatTable, Vec<Vec<f64>>) {
+        let mut t = LatTable::new(l);
+        let mut imp = vec![vec![NEG_INF; l + 1]; l + 1];
+        for i in 0..l {
+            for j in i + 1..=l {
+                let mergeable = j == i + 1 || rng.uniform() < 0.6;
+                if mergeable {
+                    t.set(i, j, 1 + rng.below(30) as u64);
+                    imp[i][j] = -(rng.uniform() as f64) * (j - i) as f64;
+                }
+            }
+        }
+        (t, imp)
+    }
+
+    #[test]
+    fn matches_brute_force_oracle() {
+        forall(40, 31, |rng| {
+            let l = 2 + rng.below(6);
+            let (t, imp) = random_instance(rng, l);
+            let s1 = stage1::solve(&t);
+            let t0 = 5 + rng.below(120) as u64;
+            let f = |k: usize, j: usize| imp[k][j];
+            let got = solve(l, &s1, &f, t0);
+            let want = brute::solve_base(l, &t, &imp, t0);
+            match (got, want) {
+                (None, None) => Ok(()),
+                (Some(g), Some(w)) => {
+                    crate::prop_assert!(
+                        (g.objective - w.objective).abs() < 1e-9,
+                        "objective {} != brute {} (A={:?} vs {:?}, t0={})",
+                        g.objective,
+                        w.objective,
+                        g.a,
+                        w.a,
+                        t0
+                    );
+                    crate::prop_assert!(
+                        g.latency < t0,
+                        "latency {} violates budget {}",
+                        g.latency,
+                        t0
+                    );
+                    Ok(())
+                }
+                (g, w) => Err(format!(
+                    "feasibility mismatch: dp={:?} brute={:?} t0={}",
+                    g.map(|x| x.objective),
+                    w.map(|x| x.objective),
+                    t0
+                )),
+            }
+        });
+    }
+
+    #[test]
+    fn s_is_latency_optimal_given_a() {
+        // Proposition 4.2: the reconstructed S minimizes latency when A fixed
+        forall(30, 32, |rng| {
+            let l = 2 + rng.below(5);
+            let (t, imp) = random_instance(rng, l);
+            let s1 = stage1::solve(&t);
+            let t0 = 10 + rng.below(100) as u64;
+            let f = |k: usize, j: usize| imp[k][j];
+            if let Some(sol) = solve(l, &s1, &f, t0) {
+                // optimal latency given A = sum of T_opt over A-segments
+                let mut pts = vec![0usize];
+                pts.extend(&sol.a);
+                pts.push(l);
+                let want: u64 = pts.windows(2).map(|w| s1.t_opt(w[0], w[1])).sum();
+                crate::prop_assert!(
+                    sol.latency == want,
+                    "latency {} != optimal-given-A {}",
+                    sol.latency,
+                    want
+                );
+                // and S refines A exactly
+                for a in &sol.a {
+                    crate::prop_assert!(sol.s.contains(a), "A not subset of S");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn budget_monotonicity() {
+        forall(20, 33, |rng| {
+            let l = 2 + rng.below(5);
+            let (t, imp) = random_instance(rng, l);
+            let s1 = stage1::solve(&t);
+            let f = |k: usize, j: usize| imp[k][j];
+            let mut prev = NEG_INF;
+            for t0 in [5u64, 15, 40, 80, 200] {
+                if let Some(sol) = solve(l, &s1, &f, t0) {
+                    crate::prop_assert!(
+                        sol.objective >= prev - 1e-12,
+                        "objective not monotone in budget"
+                    );
+                    prev = sol.objective;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn infeasible_budget_returns_none() {
+        let mut t = LatTable::new(2);
+        t.set(0, 1, 10);
+        t.set(1, 2, 10);
+        t.set(0, 2, 15);
+        let s1 = stage1::solve(&t);
+        let f = |_: usize, _: usize| 0.0;
+        assert!(solve(2, &s1, &f, 10).is_none()); // needs >= 15 strictly
+        assert!(solve(2, &s1, &f, 16).is_some());
+    }
+
+    #[test]
+    fn paper_figure2_shape() {
+        // a hand-checkable instance: keeping more activations costs latency
+        let mut t = LatTable::new(3);
+        t.set(0, 1, 4);
+        t.set(1, 2, 4);
+        t.set(2, 3, 4);
+        t.set(0, 2, 6);
+        t.set(1, 3, 6);
+        t.set(0, 3, 7);
+        let s1 = stage1::solve(&t);
+        // importance: each kept boundary recovers 1.0 of accuracy
+        let f = |k: usize, j: usize| -((j - k) as f64 - 1.0);
+        // generous budget: keep everything
+        let sol = solve(3, &s1, &f, 13).unwrap();
+        assert_eq!(sol.a, vec![1, 2]);
+        // tight budget: forced to merge it all
+        let sol = solve(3, &s1, &f, 8).unwrap();
+        assert!(sol.a.is_empty());
+        assert_eq!(sol.latency, 7);
+    }
+}

@@ -1,0 +1,180 @@
+//! Importance evaluation (paper Eq. 3 / Eq. 14 + §5.1): for each probe
+//! (i, j, d_i, d_j), deactivate the activations strictly inside the
+//! block, set the endpoint states, finetune briefly from the pretrained
+//! weight, and record the validation-accuracy change.
+//!
+//! Every probe runs the SAME train/eval artifacts with a different mask
+//! vector (DESIGN.md §5) — zero recompilation, which is what makes the
+//! stage embarrassingly parallel in the paper.  Size-one blocks are
+//! re-initialized instead (B.3).
+
+use anyhow::Result;
+
+use crate::data::batcher::Batcher;
+use crate::importance::table::ImpTable;
+use crate::model::spec::{ArchConfig, Probe};
+use crate::runtime::engine::Engine;
+use crate::runtime::manifest::ArchEntry;
+use crate::trainer::eval::eval_masked_subset;
+use crate::trainer::params::ParamSet;
+use crate::trainer::sgd::{TrainConfig, TrainState, Trainer};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct ImportanceConfig {
+    /// finetune steps per probe (the paper uses ~1 epoch; we scale down)
+    pub steps: usize,
+    pub lr: f64,
+    /// evaluate on this many val batches (0 = all)
+    pub eval_batches: usize,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for ImportanceConfig {
+    fn default() -> Self {
+        ImportanceConfig { steps: 4, lr: 0.01, eval_batches: 6, seed: 7, verbose: false }
+    }
+}
+
+/// Build the probe mask: interior activations off, endpoints per (a, b).
+pub fn probe_mask(cfg: &ArchConfig, p: &Probe) -> Vec<f32> {
+    let mut mask = cfg.spec.default_mask();
+    for l in p.i + 1..p.j {
+        mask[l - 1] = 0.0;
+    }
+    if p.i > 0 {
+        mask[p.i - 1] = p.a as f32;
+    }
+    if p.j < cfg.spec.l() {
+        mask[p.j - 1] = p.b as f32;
+    }
+    mask
+}
+
+/// Is this probe a no-op on the vanilla network (I = 0 by definition)?
+pub fn is_identity_probe(cfg: &ArchConfig, p: &Probe) -> bool {
+    if p.j == p.i + 1 {
+        return false; // size-one blocks are re-initialized, never no-ops
+    }
+    probe_mask(cfg, p) == cfg.spec.default_mask()
+}
+
+pub struct ImportanceEvaluator<'e> {
+    pub engine: &'e Engine,
+    pub arch: ArchEntry,
+    pub cfg: ArchConfig,
+    pub pretrained: ParamSet,
+    pub icfg: ImportanceConfig,
+}
+
+impl<'e> ImportanceEvaluator<'e> {
+    /// Evaluate one probe: short finetune from the pretrained weight
+    /// with the probe mask, then val accuracy delta vs `base_acc`.
+    pub fn eval_probe(
+        &self,
+        p: &Probe,
+        batcher: &mut Batcher,
+        base_acc: f64,
+    ) -> Result<f64> {
+        if is_identity_probe(&self.cfg, p) {
+            return Ok(0.0);
+        }
+        let mut ts = TrainState::from_checkpoint(&self.arch, &self.pretrained)?;
+        if p.j == p.i + 1 {
+            // size-one block: re-init the layer (B.3)
+            let mut rng = Rng::new(
+                self.icfg.seed ^ ((p.i as u64) << 32 | p.j as u64) ^ ((p.a as u64) << 8 | p.b as u64),
+            );
+            ts.reinit_layer(&self.arch, p.j, &mut rng)?;
+        }
+        let mask = probe_mask(&self.cfg, p);
+        let trainer = Trainer::new(self.engine, &self.arch, mask.clone());
+        let tcfg = TrainConfig {
+            steps: self.icfg.steps,
+            base_lr: self.icfg.lr,
+            warmup_steps: 1,
+            log_every: usize::MAX,
+            final_lr_frac: 0.5,
+        };
+        let step_def = self.arch.artifact("train_step")?;
+        trainer.run(step_def, &mut ts, batcher, &tcfg, None)?;
+        let eval_def = self.arch.artifact("eval_step")?;
+        let r = eval_masked_subset(
+            self.engine,
+            eval_def,
+            &ts,
+            &mask,
+            batcher,
+            self.arch.eval_batch,
+            self.icfg.eval_batches,
+        )?;
+        Ok(r.acc - base_acc)
+    }
+
+    /// Evaluate every probe in the arch config into an ImpTable.
+    pub fn eval_all(&self, batcher: &mut Batcher, base_acc: f64) -> Result<ImpTable> {
+        let mut table = ImpTable::new(
+            base_acc,
+            &format!("steps={} lr={}", self.icfg.steps, self.icfg.lr),
+        );
+        let total = self.cfg.probes.len();
+        for (n, p) in self.cfg.probes.clone().iter().enumerate() {
+            let v = self.eval_probe(p, batcher, base_acc)?;
+            if self.icfg.verbose {
+                println!(
+                    "  probe {:>3}/{} ({},{},{},{}) I = {v:+.4}",
+                    n + 1,
+                    total,
+                    p.i,
+                    p.j,
+                    p.a,
+                    p.b
+                );
+            }
+            table.insert(p.i, p.j, p.a, p.b, v);
+        }
+        Ok(table)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::testutil::tiny_config;
+
+    #[test]
+    fn probe_mask_deactivates_interior() {
+        let cfg = tiny_config();
+        let p = Probe { i: 1, j: 4, a: 1, b: 0 };
+        let m = probe_mask(&cfg, &p);
+        // default [1,1,1,0,1,1]; interior layers 2,3 off; endpoint 1 on,
+        // endpoint 4 state 0 (already id)
+        assert_eq!(m, vec![1.0, 0.0, 0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn probe_mask_can_add_activation() {
+        let cfg = tiny_config();
+        let p = Probe { i: 1, j: 4, a: 1, b: 1 };
+        let m = probe_mask(&cfg, &p);
+        assert_eq!(m[3], 1.0); // relu6 ADDED at the linear bottleneck
+    }
+
+    #[test]
+    fn identity_probe_detected() {
+        let cfg = tiny_config();
+        // block (4,6] with default endpoint states and... interior layer 5
+        // gets deactivated, so NOT identity
+        let p = Probe { i: 4, j: 6, a: 1, b: 1 };
+        assert!(!is_identity_probe(&cfg, &p));
+        // a singleton is never an identity probe (re-init semantics)
+        let p1 = Probe { i: 0, j: 1, a: 1, b: 1 };
+        assert!(!is_identity_probe(&cfg, &p1));
+        // two adjacent layers with both endpoints at original states and
+        // no interior: (1,2] has no interior, endpoints relu6 — but it's
+        // size 2? No: (1,2] is size one. Use (1,3]: interior = layer 2.
+        let p2 = Probe { i: 1, j: 3, a: 1, b: 1 };
+        assert!(!is_identity_probe(&cfg, &p2));
+    }
+}

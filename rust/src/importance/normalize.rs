@@ -1,0 +1,69 @@
+//! Importance normalization (paper Appendix B.3).
+//!
+//! Short-finetune probes systematically *underestimate* each block's
+//! true (train-to-convergence) importance, and the bias compounds with
+//! the number of blocks the DP stitches together.  The paper corrects
+//! per block with a constant: I <- I - (alpha / |D|) * sum(D), where D
+//! is the set of size-one-block accuracy changes after re-init +
+//! one-epoch training.
+
+use crate::importance::table::ImpTable;
+
+/// Mean of the size-one-block importance values (the set D).
+pub fn d_mean(table: &ImpTable) -> f64 {
+    let d: Vec<f64> = table
+        .iter()
+        .filter(|(&(i, j, _, _), _)| j == i + 1)
+        .map(|(_, &v)| v)
+        .collect();
+    if d.is_empty() {
+        0.0
+    } else {
+        d.iter().sum::<f64>() / d.len() as f64
+    }
+}
+
+/// Apply the B.3 correction in place; returns the shift applied.
+pub fn normalize(table: &mut ImpTable, alpha: f64) -> f64 {
+    let shift = alpha * d_mean(table);
+    for v in table.values_mut() {
+        *v -= shift;
+    }
+    table.meta = format!("{} | normalized alpha={alpha} shift={shift:.6}", table.meta);
+    shift
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn d_mean_only_uses_singletons() {
+        let mut t = ImpTable::new(0.8, "x");
+        t.insert(0, 1, 1, 1, -0.02);
+        t.insert(1, 2, 1, 1, -0.04);
+        t.insert(0, 2, 1, 1, -0.50); // multi-layer: excluded from D
+        assert!((d_mean(&t) - -0.03).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_shifts_every_entry() {
+        let mut t = ImpTable::new(0.8, "x");
+        t.insert(0, 1, 1, 1, -0.02);
+        t.insert(1, 2, 1, 1, -0.04);
+        t.insert(0, 2, 1, 1, -0.50);
+        let shift = normalize(&mut t, 1.5);
+        assert!((shift - 1.5 * -0.03).abs() < 1e-12);
+        // subtracting a negative shift raises the values
+        assert!((t.get(0, 1, 1, 1) - (-0.02 + 0.045)).abs() < 1e-12);
+        assert!((t.get(0, 2, 1, 1) - (-0.50 + 0.045)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_zero_is_identity() {
+        let mut t = ImpTable::new(0.8, "x");
+        t.insert(0, 1, 1, 1, -0.02);
+        normalize(&mut t, 0.0);
+        assert_eq!(t.get(0, 1, 1, 1), -0.02);
+    }
+}

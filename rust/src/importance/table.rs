@@ -1,0 +1,146 @@
+//! Importance table I[i, j, a, b] — storage, lookup, persistence.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::dp::stage2::NEG_INF;
+use crate::model::spec::{ArchConfig, ACT_RELU6};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Default)]
+pub struct ImpTable {
+    /// (i, j, a, b) -> accuracy change (already normalized if norm applied)
+    entries: BTreeMap<(usize, usize, u8, u8), f64>,
+    pub base_acc: f64,
+    pub meta: String,
+}
+
+impl ImpTable {
+    pub fn new(base_acc: f64, meta: &str) -> ImpTable {
+        ImpTable { entries: BTreeMap::new(), base_acc, meta: meta.to_string() }
+    }
+
+    pub fn insert(&mut self, i: usize, j: usize, a: u8, b: u8, v: f64) {
+        self.entries.insert((i, j, a, b), v);
+    }
+
+    pub fn get(&self, i: usize, j: usize, a: u8, b: u8) -> f64 {
+        *self.entries.get(&(i, j, a, b)).unwrap_or(&NEG_INF)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&(usize, usize, u8, u8), &f64)> {
+        self.entries.iter()
+    }
+
+    pub fn values_mut(&mut self) -> impl Iterator<Item = &mut f64> {
+        self.entries.values_mut()
+    }
+
+    /// Base-space importance I[i, j]: endpoint activations at their
+    /// original states (relu6 -> on, id -> off; virtual boundaries on).
+    pub fn imp_base(&self, cfg: &ArchConfig, i: usize, j: usize) -> f64 {
+        let a = if i == 0 || cfg.spec.layer(i).act == ACT_RELU6 { 1 } else { 0 };
+        let b = if j == cfg.spec.l() || cfg.spec.layer(j).act == ACT_RELU6 { 1 } else { 0 };
+        self.get(i, j, a, b)
+    }
+
+    // -- persistence ---------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj_from(vec![
+            ("base_acc", Json::num(self.base_acc)),
+            ("meta", Json::str_of(&self.meta)),
+            (
+                "entries",
+                Json::Arr(
+                    self.entries
+                        .iter()
+                        .map(|(&(i, j, a, b), &v)| {
+                            Json::arr_of([
+                                Json::int(i as i64),
+                                Json::int(j as i64),
+                                Json::int(a as i64),
+                                Json::int(b as i64),
+                                Json::num(v),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ImpTable> {
+        let mut t = ImpTable::new(v.get("base_acc")?.f64()?, v.get("meta")?.str()?);
+        for e in v.get("entries")?.arr()? {
+            let a = e.arr()?;
+            t.insert(
+                a[0].usize()?,
+                a[1].usize()?,
+                a[2].usize()? as u8,
+                a[3].usize()? as u8,
+                a[4].f64()?,
+            );
+        }
+        Ok(t)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ImpTable> {
+        ImpTable::from_json(&Json::from_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::testutil::tiny_config;
+
+    #[test]
+    fn lookup_and_default() {
+        let mut t = ImpTable::new(0.8, "test");
+        t.insert(1, 4, 1, 0, -0.05);
+        assert_eq!(t.get(1, 4, 1, 0), -0.05);
+        assert_eq!(t.get(1, 4, 1, 1), NEG_INF);
+    }
+
+    #[test]
+    fn base_lookup_uses_original_states() {
+        let cfg = tiny_config();
+        let mut t = ImpTable::new(0.8, "test");
+        // block (1,4]: sigma_1 = relu6 -> a=1; sigma_4 = id -> b=0
+        t.insert(1, 4, 1, 0, -0.1);
+        t.insert(1, 4, 1, 1, -0.2);
+        assert_eq!(t.imp_base(&cfg, 1, 4), -0.1);
+        // block (0,1]: virtual left boundary -> a=1; sigma_1 relu6 -> b=1
+        t.insert(0, 1, 1, 1, -0.3);
+        assert_eq!(t.imp_base(&cfg, 0, 1), -0.3);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut t = ImpTable::new(0.75, "probe_steps=4");
+        t.insert(0, 1, 1, 1, -0.01);
+        t.insert(1, 4, 1, 0, -0.2);
+        let re = ImpTable::from_json(&t.to_json()).unwrap();
+        assert_eq!(re.len(), 2);
+        assert_eq!(re.get(1, 4, 1, 0), -0.2);
+        assert_eq!(re.base_acc, 0.75);
+    }
+}

@@ -1,0 +1,101 @@
+//! Device parameter sheets for the analytical latency model.
+//!
+//! Published peak numbers for the four GPUs the paper evaluates on
+//! (Tables 3, 6, 7) plus the 5-core Xeon of Table 11.  The absolute
+//! scale is calibrated so vanilla MobileNetV2-class networks land in
+//! the paper's millisecond range; what the experiments rely on is the
+//! *relative* structure (dw vs dense efficiency, fused vs eager,
+//! cross-device ordering), which comes from the public specs.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Device {
+    pub name: &'static str,
+    /// peak fp32 throughput, TFLOP/s
+    pub fp32_tflops: f64,
+    /// memory bandwidth, GB/s
+    pub mem_bw_gbps: f64,
+    /// per-kernel launch + scheduling overhead, microseconds
+    pub launch_us: f64,
+    /// fraction of peak compute a well-shaped dense conv achieves
+    pub dense_eff: f64,
+    /// fraction of peak bandwidth a memory-bound op achieves
+    pub mem_eff: f64,
+}
+
+pub const TITAN_XP: Device = Device {
+    name: "titan_xp",
+    fp32_tflops: 12.15,
+    mem_bw_gbps: 547.6,
+    launch_us: 6.5,
+    dense_eff: 0.42,
+    mem_eff: 0.62,
+};
+
+pub const RTX_2080_TI: Device = Device {
+    name: "rtx2080ti",
+    fp32_tflops: 13.45,
+    mem_bw_gbps: 616.0,
+    launch_us: 5.0,
+    dense_eff: 0.50,
+    mem_eff: 0.68,
+};
+
+// 3090 dense_eff is de-rated: Ampere's doubled-FP32 SMs reach a much
+// lower fraction of peak on conv workloads; calibrated so the vanilla
+// MBV2 ratio vs the 2080 Ti matches paper Table 3 (20.8/29.9 = 0.69).
+pub const RTX_3090: Device = Device {
+    name: "rtx3090",
+    fp32_tflops: 35.58,
+    mem_bw_gbps: 936.2,
+    launch_us: 4.5,
+    dense_eff: 0.26,
+    mem_eff: 0.58,
+};
+
+// calibrated: paper Table 3 vanilla ratio vs 2080 Ti = 24.4/29.9 = 0.81
+pub const TESLA_V100: Device = Device {
+    name: "v100",
+    fp32_tflops: 15.7,
+    mem_bw_gbps: 900.0,
+    launch_us: 5.0,
+    dense_eff: 0.56,
+    mem_eff: 0.80,
+};
+
+/// 5 cores of a Xeon Gold 5220R (paper Table 11): AVX-512 fp32 peak
+/// ~= 5 cores * 2.2 GHz * 64 flop/cycle ~= 0.7 TFLOP/s.
+pub const XEON_5220R_5C: Device = Device {
+    name: "xeon5220r",
+    fp32_tflops: 0.70,
+    mem_bw_gbps: 70.0,
+    launch_us: 2.0,
+    dense_eff: 0.55,
+    mem_eff: 0.60,
+};
+
+pub const ALL: [&Device; 5] =
+    [&TITAN_XP, &RTX_2080_TI, &RTX_3090, &TESLA_V100, &XEON_5220R_5C];
+
+pub fn by_name(name: &str) -> Option<&'static Device> {
+    ALL.iter().copied().find(|d| d.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup() {
+        assert_eq!(by_name("rtx2080ti").unwrap().name, "rtx2080ti");
+        assert!(by_name("tpu_v9000").is_none());
+    }
+
+    #[test]
+    fn paper_device_ordering_inputs() {
+        // 3090 has the most compute AND bandwidth; TITAN Xp the least
+        assert!(RTX_3090.fp32_tflops > TESLA_V100.fp32_tflops);
+        assert!(TESLA_V100.fp32_tflops > RTX_2080_TI.fp32_tflops);
+        assert!(RTX_2080_TI.fp32_tflops > TITAN_XP.fp32_tflops);
+        assert!(RTX_3090.mem_bw_gbps > RTX_2080_TI.mem_bw_gbps);
+    }
+}

@@ -1,0 +1,226 @@
+//! Analytical roofline latency model (the TensorRT-on-GPU substitute;
+//! DESIGN.md §2).
+//!
+//! latency(op) = launch + max(compute_time, memory_time), where
+//!   compute_time = flops / (peak * eff(op))
+//!   memory_time  = bytes / (bw * mem_eff)
+//!
+//! The efficiency model encodes the phenomenon the paper's method
+//! exploits: depthwise convolutions are memory-bound with terrible
+//! arithmetic intensity (the motivation DepthShrinker and this paper
+//! share), thin channels underfill the SIMD lanes, and eager (PyTorch)
+//! execution pays a launch plus a full memory pass for every BN and
+//! activation that TensorRT would have fused away (paper Table 12).
+
+use super::devices::Device;
+use crate::model::spec::{Layer, MergedBlock};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// TensorRT-analog: conv+bias+BN+act fused into one kernel
+    Fused,
+    /// PyTorch-eager-analog: conv, BN, act as separate kernels
+    Eager,
+}
+
+/// Geometry of a single conv op (works for layers and merged blocks).
+#[derive(Debug, Clone, Copy)]
+pub struct ConvGeom {
+    pub c_in: usize,
+    pub c_out: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub groups: usize,
+    pub h_in: usize,
+    pub w_in: usize,
+    pub h_out: usize,
+    pub w_out: usize,
+}
+
+impl From<&Layer> for ConvGeom {
+    fn from(ly: &Layer) -> ConvGeom {
+        ConvGeom {
+            c_in: ly.c_in,
+            c_out: ly.c_out,
+            k: ly.k,
+            stride: ly.stride,
+            groups: ly.groups,
+            h_in: ly.h_in,
+            w_in: ly.w_in,
+            h_out: ly.h_out,
+            w_out: ly.w_out,
+        }
+    }
+}
+
+impl From<&MergedBlock> for ConvGeom {
+    fn from(b: &MergedBlock) -> ConvGeom {
+        ConvGeom {
+            c_in: b.c_in,
+            c_out: b.c_out,
+            k: b.k,
+            stride: b.stride,
+            groups: b.groups,
+            h_in: b.h_in,
+            w_in: b.w_in,
+            h_out: b.h_out,
+            w_out: b.w_out,
+        }
+    }
+}
+
+impl ConvGeom {
+    pub fn is_depthwise(&self) -> bool {
+        self.groups > 1 && self.groups == self.c_in && self.c_in == self.c_out
+    }
+
+    pub fn flops(&self, batch: usize) -> f64 {
+        2.0 * (batch * self.h_out * self.w_out * self.c_out * (self.c_in / self.groups)) as f64
+            * (self.k * self.k) as f64
+    }
+
+    pub fn bytes(&self, batch: usize) -> f64 {
+        let act_in = batch * self.c_in * self.h_in * self.w_in;
+        let act_out = batch * self.c_out * self.h_out * self.w_out;
+        let weights = self.c_out * (self.c_in / self.groups) * self.k * self.k;
+        4.0 * (act_in + act_out + weights) as f64
+    }
+}
+
+/// Compute efficiency of a conv on `dev`, relative to dense_eff = 1.
+fn conv_eff(g: &ConvGeom) -> f64 {
+    let mut eff = if g.is_depthwise() {
+        // depthwise: one input channel per output — no reuse, the MACs
+        // cannot fill the SIMT lanes; measured TensorRT numbers put
+        // these at <10% of dense utilization
+        0.10
+    } else if g.k == 1 {
+        // pointwise: a GEMM with k*k = 1; decent but reuse-limited
+        0.75
+    } else {
+        1.0
+    };
+    // thin channels underfill warps / vector lanes
+    let cmin = g.c_out.min(g.c_in / g.groups.max(1)).max(1) as f64;
+    eff *= (cmin / 64.0).min(1.0).powf(0.35);
+    // very large merged kernels lose im2col locality (k = 7, 9)
+    if g.k > 5 {
+        eff *= 0.85;
+    }
+    eff
+}
+
+pub fn conv_latency_ms(dev: &Device, g: &ConvGeom, batch: usize) -> f64 {
+    op_latency_ms(dev, g, batch, ExecMode::Fused, false, false)
+}
+
+/// A pure memory-pass op (BN, activation, residual add) over `elems`
+/// f32 elements read+written.
+pub fn mem_pass_latency_ms(dev: &Device, elems: usize) -> f64 {
+    let bytes = 2.0 * 4.0 * elems as f64;
+    dev.launch_us * 1e-6 * 1e3 + bytes / (dev.mem_bw_gbps * 1e9 * dev.mem_eff) * 1e3
+}
+
+/// Latency of one conv op including its BN/act, in ms.
+pub fn op_latency_ms(dev: &Device, g: &ConvGeom, batch: usize, mode: ExecMode, with_bn: bool, with_act: bool) -> f64 {
+    let conv = {
+        let compute = g.flops(batch) / (dev.fp32_tflops * 1e12 * dev.dense_eff * conv_eff(g));
+        let memory = g.bytes(batch) / (dev.mem_bw_gbps * 1e9 * dev.mem_eff);
+        (dev.launch_us * 1e-6 + compute.max(memory)) * 1e3
+    };
+    match mode {
+        ExecMode::Fused => conv, // BN + act fused into the conv kernel
+        ExecMode::Eager => {
+            let out_elems = batch * g.c_out * g.h_out * g.w_out;
+            let mut t = conv;
+            if with_bn {
+                t += mem_pass_latency_ms(dev, out_elems);
+            }
+            if with_act {
+                t += mem_pass_latency_ms(dev, out_elems);
+            }
+            t
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::devices::*;
+
+    fn dw(c: usize, h: usize) -> ConvGeom {
+        ConvGeom { c_in: c, c_out: c, k: 3, stride: 1, groups: c, h_in: h, w_in: h, h_out: h, w_out: h }
+    }
+
+    fn dense(ci: usize, co: usize, k: usize, h: usize) -> ConvGeom {
+        ConvGeom { c_in: ci, c_out: co, k, stride: 1, groups: 1, h_in: h, w_in: h, h_out: h, w_out: h }
+    }
+
+    #[test]
+    fn depthwise_is_latency_inefficient() {
+        // the paper's premise: dw+pw chain slower than one dense conv of
+        // comparable output, despite fewer FLOPs
+        let d = &RTX_2080_TI;
+        let b = 128;
+        let chain = op_latency_ms(d, &dw(96, 28), b, ExecMode::Fused, true, true)
+            + op_latency_ms(d, &dense(96, 24, 1, 28), b, ExecMode::Fused, true, true);
+        let merged = op_latency_ms(d, &dense(96, 24, 3, 28), b, ExecMode::Fused, true, true);
+        assert!(
+            merged < chain,
+            "merged dense {merged:.4}ms should beat dw+pw chain {chain:.4}ms"
+        );
+        // while FLOPs go the other way
+        let chain_flops = dw(96, 28).flops(b) + dense(96, 24, 1, 28).flops(b);
+        assert!(dense(96, 24, 3, 28).flops(b) > chain_flops);
+    }
+
+    #[test]
+    fn eager_slower_than_fused() {
+        let d = &RTX_2080_TI;
+        let g = dense(64, 64, 3, 28);
+        let f = op_latency_ms(d, &g, 128, ExecMode::Fused, true, true);
+        let e = op_latency_ms(d, &g, 128, ExecMode::Eager, true, true);
+        assert!(e > f * 1.2, "eager {e} vs fused {f}");
+    }
+
+    #[test]
+    fn device_ordering_matches_paper_tables() {
+        // paper Table 3: TITAN Xp slowest, then 2080 Ti, V100, 3090
+        let g = dense(96, 96, 3, 28);
+        let lat = |d: &Device| op_latency_ms(d, &g, 128, ExecMode::Fused, true, true);
+        let (xp, ti, v100, r90) =
+            (lat(&TITAN_XP), lat(&RTX_2080_TI), lat(&TESLA_V100), lat(&RTX_3090));
+        assert!(xp > ti && ti > v100 && v100 > r90, "{xp} {ti} {v100} {r90}");
+    }
+
+    #[test]
+    fn batch_scales_roughly_linearly_when_compute_bound() {
+        let d = &RTX_2080_TI;
+        let g = dense(128, 128, 3, 28);
+        let l1 = op_latency_ms(d, &g, 64, ExecMode::Fused, true, true);
+        let l2 = op_latency_ms(d, &g, 128, ExecMode::Fused, true, true);
+        assert!(l2 / l1 > 1.7 && l2 / l1 < 2.2);
+    }
+
+    #[test]
+    fn thin_channels_lose_efficiency() {
+        let wide = dense(64, 64, 3, 14);
+        let thin = dense(4, 4, 3, 14);
+        // same per-flop cost would make them ~256x apart; efficiency
+        // penalty must make the thin conv relatively slower
+        let d = &RTX_2080_TI;
+        let lw = op_latency_ms(d, &wide, 128, ExecMode::Fused, true, true);
+        let lt = op_latency_ms(d, &thin, 128, ExecMode::Fused, true, true);
+        let flop_ratio = wide.flops(128) / thin.flops(128);
+        let lat_ratio = lw / lt;
+        assert!(lat_ratio < flop_ratio, "{lat_ratio} vs {flop_ratio}");
+    }
+
+    #[test]
+    fn mem_pass_positive_and_bw_scaled() {
+        let a = mem_pass_latency_ms(&RTX_2080_TI, 1_000_000);
+        let b = mem_pass_latency_ms(&RTX_3090, 1_000_000);
+        assert!(a > 0.0 && b > 0.0 && b < a);
+    }
+}

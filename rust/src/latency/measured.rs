@@ -1,0 +1,96 @@
+//! Measured latency source: real wall-clock of each block's AOT probe
+//! on the PJRT CPU client (median-of-N after warmup).
+//!
+//! This is the real-hardware path (paper Table 11 is a CPU table): the
+//! fused probe is the TensorRT-analog (conv+bias+act in one XLA
+//! executable), the eager probe chain (conv, then BN, then act as
+//! separate executables) is the PyTorch-eager analog.
+
+use anyhow::{anyhow, Result};
+
+use super::gpu_model::ExecMode;
+use super::table::LatencySource;
+use crate::model::spec::ArchConfig;
+use crate::runtime::engine::Engine;
+
+pub struct Measured<'e> {
+    pub engine: &'e Engine,
+    pub arch: String,
+    pub mode: ExecMode,
+    pub warmup: usize,
+    pub reps: usize,
+    /// evict each probe executable after timing (hundreds of one-shot
+    /// probes would otherwise pile up in the compile cache)
+    pub evict: bool,
+}
+
+impl<'e> Measured<'e> {
+    pub fn new(engine: &'e Engine, arch: &str, mode: ExecMode) -> Measured<'e> {
+        Measured { engine, arch: arch.to_string(), mode, warmup: 2, reps: 5, evict: true }
+    }
+}
+
+impl<'e> LatencySource for Measured<'e> {
+    fn block_ms(&mut self, cfg: &ArchConfig, i: usize, j: usize, _batch: usize) -> Result<f64> {
+        let entry = self.engine.manifest.arch(&self.arch)?;
+        let blk = cfg
+            .block(i, j)
+            .ok_or_else(|| anyhow!("block ({i},{j}] not merge-legal"))?;
+        let fused = entry
+            .blocks_fused
+            .get(&(i, j))
+            .ok_or_else(|| anyhow!("no fused probe for ({i},{j}]"))?;
+        let ms = match self.mode {
+            ExecMode::Fused => {
+                let inputs = self.engine.zero_inputs(fused);
+                let refs: Vec<&_> = inputs.iter().collect();
+                let ms = self.engine.time_ms(fused, &refs, self.warmup, self.reps)?;
+                if self.evict {
+                    self.engine.evict(fused);
+                }
+                ms
+            }
+            ExecMode::Eager => {
+                // conv probe + BN pass + act pass, timed separately and
+                // summed — exactly how eager frameworks execute
+                let conv = entry
+                    .blocks_eager
+                    .get(&(i, j))
+                    .ok_or_else(|| anyhow!("no eager probe for ({i},{j}]"))?;
+                let inputs = self.engine.zero_inputs(conv);
+                let refs: Vec<&_> = inputs.iter().collect();
+                let mut ms = self.engine.time_ms(conv, &refs, self.warmup, self.reps)?;
+                if self.evict {
+                    self.engine.evict(conv);
+                }
+                let key = (blk.c_out, blk.h_out, blk.w_out);
+                // merged blocks have no BN at runtime, singletons do
+                if blk.is_singleton() {
+                    if let Some(bn) = entry.bn_probes.get(&key) {
+                        let inputs = self.engine.zero_inputs(bn);
+                        let refs: Vec<&_> = inputs.iter().collect();
+                        ms += self.engine.time_ms(bn, &refs, self.warmup, self.reps)?;
+                    }
+                }
+                if let Some(act) = entry.act_probes.get(&key) {
+                    let inputs = self.engine.zero_inputs(act);
+                    let refs: Vec<&_> = inputs.iter().collect();
+                    ms += self.engine.time_ms(act, &refs, self.warmup, self.reps)?;
+                }
+                ms
+            }
+        };
+        Ok(ms)
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "measured/pjrt-cpu/{}/{}",
+            self.arch,
+            match self.mode {
+                ExecMode::Fused => "fused",
+                ExecMode::Eager => "eager",
+            }
+        )
+    }
+}

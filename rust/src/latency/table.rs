@@ -1,0 +1,224 @@
+//! Latency-table assembly: T[i, j] over every merge-legal block, from a
+//! pluggable latency source, with the paper's integer scaling (§5.1:
+//! "we multiply every occurrence of t and T0 by a constant factor and
+//! round to integer").
+
+use anyhow::{bail, Result};
+
+use super::devices::Device;
+use super::gpu_model::{op_latency_ms, ConvGeom, ExecMode};
+use crate::dp::stage1::LatTable;
+use crate::model::spec::ArchConfig;
+use crate::util::json::Json;
+
+/// Anything that can price one merged block.
+pub trait LatencySource {
+    /// latency in ms of block (i, j] of `cfg` at `batch`
+    fn block_ms(&mut self, cfg: &ArchConfig, i: usize, j: usize, batch: usize) -> Result<f64>;
+    fn name(&self) -> String;
+}
+
+/// Analytical GPU model source.
+pub struct Analytical {
+    pub dev: &'static Device,
+    pub mode: ExecMode,
+}
+
+impl LatencySource for Analytical {
+    fn block_ms(&mut self, cfg: &ArchConfig, i: usize, j: usize, batch: usize) -> Result<f64> {
+        let Some(blk) = cfg.block(i, j) else {
+            bail!("block ({i},{j}] not merge-legal");
+        };
+        let g = ConvGeom::from(blk);
+        // singleton layers keep their BN (eager pays for it); merged
+        // blocks have BN fused by construction.  Activation present when
+        // the layer ends with relu6 (worst case; fused mode ignores it).
+        let with_bn = blk.is_singleton();
+        let with_act = true;
+        let mut ms = op_latency_ms(self.dev, &g, batch, self.mode, with_bn, with_act);
+        if let Some(src) = blk.add_from {
+            // explicit residual add: one memory pass in eager mode
+            if self.mode == ExecMode::Eager {
+                let _ = src;
+                ms += super::gpu_model::mem_pass_latency_ms(
+                    self.dev,
+                    batch * blk.c_out * blk.h_out * blk.w_out,
+                );
+            }
+        }
+        Ok(ms)
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "analytical/{}/{}",
+            self.dev.name,
+            match self.mode {
+                ExecMode::Fused => "fused",
+                ExecMode::Eager => "eager",
+            }
+        )
+    }
+}
+
+/// T[i, j] in milliseconds for every legal block, plus the integer
+/// scaling used by the DP.
+#[derive(Debug, Clone)]
+pub struct BlockLatencies {
+    pub source: String,
+    pub batch: usize,
+    /// ticks per millisecond (paper's "constant factor")
+    pub scale: f64,
+    /// (i, j, ms)
+    pub entries: Vec<(usize, usize, f64)>,
+}
+
+impl BlockLatencies {
+    pub fn measure(
+        cfg: &ArchConfig,
+        src: &mut dyn LatencySource,
+        batch: usize,
+        scale: f64,
+    ) -> Result<BlockLatencies> {
+        let mut entries = Vec::with_capacity(cfg.blocks.len());
+        for blk in &cfg.blocks {
+            let ms = src.block_ms(cfg, blk.i, blk.j, batch)?;
+            entries.push((blk.i, blk.j, ms));
+        }
+        Ok(BlockLatencies { source: src.name(), batch, scale, entries })
+    }
+
+    /// Integer table for the DP (stage 1).
+    pub fn to_lat_table(&self, l: usize) -> LatTable {
+        let mut t = LatTable::new(l);
+        for &(i, j, ms) in &self.entries {
+            t.set(i, j, (ms * self.scale).round().max(1.0) as u64);
+        }
+        t
+    }
+
+    pub fn ms_of(&self, i: usize, j: usize) -> Option<f64> {
+        self.entries.iter().find(|e| e.0 == i && e.1 == j).map(|e| e.2)
+    }
+
+    /// End-to-end latency (ms) of a merged network given its segments.
+    pub fn network_ms(&self, segments: &[(usize, usize)]) -> Option<f64> {
+        segments.iter().map(|&(i, j)| self.ms_of(i, j)).sum()
+    }
+
+    pub fn ticks_to_ms(&self, ticks: u64) -> f64 {
+        ticks as f64 / self.scale
+    }
+
+    pub fn ms_to_ticks(&self, ms: f64) -> u64 {
+        (ms * self.scale).round() as u64
+    }
+
+    // -- persistence (tables are expensive to measure) ----------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj_from(vec![
+            ("source", Json::str_of(&self.source)),
+            ("batch", Json::int(self.batch as i64)),
+            ("scale", Json::num(self.scale)),
+            (
+                "entries",
+                Json::Arr(
+                    self.entries
+                        .iter()
+                        .map(|&(i, j, ms)| {
+                            Json::arr_of([Json::int(i as i64), Json::int(j as i64), Json::num(ms)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<BlockLatencies> {
+        let entries = v
+            .get("entries")?
+            .arr()?
+            .iter()
+            .map(|e| {
+                let a = e.arr()?;
+                Ok((a[0].usize()?, a[1].usize()?, a[2].f64()?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(BlockLatencies {
+            source: v.get("source")?.str()?.to_string(),
+            batch: v.get("batch")?.usize()?,
+            scale: v.get("scale")?.f64()?,
+            entries,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<BlockLatencies> {
+        BlockLatencies::from_json(&Json::from_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::devices::RTX_2080_TI;
+    use crate::model::spec::testutil::tiny_config;
+
+    #[test]
+    fn builds_table_over_all_blocks() {
+        let cfg = tiny_config();
+        let mut src = Analytical { dev: &RTX_2080_TI, mode: ExecMode::Fused };
+        let bl = BlockLatencies::measure(&cfg, &mut src, 128, 100.0).unwrap();
+        assert_eq!(bl.entries.len(), cfg.blocks.len());
+        assert!(bl.entries.iter().all(|e| e.2 > 0.0));
+        let t = bl.to_lat_table(cfg.spec.l());
+        // singletons must be finite; illegal pairs INF
+        for l in 1..=cfg.spec.l() {
+            assert!(t.get(l - 1, l) < crate::dp::stage1::INF);
+        }
+        assert!(t.get(2, 5) >= crate::dp::stage1::INF);
+    }
+
+    #[test]
+    fn eager_table_dominates_fused() {
+        let cfg = tiny_config();
+        let mut f = Analytical { dev: &RTX_2080_TI, mode: ExecMode::Fused };
+        let mut e = Analytical { dev: &RTX_2080_TI, mode: ExecMode::Eager };
+        let bf = BlockLatencies::measure(&cfg, &mut f, 128, 100.0).unwrap();
+        let be = BlockLatencies::measure(&cfg, &mut e, 128, 100.0).unwrap();
+        for (a, b) in bf.entries.iter().zip(&be.entries) {
+            assert!(b.2 > a.2, "eager must cost more: {:?} vs {:?}", b, a);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = tiny_config();
+        let mut src = Analytical { dev: &RTX_2080_TI, mode: ExecMode::Fused };
+        let bl = BlockLatencies::measure(&cfg, &mut src, 32, 100.0).unwrap();
+        let re = BlockLatencies::from_json(&bl.to_json()).unwrap();
+        assert_eq!(re.entries.len(), bl.entries.len());
+        assert_eq!(re.batch, 32);
+        assert!((re.entries[3].2 - bl.entries[3].2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaling_round_trips() {
+        let bl = BlockLatencies {
+            source: "x".into(),
+            batch: 1,
+            scale: 100.0,
+            entries: vec![(0, 1, 0.5)],
+        };
+        assert_eq!(bl.ms_to_ticks(0.5), 50);
+        assert!((bl.ticks_to_ms(50) - 0.5).abs() < 1e-12);
+    }
+}

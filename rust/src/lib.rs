@@ -1,0 +1,81 @@
+//! Latency-aware CNN depth compression via two-stage dynamic programming
+//! — a rust+JAX+Pallas reproduction of Kim, Jeong, Lee & Song (ICML 2023).
+//!
+//! Three-layer architecture (DESIGN.md):
+//!   L3 (this crate)          — compression pipeline coordinator, two-stage
+//!                              DP solver, latency + importance tables,
+//!                              merge engine, trainer, serving, benches.
+//!   L2 (python/compile, AOT) — JAX model graphs lowered once to HLO text.
+//!   L1 (Pallas, AOT)         — tiled-matmul + kernel-composition kernels.
+//!
+//! Python never runs at request time: the PJRT CPU client executes the
+//! AOT artifacts under `artifacts/`.
+
+pub mod tensor;
+
+pub mod util {
+    pub mod bench;
+    pub mod cli;
+    pub mod json;
+    pub mod prop;
+    pub mod rng;
+}
+
+pub mod model {
+    pub mod cost;
+    pub mod spec;
+}
+
+pub mod merge {
+    pub mod compose;
+    pub mod plan;
+}
+
+pub mod latency {
+    pub mod devices;
+    pub mod gpu_model;
+    pub mod measured;
+    pub mod table;
+}
+
+pub mod dp {
+    pub mod brute;
+    pub mod extended;
+    pub mod stage1;
+    pub mod stage2;
+}
+
+pub mod importance {
+    pub mod eval;
+    pub mod normalize;
+    pub mod table;
+}
+
+pub mod data {
+    pub mod batcher;
+    pub mod synth;
+}
+
+pub mod runtime {
+    pub mod engine;
+    pub mod manifest;
+}
+
+pub mod trainer {
+    pub mod eval;
+    pub mod params;
+    pub mod sgd;
+}
+
+pub mod baselines {
+    pub mod channel_pruning;
+    pub mod depthshrinker;
+}
+
+pub mod coordinator {
+    pub mod experiments;
+    pub mod merged_exec;
+    pub mod pipeline;
+    pub mod report;
+    pub mod server;
+}

@@ -1,0 +1,343 @@
+//! `repro` — the L3 coordinator CLI.
+//!
+//! Subcommands mirror the pipeline stages (DESIGN.md §5.1 process):
+//!   pretrain | latency | importance | plan | finetune | compress |
+//!   eval | serve | info
+//! plus `tables --table N` in rust/benches/bench_tables.rs for the
+//! paper-table harnesses.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use repro::coordinator::pipeline::{LatencyCfg, Pipeline};
+use repro::coordinator::report::{fmt_acc, fmt_ms, Table};
+use repro::coordinator::server::{spawn_load, Server, ServerConfig};
+use repro::data::synth::SynthSpec;
+use repro::importance::eval::ImportanceConfig;
+use repro::latency::gpu_model::ExecMode;
+use repro::model::cost;
+use repro::runtime::engine::Engine;
+use repro::trainer::params::ParamSet;
+use repro::trainer::sgd::TrainState;
+use repro::util::cli::Args;
+
+fn usage() -> &'static str {
+    "repro <command> [--flags]\n\
+     commands:\n\
+       info                                  list artifacts, archs, blocks\n\
+       pretrain   --arch A [--steps N --lr X --seed N --classes N --force]\n\
+       latency    --arch A [--source sim:rtx2080ti|measured --eager --batch N]\n\
+       importance --arch A [--steps N --lr X --force]\n\
+       plan       --arch A --t0 MS [--alpha X --base] (writes artifacts/plans/)\n\
+       compress   --arch A --t0 MS [--alpha X --finetune-steps N --kd]\n\
+       eval       --arch A [--ckpt PATH]\n\
+       serve      --arch A [--clients N --requests N --max-batch N --max-wait-ms N]\n\
+     common: --artifacts DIR (default ./artifacts) --quiet"
+}
+
+fn data_for(args: &Args, pipe: &Pipeline) -> Result<SynthSpec> {
+    let classes = args.usize_or("classes", pipe.entry.num_classes)?;
+    let hw = pipe.entry.input[1];
+    let mut d = if classes <= 10 {
+        SynthSpec::quickstart(hw)
+    } else {
+        SynthSpec::imagenet100_analog(hw)
+    };
+    d.num_classes = classes;
+    if d.num_classes != pipe.entry.num_classes {
+        bail!(
+            "dataset classes {} must match arch head {} (AOT-fixed)",
+            d.num_classes,
+            pipe.entry.num_classes
+        );
+    }
+    Ok(d)
+}
+
+fn lat_cfg(args: &Args) -> Result<LatencyCfg> {
+    Ok(LatencyCfg {
+        source: args.str_or("source", "sim:rtx2080ti"),
+        mode: if args.bool_flag("eager") { ExecMode::Eager } else { ExecMode::Fused },
+        batch: args.usize_or("batch", 128)?,
+        scale: args.f64_or("scale", 200.0)?,
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow!("missing command\n{}", usage()))?;
+    let root = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let quiet = args.bool_flag("quiet");
+
+    match cmd.as_str() {
+        "info" => {
+            let engine = Engine::new(&root)?;
+            println!("platform: {}", engine.platform());
+            let mut t = Table::new("archs", &["arch", "L", "classes", "blocks", "probes", "artifacts"]);
+            for (name, e) in &engine.manifest.archs {
+                let cfg = repro::model::spec::ArchConfig::load(&root.join(&e.config))?;
+                t.row(vec![
+                    name.clone(),
+                    e.l.to_string(),
+                    e.num_classes.to_string(),
+                    cfg.blocks.len().to_string(),
+                    cfg.probes.len().to_string(),
+                    (e.artifacts.len() + e.blocks_fused.len() + e.blocks_eager.len()).to_string(),
+                ]);
+            }
+            print!("{}", t.render());
+            if !engine.manifest.plans.is_empty() {
+                println!("plans: {:?}", engine.manifest.plans.keys().collect::<Vec<_>>());
+            }
+        }
+        "pretrain" => {
+            let engine = Engine::new(&root)?;
+            let arch = args.str_req("arch")?;
+            let mut pipe = Pipeline::new(&engine, &arch)?;
+            pipe.verbose = !quiet;
+            let data = data_for(&args, &pipe)?;
+            let (_, acc) = pipe.pretrain(
+                &data,
+                args.usize_or("steps", 600)?,
+                args.f64_or("lr", 0.08)?,
+                args.usize_or("seed", 1)? as i32,
+                args.bool_flag("force"),
+            )?;
+            println!("pretrained {} val acc {}", arch, fmt_acc(acc));
+        }
+        "latency" => {
+            let engine = Engine::new(&root)?;
+            let arch = args.str_req("arch")?;
+            let mut pipe = Pipeline::new(&engine, &arch)?;
+            pipe.verbose = !quiet;
+            let lcfg = lat_cfg(&args)?;
+            let bl = pipe.latency_table(&lcfg, args.bool_flag("force"))?;
+            let vanilla = pipe.vanilla_latency_ms(&bl)?;
+            println!(
+                "latency table [{}]: {} blocks, vanilla end-to-end {} ms",
+                bl.source,
+                bl.entries.len(),
+                fmt_ms(vanilla)
+            );
+            let mut t = Table::new("slowest blocks", &["(i,j]", "ms"]);
+            let mut es = bl.entries.clone();
+            es.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+            for &(i, j, ms) in es.iter().take(8) {
+                t.row(vec![format!("({i},{j}]"), fmt_ms(ms)]);
+            }
+            print!("{}", t.render());
+        }
+        "importance" => {
+            let engine = Engine::new(&root)?;
+            let arch = args.str_req("arch")?;
+            let mut pipe = Pipeline::new(&engine, &arch)?;
+            pipe.verbose = !quiet;
+            let data = data_for(&args, &pipe)?;
+            let (pre, acc) = pipe.pretrain(
+                &data,
+                args.usize_or("pretrain-steps", 600)?,
+                args.f64_or("pretrain-lr", 0.08)?,
+                1,
+                false,
+            )?;
+            let icfg = ImportanceConfig {
+                steps: args.usize_or("steps", 6)?,
+                lr: args.f64_or("lr", 0.01)?,
+                verbose: !quiet,
+                ..Default::default()
+            };
+            let table = pipe.importance(&data, &pre, acc, &icfg, args.bool_flag("force"))?;
+            println!("importance table: {} probes (base acc {})", table.len(), fmt_acc(acc));
+        }
+        "plan" => {
+            let engine = Engine::new(&root)?;
+            let arch = args.str_req("arch")?;
+            let mut pipe = Pipeline::new(&engine, &arch)?;
+            pipe.verbose = !quiet;
+            let data = data_for(&args, &pipe)?;
+            let (pre, acc) = pipe.pretrain(&data, args.usize_or("pretrain-steps", 600)?, 0.08, 1, false)?;
+            let lcfg = lat_cfg(&args)?;
+            let lat = pipe.latency_table(&lcfg, false)?;
+            let icfg = ImportanceConfig {
+                steps: args.usize_or("imp-steps", 6)?,
+                verbose: !quiet,
+                ..Default::default()
+            };
+            let imp = pipe.importance(&data, &pre, acc, &icfg, false)?;
+            let t0 = args.f64_or("t0", 0.0)?;
+            if t0 <= 0.0 {
+                bail!("--t0 <ms> required (vanilla is {} ms)", fmt_ms(pipe.vanilla_latency_ms(&lat)?));
+            }
+            let out = pipe.plan(&lat, &imp, t0, args.f64_or("alpha", 1.6)?, !args.bool_flag("base"))?;
+            println!("plan: {}", out.summary());
+            let name = args.str_or("name", &format!("{arch}_t{}", (t0 * 100.0) as u64));
+            let path = pipe.write_plan(&out, &name)?;
+            println!("wrote {} — run `make plans` to emit pass-2 artifacts", path.display());
+        }
+        "plan-demo" => {
+            // write a plan from the structural proxy importance (no
+            // training) — exercises the aot pass-2 flow end to end
+            let engine = Engine::new(&root)?;
+            let arch = args.str_or("arch", "mbv2_w10");
+            let mut pipe = Pipeline::new(&engine, &arch)?;
+            pipe.verbose = !quiet;
+            let lat = pipe.latency_table(&lat_cfg(&args)?, false)?;
+            let imp = repro::coordinator::experiments::proxy_importance(&pipe.cfg);
+            let vanilla = pipe.vanilla_latency_ms(&lat)?;
+            let frac = args.f64_or("frac", 0.65)?;
+            let out = pipe.plan(&lat, &imp, vanilla * frac, 1.6, true)?;
+            println!("plan: {}", out.summary());
+            let name = args.str_or("name", &format!("{arch}_demo"));
+            let path = pipe.write_plan(&out, &name)?;
+            println!("wrote {} — run `make plans` to emit pass-2 artifacts", path.display());
+        }
+        "compress" => {
+            let engine = Engine::new(&root)?;
+            let arch = args.str_req("arch")?;
+            let mut pipe = Pipeline::new(&engine, &arch)?;
+            pipe.verbose = !quiet;
+            let data = data_for(&args, &pipe)?;
+            let (pre, base_acc) =
+                pipe.pretrain(&data, args.usize_or("pretrain-steps", 600)?, 0.08, 1, false)?;
+            let lcfg = lat_cfg(&args)?;
+            let lat = pipe.latency_table(&lcfg, false)?;
+            let icfg = ImportanceConfig {
+                steps: args.usize_or("imp-steps", 6)?,
+                verbose: false,
+                ..Default::default()
+            };
+            let imp = pipe.importance(&data, &pre, base_acc, &icfg, false)?;
+            let t0 = args.f64_or("t0", 0.0)?;
+            let vanilla_ms = pipe.vanilla_latency_ms(&lat)?;
+            if t0 <= 0.0 {
+                bail!("--t0 <ms> required (vanilla is {} ms)", fmt_ms(vanilla_ms));
+            }
+            let out = pipe.plan(&lat, &imp, t0, args.f64_or("alpha", 1.6)?, !args.bool_flag("base"))?;
+            println!("[plan] {}", out.summary());
+            let mask = pipe.mask_for_a(&out.a);
+            let (fine, masked_acc, _log) = pipe.finetune(
+                &data,
+                &pre,
+                mask,
+                args.usize_or("finetune-steps", 240)?,
+                args.f64_or("finetune-lr", 0.02)?,
+                args.bool_flag("kd"),
+                11,
+            )?;
+            let net = pipe.merge(&fine, &out)?;
+            let merged = pipe.eval_merged(&net, &data)?;
+            let merged_ms = pipe.merged_latency_ms(&out, &lat)?;
+            let mut t = Table::new(
+                &format!("compress {arch} @ T0={} ms [{}]", fmt_ms(t0), out.lat_source),
+                &["network", "acc (%)", "lat (ms)", "speedup", "depth"],
+            );
+            t.row(vec![
+                "vanilla".into(),
+                fmt_acc(base_acc),
+                fmt_ms(vanilla_ms),
+                "1.00x".into(),
+                pipe.cfg.spec.l().to_string(),
+            ]);
+            t.row(vec![
+                "ours (merged)".into(),
+                fmt_acc(merged.acc),
+                fmt_ms(merged_ms),
+                format!("{:.2}x", vanilla_ms / merged_ms),
+                net.depth().to_string(),
+            ]);
+            print!("{}", t.render());
+            println!(
+                "masked-finetune acc {} | merge drift {:+.2}%p (E.2 boundary effect; \
+                 use plan-file pass 2 for exact finetuning)",
+                fmt_acc(masked_acc),
+                100.0 * (merged.acc - masked_acc)
+            );
+        }
+        "eval" => {
+            let engine = Engine::new(&root)?;
+            let arch = args.str_req("arch")?;
+            let mut pipe = Pipeline::new(&engine, &arch)?;
+            pipe.verbose = !quiet;
+            let data = data_for(&args, &pipe)?;
+            let ckpt = args.str_opt("ckpt");
+            let (ps, _) = match ckpt {
+                Some(p) => (ParamSet::load(&PathBuf::from(p))?, 0.0),
+                None => pipe.pretrain(&data, args.usize_or("pretrain-steps", 600)?, 0.08, 1, false)?,
+            };
+            let ts = TrainState::from_checkpoint(&pipe.entry, &ps)?;
+            let mask = pipe.cfg.spec.default_mask();
+            let batcher = repro::data::batcher::Batcher::new(data, pipe.entry.train_batch, 0, false);
+            let r = repro::trainer::eval::eval_masked(
+                &engine,
+                pipe.entry.artifact("eval_step")?,
+                &ts,
+                &mask,
+                &batcher,
+                pipe.entry.eval_batch,
+            )?;
+            let c = cost::network_cost(&pipe.cfg.spec);
+            println!(
+                "{}: acc {} | {:.1} MFLOPs | {:.2} M params | peak act {:.2} MB (bs1)",
+                arch,
+                fmt_acc(r.acc),
+                c.flops as f64 / 1e6,
+                c.params as f64 / 1e6,
+                c.peak_act_elems as f64 * 4.0 / 1e6
+            );
+        }
+        "serve" => {
+            let engine = Engine::new(&root)?;
+            let arch = args.str_req("arch")?;
+            let mut pipe = Pipeline::new(&engine, &arch)?;
+            pipe.verbose = !quiet;
+            let data = data_for(&args, &pipe)?;
+            let (ps, _) = pipe.pretrain(&data, args.usize_or("pretrain-steps", 600)?, 0.08, 1, false)?;
+            let ts = TrainState::from_checkpoint(&pipe.entry, &ps)?;
+            let infer = pipe.entry.artifact("infer_b8")?.clone();
+            let mask = pipe.cfg.spec.default_mask();
+            let mask_lit = repro::tensor::Tensor::from_vec(&[mask.len()], mask)?.to_literal()?;
+            let mut head: Vec<xla::Literal> = Vec::new();
+            for l in ts.params.iter().chain(ts.state.iter()) {
+                head.push(literal_clone(l)?);
+            }
+            let cfg = ServerConfig {
+                max_batch: args.usize_or("max-batch", 8)?,
+                max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 4)?),
+            };
+            let server = Server::new(&engine, &infer, head, vec![mask_lit], cfg)?;
+            let clients = args.usize_or("clients", 4)?;
+            let per = args.usize_or("requests", 32)?;
+            println!("[serve] {} clients x {} requests (batch<= {})", clients, per, server.cfg.max_batch);
+            let (rx, handles) = spawn_load(&data, clients, per, args.u64_or("think-ms", 0)?);
+            let stats = server.run(rx)?;
+            let correct: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+            let mut t = Table::new("serving", &["metric", "value"]);
+            t.row(vec!["served".into(), stats.served.to_string()]);
+            t.row(vec!["throughput (req/s)".into(), format!("{:.1}", stats.throughput())]);
+            t.row(vec!["p50 latency (ms)".into(), format!("{:.2}", stats.percentile_ms(0.5))]);
+            t.row(vec!["p95 latency (ms)".into(), format!("{:.2}", stats.percentile_ms(0.95))]);
+            t.row(vec!["mean batch".into(), format!("{:.2}", stats.mean_batch())]);
+            t.row(vec![
+                "accuracy".into(),
+                fmt_acc(correct as f64 / stats.served.max(1) as f64),
+            ]);
+            print!("{}", t.render());
+        }
+        other => {
+            bail!("unknown command {other:?}\n{}", usage());
+        }
+    }
+    args.reject_unknown()?;
+    Ok(())
+}
+
+/// Clone a literal via host roundtrip (xla::Literal has no Clone).
+fn literal_clone(l: &xla::Literal) -> Result<xla::Literal> {
+    let t = repro::tensor::Tensor::from_literal(l)?;
+    t.to_literal()
+}

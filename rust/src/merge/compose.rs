@@ -1,0 +1,341 @@
+//! Kernel composition — the merge operator th2 (*) th1 (paper §3, App. E).
+//!
+//! Mirrors the L1 Pallas kernel `python/compile/kernels/merge.py`; the
+//! golden fixture `artifacts/fixtures/compose_golden.json` (emitted by
+//! aot.py from the Pallas kernel itself) pins both implementations to
+//! identical numbers — see tests/merge_golden.rs.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// Merged kernel of conv(th2) o conv(th1), th1 applied first with
+/// stride `s1` (which dilates th2's taps):
+///
+///   th'[o,i,w] = sum_m sum_v th2[o,m,v] * th1[m,i,w - s1*v]
+///   k' = s1*(k2-1) + k1
+pub fn compose(t2: &Tensor, t1: &Tensor, s1: usize) -> Result<Tensor> {
+    if t2.rank() != 4 || t1.rank() != 4 {
+        bail!("compose expects OIHW kernels");
+    }
+    let (co, cm2, k2) = (t2.shape[0], t2.shape[1], t2.shape[2]);
+    let (cm1, ci, k1) = (t1.shape[0], t1.shape[1], t1.shape[2]);
+    if cm1 != cm2 {
+        bail!("middle-channel mismatch: {:?} o {:?}", t2.shape, t1.shape);
+    }
+    if t2.shape[3] != k2 || t1.shape[3] != k1 {
+        bail!("non-square kernels unsupported");
+    }
+    let kp = s1 * (k2 - 1) + k1;
+    // Cache-friendly accumulation (§Perf L3-1): extract each spatial tap
+    // of t1/t2 into contiguous (cm x ci) / (co x cm) matrices, run the
+    // per-shift accumulation as an ikj GEMM over contiguous rows into a
+    // [kp, kp, co, ci] buffer, and transpose to OIHW once at the end.
+    // ~40x over the naive strided quad-loop at MBV2 tail sizes.
+    let mut acc = vec![0.0f32; kp * kp * co * ci];
+    // contiguous taps: b_taps[(uy,ux)] = t1[:, :, uy, ux] as (cm x ci)
+    let mut b_tap = vec![0.0f32; cm1 * ci];
+    let mut a_tap = vec![0.0f32; co * cm1];
+    for uy in 0..k1 {
+        for ux in 0..k1 {
+            for m in 0..cm1 {
+                for i in 0..ci {
+                    b_tap[m * ci + i] = t1.at4(m, i, uy, ux);
+                }
+            }
+            for vy in 0..k2 {
+                for vx in 0..k2 {
+                    for o in 0..co {
+                        for m in 0..cm1 {
+                            a_tap[o * cm1 + m] = t2.at4(o, m, vy, vx);
+                        }
+                    }
+                    let wy = s1 * vy + uy;
+                    let wx = s1 * vx + ux;
+                    let base = (wy * kp + wx) * co * ci;
+                    // C[o, i] += A[o, m] * B[m, i] — contiguous inner loop
+                    for o in 0..co {
+                        let crow = &mut acc[base + o * ci..base + (o + 1) * ci];
+                        for m in 0..cm1 {
+                            let a = a_tap[o * cm1 + m];
+                            if a == 0.0 {
+                                continue;
+                            }
+                            let brow = &b_tap[m * ci..(m + 1) * ci];
+                            for (c, b) in crow.iter_mut().zip(brow) {
+                                *c += a * b;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let mut out = Tensor::zeros(&[co, ci, kp, kp]);
+    for wy in 0..kp {
+        for wx in 0..kp {
+            let base = (wy * kp + wx) * co * ci;
+            for o in 0..co {
+                for i in 0..ci {
+                    *out.at4_mut(o, i, wy, wx) = acc[base + o * ci + i];
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Merged bias: b'[o] = b2[o] + sum_{m,vy,vx} th2[o,m,vy,vx] * b1[m].
+/// Exact under padding reordering (E.2).
+pub fn compose_bias(t2: &Tensor, b1: &[f32], b2: &[f32]) -> Result<Vec<f32>> {
+    let (co, cm, k2) = (t2.shape[0], t2.shape[1], t2.shape[2]);
+    if b1.len() != cm || b2.len() != co {
+        bail!("bias shape mismatch");
+    }
+    let mut out = b2.to_vec();
+    for o in 0..co {
+        let mut acc = 0.0f32;
+        for m in 0..cm {
+            let mut ksum = 0.0f32;
+            for vy in 0..k2 {
+                for vx in 0..k2 {
+                    ksum += t2.at4(o, m, vy, vx);
+                }
+            }
+            acc += ksum * b1[m];
+        }
+        out[o] += acc;
+    }
+    Ok(out)
+}
+
+/// Expand a grouped-conv kernel (O, I/g, k, k) to dense block-diagonal
+/// (O, I, k, k) — required before composing a depthwise conv.
+pub fn expand_grouped(w: &Tensor, groups: usize) -> Tensor {
+    if groups == 1 {
+        return w.clone();
+    }
+    let (o, ig, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let og = o / groups;
+    let i = ig * groups;
+    let mut dense = Tensor::zeros(&[o, i, kh, kw]);
+    for g in 0..groups {
+        for oo in 0..og {
+            for ii in 0..ig {
+                for y in 0..kh {
+                    for x in 0..kw {
+                        *dense.at4_mut(g * og + oo, g * ig + ii, y, x) =
+                            w.at4(g * og + oo, ii, y, x);
+                    }
+                }
+            }
+        }
+    }
+    dense
+}
+
+/// Fold BatchNorm (eval mode, running stats) into the preceding conv.
+pub fn bn_fuse(
+    w: &Tensor,
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    eps: f32,
+) -> Result<(Tensor, Vec<f32>)> {
+    let co = w.shape[0];
+    if gamma.len() != co || beta.len() != co || mean.len() != co || var.len() != co {
+        bail!("bn param shape mismatch (c_out {})", co);
+    }
+    let mut wf = w.clone();
+    let per = w.len() / co;
+    let mut bias = vec![0.0f32; co];
+    for o in 0..co {
+        let scale = gamma[o] / (var[o] + eps).sqrt();
+        for e in 0..per {
+            wf.data[o * per + e] *= scale;
+        }
+        bias[o] = beta[o] - mean[o] * scale;
+    }
+    Ok((wf, bias))
+}
+
+/// Add the identity branch into a merged kernel (skip fusion, E.1):
+/// w[o][o][pad][pad] += 1.  Requires c_in == c_out and pad < k.
+pub fn add_identity_tap(w: &mut Tensor, pad: usize) -> Result<()> {
+    let (co, ci, k) = (w.shape[0], w.shape[1], w.shape[2]);
+    if co != ci {
+        bail!("skip fusion needs c_in == c_out, got {ci} -> {co}");
+    }
+    if pad >= k {
+        bail!("identity tap (pad {pad}) outside kernel (k {k})");
+    }
+    for o in 0..co {
+        *w.at4_mut(o, o, pad, pad) += 1.0;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randt(shape: &[usize], rng: &mut Rng) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        for v in t.data.iter_mut() {
+            *v = rng.normal();
+        }
+        t
+    }
+
+    /// Literal direct convolution (valid padding) for oracle checks.
+    fn conv_valid(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
+        let (n, ci, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        let (co, _ciw, k) = (w.shape[0], w.shape[1], w.shape[2]);
+        let oh = (h - k) / stride + 1;
+        let ow = (wd - k) / stride + 1;
+        let mut out = Tensor::zeros(&[n, co, oh, ow]);
+        for b in 0..n {
+            for o in 0..co {
+                for y in 0..oh {
+                    for xx in 0..ow {
+                        let mut acc = 0.0;
+                        for i in 0..ci {
+                            for dy in 0..k {
+                                for dx in 0..k {
+                                    acc += x.at4(b, i, y * stride + dy, xx * stride + dx)
+                                        * w.at4(o, i, dy, dx);
+                                }
+                            }
+                        }
+                        *out.at4_mut(b, o, y, xx) = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn compose_equals_sequential_convs() {
+        // property test over shapes/strides
+        crate::util::prop::forall(20, 11, |rng| {
+            let ci = 1 + rng.below(3);
+            let cm = 1 + rng.below(3);
+            let co = 1 + rng.below(3);
+            let k1 = [1, 3][rng.below(2)];
+            let k2 = [1, 3][rng.below(2)];
+            let s1 = 1 + rng.below(2);
+            let s2 = 1 + rng.below(2);
+            let h = 4 + k1 + s1 * (k2 + 3);
+            let x = randt(&[1, ci, h, h], rng);
+            let t1 = randt(&[cm, ci, k1, k1], rng);
+            let t2 = randt(&[co, cm, k2, k2], rng);
+            let y = conv_valid(&x, &t1, s1);
+            let z = conv_valid(&y, &t2, s2);
+            let tm = compose(&t2, &t1, s1).map_err(|e| e.to_string())?;
+            let zm = conv_valid(&x, &tm, s1 * s2);
+            crate::prop_assert!(
+                z.shape == zm.shape,
+                "shape mismatch {:?} vs {:?}",
+                z.shape,
+                zm.shape
+            );
+            let err = z.max_abs_diff(&zm);
+            crate::prop_assert!(err < 1e-3, "err {err}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn compose_bias_formula() {
+        let mut rng = Rng::new(5);
+        let t2 = randt(&[3, 2, 3, 3], &mut rng);
+        let b1 = vec![0.5, -1.0];
+        let b2 = vec![1.0, 2.0, 3.0];
+        let got = compose_bias(&t2, &b1, &b2).unwrap();
+        for o in 0..3 {
+            let mut want = b2[o];
+            for m in 0..2 {
+                let mut s = 0.0;
+                for y in 0..3 {
+                    for x in 0..3 {
+                        s += t2.at4(o, m, y, x);
+                    }
+                }
+                want += s * b1[m];
+            }
+            assert!((got[o] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn expand_grouped_depthwise() {
+        let mut rng = Rng::new(6);
+        let w = randt(&[4, 1, 3, 3], &mut rng);
+        let d = expand_grouped(&w, 4);
+        assert_eq!(d.shape, vec![4, 4, 3, 3]);
+        for o in 0..4 {
+            for i in 0..4 {
+                for y in 0..3 {
+                    for x in 0..3 {
+                        let want = if o == i { w.at4(o, 0, y, x) } else { 0.0 };
+                        assert_eq!(d.at4(o, i, y, x), want);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bn_fuse_matches_direct_computation() {
+        let mut rng = Rng::new(7);
+        let w = randt(&[2, 3, 1, 1], &mut rng);
+        let x = randt(&[1, 3, 4, 4], &mut rng);
+        let gamma = [1.5, -0.5];
+        let beta = [0.1, 0.2];
+        let mean = [0.3, -0.4];
+        let var = [1.2, 0.8];
+        let y = conv_valid(&x, &w, 1);
+        let (wf, bf) = bn_fuse(&w, &gamma, &beta, &mean, &var, 1e-5).unwrap();
+        let yf = conv_valid(&x, &wf, 1);
+        for o in 0..2 {
+            let inv = gamma[o] / (var[o] + 1e-5f32).sqrt();
+            for e in 0..16 {
+                let want = (y.data[o * 16 + e] - mean[o]) * inv + beta[o];
+                let got = yf.data[o * 16 + e] + bf[o];
+                assert!((want - got).abs() < 1e-4, "{want} vs {got}");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_tap_roundtrip() {
+        let mut w = Tensor::zeros(&[2, 2, 3, 3]);
+        add_identity_tap(&mut w, 1).unwrap();
+        assert_eq!(w.at4(0, 0, 1, 1), 1.0);
+        assert_eq!(w.at4(1, 1, 1, 1), 1.0);
+        assert_eq!(w.at4(0, 1, 1, 1), 0.0);
+        // identity conv reproduces input
+        let mut rng = Rng::new(8);
+        let x = randt(&[1, 2, 5, 5], &mut rng);
+        let y = conv_valid(&x, &w, 1);
+        // valid conv of k=3 shrinks by 2; compare interior
+        for c in 0..2 {
+            for yy in 0..3 {
+                for xx in 0..3 {
+                    assert_eq!(y.at4(0, c, yy, xx), x.at4(0, c, yy + 1, xx + 1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shape_errors() {
+        assert!(compose(&Tensor::zeros(&[2, 3, 1, 1]), &Tensor::zeros(&[4, 2, 1, 1]), 1).is_err());
+        assert!(add_identity_tap(&mut Tensor::zeros(&[2, 3, 3, 3]), 1).is_err());
+        assert!(add_identity_tap(&mut Tensor::zeros(&[2, 2, 1, 1]), 1).is_err());
+        assert!(bn_fuse(&Tensor::zeros(&[2, 1, 1, 1]), &[1.0], &[0.0], &[0.0], &[1.0], 1e-5).is_err());
+    }
+}

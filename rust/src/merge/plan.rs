@@ -1,0 +1,410 @@
+//! Merge planning: (A, S) -> merged network spec, merged weights,
+//! padding-reordering plan, and the plan JSON consumed by aot.py pass 2.
+//!
+//! Mirrors `python/compile/mergelib.py`; both are pinned to the same
+//! numbers by the compose golden fixture and the plan-equivalence
+//! integration test.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::merge::compose::{add_identity_tap, bn_fuse, compose, compose_bias, expand_grouped};
+use crate::model::spec::{ArchConfig, MergedBlock, ACT_RELU6};
+use crate::tensor::Tensor;
+use crate::trainer::params::ParamSet;
+use crate::util::json::Json;
+
+pub const BN_EPS: f32 = 1e-5;
+
+/// Consecutive segment boundaries of {0} u S u {L}.
+pub fn segments_from_s(l: usize, s_set: &[usize]) -> Vec<(usize, usize)> {
+    let mut pts = vec![0usize];
+    let mut s = s_set.to_vec();
+    s.sort_unstable();
+    s.dedup();
+    pts.extend(s.into_iter().filter(|&x| x > 0 && x < l));
+    pts.push(l);
+    pts.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
+/// Padding reordering (E.2): {layer idx -> pad override}; each merge
+/// segment's padding is hoisted onto its first conv.
+pub fn pad_plan(cfg: &ArchConfig, s_set: &[usize]) -> Result<BTreeMap<usize, usize>> {
+    let mut plan = BTreeMap::new();
+    for (i, j) in segments_from_s(cfg.spec.l(), s_set) {
+        if j - i == 1 {
+            continue;
+        }
+        let blk = cfg
+            .block(i, j)
+            .ok_or_else(|| anyhow!("S contains non-mergeable segment ({i},{j}]"))?;
+        plan.insert(i + 1, blk.pad);
+        for l in i + 2..=j {
+            plan.insert(l, 0);
+        }
+    }
+    Ok(plan)
+}
+
+/// One layer of a merged network.
+#[derive(Debug, Clone)]
+pub struct MergedLayer {
+    pub i: usize,
+    pub j: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub groups: usize,
+    pub act: bool,
+    pub pool_after: bool,
+    pub add_from_seg: Option<isize>, // -1 = network input
+}
+
+#[derive(Debug, Clone)]
+pub struct MergedNet {
+    pub layers: Vec<MergedLayer>,
+    /// merged parameters: [w0, b0, w1, b1, ..., fc_w, fc_b]
+    pub params: Vec<Tensor>,
+}
+
+/// Layer l of the original network as a dense conv with bias
+/// (BN folded from running stats, groups expanded).
+fn fused_dense_layer(cfg: &ArchConfig, ps: &ParamSet, l: usize) -> Result<(Tensor, Vec<f32>)> {
+    let ly = cfg.spec.layer(l);
+    let w = ps.get(&format!("w{l}"))?;
+    let gamma = &ps.get(&format!("gamma{l}"))?.data;
+    let beta = &ps.get(&format!("beta{l}"))?.data;
+    let mean = &ps.get(&format!("mean{l}"))?.data;
+    let var = &ps.get(&format!("var{l}"))?.data;
+    let (wf, b) = bn_fuse(w, gamma, beta, mean, var, BN_EPS)?;
+    Ok((expand_grouped(&wf, ly.groups), b))
+}
+
+/// Compose layers i+1..j into one (w, b); applies skip fusion (E.1).
+pub fn merge_segment(
+    cfg: &ArchConfig,
+    ps: &ParamSet,
+    i: usize,
+    j: usize,
+) -> Result<(Tensor, Vec<f32>, MergedBlock)> {
+    let blk = cfg
+        .block(i, j)
+        .ok_or_else(|| anyhow!("segment ({i},{j}] is not merge-legal"))?
+        .clone();
+    let (mut w_acc, mut b_acc) = fused_dense_layer(cfg, ps, i + 1)?;
+    let mut s_acc = cfg.spec.layer(i + 1).stride;
+    for l in i + 2..=j {
+        let (w_l, b_l) = fused_dense_layer(cfg, ps, l)?;
+        w_acc = compose(&w_l, &w_acc, s_acc)?;
+        b_acc = compose_bias(&w_l, &b_acc, &b_l)?;
+        s_acc *= cfg.spec.layer(l).stride;
+    }
+    if blk.skip_fuse {
+        add_identity_tap(&mut w_acc, blk.pad)
+            .context("skip fusion (E.1)")?;
+    }
+    if w_acc.shape != [blk.c_out, blk.c_in, blk.k, blk.k] {
+        bail!(
+            "merged kernel shape {:?} != block geometry {:?}",
+            w_acc.shape,
+            (blk.c_out, blk.c_in, blk.k, blk.k)
+        );
+    }
+    Ok((w_acc, b_acc, blk))
+}
+
+/// Build the full merged network from finetuned parameters.
+pub fn build_merged(
+    cfg: &ArchConfig,
+    ps: &ParamSet,
+    s_set: &[usize],
+    a_set: &[usize],
+) -> Result<MergedNet> {
+    let l_total = cfg.spec.l();
+    let segs = segments_from_s(l_total, s_set);
+    let mut seg_of_boundary: BTreeMap<usize, isize> = BTreeMap::new();
+    seg_of_boundary.insert(0, -1);
+    for (n, (_i, j)) in segs.iter().enumerate() {
+        seg_of_boundary.insert(*j, n as isize);
+    }
+    let mut layers = Vec::new();
+    let mut params = Vec::new();
+    for (i, j) in segs {
+        let blk = cfg
+            .block(i, j)
+            .ok_or_else(|| anyhow!("S contains non-mergeable segment ({i},{j}]"))?
+            .clone();
+        let act_on = a_set.contains(&j)
+            || (j == l_total && cfg.spec.layer(j).act == ACT_RELU6);
+        let mut add_from_seg = None;
+        if j - i == 1 {
+            // unmerged layer kept as-is: grouped kernel, explicit add
+            let w = ps.get(&format!("w{j}"))?;
+            let (wf, b) = bn_fuse(
+                w,
+                &ps.get(&format!("gamma{j}"))?.data,
+                &ps.get(&format!("beta{j}"))?.data,
+                &ps.get(&format!("mean{j}"))?.data,
+                &ps.get(&format!("var{j}"))?.data,
+                BN_EPS,
+            )?;
+            params.push(wf);
+            params.push(Tensor::from_vec(&[b.len()], b)?);
+            if let Some(src) = blk.add_from {
+                add_from_seg = Some(
+                    *seg_of_boundary
+                        .get(&src)
+                        .ok_or_else(|| anyhow!("residual source {src} not a segment boundary"))?,
+                );
+            }
+        } else {
+            let (w, b, _) = merge_segment(cfg, ps, i, j)?;
+            params.push(w);
+            params.push(Tensor::from_vec(&[b.len()], b)?);
+        }
+        layers.push(MergedLayer {
+            i,
+            j,
+            c_in: blk.c_in,
+            c_out: blk.c_out,
+            k: blk.k,
+            stride: blk.stride,
+            pad: blk.pad,
+            groups: blk.groups,
+            act: act_on,
+            pool_after: blk.pool_after,
+            add_from_seg,
+        });
+    }
+    params.push(ps.get("fc_w")?.clone());
+    params.push(ps.get("fc_b")?.clone());
+    Ok(MergedNet { layers, params })
+}
+
+impl MergedNet {
+    /// Merged blocks for cost accounting (Table 10).
+    pub fn blocks(&self, cfg: &ArchConfig) -> Vec<MergedBlock> {
+        self.layers
+            .iter()
+            .map(|ml| cfg.block(ml.i, ml.j).unwrap().clone())
+            .collect()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+/// The plan JSON handed to `aot.py --plans-only` (pass 2): it describes
+/// both the padding-reordered finetune graph and the merged infer graph.
+pub fn plan_json(
+    name: &str,
+    arch: &str,
+    cfg: &ArchConfig,
+    s_set: &[usize],
+    a_set: &[usize],
+) -> Result<Json> {
+    let pads = pad_plan(cfg, s_set)?;
+    // merged spec with placeholder (shape-only) params
+    let segs = segments_from_s(cfg.spec.l(), s_set);
+    let mut seg_of_boundary: BTreeMap<usize, isize> = BTreeMap::new();
+    seg_of_boundary.insert(0, -1);
+    for (n, (_i, j)) in segs.iter().enumerate() {
+        seg_of_boundary.insert(*j, n as isize);
+    }
+    let mut mlayers = Vec::new();
+    let mut pdefs = Vec::new();
+    for (n, (i, j)) in segs.iter().cloned().enumerate() {
+        let blk = cfg
+            .block(i, j)
+            .ok_or_else(|| anyhow!("S contains non-mergeable segment ({i},{j}]"))?;
+        let act_on = a_set.contains(&j)
+            || (j == cfg.spec.l() && cfg.spec.layer(j).act == ACT_RELU6);
+        let add_from_seg = if j - i == 1 {
+            blk.add_from.map(|src| seg_of_boundary[&src])
+        } else {
+            None
+        };
+        mlayers.push(Json::obj_from(vec![
+            ("i", Json::int(i as i64)),
+            ("j", Json::int(j as i64)),
+            ("c_in", Json::int(blk.c_in as i64)),
+            ("c_out", Json::int(blk.c_out as i64)),
+            ("k", Json::int(blk.k as i64)),
+            ("stride", Json::int(blk.stride as i64)),
+            ("pad", Json::int(blk.pad as i64)),
+            ("groups", Json::int(blk.groups as i64)),
+            ("act", Json::int(act_on as i64)),
+            ("pool_after", Json::Bool(blk.pool_after)),
+            (
+                "add_from_seg",
+                match add_from_seg {
+                    Some(x) => Json::int(x as i64),
+                    None => Json::Null,
+                },
+            ),
+        ]));
+        let w_shape = vec![blk.c_out, blk.c_in / blk.groups, blk.k, blk.k];
+        pdefs.push(Json::obj_from(vec![
+            ("name", Json::str_of(&format!("mw{n}"))),
+            ("shape", Json::usize_arr(&w_shape)),
+        ]));
+        pdefs.push(Json::obj_from(vec![
+            ("name", Json::str_of(&format!("mb{n}"))),
+            ("shape", Json::usize_arr(&[blk.c_out])),
+        ]));
+    }
+    let last = cfg.spec.layer(cfg.spec.l());
+    pdefs.push(Json::obj_from(vec![
+        ("name", Json::str_of("fc_w")),
+        ("shape", Json::usize_arr(&[last.c_out, cfg.spec.num_classes])),
+    ]));
+    pdefs.push(Json::obj_from(vec![
+        ("name", Json::str_of("fc_b")),
+        ("shape", Json::usize_arr(&[cfg.spec.num_classes])),
+    ]));
+    let pad_obj = Json::Obj(
+        pads.iter()
+            .map(|(k, v)| (k.to_string(), Json::int(*v as i64)))
+            .collect(),
+    );
+    Ok(Json::obj_from(vec![
+        ("name", Json::str_of(name)),
+        ("arch", Json::str_of(arch)),
+        ("A", Json::usize_arr(a_set)),
+        ("S", Json::usize_arr(s_set)),
+        ("pad_plan", pad_obj),
+        (
+            "merged",
+            Json::obj_from(vec![
+                ("layers", Json::Arr(mlayers)),
+                ("params", Json::Arr(pdefs)),
+            ]),
+        ),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::testutil::tiny_config;
+    use crate::util::rng::Rng;
+
+    fn rand_params(cfg: &ArchConfig, seed: u64) -> ParamSet {
+        let mut rng = Rng::new(seed);
+        let mut ps = ParamSet::new();
+        for ly in &cfg.spec.layers {
+            let l = ly.idx;
+            let wshape = [ly.c_out, ly.c_in / ly.groups, ly.k, ly.k];
+            let mut w = Tensor::zeros(&wshape);
+            for v in w.data.iter_mut() {
+                *v = rng.normal() * 0.1;
+            }
+            ps.insert(format!("w{l}"), w);
+            for (nm, base) in [("gamma", 1.0f32), ("beta", 0.0), ("mean", 0.0), ("var", 1.0)] {
+                let mut t = Tensor::zeros(&[ly.c_out]);
+                for v in t.data.iter_mut() {
+                    *v = base + rng.normal() * 0.05;
+                }
+                if nm == "var" {
+                    for v in t.data.iter_mut() {
+                        *v = v.abs() + 0.5;
+                    }
+                }
+                ps.insert(format!("{nm}{l}"), t);
+            }
+        }
+        let last = cfg.spec.layer(cfg.spec.l());
+        ps.insert("fc_w".into(), Tensor::zeros(&[last.c_out, cfg.spec.num_classes]));
+        ps.insert("fc_b".into(), Tensor::zeros(&[cfg.spec.num_classes]));
+        ps
+    }
+
+    #[test]
+    fn segments_cover_and_partition() {
+        assert_eq!(segments_from_s(6, &[2, 4]), vec![(0, 2), (2, 4), (4, 6)]);
+        assert_eq!(segments_from_s(6, &[]), vec![(0, 6)]);
+        // duplicates and out-of-range entries are dropped
+        assert_eq!(segments_from_s(6, &[2, 2, 6, 0]), vec![(0, 2), (2, 6)]);
+    }
+
+    #[test]
+    fn pad_plan_hoists() {
+        let cfg = tiny_config();
+        let plan = pad_plan(&cfg, &[1, 4, 5]).unwrap();
+        assert_eq!(plan.get(&2), Some(&1));
+        assert_eq!(plan.get(&3), Some(&0));
+        assert_eq!(plan.get(&4), Some(&0));
+        assert!(!plan.contains_key(&1));
+        assert!(!plan.contains_key(&5));
+    }
+
+    #[test]
+    fn pad_plan_rejects_illegal_s() {
+        let cfg = tiny_config();
+        assert!(pad_plan(&cfg, &[2]).is_err()); // (2,6] crosses the add
+    }
+
+    #[test]
+    fn build_merged_shapes_and_depth() {
+        let cfg = tiny_config();
+        let ps = rand_params(&cfg, 3);
+        let net = build_merged(&cfg, &ps, &[1, 4, 5], &[4]).unwrap();
+        assert_eq!(net.depth(), 4); // (0,1],(1,4],(4,5],(5,6]
+        assert_eq!(net.params.len(), 2 * 4 + 2);
+        let body = &net.layers[1];
+        assert_eq!((body.k, body.stride, body.pad), (3, 1, 1));
+        assert_eq!(net.params[2].shape, vec![8, 8, 3, 3]);
+        assert!(body.act);
+        assert!(!net.layers[0].act || cfg.spec.layer(1).act == ACT_RELU6);
+    }
+
+    #[test]
+    fn build_merged_keeps_explicit_add_for_singletons() {
+        let cfg = tiny_config();
+        let ps = rand_params(&cfg, 4);
+        // everything singleton: the residual at layer 4 must survive
+        let net = build_merged(&cfg, &ps, &[1, 2, 3, 4, 5], &[1, 2, 3, 5]).unwrap();
+        assert_eq!(net.depth(), 6);
+        let l4 = &net.layers[3];
+        assert_eq!(l4.add_from_seg, Some(0)); // source = segment ending at 1
+        // depthwise layer kept grouped
+        assert_eq!(net.layers[2].groups, 24);
+        assert_eq!(net.params[4].shape, vec![24, 1, 3, 3]);
+    }
+
+    #[test]
+    fn plan_json_roundtrips() {
+        let cfg = tiny_config();
+        let j = plan_json("p0", "tiny", &cfg, &[1, 4, 5], &[4]).unwrap();
+        let s = j.to_string();
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(v.get("arch").unwrap().str().unwrap(), "tiny");
+        assert_eq!(v.get("merged").unwrap().get("layers").unwrap().arr().unwrap().len(), 4);
+        assert_eq!(
+            v.get("pad_plan").unwrap().get("2").unwrap().usize().unwrap(),
+            1
+        );
+        // params: 4 layers * 2 + fc pair
+        assert_eq!(v.get("merged").unwrap().get("params").unwrap().arr().unwrap().len(), 10);
+    }
+
+    #[test]
+    fn merged_block_geometry_consistency() {
+        // merged kernel from compose must match block geometry for every
+        // multi-layer block in the tiny config
+        let cfg = tiny_config();
+        let ps = rand_params(&cfg, 5);
+        for blk in &cfg.blocks {
+            if blk.is_singleton() {
+                continue;
+            }
+            let (w, b, g) = merge_segment(&cfg, &ps, blk.i, blk.j).unwrap();
+            assert_eq!(w.shape, vec![g.c_out, g.c_in, g.k, g.k]);
+            assert_eq!(b.len(), g.c_out);
+        }
+    }
+}

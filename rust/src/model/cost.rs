@@ -1,0 +1,131 @@
+//! FLOPs / parameter / peak-run-time-memory counters (paper Table 10).
+//!
+//! Conventions match the paper: FLOPs are multiply-accumulates x2 at
+//! test time AFTER BN fusion (BN folds into the conv, so it contributes
+//! nothing); run-time memory is the inference peak: the largest
+//! (input + output + weights) working set over the layer sequence plus
+//! any live residual taps, times batch size.
+
+use crate::model::spec::{Layer, MergedBlock, NetworkSpec};
+
+/// FLOPs of one conv layer at test time (BN fused, bias included).
+pub fn conv_flops(c_in: usize, c_out: usize, k: usize, groups: usize, h_out: usize, w_out: usize) -> u64 {
+    let macs = (h_out * w_out * c_out * (c_in / groups) * k * k) as u64;
+    2 * macs + (h_out * w_out * c_out) as u64 // +bias add
+}
+
+pub fn layer_flops(ly: &Layer) -> u64 {
+    conv_flops(ly.c_in, ly.c_out, ly.k, ly.groups, ly.h_out, ly.w_out)
+}
+
+pub fn block_flops(b: &MergedBlock) -> u64 {
+    conv_flops(b.c_in, b.c_out, b.k, b.groups, b.h_out, b.w_out)
+}
+
+pub fn layer_params(ly: &Layer) -> u64 {
+    (ly.c_out * (ly.c_in / ly.groups) * ly.k * ly.k + ly.c_out) as u64
+}
+
+pub fn block_params(b: &MergedBlock) -> u64 {
+    (b.c_out * (b.c_in / b.groups) * b.k * b.k + b.c_out) as u64
+}
+
+/// Network-level summary for a layer sequence (vanilla network).
+pub struct CostSummary {
+    pub flops: u64,
+    pub params: u64,
+    /// peak activation working set in f32 elements (batch size 1)
+    pub peak_act_elems: u64,
+}
+
+pub fn network_cost(spec: &NetworkSpec) -> CostSummary {
+    let taps: Vec<usize> = spec.taps();
+    let mut flops = 0u64;
+    let mut params = 0u64;
+    let mut peak = (spec.input_ch * spec.input_hw * spec.input_hw) as u64;
+    for ly in &spec.layers {
+        flops += layer_flops(ly);
+        params += layer_params(ly);
+        let inp = (ly.c_in * ly.h_in * ly.w_in) as u64;
+        let out = (ly.c_out * ly.h_out * ly.w_out) as u64;
+        // live residual taps spanning this layer
+        let live: u64 = taps
+            .iter()
+            .filter(|&&m| {
+                m < ly.idx
+                    && spec.layers.iter().any(|l2| {
+                        l2.add_from == Some(m) && l2.idx >= ly.idx
+                    })
+            })
+            .map(|&m| {
+                if m == 0 {
+                    (spec.input_ch * spec.input_hw * spec.input_hw) as u64
+                } else {
+                    let src = spec.layer(m);
+                    (src.c_out * src.h_out * src.w_out) as u64
+                }
+            })
+            .sum();
+        peak = peak.max(inp + out + live);
+    }
+    CostSummary { flops, params, peak_act_elems: peak }
+}
+
+/// Same summary for a merged network (sequence of merged blocks).
+pub fn merged_cost(blocks: &[MergedBlock]) -> CostSummary {
+    let mut flops = 0u64;
+    let mut params = 0u64;
+    let mut peak = 0u64;
+    for b in blocks {
+        flops += block_flops(b);
+        params += block_params(b);
+        let inp = (b.c_in * b.h_in * b.w_in) as u64;
+        let out = (b.c_out * b.h_out * b.w_out) as u64;
+        peak = peak.max(inp + out);
+    }
+    CostSummary { flops, params, peak_act_elems: peak }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::testutil::tiny_config;
+
+    #[test]
+    fn conv_flops_formula() {
+        // 1x1 conv, 4->8, 10x10 out: 2*100*8*4 + 100*8 MACs
+        assert_eq!(conv_flops(4, 8, 1, 1, 10, 10), 2 * 100 * 8 * 4 + 800);
+        // depthwise 3x3 C=4: c_in/groups = 1
+        assert_eq!(conv_flops(4, 4, 3, 4, 5, 5), 2 * (25 * 4 * 9) as u64 + 100);
+    }
+
+    #[test]
+    fn network_cost_positive_and_consistent() {
+        let cfg = tiny_config();
+        let c = network_cost(&cfg.spec);
+        assert!(c.flops > 0 && c.params > 0 && c.peak_act_elems > 0);
+        // summing per-layer equals total
+        let manual: u64 = cfg.spec.layers.iter().map(layer_flops).sum();
+        assert_eq!(c.flops, manual);
+    }
+
+    #[test]
+    fn merging_reduces_depth_but_may_add_flops() {
+        let cfg = tiny_config();
+        // merged IRB body (1,4]: dense 3x3 8->8
+        let merged = cfg.block(1, 4).unwrap();
+        let body_flops: u64 = (2..=4).map(|l| layer_flops(cfg.spec.layer(l))).sum();
+        let m = block_flops(merged);
+        // the paper's point: FLOPs can go either way, latency is what counts
+        assert!(m > 0 && body_flops > 0);
+    }
+
+    #[test]
+    fn residual_tap_counts_toward_peak_memory() {
+        let cfg = tiny_config();
+        let c = network_cost(&cfg.spec);
+        // peak must cover layer 3 (24ch in+out at 12x12) + live tap (8ch)
+        let expect = (24 * 144 + 24 * 144 + 8 * 144) as u64;
+        assert!(c.peak_act_elems >= expect);
+    }
+}

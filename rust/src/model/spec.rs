@@ -1,0 +1,333 @@
+//! Architecture IR — parsed from `artifacts/archs/<name>.json`, which
+//! `python/compile/specs.py` (the single source of truth for structure
+//! and search-space legality) emits at build time.  Layer indices are
+//! 1-based following the paper; a segment (i, j] means layers i+1..j.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+pub const ACT_RELU6: &str = "relu6";
+pub const ACT_ID: &str = "id";
+
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub idx: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub groups: usize,
+    pub act: String,
+    pub add_from: Option<usize>,
+    pub pool_after: bool,
+    pub irb: Option<usize>,
+    pub h_in: usize,
+    pub w_in: usize,
+    pub h_out: usize,
+    pub w_out: usize,
+}
+
+impl Layer {
+    fn from_json(v: &Json) -> Result<Layer> {
+        Ok(Layer {
+            idx: v.get("idx")?.usize()?,
+            c_in: v.get("c_in")?.usize()?,
+            c_out: v.get("c_out")?.usize()?,
+            k: v.get("k")?.usize()?,
+            stride: v.get("stride")?.usize()?,
+            pad: v.get("pad")?.usize()?,
+            groups: v.get("groups")?.usize()?,
+            act: v.get("act")?.str()?.to_string(),
+            add_from: match v.opt("add_from") {
+                Some(x) => Some(x.usize()?),
+                None => None,
+            },
+            pool_after: v.get("pool_after")?.bool()?,
+            irb: match v.opt("irb") {
+                Some(x) => Some(x.usize()?),
+                None => None,
+            },
+            h_in: v.get("h_in")?.usize()?,
+            w_in: v.get("w_in")?.usize()?,
+            h_out: v.get("h_out")?.usize()?,
+            w_out: v.get("w_out")?.usize()?,
+        })
+    }
+
+    pub fn is_depthwise(&self) -> bool {
+        self.groups > 1 && self.groups == self.c_in && self.c_in == self.c_out
+    }
+}
+
+/// Merged-conv geometry of a legal segment (i, j] (python-enumerated).
+#[derive(Debug, Clone)]
+pub struct MergedBlock {
+    pub i: usize,
+    pub j: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub groups: usize,
+    pub h_in: usize,
+    pub w_in: usize,
+    pub h_out: usize,
+    pub w_out: usize,
+    pub skip_fuse: bool,
+    pub pool_after: bool,
+    pub add_from: Option<usize>,
+}
+
+impl MergedBlock {
+    fn from_json(v: &Json) -> Result<MergedBlock> {
+        Ok(MergedBlock {
+            i: v.get("i")?.usize()?,
+            j: v.get("j")?.usize()?,
+            c_in: v.get("c_in")?.usize()?,
+            c_out: v.get("c_out")?.usize()?,
+            k: v.get("k")?.usize()?,
+            stride: v.get("stride")?.usize()?,
+            pad: v.get("pad")?.usize()?,
+            groups: v.get("groups")?.usize()?,
+            h_in: v.get("h_in")?.usize()?,
+            w_in: v.get("w_in")?.usize()?,
+            h_out: v.get("h_out")?.usize()?,
+            w_out: v.get("w_out")?.usize()?,
+            skip_fuse: v.get("skip_fuse")?.bool()?,
+            pool_after: v.get("pool_after")?.bool()?,
+            add_from: match v.opt("add_from") {
+                Some(x) => Some(x.usize()?),
+                None => None,
+            },
+        })
+    }
+
+    pub fn key(&self) -> (usize, usize) {
+        (self.i, self.j)
+    }
+
+    pub fn is_singleton(&self) -> bool {
+        self.j == self.i + 1
+    }
+}
+
+/// One importance probe I[i, j, a, b] (Appendix B.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Probe {
+    pub i: usize,
+    pub j: usize,
+    pub a: u8,
+    pub b: u8,
+}
+
+#[derive(Debug, Clone)]
+pub struct NetworkSpec {
+    pub name: String,
+    pub input_ch: usize,
+    pub input_hw: usize,
+    pub num_classes: usize,
+    pub layers: Vec<Layer>,
+}
+
+impl NetworkSpec {
+    pub fn l(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// 1-based accessor (paper indexing).
+    pub fn layer(&self, l: usize) -> &Layer {
+        &self.layers[l - 1]
+    }
+
+    fn from_json(v: &Json) -> Result<NetworkSpec> {
+        let layers = v
+            .get("layers")?
+            .arr()?
+            .iter()
+            .map(Layer::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        for (n, ly) in layers.iter().enumerate() {
+            if ly.idx != n + 1 {
+                bail!("layer index mismatch at {}", n);
+            }
+        }
+        Ok(NetworkSpec {
+            name: v.get("name")?.str()?.to_string(),
+            input_ch: v.get("input_ch")?.usize()?,
+            input_hw: v.get("input_hw")?.usize()?,
+            num_classes: v.get("num_classes")?.usize()?,
+            layers,
+        })
+    }
+
+    /// The vanilla activation mask: 1 at relu6 positions, 0 at id.
+    pub fn default_mask(&self) -> Vec<f32> {
+        self.layers
+            .iter()
+            .map(|ly| if ly.act == ACT_RELU6 { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    /// Residual sources (original layer indices; 0 = network input).
+    pub fn taps(&self) -> Vec<usize> {
+        let mut t: Vec<usize> =
+            self.layers.iter().filter_map(|ly| ly.add_from).collect();
+        t.sort_unstable();
+        t.dedup();
+        t
+    }
+}
+
+/// Full architecture config: spec + python-enumerated search space.
+#[derive(Debug, Clone)]
+pub struct ArchConfig {
+    pub spec: NetworkSpec,
+    pub blocks: Vec<MergedBlock>,
+    pub block_index: BTreeMap<(usize, usize), usize>,
+    pub probes: Vec<Probe>,
+}
+
+impl ArchConfig {
+    pub fn from_json(v: &Json) -> Result<ArchConfig> {
+        let spec = NetworkSpec::from_json(v.get("spec")?)?;
+        let blocks = v
+            .get("blocks")?
+            .arr()?
+            .iter()
+            .map(MergedBlock::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mut block_index = BTreeMap::new();
+        for (n, b) in blocks.iter().enumerate() {
+            if b.j <= b.i || b.j > spec.l() {
+                bail!("bad block ({}, {}]", b.i, b.j);
+            }
+            if block_index.insert(b.key(), n).is_some() {
+                bail!("duplicate block ({}, {}]", b.i, b.j);
+            }
+        }
+        let probes = v
+            .get("probes")?
+            .arr()?
+            .iter()
+            .map(|p| {
+                Ok(Probe {
+                    i: p.get("i")?.usize()?,
+                    j: p.get("j")?.usize()?,
+                    a: p.get("a")?.usize()? as u8,
+                    b: p.get("b")?.usize()? as u8,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        for p in &probes {
+            if !block_index.contains_key(&(p.i, p.j)) {
+                bail!("probe over unknown block ({}, {}]", p.i, p.j);
+            }
+        }
+        Ok(ArchConfig { spec, blocks, block_index, probes })
+    }
+
+    pub fn load(path: &Path) -> Result<ArchConfig> {
+        let v = Json::from_file(path)?;
+        ArchConfig::from_json(&v)
+            .with_context(|| format!("arch config {}", path.display()))
+    }
+
+    pub fn block(&self, i: usize, j: usize) -> Option<&MergedBlock> {
+        self.block_index.get(&(i, j)).map(|&n| &self.blocks[n])
+    }
+
+    /// Is (i, j] a legal merge segment?
+    pub fn mergeable(&self, i: usize, j: usize) -> bool {
+        self.block_index.contains_key(&(i, j))
+    }
+}
+
+/// Hand-built fixtures usable from unit tests, benches, and examples.
+pub mod testutil {
+    use super::*;
+
+    /// A hand-built 6-layer mini-IRB net mirroring python's tiny_spec
+    /// fixture — used by DP/merge unit tests without artifacts on disk.
+    pub fn tiny_config() -> ArchConfig {
+        let src = r#"{
+          "spec": {"name": "tiny", "input_ch": 3, "input_hw": 12, "num_classes": 7,
+            "layers": [
+              {"idx":1,"c_in":3,"c_out":8,"k":3,"stride":1,"pad":1,"groups":1,"act":"relu6","add_from":null,"pool_after":false,"irb":0,"h_in":12,"w_in":12,"h_out":12,"w_out":12},
+              {"idx":2,"c_in":8,"c_out":24,"k":1,"stride":1,"pad":0,"groups":1,"act":"relu6","add_from":null,"pool_after":false,"irb":1,"h_in":12,"w_in":12,"h_out":12,"w_out":12},
+              {"idx":3,"c_in":24,"c_out":24,"k":3,"stride":1,"pad":1,"groups":24,"act":"relu6","add_from":null,"pool_after":false,"irb":1,"h_in":12,"w_in":12,"h_out":12,"w_out":12},
+              {"idx":4,"c_in":24,"c_out":8,"k":1,"stride":1,"pad":0,"groups":1,"act":"id","add_from":1,"pool_after":false,"irb":1,"h_in":12,"w_in":12,"h_out":12,"w_out":12},
+              {"idx":5,"c_in":8,"c_out":16,"k":1,"stride":1,"pad":0,"groups":1,"act":"relu6","add_from":null,"pool_after":false,"irb":2,"h_in":12,"w_in":12,"h_out":12,"w_out":12},
+              {"idx":6,"c_in":16,"c_out":16,"k":3,"stride":2,"pad":1,"groups":1,"act":"relu6","add_from":null,"pool_after":false,"irb":2,"h_in":12,"w_in":12,"h_out":6,"w_out":6}
+            ]},
+          "blocks": [
+            {"i":0,"j":1,"c_in":3,"c_out":8,"k":3,"stride":1,"pad":1,"groups":1,"h_in":12,"w_in":12,"h_out":12,"w_out":12,"skip_fuse":false,"pool_after":false,"add_from":null},
+            {"i":1,"j":2,"c_in":8,"c_out":24,"k":1,"stride":1,"pad":0,"groups":1,"h_in":12,"w_in":12,"h_out":12,"w_out":12,"skip_fuse":false,"pool_after":false,"add_from":null},
+            {"i":2,"j":3,"c_in":24,"c_out":24,"k":3,"stride":1,"pad":1,"groups":24,"h_in":12,"w_in":12,"h_out":12,"w_out":12,"skip_fuse":false,"pool_after":false,"add_from":null},
+            {"i":3,"j":4,"c_in":24,"c_out":8,"k":1,"stride":1,"pad":0,"groups":1,"h_in":12,"w_in":12,"h_out":12,"w_out":12,"skip_fuse":false,"pool_after":false,"add_from":1},
+            {"i":4,"j":5,"c_in":8,"c_out":16,"k":1,"stride":1,"pad":0,"groups":1,"h_in":12,"w_in":12,"h_out":12,"w_out":12,"skip_fuse":false,"pool_after":false,"add_from":null},
+            {"i":5,"j":6,"c_in":16,"c_out":16,"k":3,"stride":2,"pad":1,"groups":1,"h_in":12,"w_in":12,"h_out":6,"w_out":6,"skip_fuse":false,"pool_after":false,"add_from":null},
+            {"i":1,"j":4,"c_in":8,"c_out":8,"k":3,"stride":1,"pad":1,"groups":1,"h_in":12,"w_in":12,"h_out":12,"w_out":12,"skip_fuse":true,"pool_after":false,"add_from":null},
+            {"i":1,"j":3,"c_in":8,"c_out":24,"k":3,"stride":1,"pad":1,"groups":1,"h_in":12,"w_in":12,"h_out":12,"w_out":12,"skip_fuse":false,"pool_after":false,"add_from":null},
+            {"i":2,"j":4,"c_in":24,"c_out":8,"k":3,"stride":1,"pad":1,"groups":1,"h_in":12,"w_in":12,"h_out":12,"w_out":12,"skip_fuse":false,"pool_after":false,"add_from":null},
+            {"i":4,"j":6,"c_in":8,"c_out":16,"k":3,"stride":2,"pad":1,"groups":1,"h_in":12,"w_in":12,"h_out":6,"w_out":6,"skip_fuse":false,"pool_after":false,"add_from":null}
+          ],
+          "probes": [
+            {"i":0,"j":1,"a":1,"b":1},
+            {"i":1,"j":2,"a":1,"b":1},
+            {"i":1,"j":4,"a":1,"b":0},
+            {"i":1,"j":4,"a":1,"b":1},
+            {"i":1,"j":3,"a":1,"b":1},
+            {"i":2,"j":4,"a":1,"b":0},
+            {"i":2,"j":4,"a":1,"b":1},
+            {"i":4,"j":6,"a":1,"b":1}
+          ]
+        }"#;
+        ArchConfig::from_json(&Json::parse(src).unwrap()).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::tiny_config;
+    use super::*;
+
+    #[test]
+    fn parses_tiny_config() {
+        let cfg = tiny_config();
+        assert_eq!(cfg.spec.l(), 6);
+        assert_eq!(cfg.spec.layer(3).groups, 24);
+        assert!(cfg.spec.layer(3).is_depthwise());
+        assert!(!cfg.spec.layer(1).is_depthwise());
+        assert_eq!(cfg.spec.taps(), vec![1]);
+        assert_eq!(cfg.blocks.len(), 10);
+        assert!(cfg.mergeable(1, 4));
+        assert!(!cfg.mergeable(2, 5));
+        let b = cfg.block(1, 4).unwrap();
+        assert!(b.skip_fuse);
+        assert_eq!((b.k, b.stride, b.pad), (3, 1, 1));
+    }
+
+    #[test]
+    fn default_mask_matches_acts() {
+        let cfg = tiny_config();
+        assert_eq!(cfg.spec.default_mask(), vec![1.0, 1.0, 1.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn rejects_probe_over_unknown_block() {
+        let src = r#"{
+          "spec": {"name":"t","input_ch":1,"input_hw":4,"num_classes":2,"layers":[
+            {"idx":1,"c_in":1,"c_out":1,"k":1,"stride":1,"pad":0,"groups":1,"act":"relu6","add_from":null,"pool_after":false,"irb":null,"h_in":4,"w_in":4,"h_out":4,"w_out":4}]},
+          "blocks": [],
+          "probes": [{"i":0,"j":1,"a":1,"b":1}]
+        }"#;
+        let v = Json::parse(src).unwrap();
+        assert!(ArchConfig::from_json(&v).is_err());
+    }
+}

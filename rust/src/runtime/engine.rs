@@ -1,0 +1,189 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once, cache,
+//! execute, time.  This is the ONLY place python-built computation
+//! enters the rust process — everything downstream (trainer, importance
+//! stage, latency measurement, serving) goes through `Engine`.
+//!
+//! Interchange is HLO text (not serialized proto): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactDef, Manifest};
+use crate::tensor::Tensor;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>>,
+    /// compile + execute counters for the §Perf log
+    pub stats: RefCell<EngineStats>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub exec_ns: u64,
+}
+
+impl Engine {
+    pub fn new(artifacts_root: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(artifacts_root)?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) the executable for an artifact.
+    pub fn load(&self, def: &ArtifactDef) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let path = self.manifest.path_of(def);
+        if let Some(exe) = self.cache.borrow().get(&path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?,
+        );
+        self.stats.borrow_mut().compiles += 1;
+        self.cache.borrow_mut().insert(path, exe.clone());
+        Ok(exe)
+    }
+
+    /// Drop a cached executable (frees compiled code for one-shot probes).
+    pub fn evict(&self, def: &ArtifactDef) {
+        self.cache.borrow_mut().remove(&self.manifest.path_of(def));
+    }
+
+    /// Execute an artifact on host tensors; returns decomposed outputs.
+    /// Inputs are validated against the manifest calling convention.
+    pub fn exec(&self, def: &ArtifactDef, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let lits = self.to_literals(def, inputs)?;
+        let out = self.exec_literals(def, &lits)?;
+        out.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Validate + convert host tensors to literals.
+    pub fn to_literals(&self, def: &ArtifactDef, inputs: &[&Tensor]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != def.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                def.name,
+                def.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (n, (t, io)) in inputs.iter().zip(&def.inputs).enumerate() {
+            if io.dtype == "float32" && t.shape != io.shape {
+                bail!(
+                    "{}: input #{n} shape {:?} != manifest {:?}",
+                    def.name,
+                    t.shape,
+                    io.shape
+                );
+            }
+        }
+        inputs
+            .iter()
+            .zip(&def.inputs)
+            .map(|(t, io)| {
+                let lit = t.to_literal()?;
+                if io.dtype == "int32" {
+                    Ok(lit.convert(xla::PrimitiveType::S32)?)
+                } else {
+                    Ok(lit)
+                }
+            })
+            .collect()
+    }
+
+    /// Execute with pre-built literals (hot path for the trainer).
+    pub fn exec_literals(
+        &self,
+        def: &ArtifactDef,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.exec_borrowed(def, &refs)
+    }
+
+    /// Execute with borrowed literals — avoids cloning the parameter
+    /// set every training step.
+    pub fn exec_borrowed(
+        &self,
+        def: &ArtifactDef,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(def)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", def.name))?;
+        let mut stats = self.stats.borrow_mut();
+        stats.executions += 1;
+        stats.exec_ns += t0.elapsed().as_nanos() as u64;
+        drop(stats);
+        // aot.py lowers with return_tuple=True: a single tuple output
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        if parts.len() != def.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                def.name,
+                def.outputs.len(),
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Median wall-clock of `def` over `reps` runs after `warmup` runs.
+    pub fn time_ms(
+        &self,
+        def: &ArtifactDef,
+        inputs: &[&Tensor],
+        warmup: usize,
+        reps: usize,
+    ) -> Result<f64> {
+        let lits = self.to_literals(def, inputs)?;
+        let exe = self.load(def)?;
+        for _ in 0..warmup {
+            let _ = exe.execute::<xla::Literal>(&lits)?;
+        }
+        let mut times: Vec<f64> = Vec::with_capacity(reps);
+        for _ in 0..reps.max(1) {
+            let t0 = Instant::now();
+            let out = exe.execute::<xla::Literal>(&lits)?;
+            // force materialization so async dispatch can't hide cost
+            let _ = out[0][0].to_literal_sync()?;
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ok(times[times.len() / 2])
+    }
+
+    /// Zero-filled inputs matching an artifact's convention (probe runs).
+    pub fn zero_inputs(&self, def: &ArtifactDef) -> Vec<Tensor> {
+        def.inputs.iter().map(|io| Tensor::zeros(&io.shape)).collect()
+    }
+}

@@ -1,0 +1,240 @@
+//! artifacts/manifest.json schema — the calling conventions of every
+//! AOT artifact `python/compile/aot.py` emitted.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoDef {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactDef {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoDef>,
+    pub outputs: Vec<IoDef>,
+}
+
+fn io_defs(v: &Json) -> Result<Vec<IoDef>> {
+    v.arr()?
+        .iter()
+        .map(|e| {
+            Ok(IoDef {
+                shape: e
+                    .get("shape")?
+                    .arr()?
+                    .iter()
+                    .map(|d| d.usize())
+                    .collect::<Result<Vec<_>>>()?,
+                dtype: e.get("dtype")?.str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+fn artifact(name: &str, v: &Json) -> Result<ArtifactDef> {
+    Ok(ArtifactDef {
+        name: name.to_string(),
+        file: PathBuf::from(v.get("file")?.str()?),
+        inputs: io_defs(v.get("inputs")?)?,
+        outputs: io_defs(v.get("outputs")?)?,
+    })
+}
+
+#[derive(Debug, Clone)]
+pub struct NamedShape {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArchEntry {
+    pub name: String,
+    pub config: PathBuf,
+    pub l: usize,
+    pub num_classes: usize,
+    pub input: Vec<usize>,
+    pub params: Vec<NamedShape>,
+    pub state: Vec<NamedShape>,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub latency_batch: usize,
+    pub artifacts: BTreeMap<String, ArtifactDef>,
+    /// key "i_j" -> fused / eager block probes
+    pub blocks_fused: BTreeMap<(usize, usize), ArtifactDef>,
+    pub blocks_eager: BTreeMap<(usize, usize), ArtifactDef>,
+    /// key (c, h, w)
+    pub bn_probes: BTreeMap<(usize, usize, usize), ArtifactDef>,
+    pub act_probes: BTreeMap<(usize, usize, usize), ArtifactDef>,
+}
+
+#[derive(Debug, Clone)]
+pub struct PlanEntry {
+    pub name: String,
+    pub arch: String,
+    pub artifacts: BTreeMap<String, ArtifactDef>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub archs: BTreeMap<String, ArchEntry>,
+    pub plans: BTreeMap<String, PlanEntry>,
+    pub fixtures: BTreeMap<String, PathBuf>,
+}
+
+fn named_shapes(v: &Json) -> Result<Vec<NamedShape>> {
+    v.arr()?
+        .iter()
+        .map(|e| {
+            Ok(NamedShape {
+                name: e.get("name")?.str()?.to_string(),
+                shape: e
+                    .get("shape")?
+                    .arr()?
+                    .iter()
+                    .map(|d| d.usize())
+                    .collect::<Result<Vec<_>>>()?,
+            })
+        })
+        .collect()
+}
+
+fn parse_key_ij(k: &str) -> Result<(usize, usize)> {
+    let (a, b) = k.split_once('_').ok_or_else(|| anyhow!("bad block key {k:?}"))?;
+    Ok((a.parse()?, b.parse()?))
+}
+
+fn parse_key_chw(k: &str) -> Result<(usize, usize, usize)> {
+    let parts: Vec<&str> = k.split('_').collect();
+    if parts.len() != 3 {
+        anyhow::bail!("bad shape key {k:?}");
+    }
+    Ok((parts[0].parse()?, parts[1].parse()?, parts[2].parse()?))
+}
+
+impl Manifest {
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let v = Json::from_file(&root.join("manifest.json"))
+            .context("loading artifact manifest (run `make artifacts` first)")?;
+        let mut archs = BTreeMap::new();
+        for (name, e) in v.get("archs")?.obj()? {
+            let mut artifacts = BTreeMap::new();
+            for (an, av) in e.get("artifacts")?.obj()? {
+                artifacts.insert(an.clone(), artifact(an, av)?);
+            }
+            let mut blocks_fused = BTreeMap::new();
+            for (k, av) in e.get("blocks_fused")?.obj()? {
+                blocks_fused.insert(parse_key_ij(k)?, artifact(k, av)?);
+            }
+            let mut blocks_eager = BTreeMap::new();
+            for (k, av) in e.get("blocks_eager")?.obj()? {
+                blocks_eager.insert(parse_key_ij(k)?, artifact(k, av)?);
+            }
+            let mut bn_probes = BTreeMap::new();
+            for (k, av) in e.get("bn_probes")?.obj()? {
+                bn_probes.insert(parse_key_chw(k)?, artifact(k, av)?);
+            }
+            let mut act_probes = BTreeMap::new();
+            for (k, av) in e.get("act_probes")?.obj()? {
+                act_probes.insert(parse_key_chw(k)?, artifact(k, av)?);
+            }
+            archs.insert(
+                name.clone(),
+                ArchEntry {
+                    name: name.clone(),
+                    config: PathBuf::from(e.get("config")?.str()?),
+                    l: e.get("L")?.usize()?,
+                    num_classes: e.get("num_classes")?.usize()?,
+                    input: e
+                        .get("input")?
+                        .arr()?
+                        .iter()
+                        .map(|d| d.usize())
+                        .collect::<Result<Vec<_>>>()?,
+                    params: named_shapes(e.get("params")?)?,
+                    state: named_shapes(e.get("state")?)?,
+                    train_batch: e.get("train_batch")?.usize()?,
+                    eval_batch: e.get("eval_batch")?.usize()?,
+                    latency_batch: e.get("latency_batch")?.usize()?,
+                    artifacts,
+                    blocks_fused,
+                    blocks_eager,
+                    bn_probes,
+                    act_probes,
+                },
+            );
+        }
+        let mut plans = BTreeMap::new();
+        for (name, e) in v.get("plans")?.obj()? {
+            let mut artifacts = BTreeMap::new();
+            for (an, av) in e.get("artifacts")?.obj()? {
+                artifacts.insert(an.clone(), artifact(an, av)?);
+            }
+            plans.insert(
+                name.clone(),
+                PlanEntry {
+                    name: name.clone(),
+                    arch: e.get("arch")?.str()?.to_string(),
+                    artifacts,
+                },
+            );
+        }
+        let mut fixtures = BTreeMap::new();
+        if let Some(fx) = v.opt("fixtures") {
+            for (k, p) in fx.obj()? {
+                fixtures.insert(k.clone(), PathBuf::from(p.str()?));
+            }
+        }
+        Ok(Manifest { root: root.to_path_buf(), archs, plans, fixtures })
+    }
+
+    pub fn arch(&self, name: &str) -> Result<&ArchEntry> {
+        self.archs
+            .get(name)
+            .ok_or_else(|| anyhow!("arch {name:?} not in manifest (have: {:?})",
+                self.archs.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn plan(&self, name: &str) -> Result<&PlanEntry> {
+        self.plans.get(name).ok_or_else(|| {
+            anyhow!("plan {name:?} not in manifest — run `repro plan` then `make plans`")
+        })
+    }
+
+    pub fn path_of(&self, a: &ArtifactDef) -> PathBuf {
+        self.root.join(&a.file)
+    }
+}
+
+impl ArchEntry {
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactDef> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} missing for arch {}", self.name))
+    }
+
+    /// names of trainable params in calling order
+    pub fn param_names(&self) -> Vec<String> {
+        self.params.iter().map(|p| p.name.clone()).collect()
+    }
+
+    pub fn state_names(&self) -> Vec<String> {
+        self.state.iter().map(|p| p.name.clone()).collect()
+    }
+}
+
+impl PlanEntry {
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactDef> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} missing for plan {}", self.name))
+    }
+}

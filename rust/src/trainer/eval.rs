@@ -1,0 +1,113 @@
+//! Accuracy evaluation over the validation split, via the AOT eval
+//! artifacts (masked network, merged network, or plan-reordered network).
+
+use anyhow::{bail, Result};
+
+use crate::data::batcher::Batcher;
+use crate::runtime::engine::Engine;
+use crate::runtime::manifest::ArtifactDef;
+use crate::tensor::Tensor;
+use crate::trainer::sgd::TrainState;
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub acc: f64,
+    pub avg_loss: f64,
+    pub n: usize,
+}
+
+/// Evaluate the masked network: eval artifact signature
+/// (params..., state..., x, y, mask) -> (loss_sum, ncorrect).
+pub fn eval_masked(
+    engine: &Engine,
+    eval_def: &ArtifactDef,
+    ts: &TrainState,
+    mask: &[f32],
+    batcher: &Batcher,
+    eval_batch: usize,
+) -> Result<EvalResult> {
+    eval_masked_subset(engine, eval_def, ts, mask, batcher, eval_batch, 0)
+}
+
+/// Same, over only the first `max_batches` val batches (0 = all) — the
+/// importance stage uses a fixed subset for cheap, comparable probes.
+pub fn eval_masked_subset(
+    engine: &Engine,
+    eval_def: &ArtifactDef,
+    ts: &TrainState,
+    mask: &[f32],
+    batcher: &Batcher,
+    eval_batch: usize,
+    max_batches: usize,
+) -> Result<EvalResult> {
+    let mask_lit = Tensor::from_vec(&[mask.len()], mask.to_vec())?.to_literal()?;
+    let mut correct = 0.0f64;
+    let mut loss_sum = 0.0f64;
+    let mut total = 0usize;
+    let nbatches = if max_batches == 0 {
+        batcher.val_batches(eval_batch)
+    } else {
+        batcher.val_batches(eval_batch).min(max_batches)
+    };
+    for nb in 0..nbatches {
+        let (x, y, valid) = batcher.val_batch(nb, eval_batch);
+        let x_lit = x.to_literal()?;
+        let y_lit = y.to_literal()?.convert(xla::PrimitiveType::S32)?;
+        let mut inputs: Vec<&xla::Literal> = Vec::new();
+        inputs.extend(ts.params.iter());
+        inputs.extend(ts.state.iter());
+        inputs.push(&x_lit);
+        inputs.push(&y_lit);
+        inputs.push(&mask_lit);
+        if inputs.len() != eval_def.inputs.len() {
+            bail!(
+                "{}: assembled {} inputs, artifact wants {}",
+                eval_def.name,
+                inputs.len(),
+                eval_def.inputs.len()
+            );
+        }
+        let out = engine.exec_borrowed(eval_def, &inputs)?;
+        loss_sum += out[0].to_vec::<f32>()?[0] as f64;
+        correct += out[1].to_vec::<f32>()?[0] as f64;
+        total += valid;
+    }
+    Ok(EvalResult { acc: correct / total.max(1) as f64, avg_loss: loss_sum / total.max(1) as f64, n: total })
+}
+
+/// Evaluate a merged network: artifact signature
+/// (mparams..., x, y) -> (loss_sum, ncorrect).
+pub fn eval_merged(
+    engine: &Engine,
+    eval_def: &ArtifactDef,
+    mparams: &[Tensor],
+    batcher: &Batcher,
+    eval_batch: usize,
+) -> Result<EvalResult> {
+    let mlits: Vec<xla::Literal> =
+        mparams.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+    let mut correct = 0.0f64;
+    let mut loss_sum = 0.0f64;
+    let mut total = 0usize;
+    for nb in 0..batcher.val_batches(eval_batch) {
+        let (x, y, valid) = batcher.val_batch(nb, eval_batch);
+        let x_lit = x.to_literal()?;
+        let y_lit = y.to_literal()?.convert(xla::PrimitiveType::S32)?;
+        let mut inputs: Vec<&xla::Literal> = mlits.iter().collect();
+        inputs.push(&x_lit);
+        inputs.push(&y_lit);
+        if inputs.len() != eval_def.inputs.len() {
+            bail!(
+                "{}: assembled {} inputs, artifact wants {}",
+                eval_def.name,
+                inputs.len(),
+                eval_def.inputs.len()
+            );
+        }
+        let out = engine.exec_borrowed(eval_def, &inputs)?;
+        loss_sum += out[0].to_vec::<f32>()?[0] as f64;
+        correct += out[1].to_vec::<f32>()?[0] as f64;
+        total += valid;
+    }
+    Ok(EvalResult { acc: correct / total.max(1) as f64, avg_loss: loss_sum / total.max(1) as f64, n: total })
+}

@@ -1,0 +1,175 @@
+//! Parameter store: named host tensors + a compact binary checkpoint
+//! format (substrate: no npz/safetensors offline).
+//!
+//! File format "RPR1": u32 count, then per entry:
+//!   u16 name_len, name bytes, u8 rank, u32 dims..., f32 data...
+//! little-endian throughout.  Deterministic ordering (BTreeMap) so
+//! checkpoints are byte-stable.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"RPR1";
+
+#[derive(Debug, Clone, Default)]
+pub struct ParamSet {
+    map: BTreeMap<String, Tensor>,
+}
+
+impl ParamSet {
+    pub fn new() -> ParamSet {
+        ParamSet::default()
+    }
+
+    pub fn insert(&mut self, name: String, t: Tensor) {
+        self.map.insert(name, t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map.get(name).ok_or_else(|| anyhow!("missing param {name:?}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        self.map.get_mut(name).ok_or_else(|| anyhow!("missing param {name:?}"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Tensor)> {
+        self.map.iter()
+    }
+
+    /// Gather tensors in the order of `names` (the artifact calling
+    /// convention from the manifest).
+    pub fn ordered(&self, names: &[String]) -> Result<Vec<&Tensor>> {
+        names.iter().map(|n| self.get(n)).collect()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.map.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.map {
+            let nb = name.as_bytes();
+            if nb.len() > u16::MAX as usize {
+                bail!("param name too long");
+            }
+            f.write_all(&(nb.len() as u16).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&[t.shape.len() as u8])?;
+            for &d in &t.shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            for &v in &t.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ParamSet> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not a RPR1 checkpoint", path.display());
+        }
+        let mut b4 = [0u8; 4];
+        f.read_exact(&mut b4)?;
+        let count = u32::from_le_bytes(b4) as usize;
+        let mut ps = ParamSet::new();
+        for _ in 0..count {
+            let mut b2 = [0u8; 2];
+            f.read_exact(&mut b2)?;
+            let nlen = u16::from_le_bytes(b2) as usize;
+            let mut nbuf = vec![0u8; nlen];
+            f.read_exact(&mut nbuf)?;
+            let name = String::from_utf8(nbuf)?;
+            let mut b1 = [0u8; 1];
+            f.read_exact(&mut b1)?;
+            let rank = b1[0] as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                f.read_exact(&mut b4)?;
+                shape.push(u32::from_le_bytes(b4) as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut data = vec![0f32; n];
+            let mut buf = vec![0u8; n * 4];
+            f.read_exact(&mut buf)?;
+            for (i, c) in buf.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            ps.insert(name, Tensor::from_vec(&shape, data)?);
+        }
+        Ok(ps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut ps = ParamSet::new();
+        ps.insert("w1".into(), Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap());
+        ps.insert("scalar".into(), Tensor::scalar(7.5));
+        ps.insert("b".into(), Tensor::from_vec(&[4], vec![0.1, -0.2, 0.3, -0.4]).unwrap());
+        let dir = std::env::temp_dir().join("repro_test_params");
+        let path = dir.join("ckpt.rpr");
+        ps.save(&path).unwrap();
+        let re = ParamSet::load(&path).unwrap();
+        assert_eq!(re.len(), 3);
+        assert_eq!(re.get("w1").unwrap(), ps.get("w1").unwrap());
+        assert_eq!(re.get("scalar").unwrap().data, vec![7.5]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ordered_access() {
+        let mut ps = ParamSet::new();
+        ps.insert("a".into(), Tensor::scalar(1.0));
+        ps.insert("b".into(), Tensor::scalar(2.0));
+        let names = vec!["b".to_string(), "a".to_string()];
+        let v = ps.ordered(&names).unwrap();
+        assert_eq!(v[0].data[0], 2.0);
+        assert!(ps.ordered(&["missing".to_string()]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("repro_test_params2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.rpr");
+        std::fs::write(&path, b"JUNKdata").unwrap();
+        assert!(ParamSet::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,250 @@
+//! Training driver: runs the AOT train-step artifact in a loop with a
+//! cosine learning-rate schedule, activation masks, and loss-curve
+//! logging.  Parameters/momenta/BN-state stay as XLA literals between
+//! steps; only the (x, y) batch crosses the host boundary each step.
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::batcher::Batcher;
+use crate::runtime::engine::Engine;
+use crate::runtime::manifest::{ArchEntry, ArtifactDef};
+use crate::tensor::Tensor;
+use crate::trainer::params::ParamSet;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub base_lr: f64,
+    pub warmup_steps: usize,
+    pub log_every: usize,
+    /// cosine floor as a fraction of base_lr
+    pub final_lr_frac: f64,
+}
+
+impl TrainConfig {
+    pub fn finetune(steps: usize, base_lr: f64) -> TrainConfig {
+        TrainConfig {
+            steps,
+            base_lr,
+            warmup_steps: (steps / 20).max(1),
+            log_every: (steps / 10).max(1),
+            final_lr_frac: 0.0,
+        }
+    }
+}
+
+pub fn cosine_lr(cfg: &TrainConfig, step: usize) -> f64 {
+    if step < cfg.warmup_steps {
+        return cfg.base_lr * (step + 1) as f64 / cfg.warmup_steps as f64;
+    }
+    let p = (step - cfg.warmup_steps) as f64
+        / (cfg.steps - cfg.warmup_steps).max(1) as f64;
+    let cos = 0.5 * (1.0 + (std::f64::consts::PI * p).cos());
+    cfg.base_lr * (cfg.final_lr_frac + (1.0 - cfg.final_lr_frac) * cos)
+}
+
+/// Mutable training state as XLA literals in artifact calling order.
+pub struct TrainState {
+    pub params: Vec<xla::Literal>,
+    pub moms: Vec<xla::Literal>,
+    pub state: Vec<xla::Literal>,
+}
+
+impl TrainState {
+    /// Initialize from the AOT init artifact (He init, seed-controlled).
+    pub fn init(engine: &Engine, arch: &ArchEntry, seed: i32) -> Result<TrainState> {
+        let init = arch.artifact("init")?;
+        let seed_t = Tensor::scalar(seed as f32);
+        let out = engine.exec(init, &[&seed_t])?;
+        let n = arch.params.len();
+        let m = arch.state.len();
+        if out.len() != n + m {
+            bail!("init artifact returned {} tensors, want {}", out.len(), n + m);
+        }
+        let params: Vec<xla::Literal> =
+            out[..n].iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let state: Vec<xla::Literal> =
+            out[n..].iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let moms = arch
+            .params
+            .iter()
+            .map(|p| Tensor::zeros(&p.shape).to_literal())
+            .collect::<Result<_>>()?;
+        Ok(TrainState { params, moms, state })
+    }
+
+    /// Load params+state from a checkpoint; fresh momenta.
+    pub fn from_checkpoint(arch: &ArchEntry, ps: &ParamSet) -> Result<TrainState> {
+        let params = arch
+            .params
+            .iter()
+            .map(|p| {
+                let t = ps.get(&p.name)?;
+                if t.shape != p.shape {
+                    bail!("checkpoint {} shape {:?} != manifest {:?}", p.name, t.shape, p.shape);
+                }
+                t.to_literal()
+            })
+            .collect::<Result<_>>()?;
+        let state = arch
+            .state
+            .iter()
+            .map(|p| ps.get(&p.name)?.to_literal())
+            .collect::<Result<_>>()?;
+        let moms = arch
+            .params
+            .iter()
+            .map(|p| Tensor::zeros(&p.shape).to_literal())
+            .collect::<Result<_>>()?;
+        Ok(TrainState { params, moms, state })
+    }
+
+    /// Snapshot params+state into a named ParamSet (for checkpoints and
+    /// for the merge engine).
+    pub fn to_param_set(&self, arch: &ArchEntry) -> Result<ParamSet> {
+        let mut ps = ParamSet::new();
+        for (def, lit) in arch.params.iter().zip(&self.params) {
+            ps.insert(def.name.clone(), Tensor::from_literal(lit)?);
+        }
+        for (def, lit) in arch.state.iter().zip(&self.state) {
+            ps.insert(def.name.clone(), Tensor::from_literal(lit)?);
+        }
+        Ok(ps)
+    }
+
+    /// Re-initialize one layer's trainables in place (importance stage,
+    /// size-one blocks, Appendix B.3).
+    pub fn reinit_layer(
+        &mut self,
+        arch: &ArchEntry,
+        layer: usize,
+        rng: &mut crate::util::rng::Rng,
+    ) -> Result<()> {
+        for (n, def) in arch.params.iter().enumerate() {
+            let is_w = def.name == format!("w{layer}");
+            let is_gamma = def.name == format!("gamma{layer}");
+            let is_beta = def.name == format!("beta{layer}");
+            if !(is_w || is_gamma || is_beta) {
+                continue;
+            }
+            let mut t = Tensor::zeros(&def.shape);
+            if is_w {
+                let fan_in: usize = def.shape[1..].iter().product();
+                let std = (2.0 / fan_in as f32).sqrt();
+                for v in t.data.iter_mut() {
+                    *v = rng.normal() * std;
+                }
+            } else if is_gamma {
+                t.data.fill(1.0);
+            }
+            self.params[n] = t.to_literal()?;
+        }
+        for (n, def) in arch.state.iter().enumerate() {
+            if def.name == format!("mean{layer}") {
+                self.state[n] = Tensor::zeros(&def.shape).to_literal()?;
+            } else if def.name == format!("var{layer}") {
+                let mut t = Tensor::zeros(&def.shape);
+                t.data.fill(1.0);
+                self.state[n] = t.to_literal()?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TrainLog {
+    /// (step, loss, lr)
+    pub curve: Vec<(usize, f64, f64)>,
+    pub final_loss: f64,
+    pub train_acc: f64,
+}
+
+/// Run `cfg.steps` SGD steps of `step_def` (the plain or KD train-step
+/// artifact).  For KD, `teacher` supplies frozen (params, state).
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub arch: ArchEntry,
+    pub mask: Vec<f32>,
+    pub verbose: bool,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, arch: &ArchEntry, mask: Vec<f32>) -> Trainer<'e> {
+        Trainer { engine, arch: arch.clone(), mask, verbose: false }
+    }
+
+    pub fn run(
+        &self,
+        step_def: &ArtifactDef,
+        ts: &mut TrainState,
+        batcher: &mut Batcher,
+        cfg: &TrainConfig,
+        teacher: Option<&TrainState>,
+    ) -> Result<TrainLog> {
+        let n = ts.params.len();
+        let m = ts.state.len();
+        let mask_t = Tensor::from_vec(&[self.mask.len()], self.mask.clone())?;
+        let mask_lit = mask_t.to_literal()?;
+        let mut log = TrainLog::default();
+        let mut correct_acc = 0.0f64;
+        let mut seen = 0usize;
+        for step in 0..cfg.steps {
+            let lr = cosine_lr(cfg, step);
+            let (x, y) = batcher.next_train();
+            let x_lit = x.to_literal()?;
+            let y_lit = y.to_literal()?.convert(xla::PrimitiveType::S32)?;
+            let lr_lit = Tensor::scalar(lr as f32).to_literal()?;
+            // assemble borrowed input list in calling order
+            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(2 * n + m + 4);
+            inputs.extend(ts.params.iter());
+            inputs.extend(ts.moms.iter());
+            inputs.extend(ts.state.iter());
+            if let Some(t) = teacher {
+                inputs.extend(t.params.iter());
+                inputs.extend(t.state.iter());
+            }
+            inputs.push(&x_lit);
+            inputs.push(&y_lit);
+            inputs.push(&mask_lit);
+            inputs.push(&lr_lit);
+            if inputs.len() != step_def.inputs.len() {
+                bail!(
+                    "{}: assembled {} inputs, artifact wants {} (teacher {})",
+                    step_def.name,
+                    inputs.len(),
+                    step_def.inputs.len(),
+                    teacher.is_some()
+                );
+            }
+            let out = self
+                .engine
+                .exec_borrowed(step_def, &inputs)
+                .with_context(|| format!("train step {step}"))?;
+            if out.len() != 2 * n + m + 2 {
+                bail!("train step returned {} outputs, want {}", out.len(), 2 * n + m + 2);
+            }
+            let mut it = out.into_iter();
+            ts.params = (0..n).map(|_| it.next().unwrap()).collect();
+            ts.moms = (0..n).map(|_| it.next().unwrap()).collect();
+            ts.state = (0..m).map(|_| it.next().unwrap()).collect();
+            let loss = it.next().unwrap().to_vec::<f32>()?[0] as f64;
+            let ncorr = it.next().unwrap().to_vec::<f32>()?[0] as f64;
+            correct_acc += ncorr;
+            seen += batcher.batch;
+            log.final_loss = loss;
+            if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+                log.curve.push((step, loss, lr));
+                if self.verbose {
+                    println!(
+                        "  step {step:>5}/{} loss {loss:.4} lr {lr:.5} acc(run) {:.3}",
+                        cfg.steps,
+                        correct_acc / seen.max(1) as f64
+                    );
+                }
+            }
+        }
+        log.train_acc = correct_acc / seen.max(1) as f64;
+        Ok(log)
+    }
+}

@@ -1,0 +1,142 @@
+//! Micro-benchmark harness (substrate: no criterion offline).
+//!
+//! `cargo bench` runs our `harness = false` bench binaries, which use
+//! this module: warmup, adaptive iteration count, median/p10/p90 over
+//! timed batches, and a one-line report compatible with the EXPERIMENTS
+//! log.  Deliberately criterion-shaped so benches read familiarly.
+
+use std::time::{Duration, Instant};
+
+pub struct Bencher {
+    pub name: String,
+    pub min_time: Duration,
+    pub warmup: Duration,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters: u64,
+}
+
+impl Stats {
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+
+    pub fn median_us(&self) -> f64 {
+        self.median_ns / 1e3
+    }
+}
+
+impl Bencher {
+    pub fn new(name: &str) -> Self {
+        Bencher {
+            name: name.to_string(),
+            min_time: Duration::from_millis(300),
+            warmup: Duration::from_millis(50),
+        }
+    }
+
+    pub fn quick(name: &str) -> Self {
+        Bencher {
+            name: name.to_string(),
+            min_time: Duration::from_millis(60),
+            warmup: Duration::from_millis(10),
+        }
+    }
+
+    /// Run `f` repeatedly; returns timing stats and prints one line.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Stats {
+        // warmup + calibrate single-shot cost
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed() < self.warmup || calib_iters == 0 {
+            f();
+            calib_iters += 1;
+            if calib_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = t0.elapsed().as_nanos() as f64 / calib_iters as f64;
+        // choose batch so each sample is ~1/20 of min_time, >=1 iter
+        let batch = ((self.min_time.as_nanos() as f64 / 20.0 / per_iter).ceil() as u64).max(1);
+        let mut samples: Vec<f64> = Vec::new();
+        let bench_start = Instant::now();
+        let mut total_iters = 0u64;
+        while bench_start.elapsed() < self.min_time || samples.len() < 5 {
+            let s = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(s.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+            if samples.len() > 10_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        let stats = Stats {
+            median_ns: q(0.5),
+            p10_ns: q(0.1),
+            p90_ns: q(0.9),
+            iters: total_iters,
+        };
+        println!(
+            "bench {:<44} median {:>12}  p10 {:>12}  p90 {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.p10_ns),
+            fmt_ns(stats.p90_ns),
+            stats.iters
+        );
+        stats
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Keep a value alive and opaque to the optimizer (std black_box shim).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_plausible() {
+        let b = Bencher::quick("spin");
+        let mut acc = 0u64;
+        let stats = b.run(|| {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(stats.median_ns > 0.0);
+        assert!(stats.iters > 0);
+        assert!(stats.p10_ns <= stats.p90_ns * 1.001);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5e3).ends_with("us"));
+        assert!(fmt_ns(5e6).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+}

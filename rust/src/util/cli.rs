@@ -1,0 +1,154 @@
+//! Minimal CLI argument parser (substrate: no clap offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and free
+//! positional arguments.  Typed accessors with defaults keep call sites
+//! terse; `Args::usage` errors carry the offending flag.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    seen: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    bail!("bare -- not supported");
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // boolean flag unless next token is a value
+                    match it.peek() {
+                        Some(nxt) if !nxt.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            a.flags.insert(body.to_string(), v);
+                        }
+                        _ => {
+                            a.flags.insert(body.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().insert(key.to_string());
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn str_req(&self, key: &str) -> Result<String> {
+        self.str_opt(key).ok_or_else(|| anyhow!("missing required --{key}"))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn bool_flag(&self, key: &str) -> bool {
+        self.mark(key);
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error out on flags that no accessor ever consulted (typo guard).
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<_> =
+            self.flags.keys().filter(|k| !seen.contains(*k)).cloned().collect();
+        if !unknown.is_empty() {
+            bail!("unknown flags: {}", unknown.join(", "));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_kv_and_positional() {
+        // note the documented ambiguity: `--flag token` consumes the
+        // token as the flag's value, so boolean flags go last or use
+        // `--flag=true`
+        let a = mk(&["cmd", "--x", "3", "--name=foo", "--flag"]);
+        assert_eq!(a.positional, vec!["cmd"]);
+        assert_eq!(a.usize_or("x", 0).unwrap(), 3);
+        assert_eq!(a.str_or("name", ""), "foo");
+        assert!(a.bool_flag("flag"));
+        assert!(!a.bool_flag("other"));
+        let b = mk(&["cmd", "--flag=true", "pos2"]);
+        assert!(b.bool_flag("flag"));
+        assert_eq!(b.positional, vec!["cmd", "pos2"]);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = mk(&["--x", "abc"]);
+        assert!(a.usize_or("x", 0).is_err());
+        assert!(a.str_req("missing").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = mk(&[]);
+        assert_eq!(a.f64_or("t0", 1.5).unwrap(), 1.5);
+        assert_eq!(a.str_or("mode", "sim"), "sim");
+    }
+
+    #[test]
+    fn reject_unknown_flags() {
+        let a = mk(&["--known", "1", "--typo", "2"]);
+        let _ = a.usize_or("known", 0);
+        assert!(a.reject_unknown().is_err());
+        let b = mk(&["--known", "1"]);
+        let _ = b.usize_or("known", 0);
+        assert!(b.reject_unknown().is_ok());
+    }
+}

@@ -1,0 +1,69 @@
+//! Property-test harness (substrate: no proptest offline).
+//!
+//! `forall(cases, seed, |rng| ...)` runs a closure over `cases`
+//! independent deterministic RNG streams; on failure it reports the
+//! failing case seed so the exact input can be replayed with
+//! `replay(seed, ...)`.  Used heavily by the DP-vs-brute-force and
+//! merge-engine invariant tests.
+
+use super::rng::Rng;
+
+/// Run `f` on `cases` independent rng streams; panic with the failing
+/// stream's seed on the first error so it can be replayed.
+pub fn forall<F: FnMut(&mut Rng) -> Result<(), String>>(cases: usize, seed: u64, mut f: F) {
+    for case in 0..cases {
+        let case_seed = seed ^ ((case as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed (case {case}, replay seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F: FnMut(&mut Rng) -> Result<(), String>>(case_seed: u64, mut f: F) {
+    let mut rng = Rng::new(case_seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("replay {case_seed:#x} failed: {msg}");
+    }
+}
+
+/// assert_eq! with Result<(), String> plumbing for use inside `forall`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_good_property() {
+        forall(50, 1, |rng| {
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        forall(50, 2, |rng| {
+            let x = rng.uniform();
+            if x < 0.9 {
+                Ok(())
+            } else {
+                Err(format!("too big: {x}"))
+            }
+        });
+    }
+}
