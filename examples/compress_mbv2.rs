@@ -72,8 +72,32 @@ fn main() -> anyhow::Result<()> {
     let imp = pipe.importance(&data, &pre, base_acc, &icfg, false)?;
     println!("[3/6] importance table: {} probes\n", imp.len());
 
-    // 4-6. ours at the budget + DS comparison at the nearest rung
+    // 3b. budget frontier around the operating point — one planner pass;
+    // the run_ours plan below reuses the same memoized planner for free
     let t0 = vanilla_sim * frac;
+    let context: Vec<f64> =
+        [0.85, frac + 0.05, frac, frac - 0.05, 0.55].iter().map(|f| vanilla_sim * f).collect();
+    let frontier = pipe.plan_frontier(&fused, &imp, &context, 1.6, true);
+    let mut ft = Table::new(
+        "frontier context (sim 2080Ti)",
+        &["T0 (ms)", "est (ms)", "|A|", "|S|", "objective"],
+    );
+    for (b, out) in context.iter().zip(&frontier) {
+        match out {
+            Some(o) => ft.row(vec![
+                fmt_ms(*b),
+                fmt_ms(o.est_latency_ms),
+                o.a.len().to_string(),
+                o.s.len().to_string(),
+                format!("{:+.4}", o.objective),
+            ]),
+            None => ft.row(vec![fmt_ms(*b), "-".into(), "-".into(), "-".into(), "infeasible".into()]),
+        }
+    }
+    print!("{}", ft.render());
+    println!();
+
+    // 4-6. ours at the budget + DS comparison at the nearest rung
     let (ours, out) = run_ours(&pipe, &data, Some(&pre), &fused, &imp, t0, 1.6, ft_steps, kd)?;
     println!("[4-6/6] ours: {}", out.summary());
 

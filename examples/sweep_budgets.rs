@@ -3,15 +3,18 @@
 //! network naively merged according to A (the paper's ablation §5.3 —
 //! "about 30% faster" with S).
 //!
+//! The whole sweep is ONE `plan_frontier` call: stage 1/3 products and
+//! a single stage-4 DP table answer every budget point, instead of the
+//! per-budget re-solves this example used to do.
+//!
 //!   cargo run --release --example sweep_budgets [-- --arch mbv2_w10
 //!       --points 12]
 
 use std::path::PathBuf;
 
-use repro::coordinator::experiments::{greedy_merge, proxy_importance, segments_ms};
+use repro::coordinator::experiments::{greedy_merge, importance_or_proxy, segments_ms};
 use repro::coordinator::pipeline::{LatencyCfg, Pipeline};
 use repro::coordinator::report::Table;
-use repro::importance::table::ImpTable;
 use repro::merge::plan::segments_from_s;
 use repro::runtime::engine::Engine;
 use repro::util::cli::Args;
@@ -27,25 +30,25 @@ fn main() -> anyhow::Result<()> {
     let vanilla = pipe.vanilla_latency_ms(&lat)?;
 
     // trained importance when the pipeline ran; structural proxy else
-    let imp_path = pipe.dir.join("imp_s6.json");
-    let (imp, src) = if imp_path.exists() {
-        (ImpTable::load(&imp_path)?, "trained")
-    } else {
-        (proxy_importance(&pipe.cfg), "proxy")
-    };
+    let (imp, src) = importance_or_proxy(&pipe);
 
     println!("== Figure 3 sweep on {arch} (importance: {src}) ==");
     println!("vanilla: {vanilla:.2} ms\n");
+    let budgets: Vec<f64> = (0..points)
+        .map(|n| vanilla * (0.92 - 0.45 * (n as f64 / (points - 1).max(1) as f64)))
+        .collect();
+    let t_solve = std::time::Instant::now();
+    let outs = pipe.plan_frontier(&lat, &imp, &budgets, 1.6, true);
+    let solve_ms = t_solve.elapsed().as_secs_f64() * 1e3;
+
     let mut t = Table::new(
         "latency of merge-by-S vs merge-by-A across budgets",
         &["T0 (ms)", "by-S (ms)", "by-A (ms)", "A-penalty", "|A|", "|S|"],
     );
     let mut csv = String::from("t0_ms,by_s_ms,by_a_ms\n");
-    for n in 0..points {
-        let frac = 0.92 - 0.45 * (n as f64 / (points - 1).max(1) as f64);
-        let t0 = vanilla * frac;
-        let Ok(out) = pipe.plan(&lat, &imp, t0, 1.6, true) else {
-            continue;
+    for (t0, out) in budgets.iter().zip(outs) {
+        let Some(out) = out else {
+            continue; // budget infeasible
         };
         let s_segs = segments_from_s(pipe.cfg.spec.l(), &out.s);
         let a_segs = greedy_merge(&pipe.cfg, &out.a);
@@ -62,6 +65,7 @@ fn main() -> anyhow::Result<()> {
         csv.push_str(&format!("{t0:.4},{s_ms:.4},{a_ms:.4}\n"));
     }
     print!("{}", t.render());
+    println!("({points}-point frontier solved in {solve_ms:.2} ms — one planner pass)");
     let dir = root.join("reports");
     std::fs::create_dir_all(&dir)?;
     let path = dir.join(format!("figure3_{arch}.csv"));

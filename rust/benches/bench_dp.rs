@@ -1,12 +1,36 @@
 //! DP micro-benchmarks: the paper claims the two-stage DP solves
 //! "within a few seconds"; here it is microseconds-to-milliseconds at
 //! paper scale (L = 52, T0 in the thousands of ticks).
+//!
+//! The frontier section compares a K-point budget sweep done as K
+//! independent re-solves (what examples/sweep_budgets.rs used to do)
+//! against ONE `solve_frontier` planner pass, and records the numbers
+//! in BENCH_dp.json at the repo root.
 
 use repro::coordinator::experiments::proxy_importance;
 use repro::dp::{extended, stage1, stage2};
 use repro::model::spec::testutil::tiny_config;
+use repro::planner::solver::{ExtendedSolver, ImportanceProvider, Solver, TwoStageSolver};
 use repro::util::bench::{black_box, Bencher};
+use repro::util::json::Json;
 use repro::util::rng::Rng;
+
+/// Dense synthetic importance over a random instance, in the planner's
+/// provider shape (base view = both endpoints "on").
+struct DenseImp {
+    l: usize,
+    imp: Vec<f64>,
+}
+
+impl ImportanceProvider for DenseImp {
+    fn base(&self, i: usize, j: usize) -> f64 {
+        self.ext(i, j, 1, 1)
+    }
+
+    fn ext(&self, i: usize, j: usize, a: u8, b: u8) -> f64 {
+        self.imp[((i * (self.l + 1) + j) * 2 + a as usize) * 2 + b as usize]
+    }
+}
 
 fn random_instance(l: usize, seed: u64) -> (stage1::LatTable, Vec<f64>) {
     let mut rng = Rng::new(seed);
@@ -62,4 +86,49 @@ fn main() {
     Bencher::new("extended on structured IRB instance").run(|| {
         black_box(extended::solve(cfg.spec.l(), &s1, &f4, 80));
     });
+
+    // -- frontier sweep: K re-solves vs ONE planner pass ---------------------
+    let l = 52usize;
+    let points = 12usize;
+    let (t, raw) = random_instance(l, 3);
+    let imp = DenseImp { l, imp: raw };
+    let budgets: Vec<u64> =
+        (0..points).map(|n| 1500 + (n as u64) * 2500 / (points as u64 - 1)).collect();
+    println!("# frontier: {points}-point budget sweep at L={l} (T0 in {:?}..{:?})",
+        budgets.first().unwrap(), budgets.last().unwrap());
+    let mut record = vec![
+        ("bench", Json::str_of("frontier_vs_repeated")),
+        ("l", Json::int(l as i64)),
+        ("points", Json::int(points as i64)),
+    ];
+    for (name, solver) in
+        [("two_stage", &TwoStageSolver as &dyn Solver), ("extended", &ExtendedSolver as &dyn Solver)]
+    {
+        // sanity first: the two paths must produce identical plans
+        let swept = solver.solve_frontier(&t, &imp, &budgets);
+        for (n, &t0) in budgets.iter().enumerate() {
+            assert_eq!(swept[n], solver.solve(&t, &imp, t0), "{name} diverges at t0={t0}");
+        }
+        let rep = Bencher::new(&format!("{name}: {points} independent re-solves")).run(|| {
+            for &t0 in &budgets {
+                black_box(solver.solve(&t, &imp, t0));
+            }
+        });
+        let fro = Bencher::new(&format!("{name}: one solve_frontier pass")).run(|| {
+            black_box(solver.solve_frontier(&t, &imp, &budgets));
+        });
+        let speedup = rep.median_ns / fro.median_ns;
+        println!("{name}: frontier speedup {speedup:.1}x over repeated solves");
+        record.push((
+            name,
+            Json::obj_from(vec![
+                ("repeated_ms", Json::num(rep.median_ms())),
+                ("frontier_ms", Json::num(fro.median_ms())),
+                ("speedup", Json::num(speedup)),
+            ]),
+        ));
+    }
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_dp.json");
+    std::fs::write(&path, Json::obj_from(record).to_string()).expect("writing BENCH_dp.json");
+    println!("frontier record written to {}", path.display());
 }

@@ -16,7 +16,7 @@ use std::path::PathBuf;
 
 use repro::baselines::depthshrinker::{ds_ladder, ds_search, irb_spans};
 use repro::coordinator::experiments::{
-    greedy_merge, proxy_importance, result_for_sets, run_ds, run_ours, segments_ms,
+    greedy_merge, result_for_sets, run_ds, run_ours, segments_ms,
     vanilla_result, MethodResult,
 };
 use repro::coordinator::pipeline::{LatencyCfg, Pipeline};
@@ -45,15 +45,8 @@ impl Ctx {
 
     /// Cached importance table if the pipeline ran, else the proxy.
     fn importance(&self, pipe: &Pipeline) -> (ImpTable, bool) {
-        for steps in [6usize, 4, 8, 2] {
-            let p = pipe.dir.join(format!("imp_s{steps}.json"));
-            if p.exists() {
-                if let Ok(t) = ImpTable::load(&p) {
-                    return (t, true);
-                }
-            }
-        }
-        (proxy_importance(&pipe.cfg), false)
+        let (t, src) = repro::coordinator::experiments::importance_or_proxy(pipe);
+        (t, src == "trained")
     }
 
     fn pretrained(&self, pipe: &Pipeline) -> Option<(ParamSet, f64)> {

@@ -41,6 +41,22 @@ pub fn proxy_importance(cfg: &ArchConfig) -> ImpTable {
     t
 }
 
+/// Cached trained importance table (any probe depth the pipeline
+/// writes) if present under the run dir, else the structural proxy.
+/// Returns the table plus a provenance tag for report headers.  Shared
+/// by the sweep CLI, the sweep example, and the paper-table harness.
+pub fn importance_or_proxy(pipe: &Pipeline) -> (ImpTable, &'static str) {
+    for steps in [6usize, 4, 8, 2] {
+        let p = pipe.dir.join(format!("imp_s{steps}.json"));
+        if p.exists() {
+            if let Ok(t) = ImpTable::load(&p) {
+                return (t, "trained");
+            }
+        }
+    }
+    (proxy_importance(&pipe.cfg), "proxy")
+}
+
 /// Greedy maximal merging between consecutive boundary points — the
 /// "merge according to A" ablation of Figure 3 (no stage-1 DP).
 pub fn greedy_merge(cfg: &ArchConfig, boundaries: &[usize]) -> Vec<(usize, usize)> {

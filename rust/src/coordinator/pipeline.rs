@@ -9,13 +9,16 @@
 //! by its configuration, so table harnesses can share pretraining and
 //! tables across budgets and methods.
 
+use std::cell::RefCell;
+use std::collections::HashMap;
 use std::path::PathBuf;
+use std::rc::Rc;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::coordinator::merged_exec::MergedExec;
 use crate::data::batcher::Batcher;
 use crate::data::synth::SynthSpec;
-use crate::dp::{extended, stage1, stage2};
 use crate::importance::eval::{ImportanceConfig, ImportanceEvaluator};
 use crate::importance::normalize;
 use crate::importance::table::ImpTable;
@@ -24,7 +27,8 @@ use crate::latency::measured::Measured;
 use crate::latency::table::{Analytical, BlockLatencies, LatencySource};
 use crate::merge::plan::{build_merged, plan_json, segments_from_s, MergedNet};
 use crate::model::spec::ArchConfig;
-use crate::coordinator::merged_exec::MergedExec;
+use crate::planner::frontier::{Planner, Space, TableImportance};
+use crate::planner::solver::PlanOutcome as SolvedPlan;
 use crate::runtime::engine::Engine;
 use crate::runtime::manifest::ArchEntry;
 use crate::trainer::eval::{eval_masked, EvalResult};
@@ -48,6 +52,10 @@ impl Default for LatencyCfg {
     }
 }
 
+/// The coordinator-side planner: `TableImportance` over the arch's
+/// probe table, memoized DP products inside.
+pub type PipelinePlanner = Planner<TableImportance>;
+
 pub struct Pipeline<'e> {
     pub engine: &'e Engine,
     pub arch: String,
@@ -55,6 +63,10 @@ pub struct Pipeline<'e> {
     pub cfg: ArchConfig,
     pub dir: PathBuf,
     pub verbose: bool,
+    /// memoized planners per (latency-source, batch, scale, alpha,
+    /// importance identity) — the budget-independent stage-1/stage-3
+    /// products are shared by every plan/plan_frontier call
+    planners: RefCell<HashMap<String, Rc<PipelinePlanner>>>,
 }
 
 impl<'e> Pipeline<'e> {
@@ -63,7 +75,15 @@ impl<'e> Pipeline<'e> {
         let cfg = ArchConfig::load(&engine.manifest.root.join(&entry.config))?;
         let dir = engine.manifest.root.join("runs").join(arch);
         std::fs::create_dir_all(&dir)?;
-        Ok(Pipeline { engine, arch: arch.to_string(), entry, cfg, dir, verbose: true })
+        Ok(Pipeline {
+            engine,
+            arch: arch.to_string(),
+            entry,
+            cfg,
+            dir,
+            verbose: true,
+            planners: RefCell::new(HashMap::new()),
+        })
     }
 
     // -- stage 0: pretraining ------------------------------------------------
@@ -183,10 +203,62 @@ impl<'e> Pipeline<'e> {
         Ok(table)
     }
 
-    // -- stage 3: the two-stage DP --------------------------------------------
+    // -- stage 3: the two-stage DP (via the planner subsystem) ---------------
 
-    /// Solve for (A, S[, B]) under `t0_ms`.  `alpha` applies the B.3
-    /// normalization to a copy of the table.
+    /// The memoized planner for (lat, imp, alpha).  `alpha` applies the
+    /// B.3 normalization to a copy of the table before planning.  The
+    /// cache key fingerprints the table CONTENTS (not just its meta
+    /// string), so retraining importance with the same probe config but
+    /// different values can never reuse a stale planner.
+    pub fn planner(
+        &self,
+        lat: &BlockLatencies,
+        imp: &ImpTable,
+        alpha: f64,
+    ) -> Rc<PipelinePlanner> {
+        let key = format!(
+            "{}|b{}|x{}|a{}|{:016x}",
+            lat.source,
+            lat.batch,
+            lat.scale,
+            alpha,
+            imp_fingerprint(imp)
+        );
+        if let Some(p) = self.planners.borrow().get(&key) {
+            return p.clone();
+        }
+        let mut imp = imp.clone();
+        if alpha != 0.0 {
+            normalize::normalize(&mut imp, alpha);
+        }
+        let t = lat.to_lat_table(self.cfg.spec.l());
+        let p = Rc::new(Planner::new(&t, TableImportance::new(&self.cfg, imp)));
+        self.planners.borrow_mut().insert(key, p.clone());
+        p
+    }
+
+    fn outcome(
+        &self,
+        sol: SolvedPlan,
+        lat: &BlockLatencies,
+        t0_ms: f64,
+        alpha: f64,
+    ) -> PlanOutcome {
+        PlanOutcome {
+            arch: self.arch.clone(),
+            t0_ms,
+            alpha,
+            a: sol.a,
+            s: sol.s,
+            b: sol.b,
+            objective: sol.imp_total,
+            est_latency_ms: lat.ticks_to_ms(sol.est_ticks),
+            lat_source: lat.source.clone(),
+        }
+    }
+
+    /// Solve for (A, S[, B]) under `t0_ms` — a thin call into the
+    /// memoized [`PipelinePlanner`].
     pub fn plan(
         &self,
         lat: &BlockLatencies,
@@ -195,37 +267,34 @@ impl<'e> Pipeline<'e> {
         alpha: f64,
         extended_space: bool,
     ) -> Result<PlanOutcome> {
-        let mut imp = imp.clone();
-        if alpha != 0.0 {
-            normalize::normalize(&mut imp, alpha);
-        }
-        let l = self.cfg.spec.l();
-        let t = lat.to_lat_table(l);
-        let s1 = stage1::solve(&t);
-        let t0 = lat.ms_to_ticks(t0_ms);
-        let (a, s, b, objective, latency) = if extended_space {
-            let f = |i: usize, j: usize, da: u8, db: u8| imp.get(i, j, da, db);
-            let sol = extended::solve(l, &s1, &f, t0)
-                .ok_or_else(|| anyhow!("budget {t0_ms} ms infeasible"))?;
-            (sol.a, sol.s, sol.b, sol.objective, sol.latency)
-        } else {
-            let f = |i: usize, j: usize| imp.imp_base(&self.cfg, i, j);
-            let sol = stage2::solve(l, &s1, &f, t0)
-                .ok_or_else(|| anyhow!("budget {t0_ms} ms infeasible"))?;
-            let b = sol.a.clone();
-            (sol.a, sol.s, b, sol.objective, sol.latency)
-        };
-        Ok(PlanOutcome {
-            arch: self.arch.clone(),
-            t0_ms,
-            alpha,
-            a,
-            s,
-            b,
-            objective,
-            est_latency_ms: lat.ticks_to_ms(latency),
-            lat_source: lat.source.clone(),
-        })
+        let planner = self.planner(lat, imp, alpha);
+        let space = if extended_space { Space::Extended } else { Space::Base };
+        let sol = planner
+            .solve(space, lat.ms_to_ticks(t0_ms))
+            .ok_or_else(|| anyhow!("budget {t0_ms} ms infeasible"))?;
+        Ok(self.outcome(sol, lat, t0_ms, alpha))
+    }
+
+    /// Plans for every budget in `budgets_ms` (same order; None where
+    /// infeasible) from ONE stage-2/stage-4 table pass instead of K
+    /// independent re-solves.  Identical plans to per-budget `plan`.
+    pub fn plan_frontier(
+        &self,
+        lat: &BlockLatencies,
+        imp: &ImpTable,
+        budgets_ms: &[f64],
+        alpha: f64,
+        extended_space: bool,
+    ) -> Vec<Option<PlanOutcome>> {
+        let planner = self.planner(lat, imp, alpha);
+        let space = if extended_space { Space::Extended } else { Space::Base };
+        let ticks: Vec<u64> = budgets_ms.iter().map(|&ms| lat.ms_to_ticks(ms)).collect();
+        planner
+            .solve_frontier(space, &ticks)
+            .into_iter()
+            .zip(budgets_ms)
+            .map(|(sol, &ms)| sol.map(|s| self.outcome(s, lat, ms, alpha)))
+            .collect()
     }
 
     /// Write the plan JSON that `make plans` (aot pass 2) consumes.
@@ -326,6 +395,23 @@ impl MergedNet {
     pub fn clone_shallow(&self) -> MergedNet {
         MergedNet { layers: self.layers.clone(), params: self.params.clone() }
     }
+}
+
+/// FNV-1a over an importance table's entries and base accuracy —
+/// content identity for the planner cache.
+fn imp_fingerprint(imp: &ImpTable) -> u64 {
+    fn fnv(h: u64, x: u64) -> u64 {
+        (h ^ x).wrapping_mul(0x100000001b3)
+    }
+    let mut h = 0xcbf29ce484222325u64;
+    h = fnv(h, imp.base_acc.to_bits());
+    for (&(i, j, a, b), &v) in imp.iter() {
+        h = fnv(h, i as u64);
+        h = fnv(h, j as u64);
+        h = fnv(h, ((a as u64) << 8) | b as u64);
+        h = fnv(h, v.to_bits());
+    }
+    h
 }
 
 #[derive(Debug, Clone)]

@@ -106,16 +106,27 @@ pub struct ExtSolution {
     pub latency: u64,
 }
 
-/// Algorithm 4: budgeted DP over (boundary, activation-state).
-pub fn solve<I: Importance4>(
-    l_total: usize,
-    s1: &Stage1,
-    imp: &I,
-    t0: u64,
-) -> Option<ExtSolution> {
-    let s3 = solve_stage3(l_total, imp);
-    let t0 = t0 as usize;
-    let n_t = t0 + 1;
+/// Algorithm 4's DP table, built once up to a maximum budget.  As with
+/// `stage2::Stage2Table`, column `t` encodes the optimum under the
+/// strict constraint `latency < t` and cells are column-local, so one
+/// table answers every budget `t0 <= t0_max` — the planner's frontier
+/// sweep reuses it (and the budget-independent Stage3 product) across
+/// all budget points.
+#[derive(Debug, Clone)]
+pub struct Stage4Table {
+    pub l: usize,
+    n_t: usize,
+    d: Vec<f64>,
+    par_k: Vec<usize>,
+    par_a: Vec<u8>,
+}
+
+/// Build the Algorithm 4 table over (boundary, activation-state) for
+/// all budgets up to `t0_max`.  `s3` is the budget-independent stage-3
+/// product for the same importance (the importance itself is only read
+/// through it).
+pub fn build(l_total: usize, s1: &Stage1, s3: &Stage3, t0_max: u64) -> Stage4Table {
+    let n_t = t0_max as usize + 1;
     // D[l][t][a]; parents (k, alpha)
     let idx = |l: usize, t: usize, a: usize| (l * n_t + t) * 2 + a;
     let mut d = vec![NEG_INF; (l_total + 1) * n_t * 2];
@@ -171,47 +182,85 @@ pub fn solve<I: Importance4>(
             }
         }
     }
-    // final state at l = L is fixed "on" (sigma_L handled by the probes)
-    let a_last: usize = if d[idx(l_total, t0, 1)] >= d[idx(l_total, t0, 0)] { 1 } else { 0 };
-    if d[idx(l_total, t0, a_last)] == NEG_INF {
-        return None;
+    Stage4Table { l: l_total, n_t, d, par_k, par_a }
+}
+
+impl Stage4Table {
+    /// Largest budget this table can answer.
+    pub fn t0_max(&self) -> u64 {
+        (self.n_t - 1) as u64
     }
-    let objective = d[idx(l_total, t0, a_last)];
-    let mut a_set = Vec::new();
-    let mut b_set = Vec::new();
-    let mut s_set = Vec::new();
-    let mut latency = 0u64;
-    let (mut l, mut t, mut a) = (l_total, t0, a_last);
-    while l > 0 {
-        let k = par_k[idx(l, t, a)];
-        let alpha = par_a[idx(l, t, a)];
-        if k == usize::MAX {
+
+    #[inline]
+    fn idx(&self, l: usize, t: usize, a: usize) -> usize {
+        (l * self.n_t + t) * 2 + a
+    }
+
+    /// Reconstruct the jointly optimal (A, B, S) at `t0 <= t0_max`.
+    /// Identical to a fresh `solve` at `t0` — property-tested in
+    /// planner::tests.
+    pub fn extract(&self, s1: &Stage1, s3: &Stage3, t0: u64) -> Option<ExtSolution> {
+        assert!(t0 <= self.t0_max(), "budget {t0} beyond table max {}", self.t0_max());
+        let l_total = self.l;
+        let t0 = t0 as usize;
+        // final state at l = L is fixed "on" (sigma_L handled by the probes)
+        let a_last: usize =
+            if self.d[self.idx(l_total, t0, 1)] >= self.d[self.idx(l_total, t0, 0)] {
+                1
+            } else {
+                0
+            };
+        if self.d[self.idx(l_total, t0, a_last)] == NEG_INF {
             return None;
         }
-        // within-range id joints become B boundaries ONLY: merging may
-        // cross an id joint, so S does not split there (Algorithm 4)
-        for m in s3.b_opt(k, l, alpha, a as u8) {
-            b_set.push(m);
-        }
-        latency += s1.t_opt(k, l);
-        s_set.extend(s1.s_opt(k, l));
-        if k > 0 {
-            b_set.push(k);
-            s_set.push(k);
-            if alpha == 1 {
-                a_set.push(k);
+        let objective = self.d[self.idx(l_total, t0, a_last)];
+        let mut a_set = Vec::new();
+        let mut b_set = Vec::new();
+        let mut s_set = Vec::new();
+        let mut latency = 0u64;
+        let (mut l, mut t, mut a) = (l_total, t0, a_last);
+        while l > 0 {
+            let k = self.par_k[self.idx(l, t, a)];
+            let alpha = self.par_a[self.idx(l, t, a)];
+            if k == usize::MAX {
+                return None;
             }
+            // within-range id joints become B boundaries ONLY: merging may
+            // cross an id joint, so S does not split there (Algorithm 4)
+            for m in s3.b_opt(k, l, alpha, a as u8) {
+                b_set.push(m);
+            }
+            latency += s1.t_opt(k, l);
+            s_set.extend(s1.s_opt(k, l));
+            if k > 0 {
+                b_set.push(k);
+                s_set.push(k);
+                if alpha == 1 {
+                    a_set.push(k);
+                }
+            }
+            t -= s1.t_opt(k, l) as usize;
+            l = k;
+            a = alpha as usize;
         }
-        t -= s1.t_opt(k, l) as usize;
-        l = k;
-        a = alpha as usize;
+        a_set.sort_unstable();
+        b_set.sort_unstable();
+        b_set.dedup();
+        s_set.sort_unstable();
+        s_set.dedup();
+        Some(ExtSolution { a: a_set, b: b_set, s: s_set, objective, latency })
     }
-    a_set.sort_unstable();
-    b_set.sort_unstable();
-    b_set.dedup();
-    s_set.sort_unstable();
-    s_set.dedup();
-    Some(ExtSolution { a: a_set, b: b_set, s: s_set, objective, latency })
+}
+
+/// Algorithm 4: budgeted DP over (boundary, activation-state).
+pub fn solve<I: Importance4>(
+    l_total: usize,
+    s1: &Stage1,
+    imp: &I,
+    t0: u64,
+) -> Option<ExtSolution> {
+    let s3 = solve_stage3(l_total, imp);
+    build(l_total, s1, &s3, t0).extract(s1, &s3, t0)
 }
 
 #[cfg(test)]

@@ -35,11 +35,24 @@ pub struct Solution {
     pub latency: u64,
 }
 
-/// Algorithm 2.  `t0` is the integer budget (strict: latency < t0).
-pub fn solve<I: Importance>(l_total: usize, s1: &Stage1, imp: &I, t0: u64) -> Option<Solution> {
-    let t0 = t0 as usize;
-    let n_t = t0 + 1;
-    // D[l][t], parent k (usize::MAX = none/base)
+/// Algorithm 2's DP table, built once up to a maximum budget.  Column
+/// `t` holds the optimum under the strict constraint `latency < t`, so
+/// a single table answers EVERY budget `t0 <= t0_max`: cell values are
+/// column-local (cell (l, t) only reads cells (k, t - seg)), hence
+/// identical to what a fresh per-budget solve would compute.  This is
+/// what makes the planner's one-pass frontier sweep exact.
+#[derive(Debug, Clone)]
+pub struct Stage2Table {
+    pub l: usize,
+    n_t: usize,
+    d: Vec<f64>,
+    /// parent k per (l, t); usize::MAX = none/base
+    par: Vec<usize>,
+}
+
+/// Build the Algorithm 2 table for all budgets up to `t0_max`.
+pub fn build<I: Importance>(l_total: usize, s1: &Stage1, imp: &I, t0_max: u64) -> Stage2Table {
+    let n_t = t0_max as usize + 1;
     let mut d = vec![NEG_INF; (l_total + 1) * n_t];
     let mut par = vec![usize::MAX; (l_total + 1) * n_t];
     for t in 0..n_t {
@@ -77,34 +90,60 @@ pub fn solve<I: Importance>(l_total: usize, s1: &Stage1, imp: &I, t0: u64) -> Op
             par[l * n_t + t] = best_k;
         }
     }
-    // reconstruct from (L, T0)
-    let mut l = l_total;
-    let mut t = t0;
-    if d[l * n_t + t] == NEG_INF {
-        return None;
+    Stage2Table { l: l_total, n_t, d, par }
+}
+
+impl Stage2Table {
+    /// Largest budget this table can answer.
+    pub fn t0_max(&self) -> u64 {
+        (self.n_t - 1) as u64
     }
-    let objective = d[l * n_t + t];
-    let mut a = Vec::new();
-    let mut s = Vec::new();
-    let mut latency: u64 = 0;
-    while l > 0 {
-        let k = par[l * n_t + t];
-        if k == usize::MAX {
-            return None; // inconsistent table
-        }
-        latency += s1.t_opt(k, l);
-        s.extend(s1.s_opt(k, l));
-        if k > 0 {
-            a.push(k);
-            s.push(k);
-        }
-        t -= s1.t_opt(k, l) as usize;
-        l = k;
+
+    /// Optimal objective at strict budget `t0` (NEG_INF = infeasible).
+    pub fn objective(&self, t0: u64) -> f64 {
+        assert!(t0 <= self.t0_max(), "budget {t0} beyond table max {}", self.t0_max());
+        self.d[self.l * self.n_t + t0 as usize]
     }
-    a.sort_unstable();
-    s.sort_unstable();
-    s.dedup();
-    Some(Solution { a, s, objective, latency })
+
+    /// Reconstruct the jointly optimal (A, S) at budget `t0 <= t0_max`.
+    /// Identical to a fresh `solve` at `t0` (same table cells, same
+    /// tie-breaking) — property-tested in planner::tests.
+    pub fn extract(&self, s1: &Stage1, t0: u64) -> Option<Solution> {
+        assert!(t0 <= self.t0_max(), "budget {t0} beyond table max {}", self.t0_max());
+        let n_t = self.n_t;
+        let mut l = self.l;
+        let mut t = t0 as usize;
+        if self.d[l * n_t + t] == NEG_INF {
+            return None;
+        }
+        let objective = self.d[l * n_t + t];
+        let mut a = Vec::new();
+        let mut s = Vec::new();
+        let mut latency: u64 = 0;
+        while l > 0 {
+            let k = self.par[l * n_t + t];
+            if k == usize::MAX {
+                return None; // inconsistent table
+            }
+            latency += s1.t_opt(k, l);
+            s.extend(s1.s_opt(k, l));
+            if k > 0 {
+                a.push(k);
+                s.push(k);
+            }
+            t -= s1.t_opt(k, l) as usize;
+            l = k;
+        }
+        a.sort_unstable();
+        s.sort_unstable();
+        s.dedup();
+        Some(Solution { a, s, objective, latency })
+    }
+}
+
+/// Algorithm 2.  `t0` is the integer budget (strict: latency < t0).
+pub fn solve<I: Importance>(l_total: usize, s1: &Stage1, imp: &I, t0: u64) -> Option<Solution> {
+    build(l_total, s1, imp, t0).extract(s1, t0)
 }
 
 #[cfg(test)]
@@ -218,6 +257,52 @@ mod tests {
                         "objective not monotone in budget"
                     );
                     prev = sol.objective;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn one_table_answers_every_budget() {
+        // the frontier-sweep invariant: extract(t0) from a table built
+        // at t0_max equals a fresh per-budget solve, field for field
+        forall(25, 34, |rng| {
+            let l = 2 + rng.below(6);
+            let (t, imp) = random_instance(rng, l);
+            let s1 = stage1::solve(&t);
+            let f = |k: usize, j: usize| imp[k][j];
+            let table = build(l, &s1, &f, 150);
+            for t0 in [5u64, 17, 40, 88, 150] {
+                let fresh = solve(l, &s1, &f, t0);
+                let swept = table.extract(&s1, t0);
+                match (fresh, swept) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        crate::prop_assert!(
+                            a.a == b.a
+                                && a.s == b.s
+                                && a.objective == b.objective
+                                && a.latency == b.latency,
+                            "t0={t0}: fresh (A={:?} S={:?} obj={} lat={}) != swept \
+                             (A={:?} S={:?} obj={} lat={})",
+                            a.a,
+                            a.s,
+                            a.objective,
+                            a.latency,
+                            b.a,
+                            b.s,
+                            b.objective,
+                            b.latency
+                        );
+                    }
+                    (a, b) => {
+                        return Err(format!(
+                            "t0={t0}: feasibility mismatch fresh={:?} swept={:?}",
+                            a.map(|x| x.objective),
+                            b.map(|x| x.objective)
+                        ))
+                    }
                 }
             }
             Ok(())

@@ -2,14 +2,30 @@
 //! — a rust+JAX+Pallas reproduction of Kim, Jeong, Lee & Song (ICML 2023).
 //!
 //! Three-layer architecture (DESIGN.md):
-//!   L3 (this crate)          — compression pipeline coordinator, two-stage
-//!                              DP solver, latency + importance tables,
+//!   L3 (this crate)          — compression pipeline coordinator, planner
+//!                              subsystem (unified DP solvers + frontier
+//!                              sweeps), latency + importance tables,
 //!                              merge engine, trainer, serving, benches.
 //!   L2 (python/compile, AOT) — JAX model graphs lowered once to HLO text.
 //!   L1 (Pallas, AOT)         — tiled-matmul + kernel-composition kernels.
 //!
 //! Python never runs at request time: the PJRT CPU client executes the
 //! AOT artifacts under `artifacts/`.
+//!
+//! Module map (solver path, bottom-up):
+//!   dp         — Algorithms 1–4 as reusable tables: `stage1` (optimal
+//!                block latencies), `stage2`/`extended` expose
+//!                build(t0_max) + extract(t0) so ONE table answers every
+//!                budget; `brute` holds the exponential test oracles.
+//!   planner    — the uniform surface over the solvers: `solver` defines
+//!                ImportanceProvider + the Solver trait (BruteSolver /
+//!                TwoStageSolver / ExtendedSolver -> PlanOutcome), and
+//!                `frontier` the memoizing Planner with solve(t0) /
+//!                solve_frontier(budgets) one-pass budget sweeps.
+//!   latency    — analytical GPU models + measured PJRT source -> T[i,j].
+//!   importance — probe evaluation, I[i,j,a,b] storage, B.3 normalize.
+//!   coordinator— pipeline stages (pretrain -> tables -> plan -> finetune
+//!                -> merge -> eval), experiment runners, serving.
 
 pub mod tensor;
 
@@ -43,6 +59,11 @@ pub mod dp {
     pub mod extended;
     pub mod stage1;
     pub mod stage2;
+}
+
+pub mod planner {
+    pub mod frontier;
+    pub mod solver;
 }
 
 pub mod importance {

@@ -30,6 +30,8 @@ fn usage() -> &'static str {
        latency    --arch A [--source sim:rtx2080ti|measured --eager --batch N]\n\
        importance --arch A [--steps N --lr X --force]\n\
        plan       --arch A --t0 MS [--alpha X --base] (writes artifacts/plans/)\n\
+       sweep      --arch A [--points N | --budgets MS,MS,...] [--alpha X --base]\n\
+                  one-pass Pareto frontier over budgets (+ CSV report)\n\
        compress   --arch A --t0 MS [--alpha X --finetune-steps N --kd]\n\
        eval       --arch A [--ckpt PATH]\n\
        serve      --arch A [--clients N --requests N --max-batch N --max-wait-ms N]\n\
@@ -178,6 +180,87 @@ fn main() -> Result<()> {
             let name = args.str_or("name", &format!("{arch}_t{}", (t0 * 100.0) as u64));
             let path = pipe.write_plan(&out, &name)?;
             println!("wrote {} — run `make plans` to emit pass-2 artifacts", path.display());
+        }
+        "sweep" => {
+            // Pareto frontier over latency budgets, derived from ONE
+            // planner pass (stage-1/stage-3 products + one DP table)
+            let engine = Engine::new(&root)?;
+            let arch = args.str_req("arch")?;
+            let mut pipe = Pipeline::new(&engine, &arch)?;
+            pipe.verbose = !quiet;
+            let lcfg = lat_cfg(&args)?;
+            let lat = pipe.latency_table(&lcfg, false)?;
+            let vanilla = pipe.vanilla_latency_ms(&lat)?;
+            let (imp, src) = repro::coordinator::experiments::importance_or_proxy(&pipe);
+            let alpha = args.f64_or("alpha", 1.6)?;
+            let extended = !args.bool_flag("base");
+            let points = args.usize_or("points", 12)?;
+            let hi = args.f64_or("max-frac", 0.92)?;
+            let lo = args.f64_or("min-frac", 0.47)?;
+            let budgets: Vec<f64> = match args.str_opt("budgets") {
+                Some(s) => s
+                    .split(',')
+                    .map(|x| {
+                        x.trim().parse::<f64>().map_err(|_| {
+                            anyhow!("--budgets expects comma-separated ms, got {x:?}")
+                        })
+                    })
+                    .collect::<Result<_>>()?,
+                None => (0..points)
+                    .map(|n| {
+                        vanilla * (hi - (hi - lo) * n as f64 / (points - 1).max(1) as f64)
+                    })
+                    .collect(),
+            };
+            let outs = pipe.plan_frontier(&lat, &imp, &budgets, alpha, extended);
+            let mut t = Table::new(
+                &format!(
+                    "budget frontier {arch} [{}] (importance: {src}, vanilla {} ms)",
+                    lat.source,
+                    fmt_ms(vanilla)
+                ),
+                &["T0 (ms)", "est (ms)", "speedup", "|A|", "|S|", "objective"],
+            );
+            let mut csv = String::from("t0_ms,est_ms,objective,n_a,n_s\n");
+            for (t0, out) in budgets.iter().zip(&outs) {
+                match out {
+                    Some(o) => {
+                        t.row(vec![
+                            fmt_ms(*t0),
+                            fmt_ms(o.est_latency_ms),
+                            format!("{:.2}x", vanilla / o.est_latency_ms),
+                            o.a.len().to_string(),
+                            o.s.len().to_string(),
+                            format!("{:+.4}", o.objective),
+                        ]);
+                        csv.push_str(&format!(
+                            "{:.4},{:.4},{:.6},{},{}\n",
+                            t0,
+                            o.est_latency_ms,
+                            o.objective,
+                            o.a.len(),
+                            o.s.len()
+                        ));
+                    }
+                    None => {
+                        t.row(vec![
+                            fmt_ms(*t0),
+                            "-".into(),
+                            "-".into(),
+                            "-".into(),
+                            "-".into(),
+                            "infeasible".into(),
+                        ]);
+                        csv.push_str(&format!("{t0:.4},,,,\n"));
+                    }
+                }
+            }
+            print!("{}", t.render());
+            let dir = root.join("reports");
+            std::fs::create_dir_all(&dir)?;
+            let path = dir.join(format!("frontier_{arch}.csv"));
+            std::fs::write(&path, csv)?;
+            println!("frontier series written to {}", path.display());
         }
         "plan-demo" => {
             // write a plan from the structural proxy importance (no

@@ -1,0 +1,278 @@
+//! Offline stub of the `xla-rs` PJRT binding (substrate: the build
+//! image ships neither xla_extension nor crates.io access, so the
+//! binding is vendored as an API-surface stub — see vendor/README.md).
+//!
+//! `Literal` is fully functional (host-side dense arrays, f32/i32,
+//! reshape/convert/tuple), so everything that only moves tensors
+//! through literals — checkpointing, serving plumbing, unit tests —
+//! works.  Compilation/execution of HLO artifacts is NOT available:
+//! `PjRtLoadedExecutable::execute` returns a descriptive error.  The
+//! coordinator paths that need real execution (pretrain, importance
+//! probes, measured latency, serving) detect this at artifact-load or
+//! execute time; the DP planner, latency models, merge engine, and
+//! report layers are engine-free and unaffected.
+//!
+//! Swap this stub for the real binding by pointing the workspace `xla`
+//! dependency at xla-rs with the xla_extension runtime installed.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(msg: &str) -> Result<T> {
+    Err(Error(msg.to_string()))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+    Tuple,
+}
+
+#[derive(Debug, Clone)]
+enum Payload {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side dense array (or tuple of arrays), row-major like the real
+/// `xla::Literal`.  Deliberately no public `Clone`, matching the real
+/// binding (callers round-trip through host tensors to copy).
+#[derive(Debug)]
+pub struct Literal {
+    dims: Vec<i64>,
+    payload: Payload,
+}
+
+/// Array shape descriptor returned by `Literal::array_shape`.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: PrimitiveType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn primitive_type(&self) -> PrimitiveType {
+        self.ty
+    }
+}
+
+/// Element types extractable from a `Literal` via `to_vec`.
+pub trait NativeType: Sized + Copy {
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn extract(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.payload {
+            Payload::F32(v) => Ok(v.clone()),
+            Payload::S32(v) => Ok(v.iter().map(|&x| x as f32).collect()),
+            Payload::Tuple(_) => err("to_vec on a tuple literal"),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn extract(lit: &Literal) -> Result<Vec<i32>> {
+        match &lit.payload {
+            Payload::S32(v) => Ok(v.clone()),
+            Payload::F32(v) => Ok(v.iter().map(|&x| x as i32).collect()),
+            Payload::Tuple(_) => err("to_vec on a tuple literal"),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 f32 literal from a host slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { dims: vec![data.len() as i64], payload: Payload::F32(data.to_vec()) }
+    }
+
+    /// Tuple literal from parts (what executables return).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { dims: Vec::new(), payload: Payload::Tuple(parts) }
+    }
+
+    fn elem_count(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::S32(v) => v.len(),
+            Payload::Tuple(_) => 0,
+        }
+    }
+
+    /// Same data, new dims (product must match the element count).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.payload, Payload::Tuple(_)) {
+            return err("reshape on a tuple literal");
+        }
+        let n: i64 = dims.iter().product();
+        if n as usize != self.elem_count() {
+            return Err(Error(format!(
+                "reshape {:?} ({} elems) -> {:?} ({} elems)",
+                self.dims,
+                self.elem_count(),
+                dims,
+                n
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), payload: self.payload.clone() })
+    }
+
+    /// Element-type conversion (numeric cast).
+    pub fn convert(&self, ty: PrimitiveType) -> Result<Literal> {
+        let payload = match (&self.payload, ty) {
+            (Payload::F32(v), PrimitiveType::S32) => {
+                Payload::S32(v.iter().map(|&x| x as i32).collect())
+            }
+            (Payload::S32(v), PrimitiveType::F32) => {
+                Payload::F32(v.iter().map(|&x| x as f32).collect())
+            }
+            (Payload::F32(v), PrimitiveType::F32) => Payload::F32(v.clone()),
+            (Payload::S32(v), PrimitiveType::S32) => Payload::S32(v.clone()),
+            _ => return err("unsupported convert"),
+        };
+        Ok(Literal { dims: self.dims.clone(), payload })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.payload {
+            Payload::F32(_) => PrimitiveType::F32,
+            Payload::S32(_) => PrimitiveType::S32,
+            Payload::Tuple(_) => return err("array_shape on a tuple literal"),
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.payload {
+            Payload::Tuple(parts) => Ok(parts),
+            _ => Ok(vec![self]),
+        }
+    }
+}
+
+const STUB_MSG: &str = "stub xla binding cannot execute HLO artifacts offline \
+                        (vendor/xla; link the real xla-rs + xla_extension to run them)";
+
+/// Stub PJRT client: constructible so engine-free code paths (planner,
+/// latency models, reports) can share the coordinator types; artifact
+/// execution errors out.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable)
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        match std::fs::metadata(path) {
+            Ok(_) => Ok(HloModuleProto),
+            Err(e) => Err(Error(format!("reading HLO text {path}: {e}"))),
+        }
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        err(STUB_MSG)
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        err(STUB_MSG)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[7]).is_err());
+        // rank-0 scalar
+        let s = Literal::vec1(&[4.5]).reshape(&[]).unwrap();
+        assert_eq!(s.array_shape().unwrap().dims().len(), 0);
+    }
+
+    #[test]
+    fn convert_casts() {
+        let l = Literal::vec1(&[1.9, -2.2]);
+        let s = l.convert(PrimitiveType::S32).unwrap();
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![1, -2]);
+        let f = s.convert(PrimitiveType::F32).unwrap();
+        assert_eq!(f.to_vec::<f32>().unwrap(), vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn tuples_decompose() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1.0]), Literal::vec1(&[2.0])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].to_vec::<f32>().unwrap(), vec![2.0]);
+    }
+
+    #[test]
+    fn execution_is_stubbed() {
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&XlaComputation::from_proto(&HloModuleProto)).unwrap();
+        let args: Vec<Literal> = vec![];
+        assert!(exe.execute::<Literal>(&args).is_err());
+    }
+}
