@@ -108,22 +108,20 @@ fn main() -> anyhow::Result<()> {
             ]);
         }
         None => {
-            // no pass-2 plan artifacts: serve the masked (id-activation)
-            // graph — same depth as vanilla but the DP's activation
-            // pattern; still demonstrates the serving path end to end.
-            let infer = pipe.entry.artifact("infer_b8")?.clone();
-            let mask = pipe.mask_for_a(&out.a);
-            let mask_lit = Tensor::from_vec(&[mask.len()], mask)?.to_literal()?;
-            let mut head = Vec::new();
-            for l in ts.params.iter().chain(ts.state.iter()) {
-                head.push(Tensor::from_literal(l)?.to_literal()?);
-            }
-            let server = Server::new(&engine, &infer, head, vec![mask_lit], cfg.clone())?;
+            // no pass-2 plan artifacts: serve the SAME merged weights on
+            // the native Host backend instead (kernels layer, unpadded
+            // batches, zero PJRT) — depth-compressed serving numbers no
+            // longer require `make plans` at all.
+            let net = pipe.merge(&ps, &out)?;
+            let depth = net.depth();
+            let exec = repro::runtime::host_exec::HostExec::new(net)?;
+            let hw = pipe.entry.input[1];
+            let server = Server::host(exec, &[3, hw, hw], cfg.clone())?;
             let (rx, handles) = spawn_load(&data, clients, requests, 0);
             let stats = server.run(rx)?;
             let correct: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
             table.row(vec![
-                "masked (no pass-2 plan; run `repro plan` + `make plans`)".into(),
+                format!("compressed ({depth} convs, host backend; `make plans` for PJRT)"),
                 format!("{:.1}", stats.throughput()),
                 format!("{:.2}", stats.percentile_ms(0.5)),
                 format!("{:.2}", stats.percentile_ms(0.95)),

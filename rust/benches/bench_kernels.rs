@@ -1,0 +1,131 @@
+//! Kernel micro-benchmarks: naive vs cache-blocked vs pool-parallel
+//! GEMM and convolution at MBV2-tail sizes, recorded to
+//! BENCH_kernels.json (same schema discipline as BENCH_dp.json).
+//!
+//! "Naive" is the textbook ijk triple loop with strided B access —
+//! exactly what the old `fc`/glue paths did; "blocked" is the
+//! register-tiled kernel on one worker; "parallel" the same kernel on
+//! the global pool.  Before timing, every variant is cross-checked
+//! against the naive result (and blocked-vs-parallel for bitwise
+//! equality), so a broken kernel can never report a good number.
+
+use repro::kernels::conv::{conv2d_naive, conv2d_with, ConvGeom};
+use repro::kernels::gemm::{gemm_naive, gemm_with};
+use repro::kernels::pool::Pool;
+use repro::util::bench::{black_box, Bencher};
+use repro::util::json::Json;
+use repro::util::rng::Rng;
+
+fn randv(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn main() {
+    let par = Pool::global();
+    let ser = Pool::serial();
+    println!("# bench_kernels — naive vs blocked vs parallel ({} workers)", par.workers());
+    let mut record = vec![
+        ("bench", Json::str_of("kernels_naive_vs_blocked_vs_parallel")),
+        ("workers", Json::int(par.workers() as i64)),
+    ];
+
+    // -- GEMM at MBV2-tail shapes: a 1x1 conv over (C_in, H*W) is a
+    // [c_out, c_in] x [c_in, oh*ow] product; the classifier head at
+    // serve batch 64 is [64, 1280] x [1280, 100] ------------------------
+    let mut gemm_rows_json = Vec::new();
+    let mut rng = Rng::new(1);
+    for (tag, m, k, n) in [
+        ("mbv2_tail_1x1 (320x960x49)", 320usize, 960usize, 49usize),
+        ("mbv2_head_1x1 (1280x320x49)", 1280, 320, 49),
+        ("fc_head_b64 (64x1280x100)", 64, 1280, 100),
+    ] {
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let mut c_naive = vec![0.0f32; m * n];
+        let mut c_blk = vec![0.0f32; m * n];
+        let mut c_par = vec![0.0f32; m * n];
+        // correctness gate before timing anything
+        gemm_naive(m, k, n, &a, &b, &mut c_naive);
+        gemm_with(&ser, m, k, n, &a, &b, &mut c_blk);
+        gemm_with(&par, m, k, n, &a, &b, &mut c_par);
+        let max_err = c_naive
+            .iter()
+            .zip(&c_blk)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        // different summation orders: tolerance scales with sqrt(k)
+        // (values are unit normals; a real bug is off by O(sqrt(k)))
+        assert!(max_err < 1e-2 * (k as f32).sqrt(), "{tag}: blocked err {max_err}");
+        assert!(
+            c_blk.iter().zip(&c_par).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "{tag}: parallel result not byte-identical to blocked"
+        );
+        let sn = Bencher::new(&format!("gemm naive   {tag}"))
+            .run(|| gemm_naive(m, k, n, black_box(&a), black_box(&b), &mut c_naive));
+        let sb = Bencher::new(&format!("gemm blocked {tag}"))
+            .run(|| gemm_with(&ser, m, k, n, black_box(&a), black_box(&b), &mut c_blk));
+        let sp = Bencher::new(&format!("gemm parallel{tag}"))
+            .run(|| gemm_with(&par, m, k, n, black_box(&a), black_box(&b), &mut c_par));
+        let (su_b, su_p) = (sn.median_ns / sb.median_ns, sn.median_ns / sp.median_ns);
+        println!("{tag}: blocked {su_b:.1}x, parallel {su_p:.1}x over naive");
+        gemm_rows_json.push(Json::obj_from(vec![
+            ("shape", Json::str_of(tag)),
+            ("m", Json::int(m as i64)),
+            ("k", Json::int(k as i64)),
+            ("n", Json::int(n as i64)),
+            ("naive_ms", Json::num(sn.median_ms())),
+            ("blocked_ms", Json::num(sb.median_ms())),
+            ("parallel_ms", Json::num(sp.median_ms())),
+            ("speedup_blocked", Json::num(su_b)),
+            ("speedup_parallel", Json::num(su_p)),
+        ]));
+    }
+    record.push(("gemm", Json::Arr(gemm_rows_json)));
+
+    // -- conv: merged 3x3 dense conv (MBV2 mid block after merging) and
+    // the serve-batch-8 tail conv ---------------------------------------
+    let mut conv_rows_json = Vec::new();
+    for (tag, n, ci, hw, co, kk, stride, pad) in [
+        ("merged_3x3 (1x96x14x14 -> 96)", 1usize, 96usize, 14usize, 96usize, 3usize, 1usize, 1usize),
+        ("tail_1x1_b8 (8x160x7x7 -> 960)", 8, 160, 7, 960, 1, 1, 0),
+    ] {
+        let mut x = repro::tensor::Tensor::zeros(&[n, ci, hw, hw]);
+        for v in x.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let mut w = repro::tensor::Tensor::zeros(&[co, ci, kk, kk]);
+        for v in w.data.iter_mut() {
+            *v = rng.normal() * 0.05;
+        }
+        let g = ConvGeom { stride, pad, groups: 1 };
+        let want = conv2d_naive(&x, &w, g);
+        let blk = conv2d_with(&ser, &x, &w, g).unwrap();
+        let parr = conv2d_with(&par, &x, &w, g).unwrap();
+        assert!(want.max_abs_diff(&blk) < 1e-2, "{tag}: im2col diverges from naive");
+        assert!(
+            blk.data.iter().zip(&parr.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{tag}: parallel conv not byte-identical"
+        );
+        let sn = Bencher::new(&format!("conv naive   {tag}"))
+            .run(|| black_box(conv2d_naive(black_box(&x), black_box(&w), g)));
+        let sb = Bencher::new(&format!("conv im2col  {tag}"))
+            .run(|| black_box(conv2d_with(&ser, black_box(&x), black_box(&w), g).unwrap()));
+        let sp = Bencher::new(&format!("conv parallel{tag}"))
+            .run(|| black_box(conv2d_with(&par, black_box(&x), black_box(&w), g).unwrap()));
+        let (su_b, su_p) = (sn.median_ns / sb.median_ns, sn.median_ns / sp.median_ns);
+        println!("{tag}: im2col {su_b:.1}x, parallel {su_p:.1}x over naive");
+        conv_rows_json.push(Json::obj_from(vec![
+            ("shape", Json::str_of(tag)),
+            ("naive_ms", Json::num(sn.median_ms())),
+            ("blocked_ms", Json::num(sb.median_ms())),
+            ("parallel_ms", Json::num(sp.median_ms())),
+            ("speedup_blocked", Json::num(su_b)),
+            ("speedup_parallel", Json::num(su_p)),
+        ]));
+    }
+    record.push(("conv", Json::Arr(conv_rows_json)));
+
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_kernels.json");
+    std::fs::write(&path, Json::obj_from(record).to_string()).expect("writing BENCH_kernels.json");
+    println!("kernel record written to {}", path.display());
+}

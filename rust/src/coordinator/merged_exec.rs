@@ -1,45 +1,87 @@
 //! Chained merged-network executor: runs a compressed network through
 //! its per-block AOT conv probes (one PJRT executable per merged conv)
 //! with the cheap glue — bias, relu6, residual adds, max-pool, global
-//! pool, classifier — on the host.
+//! pool, classifier — on the host via the shared `kernels` layer.
 //!
 //! This is what lets the pipeline evaluate ANY (A, S) the DP emits with
 //! pass-1 artifacts only (no python in the loop); the per-plan fused
 //! `infer_merged` artifacts from pass 2 remain the fast serving path.
+//! With [`Backend::Host`] the probes are bypassed entirely and the
+//! whole forward runs on [`HostExec`] — no PJRT, any batch size.
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::kernels::elementwise::{
+    add_bias_nchw, add_inplace, global_avg_pool, max_pool_2x2, relu6_inplace,
+};
+use crate::kernels::gemm::{linear, WeightLayout};
 use crate::merge::plan::MergedNet;
 use crate::runtime::engine::Engine;
+use crate::runtime::host_exec::{residual_keep_set, Backend, HostExec};
 use crate::runtime::manifest::ArchEntry;
 use crate::tensor::Tensor;
+
+pub use crate::kernels::elementwise::argmax;
 
 pub struct MergedExec<'e> {
     pub engine: &'e Engine,
     pub entry: ArchEntry,
     pub net: MergedNet,
-    /// probe batch (fixed at AOT time); inputs are padded up to it
+    /// probe batch (fixed at AOT time); PJRT inputs are padded up to it
     pub batch: usize,
+    pub backend: Backend,
+    /// segment outputs some later layer reads through `add_from_seg` —
+    /// everything else is forwarded without an extra clone
+    keep_seg: Vec<bool>,
+    host: Option<HostExec>,
 }
 
 impl<'e> MergedExec<'e> {
     pub fn new(engine: &'e Engine, entry: &ArchEntry, net: MergedNet) -> Result<MergedExec<'e>> {
-        for ml in &net.layers {
-            if !entry.blocks_eager.contains_key(&(ml.i, ml.j)) {
-                bail!("no eager probe for merged block ({}, {}]", ml.i, ml.j);
-            }
-        }
-        Ok(MergedExec { engine, entry: entry.clone(), net, batch: entry.latency_batch })
+        MergedExec::with_backend(engine, entry, net, Backend::Pjrt)
     }
 
-    /// Logits for a batch (any size; internally padded to probe batch).
+    pub fn with_backend(
+        engine: &'e Engine,
+        entry: &ArchEntry,
+        net: MergedNet,
+        backend: Backend,
+    ) -> Result<MergedExec<'e>> {
+        let host = match backend {
+            Backend::Host => Some(HostExec::new(net.clone_shallow())?),
+            Backend::Pjrt => {
+                for ml in &net.layers {
+                    if !entry.blocks_eager.contains_key(&(ml.i, ml.j)) {
+                        bail!("no eager probe for merged block ({}, {}]", ml.i, ml.j);
+                    }
+                }
+                None
+            }
+        };
+        let keep_seg = residual_keep_set(&net.layers);
+        Ok(MergedExec {
+            engine,
+            entry: entry.clone(),
+            net,
+            batch: entry.latency_batch,
+            backend,
+            keep_seg,
+            host,
+        })
+    }
+
+    /// Logits for a batch.  Pjrt: any size up to the probe batch,
+    /// internally padded to it.  Host: any size, executed at that size.
     pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        if let Some(host) = &self.host {
+            return host.forward(x);
+        }
         let n = x.shape[0];
         if n > self.batch {
             bail!("batch {} exceeds probe batch {}", n, self.batch);
         }
         let mut cur = pad_batch(x, self.batch)?;
-        let mut seg_out: Vec<Tensor> = Vec::with_capacity(self.net.layers.len());
+        let mut seg_out: Vec<Option<Tensor>> = Vec::with_capacity(self.net.layers.len());
         for (li, ml) in self.net.layers.iter().enumerate() {
             let probe = self
                 .entry
@@ -51,20 +93,28 @@ impl<'e> MergedExec<'e> {
             // eager probe = bare conv (x, w); bias applied host-side
             let out = self.engine.exec(probe, &[&cur, w])?;
             let mut y = out.into_iter().next().unwrap();
-            add_bias(&mut y, &b.data);
+            add_bias_nchw(&mut y, &b.data);
             if let Some(src) = ml.add_from_seg {
                 if src < 0 {
                     bail!("residual from the network input is not supported");
                 }
-                add_inplace(&mut y, &seg_out[src as usize])?;
+                let base = seg_out[src as usize]
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("residual source {src} was not retained"))?;
+                add_inplace(&mut y, base)?;
             }
             if ml.act {
-                relu6(&mut y);
+                relu6_inplace(&mut y);
             }
             if ml.pool_after {
                 y = max_pool_2x2(&y);
             }
-            seg_out.push(y.clone());
+            // clone only the activations a later residual actually reads
+            if self.keep_seg[li] {
+                seg_out.push(Some(y.clone()));
+            } else {
+                seg_out.push(None);
+            }
             cur = y;
         }
         let pooled = global_avg_pool(&cur);
@@ -81,6 +131,9 @@ impl<'e> MergedExec<'e> {
         &self,
         batcher: &crate::data::batcher::Batcher,
     ) -> Result<crate::trainer::eval::EvalResult> {
+        if let Some(host) = &self.host {
+            return host.eval(batcher, self.batch);
+        }
         let mut correct = 0usize;
         let mut total = 0usize;
         for nb in 0..batcher.val_batches(self.batch) {
@@ -104,16 +157,6 @@ impl<'e> MergedExec<'e> {
     }
 }
 
-pub fn argmax(row: &[f32]) -> usize {
-    let mut best = 0;
-    for (n, &v) in row.iter().enumerate() {
-        if v > row[best] {
-            best = n;
-        }
-    }
-    best
-}
-
 fn pad_batch(x: &Tensor, batch: usize) -> Result<Tensor> {
     if x.shape[0] == batch {
         return Ok(x.clone());
@@ -132,87 +175,13 @@ fn slice_batch(x: &Tensor, n: usize) -> Result<Tensor> {
     Tensor::from_vec(&shape, x.data[..n * per].to_vec())
 }
 
-fn add_bias(y: &mut Tensor, b: &[f32]) {
-    let (n, c, h, w) = (y.shape[0], y.shape[1], y.shape[2], y.shape[3]);
-    for bi in 0..n {
-        for ci in 0..c {
-            let base = ((bi * c + ci) * h) * w;
-            for e in 0..h * w {
-                y.data[base + e] += b[ci];
-            }
-        }
-    }
-}
-
-fn relu6(y: &mut Tensor) {
-    for v in y.data.iter_mut() {
-        *v = v.clamp(0.0, 6.0);
-    }
-}
-
-fn add_inplace(y: &mut Tensor, other: &Tensor) -> Result<()> {
-    if y.shape != other.shape {
-        bail!("residual shape mismatch {:?} vs {:?}", y.shape, other.shape);
-    }
-    for (a, b) in y.data.iter_mut().zip(&other.data) {
-        *a += b;
-    }
-    Ok(())
-}
-
-fn max_pool_2x2(x: &Tensor) -> Tensor {
-    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
-    let (oh, ow) = (h / 2, w / 2);
-    let mut out = Tensor::zeros(&[n, c, oh, ow]);
-    for b in 0..n {
-        for ch in 0..c {
-            for y in 0..oh {
-                for xx in 0..ow {
-                    let mut m = f32::NEG_INFINITY;
-                    for dy in 0..2 {
-                        for dx in 0..2 {
-                            m = m.max(x.at4(b, ch, 2 * y + dy, 2 * xx + dx));
-                        }
-                    }
-                    *out.at4_mut(b, ch, y, xx) = m;
-                }
-            }
-        }
-    }
-    out
-}
-
-fn global_avg_pool(x: &Tensor) -> Tensor {
-    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
-    let mut out = Tensor::zeros(&[n, c]);
-    let inv = 1.0 / (h * w) as f32;
-    for b in 0..n {
-        for ch in 0..c {
-            let base = ((b * c + ch) * h) * w;
-            let s: f32 = x.data[base..base + h * w].iter().sum();
-            out.data[b * c + ch] = s * inv;
-        }
-    }
-    out
-}
-
+/// Classifier head: logits = x[n, ci] · w (+ b), with `w` in the
+/// checkpoint layout `[ci, nc]` — routed through `kernels::gemm` so the
+/// weight walks row-major (the old loop strided it column-major).
+/// Out-major `[nc, ci]` weights should call `linear(..,
+/// WeightLayout::OutIn)` directly for the transposed fast path.
 fn fc(x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
-    let (n, ci) = (x.shape[0], x.shape[1]);
-    let (wi, nc) = (w.shape[0], w.shape[1]);
-    if ci != wi {
-        bail!("fc dim mismatch {ci} vs {wi}");
-    }
-    let mut out = Tensor::zeros(&[n, nc]);
-    for bi in 0..n {
-        for o in 0..nc {
-            let mut acc = b.data[o];
-            for i in 0..ci {
-                acc += x.data[bi * ci + i] * w.data[i * nc + o];
-            }
-            out.data[bi * nc + o] = acc;
-        }
-    }
-    Ok(out)
+    linear(x, w, b, WeightLayout::InOut)
 }
 
 #[cfg(test)]
@@ -222,9 +191,9 @@ mod tests {
     #[test]
     fn host_ops() {
         let mut y = Tensor::from_vec(&[1, 2, 2, 2], vec![-1., 0., 3., 9., 1., 1., 1., 1.]).unwrap();
-        add_bias(&mut y, &[1.0, -1.0]);
+        add_bias_nchw(&mut y, &[1.0, -1.0]);
         assert_eq!(y.data, vec![0., 1., 4., 10., 0., 0., 0., 0.]);
-        relu6(&mut y);
+        relu6_inplace(&mut y);
         assert_eq!(y.data, vec![0., 1., 4., 6., 0., 0., 0., 0.]);
         let p = max_pool_2x2(&y);
         assert_eq!(p.shape, vec![1, 2, 1, 1]);

@@ -30,6 +30,7 @@ use crate::model::spec::ArchConfig;
 use crate::planner::frontier::{Planner, Space, TableImportance};
 use crate::planner::solver::PlanOutcome as SolvedPlan;
 use crate::runtime::engine::Engine;
+use crate::runtime::host_exec::Backend;
 use crate::runtime::manifest::ArchEntry;
 use crate::trainer::eval::{eval_masked, EvalResult};
 use crate::trainer::params::ParamSet;
@@ -367,9 +368,21 @@ impl<'e> Pipeline<'e> {
             .context("building merged network")
     }
 
-    /// Accuracy of the merged network via the chained executor.
+    /// Accuracy of the merged network via the chained PJRT executor.
     pub fn eval_merged(&self, net: &MergedNet, data: &SynthSpec) -> Result<EvalResult> {
-        let exec = MergedExec::new(self.engine, &self.entry, net.clone_shallow())?;
+        self.eval_merged_backend(net, data, Backend::Pjrt)
+    }
+
+    /// Same, on an explicit backend: `Backend::Host` runs the whole
+    /// forward on the native kernel layer (works with zero artifacts).
+    pub fn eval_merged_backend(
+        &self,
+        net: &MergedNet,
+        data: &SynthSpec,
+        backend: Backend,
+    ) -> Result<EvalResult> {
+        let exec =
+            MergedExec::with_backend(self.engine, &self.entry, net.clone_shallow(), backend)?;
         let batcher = Batcher::new(data.clone(), self.entry.train_batch, 0, false);
         exec.eval(&batcher)
     }

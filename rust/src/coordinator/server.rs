@@ -2,10 +2,17 @@
 //!
 //! Clients submit single images through an MPSC channel; the serving
 //! loop drains up to `max_batch` requests or waits at most `max_wait`,
-//! pads the batch to the AOT graph's batch size, runs ONE PJRT
-//! execution, and replies with per-request predictions + latency.
-//! The PJRT engine stays on the serving thread (it is not Send); the
-//! load-generator threads only touch channels.
+//! then runs ONE execution and replies with per-request predictions +
+//! latency.  Two backends:
+//!
+//! * **Pjrt** — the AOT static-graph artifact: the batch is padded up
+//!   to the graph's compile-time batch size and the PJRT engine stays
+//!   on the serving thread (it is not Send).
+//! * **Host** — `HostExec` on the native kernel layer: the batch runs
+//!   at its ACTUAL size (a size-1 batch does size-1 work), no graph,
+//!   no artifacts, no padding.
+//!
+//! The load-generator threads only touch channels either way.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::{Duration, Instant};
@@ -14,6 +21,7 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::merged_exec::argmax;
 use crate::runtime::engine::Engine;
+use crate::runtime::host_exec::HostExec;
 use crate::runtime::manifest::ArtifactDef;
 use crate::tensor::Tensor;
 
@@ -42,22 +50,36 @@ pub struct ServerConfig {
 pub struct ServeStats {
     pub served: usize,
     pub batches: usize,
-    pub latencies_ms: Vec<f64>,
+    /// raw samples; private so the only writer is `record()` — the
+    /// sorted cache below is invalidated by length, which is airtight
+    /// exactly because nothing can mutate samples in place
+    latencies_ms: Vec<f64>,
     pub wall: Duration,
+    /// sorted view of `latencies_ms`, built lazily on the first
+    /// percentile query and reused until the samples change — report
+    /// paths ask for p50/p95/p99 back to back and used to re-sort the
+    /// full vector for each
+    sorted_cache: std::cell::RefCell<Vec<f64>>,
 }
 
 impl ServeStats {
+    pub fn record(&mut self, latency_ms: f64) {
+        self.latencies_ms.push(latency_ms);
+        self.served += 1;
+    }
+
     /// Percentile with linear interpolation between order statistics
-    /// (the numpy default).  The previous truncating index
-    /// `((len-1) * p) as usize` rounded DOWN to the nearest sample,
-    /// systematically underestimating tail percentiles — on 5 samples,
-    /// p95 reported the 4th-smallest value instead of nearly the max.
+    /// (the numpy default), over a cached sorted view.
     pub fn percentile_ms(&self, p: f64) -> f64 {
         if self.latencies_ms.is_empty() {
             return f64::NAN;
         }
-        let mut v = self.latencies_ms.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut cache = self.sorted_cache.borrow_mut();
+        if cache.len() != self.latencies_ms.len() {
+            *cache = self.latencies_ms.clone();
+            cache.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+        let v = &*cache;
         let rank = (v.len() - 1) as f64 * p.clamp(0.0, 1.0);
         let lo = rank.floor() as usize;
         let hi = rank.ceil() as usize;
@@ -74,23 +96,29 @@ impl ServeStats {
     }
 }
 
-/// Serving loop over a *static-graph* infer artifact.
-///
-/// `param_lits` are the leading artifact inputs (params [+state] [+mask]
-/// depending on the graph); the batch image tensor is the remaining
-/// input.  `mask_tail` carries trailing inputs after x (e.g. the
-/// activation mask of the vanilla infer graph).
+enum ServeBackend<'e> {
+    /// Static-graph infer artifact; batches padded to `graph_batch`.
+    /// `head` are the leading inputs (params [+state] [+mask] depending
+    /// on the graph), `tail` trailing inputs after x.
+    Pjrt {
+        engine: &'e Engine,
+        infer: ArtifactDef,
+        head: Vec<xla::Literal>,
+        tail: Vec<xla::Literal>,
+        graph_batch: usize,
+    },
+    /// Native merged-network execution at actual batch size.
+    Host { exec: HostExec, image_shape: Vec<usize> },
+}
+
 pub struct Server<'e> {
-    pub engine: &'e Engine,
-    pub infer: ArtifactDef,
-    pub head: Vec<xla::Literal>,
-    pub tail: Vec<xla::Literal>,
-    pub graph_batch: usize,
+    backend: ServeBackend<'e>,
     pub image_elems: usize,
     pub cfg: ServerConfig,
 }
 
 impl<'e> Server<'e> {
+    /// PJRT serving over a *static-graph* infer artifact.
     pub fn new(
         engine: &'e Engine,
         infer: &ArtifactDef,
@@ -112,21 +140,77 @@ impl<'e> Server<'e> {
             bail!("max_batch {} exceeds graph batch {}", cfg.max_batch, graph_batch);
         }
         Ok(Server {
-            engine,
-            infer: infer.clone(),
-            head,
-            tail,
-            graph_batch,
+            backend: ServeBackend::Pjrt {
+                engine,
+                infer: infer.clone(),
+                head,
+                tail,
+                graph_batch,
+            },
             image_elems,
             cfg,
         })
+    }
+
+    /// Host serving: a merged network on the native kernel layer.
+    /// `image_shape` is CHW; no graph batch exists, so any `max_batch`
+    /// is legal and every batch runs unpadded.
+    pub fn host(exec: HostExec, image_shape: &[usize], cfg: ServerConfig) -> Result<Server<'static>> {
+        if image_shape.len() != 3 {
+            bail!("image_shape must be CHW, got {image_shape:?}");
+        }
+        let image_elems = image_shape.iter().product();
+        Ok(Server {
+            backend: ServeBackend::Host { exec, image_shape: image_shape.to_vec() },
+            image_elems,
+            cfg,
+        })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            ServeBackend::Pjrt { .. } => "pjrt",
+            ServeBackend::Host { .. } => "host",
+        }
+    }
+
+    /// Logits for an assembled batch of `bs` requests.
+    fn execute(&self, batch: &[Request], bs: usize) -> Result<Tensor> {
+        match &self.backend {
+            ServeBackend::Pjrt { engine, infer, head, tail, graph_batch } => {
+                // pad up to the compile-time graph batch
+                let xdef = &infer.inputs[head.len()];
+                let mut x = Tensor::zeros(&xdef.shape);
+                debug_assert_eq!(xdef.shape[0], *graph_batch);
+                for (n, r) in batch.iter().enumerate() {
+                    x.data[n * self.image_elems..(n + 1) * self.image_elems]
+                        .copy_from_slice(&r.image);
+                }
+                let x_lit = x.to_literal()?;
+                let mut inputs: Vec<&xla::Literal> = head.iter().collect();
+                inputs.push(&x_lit);
+                inputs.extend(tail.iter());
+                let out = engine.exec_borrowed(infer, &inputs)?;
+                Tensor::from_literal(&out[0])
+            }
+            ServeBackend::Host { exec, image_shape } => {
+                // actual batch size: no padding, no wasted FLOPs
+                let shape =
+                    [&[bs][..], image_shape.as_slice()].concat();
+                let mut x = Tensor::zeros(&shape);
+                for (n, r) in batch.iter().enumerate() {
+                    x.data[n * self.image_elems..(n + 1) * self.image_elems]
+                        .copy_from_slice(&r.image);
+                }
+                exec.forward(&x)
+            }
+        }
     }
 
     /// Run until `rx` disconnects; returns serving statistics.
     pub fn run(&self, rx: Receiver<Request>) -> Result<ServeStats> {
         let mut stats = ServeStats::default();
         let t0 = Instant::now();
-        let xdef = &self.infer.inputs[self.head.len()];
         loop {
             // block for the first request of a batch
             let first = match rx.recv() {
@@ -145,28 +229,18 @@ impl<'e> Server<'e> {
                     Err(_) => break,
                 }
             }
-            // assemble padded batch tensor
-            let mut x = Tensor::zeros(&xdef.shape);
-            for (n, r) in batch.iter().enumerate() {
+            for r in &batch {
                 if r.image.len() != self.image_elems {
                     bail!("request image has {} elems, want {}", r.image.len(), self.image_elems);
                 }
-                x.data[n * self.image_elems..(n + 1) * self.image_elems]
-                    .copy_from_slice(&r.image);
             }
-            let x_lit = x.to_literal()?;
-            let mut inputs: Vec<&xla::Literal> = self.head.iter().collect();
-            inputs.push(&x_lit);
-            inputs.extend(self.tail.iter());
-            let out = self.engine.exec_borrowed(&self.infer, &inputs)?;
-            let logits = Tensor::from_literal(&out[0])?;
-            let nc = logits.shape[1];
             let bs = batch.len();
+            let logits = self.execute(&batch, bs)?;
+            let nc = logits.shape[1];
             for (n, r) in batch.into_iter().enumerate() {
                 let pred = argmax(&logits.data[n * nc..(n + 1) * nc]);
                 let latency = r.submitted.elapsed();
-                stats.served += 1;
-                stats.latencies_ms.push(latency.as_secs_f64() * 1e3);
+                stats.record(latency.as_secs_f64() * 1e3);
                 let _ = r.reply.send(Reply { pred, latency, batch_size: bs });
             }
             stats.batches += 1;
@@ -263,5 +337,69 @@ mod tests {
         one.latencies_ms = vec![7.0];
         assert_eq!(one.percentile_ms(0.99), 7.0);
         assert!(ServeStats::default().percentile_ms(0.5).is_nan());
+    }
+
+    #[test]
+    fn sorted_cache_tracks_new_samples() {
+        let mut s = ServeStats::default();
+        s.record(5.0);
+        s.record(1.0);
+        assert_eq!(s.percentile_ms(0.0), 1.0);
+        assert_eq!(s.percentile_ms(1.0), 5.0);
+        // appending invalidates the cached view (length changes)
+        s.record(0.5);
+        assert_eq!(s.percentile_ms(0.0), 0.5);
+        assert_eq!(s.served, 3);
+    }
+
+    #[test]
+    fn host_server_serves_at_actual_batch_size() {
+        use crate::merge::plan::build_merged;
+        use crate::model::spec::testutil::tiny_config;
+        use crate::runtime::host_exec::HostExec;
+        use crate::trainer::params::ParamSet;
+
+        let cfg = tiny_config();
+        let ps = ParamSet::synthetic(&cfg, 41);
+        let net = build_merged(&cfg, &ps, &[1, 4, 5], &[4]).unwrap();
+        let exec = HostExec::new(net).unwrap();
+        let hw = cfg.spec.input_hw;
+        let server = Server::host(
+            exec,
+            &[3, hw, hw],
+            ServerConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        )
+        .unwrap();
+        assert_eq!(server.backend_name(), "host");
+        let mut data = crate::data::synth::SynthSpec::quickstart(hw);
+        data.num_classes = cfg.spec.num_classes;
+        let (rx, handles) = spawn_load(&data, 3, 5, 0);
+        let stats = server.run(rx).unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(stats.served, 15);
+        assert!(stats.batches >= 4); // 15 requests can't fit 3 batches of <=4
+        assert!(stats.percentile_ms(0.5) >= 0.0);
+        assert!(stats.mean_batch() >= 1.0 && stats.mean_batch() <= 4.0);
+    }
+
+    #[test]
+    fn host_server_rejects_bad_shapes() {
+        use crate::merge::plan::build_merged;
+        use crate::model::spec::testutil::tiny_config;
+        use crate::runtime::host_exec::HostExec;
+        use crate::trainer::params::ParamSet;
+
+        let cfg = tiny_config();
+        let ps = ParamSet::synthetic(&cfg, 42);
+        let net = build_merged(&cfg, &ps, &[1, 4, 5], &[4]).unwrap();
+        let exec = HostExec::new(net).unwrap();
+        assert!(Server::host(
+            exec,
+            &[3, 12],
+            ServerConfig { max_batch: 2, max_wait: Duration::from_millis(1) }
+        )
+        .is_err());
     }
 }

@@ -1,0 +1,271 @@
+//! Direct convolution as im2col + GEMM on the shared kernel layer.
+//!
+//! NCHW activations, OIHW kernels (grouped kernels as `[c_out,
+//! c_in/groups, kh, kw]`, matching the checkpoint layout).  Each
+//! (batch, group) pair lowers its receptive fields into a column matrix
+//! and multiplies by the group's weight slab — whose rows are already
+//! contiguous in the OIHW tensor, so no packing pass is needed.
+//!
+//! Parallel strategy: with several (batch, group) blocks the pool fans
+//! out over blocks (one im2col buffer per work item); a single block —
+//! the batch-1 dense conv that dominates Host serving — parallelizes
+//! inside the GEMM over output-channel rows instead.  Both schedules
+//! produce byte-identical output (per-element accumulation order is
+//! fixed by the k index alone), which the determinism tests pin.
+
+use anyhow::{bail, Result};
+
+use super::gemm::{gemm_rows, gemm_with};
+use super::pool::Pool;
+use crate::tensor::Tensor;
+
+/// Convolution geometry (square kernel taps come from the weight shape).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeom {
+    pub stride: usize,
+    pub pad: usize,
+    pub groups: usize,
+}
+
+impl ConvGeom {
+    pub fn unit() -> ConvGeom {
+        ConvGeom { stride: 1, pad: 0, groups: 1 }
+    }
+}
+
+/// Output spatial dims of a conv over (h, w).
+pub fn out_hw(h: usize, w: usize, kh: usize, kw: usize, g: ConvGeom) -> Result<(usize, usize)> {
+    if g.stride == 0 {
+        bail!("stride 0");
+    }
+    if h + 2 * g.pad < kh || w + 2 * g.pad < kw {
+        bail!("kernel {kh}x{kw} larger than padded input {h}x{w} (pad {})", g.pad);
+    }
+    Ok(((h + 2 * g.pad - kh) / g.stride + 1, (w + 2 * g.pad - kw) / g.stride + 1))
+}
+
+/// Lower one (batch, group) block of `x` into a column matrix:
+/// col[(c*kh*kw + dy*kw + dx), (y*ow + x)] with zero padding.
+#[allow(clippy::too_many_arguments)]
+fn im2col_block(
+    x: &Tensor,
+    n: usize,
+    c0: usize,
+    cg: usize,
+    kh: usize,
+    kw: usize,
+    g: ConvGeom,
+    oh: usize,
+    ow: usize,
+    col: &mut [f32],
+) {
+    let (h, w) = (x.shape[2], x.shape[3]);
+    let ohw = oh * ow;
+    debug_assert_eq!(col.len(), cg * kh * kw * ohw);
+    col.fill(0.0);
+    for c in 0..cg {
+        let plane = &x.data[((n * x.shape[1] + c0 + c) * h) * w..];
+        for dy in 0..kh {
+            for dx in 0..kw {
+                let crow = &mut col[((c * kh + dy) * kw + dx) * ohw..][..ohw];
+                for oy in 0..oh {
+                    let iy = (oy * g.stride + dy) as isize - g.pad as isize;
+                    if iy < 0 || iy as usize >= h {
+                        continue;
+                    }
+                    let src = &plane[iy as usize * w..iy as usize * w + w];
+                    let dst = &mut crow[oy * ow..(oy + 1) * ow];
+                    // unit stride: copy the contiguous input row slice
+                    if g.stride == 1 {
+                        let ix0 = dx as isize - g.pad as isize;
+                        let (sa, da) = if ix0 < 0 { (0usize, (-ix0) as usize) } else { (ix0 as usize, 0) };
+                        if da >= ow || sa >= w {
+                            continue;
+                        }
+                        let len = (ow - da).min(w - sa);
+                        dst[da..da + len].copy_from_slice(&src[sa..sa + len]);
+                    } else {
+                        for (ox, d) in dst.iter_mut().enumerate() {
+                            let ix = (ox * g.stride + dx) as isize - g.pad as isize;
+                            if ix >= 0 && (ix as usize) < w {
+                                *d = src[ix as usize];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// conv2d on an explicit pool: x [n, ci, h, w] * w [co, ci/g, kh, kw]
+/// -> [n, co, oh, ow].
+pub fn conv2d_with(pool: &Pool, x: &Tensor, w: &Tensor, g: ConvGeom) -> Result<Tensor> {
+    if x.rank() != 4 || w.rank() != 4 {
+        bail!("conv2d expects NCHW x and OIHW w, got {:?} / {:?}", x.shape, w.shape);
+    }
+    let (n, ci, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (co, cig, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    if g.groups == 0 || ci % g.groups != 0 || co % g.groups != 0 {
+        bail!("groups {} does not divide channels {ci} -> {co}", g.groups);
+    }
+    let cg = ci / g.groups;
+    let cog = co / g.groups;
+    if cig != cg {
+        bail!("weight c_in/g {cig} != {cg} (ci {ci}, groups {})", g.groups);
+    }
+    let (oh, ow) = out_hw(h, wd, kh, kw, g)?;
+    let ohw = oh * ow;
+    let kdim = cg * kh * kw;
+    let mut out = Tensor::zeros(&[n, co, oh, ow]);
+    if n * g.groups == 1 {
+        // one block: parallelize the GEMM itself over c_out rows
+        let mut col = vec![0.0f32; kdim * ohw];
+        im2col_block(x, 0, 0, cg, kh, kw, g, oh, ow, &mut col);
+        gemm_with(pool, co, kdim, ohw, &w.data, &col, &mut out.data);
+    } else {
+        // out.data is [(n, g) block][cog][ohw] contiguous: fan blocks out
+        pool.for_each_chunk(&mut out.data, cog * ohw, |bi, oblk| {
+            let (ni, gi) = (bi / g.groups, bi % g.groups);
+            let mut col = vec![0.0f32; kdim * ohw];
+            im2col_block(x, ni, gi * cg, cg, kh, kw, g, oh, ow, &mut col);
+            gemm_rows(cog, kdim, ohw, &w.data[gi * cog * kdim..(gi + 1) * cog * kdim], &col, oblk, false);
+        });
+    }
+    Ok(out)
+}
+
+/// conv2d on the process-global pool.
+pub fn conv2d(x: &Tensor, w: &Tensor, g: ConvGeom) -> Result<Tensor> {
+    conv2d_with(&Pool::global(), x, w, g)
+}
+
+/// Literal direct convolution (7-loop, zero-padded, grouped) — the
+/// oracle the property tests pin `conv2d` against, and the bench
+/// baseline.  Panics on malformed shapes; use `conv2d` for real work.
+pub fn conv2d_naive(x: &Tensor, w: &Tensor, g: ConvGeom) -> Tensor {
+    let (n, ci, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (co, _cig, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let (oh, ow) = out_hw(h, wd, kh, kw, g).unwrap();
+    let cg = ci / g.groups;
+    let cog = co / g.groups;
+    let mut out = Tensor::zeros(&[n, co, oh, ow]);
+    for b in 0..n {
+        for o in 0..co {
+            let gi = o / cog;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for c in 0..cg {
+                        for dy in 0..kh {
+                            let iy = (oy * g.stride + dy) as isize - g.pad as isize;
+                            if iy < 0 || iy as usize >= h {
+                                continue;
+                            }
+                            for dx in 0..kw {
+                                let ix = (ox * g.stride + dx) as isize - g.pad as isize;
+                                if ix < 0 || ix as usize >= wd {
+                                    continue;
+                                }
+                                acc += x.at4(b, gi * cg + c, iy as usize, ix as usize)
+                                    * w.at4(o, c, dy, dx);
+                            }
+                        }
+                    }
+                    *out.at4_mut(b, o, oy, ox) = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randt(shape: &[usize], rng: &mut Rng) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        for v in t.data.iter_mut() {
+            *v = rng.normal();
+        }
+        t
+    }
+
+    #[test]
+    fn conv_matches_naive_oracle_across_geometries() {
+        // the satellite property test: stride x pad x groups sweep
+        crate::util::prop::forall(40, 71, |rng| {
+            let groups = [1, 1, 2, 4][rng.below(4)];
+            let cg = 1 + rng.below(3);
+            let cog = 1 + rng.below(3);
+            let (ci, co) = (cg * groups, cog * groups);
+            let k = [1, 3, 5][rng.below(3)];
+            let stride = 1 + rng.below(3);
+            let pad = rng.below(k.min(3));
+            let h = k + stride * (1 + rng.below(4));
+            let n = 1 + rng.below(3);
+            let x = randt(&[n, ci, h, h], rng);
+            let w = randt(&[co, cg, k, k], rng);
+            let g = ConvGeom { stride, pad, groups };
+            let want = conv2d_naive(&x, &w, g);
+            let got = conv2d_with(&Pool::serial(), &x, &w, g).map_err(|e| e.to_string())?;
+            crate::prop_assert!(
+                got.shape == want.shape,
+                "shape {:?} vs {:?} (geom {:?})",
+                got.shape,
+                want.shape,
+                g
+            );
+            let err = got.max_abs_diff(&want);
+            crate::prop_assert!(err < 1e-3, "im2col vs naive err {err} (geom {g:?})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_conv_is_byte_identical() {
+        let mut rng = Rng::new(5);
+        // multi-block path (batch x groups) AND the single-block path
+        for (n, groups) in [(3usize, 2usize), (1, 1)] {
+            let x = randt(&[n, 8, 11, 11], &mut rng);
+            let w = randt(&[12, 8 / groups, 3, 3], &mut rng);
+            let g = ConvGeom { stride: 2, pad: 1, groups };
+            let a = conv2d_with(&Pool::serial(), &x, &w, g).unwrap();
+            for workers in [2usize, 5] {
+                let b = conv2d_with(&Pool::new(workers), &x, &w, g).unwrap();
+                assert!(
+                    a.data.iter().zip(&b.data).all(|(p, q)| p.to_bits() == q.to_bits()),
+                    "conv differs between 1 and {workers} workers (n={n} g={groups})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_matches_oracle() {
+        let mut rng = Rng::new(6);
+        let x = randt(&[2, 6, 9, 9], &mut rng);
+        let w = randt(&[6, 1, 3, 3], &mut rng);
+        let g = ConvGeom { stride: 1, pad: 1, groups: 6 };
+        let got = conv2d(&x, &w, g).unwrap();
+        let want = conv2d_naive(&x, &w, g);
+        assert_eq!(got.shape, vec![2, 6, 9, 9]);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn geometry_errors() {
+        let x = Tensor::zeros(&[1, 4, 5, 5]);
+        let w = Tensor::zeros(&[4, 4, 3, 3]);
+        assert!(conv2d(&x, &w, ConvGeom { stride: 0, pad: 0, groups: 1 }).is_err());
+        assert!(conv2d(&x, &w, ConvGeom { stride: 1, pad: 0, groups: 3 }).is_err());
+        let wbig = Tensor::zeros(&[4, 4, 7, 7]);
+        assert!(conv2d(&x, &wbig, ConvGeom { stride: 1, pad: 0, groups: 1 }).is_err());
+        let wgrp = Tensor::zeros(&[4, 2, 3, 3]);
+        assert!(conv2d(&x, &wgrp, ConvGeom { stride: 1, pad: 1, groups: 1 }).is_err());
+        // valid grouped shape passes
+        assert!(conv2d(&x, &wgrp, ConvGeom { stride: 1, pad: 1, groups: 2 }).is_ok());
+    }
+}

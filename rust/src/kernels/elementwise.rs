@@ -1,0 +1,133 @@
+//! Vectorizable elementwise / pooling / bias ops shared by the merged
+//! executors (`coordinator::merged_exec`, `runtime::host_exec`).
+//!
+//! Everything here walks contiguous slices with unit stride so LLVM
+//! auto-vectorizes the loops; the per-element quad-loops these replace
+//! lived in `merged_exec` and re-derived NCHW offsets per element.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// y[n, c, :, :] += b[c] for an NCHW tensor.
+pub fn add_bias_nchw(y: &mut Tensor, b: &[f32]) {
+    debug_assert_eq!(y.rank(), 4);
+    let c = y.shape[1];
+    debug_assert_eq!(b.len(), c);
+    let plane = y.shape[2] * y.shape[3];
+    for (ch, block) in y.data.chunks_mut(plane).enumerate() {
+        let bv = b[ch % c];
+        for v in block.iter_mut() {
+            *v += bv;
+        }
+    }
+}
+
+/// In-place relu6 (clamp to [0, 6]) over any tensor.
+pub fn relu6_inplace(y: &mut Tensor) {
+    for v in y.data.iter_mut() {
+        *v = v.clamp(0.0, 6.0);
+    }
+}
+
+/// y += other, elementwise (the residual add).
+pub fn add_inplace(y: &mut Tensor, other: &Tensor) -> Result<()> {
+    if y.shape != other.shape {
+        bail!("residual shape mismatch {:?} vs {:?}", y.shape, other.shape);
+    }
+    for (a, b) in y.data.iter_mut().zip(&other.data) {
+        *a += b;
+    }
+    Ok(())
+}
+
+/// 2x2 max pool, stride 2 (floor semantics on odd dims).
+pub fn max_pool_2x2(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    for p in 0..n * c {
+        let src = &x.data[p * h * w..(p + 1) * h * w];
+        let dst = &mut out.data[p * oh * ow..(p + 1) * oh * ow];
+        for y in 0..oh {
+            let r0 = &src[2 * y * w..2 * y * w + w];
+            let r1 = &src[(2 * y + 1) * w..(2 * y + 1) * w + w];
+            let drow = &mut dst[y * ow..(y + 1) * ow];
+            for (xx, d) in drow.iter_mut().enumerate() {
+                *d = r0[2 * xx].max(r0[2 * xx + 1]).max(r1[2 * xx]).max(r1[2 * xx + 1]);
+            }
+        }
+    }
+    out
+}
+
+/// [n, c, h, w] -> [n, c] spatial mean.
+pub fn global_avg_pool(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = Tensor::zeros(&[n, c]);
+    let plane = h * w;
+    let inv = 1.0 / plane as f32;
+    for (p, block) in x.data.chunks(plane).enumerate() {
+        out.data[p] = block.iter().sum::<f32>() * inv;
+    }
+    debug_assert_eq!(out.data.len(), n * c);
+    out
+}
+
+/// Index of the max element (first on ties).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (n, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = n;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bias_relu_pool_pipeline() {
+        // mirrors the old merged_exec::host_ops test on the new kernels
+        let mut y = Tensor::from_vec(&[1, 2, 2, 2], vec![-1., 0., 3., 9., 1., 1., 1., 1.]).unwrap();
+        add_bias_nchw(&mut y, &[1.0, -1.0]);
+        assert_eq!(y.data, vec![0., 1., 4., 10., 0., 0., 0., 0.]);
+        relu6_inplace(&mut y);
+        assert_eq!(y.data, vec![0., 1., 4., 6., 0., 0., 0., 0.]);
+        let p = max_pool_2x2(&y);
+        assert_eq!(p.shape, vec![1, 2, 1, 1]);
+        assert_eq!(p.data, vec![6., 0.]);
+        let g = global_avg_pool(&y);
+        assert_eq!(g.shape, vec![1, 2]);
+        assert_eq!(g.data, vec![11.0 / 4.0, 0.0]);
+    }
+
+    #[test]
+    fn bias_wraps_batches() {
+        let mut y = Tensor::zeros(&[2, 2, 1, 1]);
+        add_bias_nchw(&mut y, &[1.0, 2.0]);
+        assert_eq!(y.data, vec![1.0, 2.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn add_and_argmax() {
+        let mut y = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let o = Tensor::from_vec(&[2, 2], vec![0.5; 4]).unwrap();
+        add_inplace(&mut y, &o).unwrap();
+        assert_eq!(y.data, vec![1.5, 2.5, 3.5, 4.5]);
+        assert!(add_inplace(&mut y, &Tensor::zeros(&[3])).is_err());
+        assert_eq!(argmax(&[1.0, 5.0, 5.0, 2.0]), 1);
+        assert_eq!(argmax(&[-3.0]), 0);
+    }
+
+    #[test]
+    fn pool_floors_odd_dims() {
+        let x = Tensor::from_vec(&[1, 1, 3, 3], (1..=9).map(|v| v as f32).collect()).unwrap();
+        let p = max_pool_2x2(&x);
+        assert_eq!(p.shape, vec![1, 1, 1, 1]);
+        assert_eq!(p.data, vec![5.0]); // max of the top-left 2x2
+    }
+}

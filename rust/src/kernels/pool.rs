@@ -1,0 +1,141 @@
+//! Scoped `std::thread` worker pool for the compute kernels (substrate:
+//! no rayon offline).
+//!
+//! Parallel regions hand out *disjoint* `&mut` chunks of the output
+//! buffer to worker threads through a mutex-guarded queue; each chunk's
+//! contents are a pure function of its chunk index, so results are
+//! byte-identical at ANY worker count (including 1) — the property the
+//! kernels determinism test pins.  The pool is a value (not a set of
+//! live threads): each `for_each_chunk` call opens a `thread::scope`,
+//! which lets workers borrow the caller's stack data without `Arc` or
+//! `'static` bounds and joins them before returning.
+
+use std::sync::{Mutex, OnceLock};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Pool {
+    workers: usize,
+}
+
+impl Pool {
+    /// A pool with an explicit worker count (min 1).
+    pub fn new(workers: usize) -> Pool {
+        Pool { workers: workers.max(1) }
+    }
+
+    /// Single-threaded pool — the reference execution for determinism
+    /// tests and for problems too small to amortize thread spawn.
+    pub fn serial() -> Pool {
+        Pool { workers: 1 }
+    }
+
+    /// The process-wide default: `REPRO_THREADS` if set, else the
+    /// available hardware parallelism (capped at 16 — the kernels here
+    /// are memory-bound beyond that).
+    pub fn global() -> Pool {
+        static WORKERS: OnceLock<usize> = OnceLock::new();
+        let w = *WORKERS.get_or_init(|| {
+            if let Ok(s) = std::env::var("REPRO_THREADS") {
+                if let Ok(n) = s.trim().parse::<usize>() {
+                    return n.max(1);
+                }
+            }
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+        });
+        Pool::new(w)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Split `out` into `chunk_len`-sized pieces (last may be short) and
+    /// run `f(chunk_index, chunk)` over them on the pool's workers.
+    ///
+    /// `f` must derive the chunk's contents only from `chunk_index` and
+    /// shared read-only state — never from thread identity or timing —
+    /// so the output is independent of the schedule.
+    pub fn for_each_chunk<F>(&self, out: &mut [f32], chunk_len: usize, f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        if out.is_empty() {
+            return;
+        }
+        let chunk_len = chunk_len.max(1);
+        let n_chunks = out.len().div_ceil(chunk_len);
+        if self.workers == 1 || n_chunks == 1 {
+            for (n, c) in out.chunks_mut(chunk_len).enumerate() {
+                f(n, c);
+            }
+            return;
+        }
+        let queue: Mutex<_> = Mutex::new(out.chunks_mut(chunk_len).enumerate());
+        let threads = self.workers.min(n_chunks);
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| loop {
+                    // pop one chunk per lock; contention is one lock per
+                    // chunk, negligible next to the chunk's GEMM work
+                    let item = queue.lock().unwrap().next();
+                    match item {
+                        Some((n, c)) => f(n, c),
+                        None => break,
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_chunks_exactly_once() {
+        let mut out = vec![0.0f32; 1000];
+        Pool::new(4).for_each_chunk(&mut out, 96, |n, c| {
+            for v in c.iter_mut() {
+                *v += 1.0 + n as f32;
+            }
+        });
+        // every element written exactly once, with its chunk's index
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, 1.0 + (i / 96) as f32, "elem {i}");
+        }
+    }
+
+    #[test]
+    fn serial_and_parallel_agree_bitwise() {
+        let work = |n: usize, c: &mut [f32]| {
+            let mut acc = 0.31f32 + n as f32;
+            for (i, v) in c.iter_mut().enumerate() {
+                acc = acc * 1.000001 + (i as f32).sin();
+                *v = acc;
+            }
+        };
+        let mut a = vec![0.0f32; 4096];
+        let mut b = vec![0.0f32; 4096];
+        Pool::serial().for_each_chunk(&mut a, 100, work);
+        Pool::new(7).for_each_chunk(&mut b, 100, work);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn handles_empty_and_tiny() {
+        let mut e: Vec<f32> = vec![];
+        Pool::new(3).for_each_chunk(&mut e, 8, |_, _| panic!("no chunks expected"));
+        let mut one = vec![0.0f32; 3];
+        Pool::new(3).for_each_chunk(&mut one, 100, |n, c| {
+            assert_eq!(n, 0);
+            c.fill(5.0);
+        });
+        assert_eq!(one, vec![5.0; 3]);
+    }
+
+    #[test]
+    fn global_pool_has_workers() {
+        assert!(Pool::global().workers() >= 1);
+    }
+}

@@ -22,10 +22,37 @@
 //!                TwoStageSolver / ExtendedSolver -> PlanOutcome), and
 //!                `frontier` the memoizing Planner with solve(t0) /
 //!                solve_frontier(budgets) one-pass budget sweeps.
+//!   kernels    — native parallel CPU compute: `pool` (scoped worker
+//!                pool, deterministic chunk schedule), `gemm`
+//!                (cache-blocked register-tiled f32 GEMM + transposed
+//!                fast path), `conv` (im2col+GEMM with
+//!                stride/pad/groups), `elementwise` (bias/relu6/
+//!                residual/pool/GAP).  Byte-identical at any thread
+//!                count; every host-side compute path routes here.
 //!   latency    — analytical GPU models + measured PJRT source -> T[i,j].
 //!   importance — probe evaluation, I[i,j,a,b] storage, B.3 normalize.
 //!   coordinator— pipeline stages (pretrain -> tables -> plan -> finetune
 //!                -> merge -> eval), experiment runners, serving.
+//!
+//! ## Backends
+//!
+//! Two execution backends run a merged network ([`runtime::host_exec::Backend`]):
+//!
+//! * **Pjrt** — the AOT path: python/JAX lowers graphs to HLO once,
+//!   `runtime::engine` compiles them under the PJRT CPU client, and
+//!   `coordinator::merged_exec` chains per-block conv probes with host
+//!   glue.  Fastest when `xla_extension` is present and artifacts have
+//!   been built (`make artifacts`); serving pads every batch to the AOT
+//!   graph's batch size.
+//! * **Host** — `runtime::host_exec::HostExec` runs the full merged
+//!   forward (conv -> bias -> residual -> relu6 -> pool -> GAP -> FC)
+//!   natively on the `kernels` layer with zero PJRT involvement, at the
+//!   *actual* request batch size.  It is the only executable path in
+//!   offline images where the vendored xla stub cannot run HLO, and the
+//!   reference implementation the PJRT path is cross-checked against.
+//!
+//! Select with `--backend pjrt|host` on the CLI (`serve`, `compress`,
+//! `eval`) or `Backend::{Pjrt,Host}` in code.
 
 pub mod tensor;
 
@@ -66,6 +93,13 @@ pub mod planner {
     pub mod solver;
 }
 
+pub mod kernels {
+    pub mod conv;
+    pub mod elementwise;
+    pub mod gemm;
+    pub mod pool;
+}
+
 pub mod importance {
     pub mod eval;
     pub mod normalize;
@@ -79,6 +113,7 @@ pub mod data {
 
 pub mod runtime {
     pub mod engine;
+    pub mod host_exec;
     pub mod manifest;
 }
 

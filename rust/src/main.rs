@@ -17,7 +17,9 @@ use repro::data::synth::SynthSpec;
 use repro::importance::eval::ImportanceConfig;
 use repro::latency::gpu_model::ExecMode;
 use repro::model::cost;
+use repro::model::spec::ArchConfig;
 use repro::runtime::engine::Engine;
+use repro::runtime::host_exec::{Backend, HostExec};
 use repro::trainer::params::ParamSet;
 use repro::trainer::sgd::TrainState;
 use repro::util::cli::Args;
@@ -32,10 +34,14 @@ fn usage() -> &'static str {
        plan       --arch A --t0 MS [--alpha X --base] (writes artifacts/plans/)\n\
        sweep      --arch A [--points N | --budgets MS,MS,...] [--alpha X --base]\n\
                   one-pass Pareto frontier over budgets (+ CSV report)\n\
-       compress   --arch A --t0 MS [--alpha X --finetune-steps N --kd]\n\
-       eval       --arch A [--ckpt PATH]\n\
+       compress   --arch A --t0 MS [--alpha X --finetune-steps N --kd --backend B]\n\
+       eval       --arch A [--ckpt PATH --backend B]\n\
        serve      --arch A [--clients N --requests N --max-batch N --max-wait-ms N]\n\
-     common: --artifacts DIR (default ./artifacts) --quiet"
+                  [--backend B --frac X]  (host backend: artifact-free —\n\
+                  plans on the analytical model, serves natively; --arch\n\
+                  tiny uses the built-in fixture with synthetic weights)\n\
+     common: --artifacts DIR (default ./artifacts) --quiet\n\
+             --backend pjrt|host (default pjrt; host = native kernels, no PJRT)"
 }
 
 fn data_for(args: &Args, pipe: &Pipeline) -> Result<SynthSpec> {
@@ -313,7 +319,8 @@ fn main() -> Result<()> {
                 11,
             )?;
             let net = pipe.merge(&fine, &out)?;
-            let merged = pipe.eval_merged(&net, &data)?;
+            let backend = Backend::parse(&args.str_or("backend", "pjrt"))?;
+            let merged = pipe.eval_merged_backend(&net, &data, backend)?;
             let merged_ms = pipe.merged_latency_ms(&out, &lat)?;
             let mut t = Table::new(
                 &format!("compress {arch} @ T0={} ms [{}]", fmt_ms(t0), out.lat_source),
@@ -352,6 +359,23 @@ fn main() -> Result<()> {
                 Some(p) => (ParamSet::load(&PathBuf::from(p))?, 0.0),
                 None => pipe.pretrain(&data, args.usize_or("pretrain-steps", 600)?, 0.08, 1, false)?,
             };
+            if Backend::parse(&args.str_or("backend", "pjrt"))? == Backend::Host {
+                // all-singleton merged net (BN folded, eval mode) on the
+                // native kernel layer — no infer graph involved
+                let (s_all, a_all) = repro::merge::plan::all_singleton_plan(&pipe.cfg.spec);
+                let net = repro::merge::plan::build_merged(&pipe.cfg, &ps, &s_all, &a_all)?;
+                let r = pipe.eval_merged_backend(&net, &data, Backend::Host)?;
+                let c = cost::network_cost(&pipe.cfg.spec);
+                println!(
+                    "{}: acc {} [host backend] | {:.1} MFLOPs | {:.2} M params",
+                    arch,
+                    fmt_acc(r.acc),
+                    c.flops as f64 / 1e6,
+                    c.params as f64 / 1e6
+                );
+                args.reject_unknown()?;
+                return Ok(());
+            }
             let ts = TrainState::from_checkpoint(&pipe.entry, &ps)?;
             let mask = pipe.cfg.spec.default_mask();
             let batcher = repro::data::batcher::Batcher::new(data, pipe.entry.train_batch, 0, false);
@@ -374,6 +398,11 @@ fn main() -> Result<()> {
             );
         }
         "serve" => {
+            if Backend::parse(&args.str_or("backend", "pjrt"))? == Backend::Host {
+                serve_host(&args, &root)?;
+                args.reject_unknown()?;
+                return Ok(());
+            }
             let engine = Engine::new(&root)?;
             let arch = args.str_req("arch")?;
             let mut pipe = Pipeline::new(&engine, &arch)?;
@@ -423,4 +452,124 @@ fn main() -> Result<()> {
 fn literal_clone(l: &xla::Literal) -> Result<xla::Literal> {
     let t = repro::tensor::Tensor::from_literal(l)?;
     t.to_literal()
+}
+
+/// `(cfg, params, label)` for host-backend serving: a real arch (config
+/// from its artifacts, newest cached pretrain checkpoint if one exists,
+/// synthetic weights otherwise), or the built-in `tiny` fixture — which
+/// needs nothing on disk at all.
+fn host_arch_source(arch: &str, root: &std::path::Path, seed: u64) -> Result<(ArchConfig, ParamSet, String)> {
+    if arch == "tiny" {
+        let cfg = repro::model::spec::testutil::tiny_config();
+        let ps = ParamSet::synthetic(&cfg, seed);
+        return Ok((cfg, ps, "tiny (synthetic weights)".into()));
+    }
+    let engine = Engine::new(root)?;
+    let entry = engine.manifest.arch(arch)?.clone();
+    let cfg = ArchConfig::load(&root.join(&entry.config))?;
+    let dir = root.join("runs").join(arch);
+    let mut ckpt: Option<(std::time::SystemTime, PathBuf)> = None;
+    if let Ok(rd) = std::fs::read_dir(&dir) {
+        for e in rd.flatten() {
+            let p = e.path();
+            if p.extension().map_or(false, |x| x == "rpr") {
+                let mtime = e
+                    .metadata()
+                    .and_then(|m| m.modified())
+                    .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+                if ckpt.as_ref().map_or(true, |(t, _)| mtime > *t) {
+                    ckpt = Some((mtime, p));
+                }
+            }
+        }
+    }
+    match ckpt {
+        Some((_, p)) => {
+            let label = format!("{arch} (checkpoint {})", p.file_name().unwrap().to_string_lossy());
+            Ok((cfg, ParamSet::load(&p)?, label))
+        }
+        None => Ok((cfg, ParamSet::synthetic(&cfg, seed), format!("{arch} (synthetic weights)"))),
+    }
+}
+
+/// `serve --backend host`: plan on the analytical latency model +
+/// structural proxy importance, merge, and serve the compressed network
+/// natively on the kernel layer — zero PJRT, zero artifacts required.
+fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
+    use repro::coordinator::experiments::proxy_importance;
+    use repro::latency::table::{Analytical, BlockLatencies};
+    use repro::planner::frontier::{Planner, Space, TableImportance};
+
+    let arch = args.str_or("arch", "tiny");
+    let (cfg, ps, label) = host_arch_source(&arch, root, args.usize_or("seed", 1)? as u64)?;
+    let lcfg = lat_cfg(args)?;
+    let Some(dev_name) = lcfg.source.strip_prefix("sim:") else {
+        bail!("host serving plans on the analytical model: use --source sim:<device>");
+    };
+    let dev = repro::latency::devices::by_name(dev_name)
+        .ok_or_else(|| anyhow!("unknown device {dev_name:?}"))?;
+    let mut src = Analytical { dev, mode: lcfg.mode };
+    let bl = BlockLatencies::measure(&cfg, &mut src, lcfg.batch, lcfg.scale)?;
+    let l = cfg.spec.l();
+    let singles: Vec<(usize, usize)> = (0..l).map(|i| (i, i + 1)).collect();
+    let vanilla = bl
+        .network_ms(&singles)
+        .ok_or_else(|| anyhow!("latency table missing a singleton"))?;
+    let frac = args.f64_or("frac", 0.65)?;
+    let planner = Planner::new(&bl.to_lat_table(l), TableImportance::new(&cfg, proxy_importance(&cfg)));
+    let (s_set, a_set) = match planner.solve(Space::Extended, bl.ms_to_ticks(vanilla * frac)) {
+        Some(sol) => (sol.s, sol.a),
+        None => {
+            // budget infeasible on this (cfg, proxy) pair: serve the
+            // uncompressed network as all-singleton merged layers
+            println!(
+                "[serve:host] budget {:.3} ms infeasible — serving uncompressed (raise --frac)",
+                vanilla * frac
+            );
+            repro::merge::plan::all_singleton_plan(&cfg.spec)
+        }
+    };
+    let segs = repro::merge::plan::segments_from_s(l, &s_set);
+    let est_ms = bl.network_ms(&segs).unwrap_or(f64::NAN);
+    let net = repro::merge::plan::build_merged(&cfg, &ps, &s_set, &a_set)?;
+    let depth = net.depth();
+    let exec = HostExec::new(net)?;
+    let hw = cfg.spec.input_hw;
+    let cfg_srv = ServerConfig {
+        max_batch: args.usize_or("max-batch", 8)?,
+        max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 4)?),
+    };
+    let server = Server::host(exec, &[3, hw, hw], cfg_srv)?;
+    let mut data = if cfg.spec.num_classes <= 10 {
+        SynthSpec::quickstart(hw)
+    } else {
+        SynthSpec::imagenet100_analog(hw)
+    };
+    data.num_classes = cfg.spec.num_classes;
+    let clients = args.usize_or("clients", 4)?;
+    let per = args.usize_or("requests", 32)?;
+    println!(
+        "[serve:host] {} — {} convs (vanilla {}), est {} ms @ [{}]",
+        label,
+        depth,
+        l,
+        fmt_ms(est_ms),
+        bl.source
+    );
+    println!("[serve:host] {clients} clients x {per} requests (batch <= {})", server.cfg.max_batch);
+    let (rx, handles) = spawn_load(&data, clients, per, args.u64_or("think-ms", 0)?);
+    let stats = server.run(rx)?;
+    let correct: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let mut t = Table::new("serving (host backend, unpadded batches)", &["metric", "value"]);
+    t.row(vec!["served".into(), stats.served.to_string()]);
+    t.row(vec!["throughput (req/s)".into(), format!("{:.1}", stats.throughput())]);
+    t.row(vec!["p50 latency (ms)".into(), format!("{:.2}", stats.percentile_ms(0.5))]);
+    t.row(vec!["p95 latency (ms)".into(), format!("{:.2}", stats.percentile_ms(0.95))]);
+    t.row(vec!["mean batch".into(), format!("{:.2}", stats.mean_batch())]);
+    t.row(vec![
+        "accuracy".into(),
+        fmt_acc(correct as f64 / stats.served.max(1) as f64),
+    ]);
+    print!("{}", t.render());
+    Ok(())
 }

@@ -29,9 +29,10 @@ pub fn compose(t2: &Tensor, t1: &Tensor, s1: usize) -> Result<Tensor> {
     let kp = s1 * (k2 - 1) + k1;
     // Cache-friendly accumulation (§Perf L3-1): extract each spatial tap
     // of t1/t2 into contiguous (cm x ci) / (co x cm) matrices, run the
-    // per-shift accumulation as an ikj GEMM over contiguous rows into a
-    // [kp, kp, co, ci] buffer, and transpose to OIHW once at the end.
-    // ~40x over the naive strided quad-loop at MBV2 tail sizes.
+    // per-shift accumulation through the shared register-tiled
+    // `kernels::gemm::gemm_acc` into a [kp, kp, co, ci] buffer, and
+    // transpose to OIHW once at the end.  ~40x over the naive strided
+    // quad-loop at MBV2 tail sizes.
     let mut acc = vec![0.0f32; kp * kp * co * ci];
     // contiguous taps: b_taps[(uy,ux)] = t1[:, :, uy, ux] as (cm x ci)
     let mut b_tap = vec![0.0f32; cm1 * ci];
@@ -53,20 +54,15 @@ pub fn compose(t2: &Tensor, t1: &Tensor, s1: usize) -> Result<Tensor> {
                     let wy = s1 * vy + uy;
                     let wx = s1 * vx + ux;
                     let base = (wy * kp + wx) * co * ci;
-                    // C[o, i] += A[o, m] * B[m, i] — contiguous inner loop
-                    for o in 0..co {
-                        let crow = &mut acc[base + o * ci..base + (o + 1) * ci];
-                        for m in 0..cm1 {
-                            let a = a_tap[o * cm1 + m];
-                            if a == 0.0 {
-                                continue;
-                            }
-                            let brow = &b_tap[m * ci..(m + 1) * ci];
-                            for (c, b) in crow.iter_mut().zip(brow) {
-                                *c += a * b;
-                            }
-                        }
-                    }
+                    // C[o, i] += A[o, m] * B[m, i]
+                    crate::kernels::gemm::gemm_acc(
+                        co,
+                        cm1,
+                        ci,
+                        &a_tap,
+                        &b_tap,
+                        &mut acc[base..base + co * ci],
+                    );
                 }
             }
         }

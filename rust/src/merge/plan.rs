@@ -28,6 +28,21 @@ pub fn segments_from_s(l: usize, s_set: &[usize]) -> Vec<(usize, usize)> {
     pts.windows(2).map(|w| (w[0], w[1])).collect()
 }
 
+/// The identity plan: every layer its own segment, activations exactly
+/// where the original network has relu6 — (S, A) for serving/evaluating
+/// the UNCOMPRESSED network through the merged executors.
+pub fn all_singleton_plan(spec: &crate::model::spec::NetworkSpec) -> (Vec<usize>, Vec<usize>) {
+    let l = spec.l();
+    let s: Vec<usize> = (1..l).collect();
+    let a: Vec<usize> = spec
+        .layers
+        .iter()
+        .filter(|ly| ly.act == ACT_RELU6)
+        .map(|ly| ly.idx)
+        .collect();
+    (s, a)
+}
+
 /// Padding reordering (E.2): {layer idx -> pad override}; each merge
 /// segment's padding is hoisted onto its first conv.
 pub fn pad_plan(cfg: &ArchConfig, s_set: &[usize]) -> Result<BTreeMap<usize, usize>> {

@@ -1,0 +1,345 @@
+//! `HostExec` — the PJRT-free serving/eval backend.
+//!
+//! Runs the FULL merged-network forward (conv -> bias -> residual ->
+//! relu6 -> pool -> GAP -> FC) natively from `MergedNet` params on the
+//! `kernels` layer.  No engine, no artifacts, no xla: this is the path
+//! that works in offline images where the vendored xla stub cannot
+//! execute HLO, and the reference the chained PJRT executor is checked
+//! against.  Unlike the AOT graphs it runs at the *actual* batch size —
+//! no padding to a compile-time batch.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::kernels::conv::{conv2d_with, ConvGeom};
+use crate::kernels::elementwise::{
+    add_bias_nchw, add_inplace, argmax, global_avg_pool, max_pool_2x2, relu6_inplace,
+};
+use crate::kernels::gemm::{linear, WeightLayout};
+use crate::kernels::pool::Pool;
+use crate::merge::plan::{MergedLayer, MergedNet};
+use crate::tensor::Tensor;
+use crate::trainer::eval::EvalResult;
+
+/// Which substrate executes a merged network.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT HLO graphs under the PJRT CPU client (needs artifacts).
+    Pjrt,
+    /// Native `kernels`-layer execution (this module) — no PJRT.
+    Host,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s.to_ascii_lowercase().as_str() {
+            "pjrt" | "xla" => Ok(Backend::Pjrt),
+            "host" | "native" | "cpu" => Ok(Backend::Host),
+            other => bail!("unknown backend {other:?} (want pjrt|host)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Pjrt => "pjrt",
+            Backend::Host => "host",
+        }
+    }
+}
+
+/// Which segment outputs must be retained as residual sources: only
+/// those some later layer names in `add_from_seg`.  Shared by HostExec
+/// and the chained PJRT executor so neither clones activations that
+/// nothing will ever read.
+pub fn residual_keep_set(layers: &[MergedLayer]) -> Vec<bool> {
+    let mut keep = vec![false; layers.len()];
+    for ml in layers {
+        if let Some(src) = ml.add_from_seg {
+            if src >= 0 && (src as usize) < keep.len() {
+                keep[src as usize] = true;
+            }
+        }
+    }
+    keep
+}
+
+pub struct HostExec {
+    pub net: MergedNet,
+    keep_seg: Vec<bool>,
+    pool: Pool,
+}
+
+impl HostExec {
+    pub fn new(net: MergedNet) -> Result<HostExec> {
+        HostExec::with_pool(net, Pool::global())
+    }
+
+    /// Explicit worker pool (tests pin determinism with Pool::serial()).
+    pub fn with_pool(net: MergedNet, pool: Pool) -> Result<HostExec> {
+        if net.params.len() != 2 * net.layers.len() + 2 {
+            bail!(
+                "merged net has {} params for {} layers (+fc pair expected)",
+                net.params.len(),
+                net.layers.len()
+            );
+        }
+        for (li, ml) in net.layers.iter().enumerate() {
+            let w = &net.params[2 * li];
+            if w.shape != [ml.c_out, ml.c_in / ml.groups, ml.k, ml.k] {
+                bail!(
+                    "layer {li} weight shape {:?} != geometry ({}, {}, {}, {})",
+                    w.shape,
+                    ml.c_out,
+                    ml.c_in / ml.groups,
+                    ml.k,
+                    ml.k
+                );
+            }
+            if let Some(src) = ml.add_from_seg {
+                if src >= 0 && src as usize >= li {
+                    bail!("layer {li} residual source {src} is not an earlier segment");
+                }
+            }
+        }
+        let keep_seg = residual_keep_set(&net.layers);
+        Ok(HostExec { net, keep_seg, pool })
+    }
+
+    /// Logits for a batch — any size, executed at that size.
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        if x.rank() != 4 {
+            bail!("HostExec wants NCHW input, got {:?}", x.shape);
+        }
+        if !self.net.layers.is_empty() && x.shape[1] != self.net.layers[0].c_in {
+            bail!(
+                "input has {} channels, network wants {}",
+                x.shape[1],
+                self.net.layers[0].c_in
+            );
+        }
+        let mut cur = x.clone();
+        let mut seg_out: Vec<Option<Tensor>> = Vec::with_capacity(self.net.layers.len());
+        for (li, ml) in self.net.layers.iter().enumerate() {
+            let w = &self.net.params[2 * li];
+            let b = &self.net.params[2 * li + 1];
+            let geom = ConvGeom { stride: ml.stride, pad: ml.pad, groups: ml.groups };
+            let mut y = conv2d_with(&self.pool, &cur, w, geom)?;
+            add_bias_nchw(&mut y, &b.data);
+            if let Some(src) = ml.add_from_seg {
+                if src < 0 {
+                    bail!("residual from the network input is not supported");
+                }
+                let base = seg_out[src as usize]
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("residual source {src} was not retained"))?;
+                add_inplace(&mut y, base)?;
+            }
+            if ml.act {
+                relu6_inplace(&mut y);
+            }
+            if ml.pool_after {
+                y = max_pool_2x2(&y);
+            }
+            if self.keep_seg[li] {
+                seg_out.push(Some(y.clone()));
+            } else {
+                seg_out.push(None);
+            }
+            cur = y;
+        }
+        let pooled = global_avg_pool(&cur);
+        linear(
+            &pooled,
+            &self.net.params[self.net.params.len() - 2],
+            &self.net.params[self.net.params.len() - 1],
+            WeightLayout::InOut,
+        )
+    }
+
+    /// Validation accuracy over a batcher — batches run at their real
+    /// (unpadded) size.
+    pub fn eval(&self, batcher: &crate::data::batcher::Batcher, batch: usize) -> Result<EvalResult> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for nb in 0..batcher.val_batches(batch) {
+            let (x, y, valid) = batcher.val_batch(nb, batch);
+            // slice off the sentinel-padded tail before running
+            let per: usize = x.shape[1..].iter().product();
+            let mut shape = x.shape.clone();
+            shape[0] = valid;
+            let xs = Tensor::from_vec(&shape, x.data[..valid * per].to_vec())?;
+            let logits = self.forward(&xs)?;
+            let nc = logits.shape[1];
+            for b in 0..valid {
+                if argmax(&logits.data[b * nc..(b + 1) * nc]) == y.data[b] as usize {
+                    correct += 1;
+                }
+            }
+            total += valid;
+        }
+        Ok(EvalResult { acc: correct as f64 / total.max(1) as f64, avg_loss: f64::NAN, n: total })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::conv::conv2d_naive;
+    use crate::merge::plan::build_merged;
+    use crate::model::spec::testutil::tiny_config;
+    use crate::trainer::params::ParamSet;
+    use crate::util::rng::Rng;
+
+    fn rand_input(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let mut t = Tensor::zeros(shape);
+        for v in t.data.iter_mut() {
+            *v = rng.normal() * 0.5;
+        }
+        t
+    }
+
+    /// Straight-line reference forward on the naive conv oracle and the
+    /// glue ops applied longhand — the "MergedExec glue semantics" pin.
+    fn reference_forward(net: &MergedNet, x: &Tensor) -> Tensor {
+        let mut cur = x.clone();
+        let mut segs: Vec<Tensor> = Vec::new();
+        for (li, ml) in net.layers.iter().enumerate() {
+            let g = ConvGeom { stride: ml.stride, pad: ml.pad, groups: ml.groups };
+            let mut y = conv2d_naive(&cur, &net.params[2 * li], g);
+            add_bias_nchw(&mut y, &net.params[2 * li + 1].data);
+            if let Some(src) = ml.add_from_seg {
+                add_inplace(&mut y, &segs[src as usize]).unwrap();
+            }
+            if ml.act {
+                relu6_inplace(&mut y);
+            }
+            if ml.pool_after {
+                y = max_pool_2x2(&y);
+            }
+            segs.push(y.clone());
+            cur = y;
+        }
+        let pooled = global_avg_pool(&cur);
+        linear(
+            &pooled,
+            &net.params[net.params.len() - 2],
+            &net.params[net.params.len() - 1],
+            WeightLayout::InOut,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn forward_matches_reference_on_merged_plan() {
+        let cfg = tiny_config();
+        let ps = ParamSet::synthetic(&cfg, 31);
+        let net = build_merged(&cfg, &ps, &[1, 4, 5], &[4]).unwrap();
+        let exec = HostExec::new(net.clone_shallow()).unwrap();
+        let x = rand_input(&[2, 3, 12, 12], 7);
+        let got = exec.forward(&x).unwrap();
+        let want = reference_forward(&net, &x);
+        assert_eq!(got.shape, vec![2, cfg.spec.num_classes]);
+        assert!(
+            got.max_abs_diff(&want) < 1e-3,
+            "HostExec diverges from glue reference: {}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn forward_matches_reference_with_residual_and_depthwise() {
+        // all-singleton plan: keeps the explicit residual (layer 4 adds
+        // from the segment ending at 1) and the grouped depthwise conv
+        let cfg = tiny_config();
+        let ps = ParamSet::synthetic(&cfg, 32);
+        let net = build_merged(&cfg, &ps, &[1, 2, 3, 4, 5], &[1, 2, 3, 5]).unwrap();
+        let exec = HostExec::new(net.clone_shallow()).unwrap();
+        // only the residual source segment is retained
+        assert_eq!(exec.keep_seg, vec![true, false, false, false, false, false]);
+        let x = rand_input(&[1, 3, 12, 12], 8);
+        let got = exec.forward(&x).unwrap();
+        let want = reference_forward(&net, &x);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn batch_size_is_flexible_and_consistent() {
+        let cfg = tiny_config();
+        let ps = ParamSet::synthetic(&cfg, 33);
+        let net = build_merged(&cfg, &ps, &[1, 4, 5], &[4]).unwrap();
+        let exec = HostExec::new(net).unwrap();
+        let x3 = rand_input(&[3, 3, 12, 12], 9);
+        let l3 = exec.forward(&x3).unwrap();
+        for b in 0..3 {
+            let per = 3 * 12 * 12;
+            let x1 = Tensor::from_vec(&[1, 3, 12, 12], x3.data[b * per..(b + 1) * per].to_vec())
+                .unwrap();
+            let l1 = exec.forward(&x1).unwrap();
+            let nc = l3.shape[1];
+            for c in 0..nc {
+                assert!(
+                    (l1.data[c] - l3.data[b * nc + c]).abs() < 1e-5,
+                    "sample {b} logit {c} differs across batch sizes"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_forward_is_byte_identical() {
+        let cfg = tiny_config();
+        let ps = ParamSet::synthetic(&cfg, 34);
+        let net = build_merged(&cfg, &ps, &[1, 4, 5], &[4]).unwrap();
+        let x = rand_input(&[4, 3, 12, 12], 10);
+        let serial = HostExec::with_pool(net.clone_shallow(), Pool::serial())
+            .unwrap()
+            .forward(&x)
+            .unwrap();
+        for workers in [2usize, 6] {
+            let par = HostExec::with_pool(net.clone_shallow(), Pool::new(workers))
+                .unwrap()
+                .forward(&x)
+                .unwrap();
+            assert!(
+                serial.data.iter().zip(&par.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "HostExec differs between 1 and {workers} workers"
+            );
+        }
+    }
+
+    #[test]
+    fn eval_runs_unpadded_and_scores() {
+        let cfg = tiny_config();
+        let ps = ParamSet::synthetic(&cfg, 35);
+        let net = build_merged(&cfg, &ps, &[1, 4, 5], &[4]).unwrap();
+        let exec = HostExec::new(net).unwrap();
+        let mut data = crate::data::synth::SynthSpec::quickstart(12);
+        data.num_classes = cfg.spec.num_classes;
+        data.train_per_class = 2;
+        data.val_per_class = 3; // 21 val samples: last batch is partial
+        let batcher = crate::data::batcher::Batcher::new(data, 8, 0, false);
+        let r = exec.eval(&batcher, 8).unwrap();
+        assert_eq!(r.n, 21);
+        assert!((0.0..=1.0).contains(&r.acc));
+    }
+
+    #[test]
+    fn rejects_malformed_nets() {
+        let cfg = tiny_config();
+        let ps = ParamSet::synthetic(&cfg, 36);
+        let net = build_merged(&cfg, &ps, &[1, 4, 5], &[4]).unwrap();
+        // dropping a param breaks the 2L+2 contract
+        let mut broken = net.clone_shallow();
+        broken.params.pop();
+        assert!(HostExec::new(broken).is_err());
+        // wrong input channel count
+        let exec = HostExec::new(net).unwrap();
+        assert!(exec.forward(&rand_input(&[1, 5, 12, 12], 1)).is_err());
+        assert!(exec.forward(&rand_input(&[3, 12, 12], 1)).is_err());
+        // backend parsing
+        assert_eq!(Backend::parse("host").unwrap(), Backend::Host);
+        assert_eq!(Backend::parse("PJRT").unwrap(), Backend::Pjrt);
+        assert!(Backend::parse("tpu").is_err());
+        assert_eq!(Backend::Host.name(), "host");
+    }
+}

@@ -64,6 +64,46 @@ impl ParamSet {
         names.iter().map(|n| self.get(n)).collect()
     }
 
+    /// A full synthetic parameter set for `cfg` (small random conv
+    /// weights, near-identity BN stats, zero FC) — lets merge/exec
+    /// paths run end to end with no artifacts or training in sight
+    /// (Host-backend demos, kernel benches, and the HostExec tests).
+    pub fn synthetic(cfg: &crate::model::spec::ArchConfig, seed: u64) -> ParamSet {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut ps = ParamSet::new();
+        for ly in &cfg.spec.layers {
+            let l = ly.idx;
+            let mut w = Tensor::zeros(&[ly.c_out, ly.c_in / ly.groups, ly.k, ly.k]);
+            let fan_in = (ly.c_in / ly.groups * ly.k * ly.k) as f32;
+            let std = (2.0 / fan_in).sqrt();
+            for v in w.data.iter_mut() {
+                *v = rng.normal() * std;
+            }
+            ps.insert(format!("w{l}"), w);
+            for (nm, base) in [("gamma", 1.0f32), ("beta", 0.0), ("mean", 0.0), ("var", 1.0)] {
+                let mut t = Tensor::zeros(&[ly.c_out]);
+                for v in t.data.iter_mut() {
+                    *v = base + rng.normal() * 0.05;
+                }
+                if nm == "var" {
+                    for v in t.data.iter_mut() {
+                        *v = v.abs() + 0.5;
+                    }
+                }
+                ps.insert(format!("{nm}{l}"), t);
+            }
+        }
+        let last = cfg.spec.layer(cfg.spec.l());
+        let mut fc_w = Tensor::zeros(&[last.c_out, cfg.spec.num_classes]);
+        let std = (1.0 / last.c_out as f32).sqrt();
+        for v in fc_w.data.iter_mut() {
+            *v = rng.normal() * std;
+        }
+        ps.insert("fc_w".into(), fc_w);
+        ps.insert("fc_b".into(), Tensor::zeros(&[cfg.spec.num_classes]));
+        ps
+    }
+
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
