@@ -1,20 +1,22 @@
-//! Figure 3 data generator: sweep the latency budget T0 and compare the
-//! network merged according to the jointly-optimized S against the
-//! network naively merged according to A (the paper's ablation §5.3 —
-//! "about 30% faster" with S).
+//! Cross-device budget sweep (the paper's Tables 3/6/7 axis): one
+//! memoized planner per latency source, a Pareto frontier per device,
+//! and the JOINT importance–latency Pareto set across all of them —
+//! every surviving point carrying its device provenance.
 //!
-//! The whole sweep is ONE `plan_frontier` call: stage 1/3 products and
-//! a single stage-4 DP table answer every budget point, instead of the
-//! per-budget re-solves this example used to do.
+//! Each device's sweep is ONE planner pass (stage-1/stage-3 products +
+//! a single DP table answer every budget), and the joint set is a
+//! dominance merge of the per-device frontiers.
 //!
 //!   cargo run --release --example sweep_budgets [-- --arch mbv2_w10
-//!       --points 12]
+//!       --source analytical/titan_xp,analytical/rtx2080ti,... --points 12]
 
 use std::path::PathBuf;
 
 use repro::coordinator::experiments::{greedy_merge, importance_or_proxy, segments_ms};
-use repro::coordinator::pipeline::{LatencyCfg, Pipeline};
-use repro::coordinator::report::Table;
+use repro::coordinator::pipeline::Pipeline;
+use repro::coordinator::report::{joint_pareto_tables, Table};
+use repro::latency::gpu_model::ExecMode;
+use repro::latency::source::SourceSpec;
 use repro::merge::plan::segments_from_s;
 use repro::runtime::engine::Engine;
 use repro::util::cli::Args;
@@ -25,51 +27,106 @@ fn main() -> anyhow::Result<()> {
     let engine = Engine::new(&root)?;
     let arch = args.str_or("arch", "mbv2_w10");
     let points = args.usize_or("points", 12)?;
+    let specs = SourceSpec::parse_list(
+        &args.str_or(
+            "source",
+            "analytical/titan_xp,analytical/rtx2080ti,analytical/rtx3090,\
+             analytical/v100,analytical/xeon5220r",
+        ),
+        ExecMode::Fused,
+    )?;
     let pipe = Pipeline::new(&engine, &arch)?;
-    let lat = pipe.latency_table(&LatencyCfg::default(), false)?;
-    let vanilla = pipe.vanilla_latency_ms(&lat)?;
 
     // trained importance when the pipeline ran; structural proxy else
-    let (imp, src) = importance_or_proxy(&pipe);
+    let (imp, src_tag) = importance_or_proxy(&pipe);
+    let dp = pipe.plan_deploy(&specs, &imp, 128, 200.0, 1.6, true, false)?;
 
-    println!("== Figure 3 sweep on {arch} (importance: {src}) ==");
-    println!("vanilla: {vanilla:.2} ms\n");
-    let budgets: Vec<f64> = (0..points)
-        .map(|n| vanilla * (0.92 - 0.45 * (n as f64 / (points - 1).max(1) as f64)))
-        .collect();
+    println!("== cross-device sweep on {arch} (importance: {src_tag}) ==\n");
     let t_solve = std::time::Instant::now();
-    let outs = pipe.plan_frontier(&lat, &imp, &budgets, 1.6, true);
-    let solve_ms = t_solve.elapsed().as_secs_f64() * 1e3;
+    let ladders: Vec<Vec<f64>> = (0..dp.sources().len())
+        .map(|idx| dp.default_budgets(idx, points, 0.47, 0.92))
+        .collect();
+    let mut per_dev = Table::new(
+        "per-device frontiers (best plan per budget, one DP pass per device)",
+        &["source", "vanilla (ms)", "fastest (ms)", "speedup", "points"],
+    );
+    let mut fronts: Vec<Vec<repro::planner::deploy::ParetoPoint>> = Vec::new();
+    for (idx, src) in dp.sources().iter().enumerate() {
+        let vanilla = dp.vanilla_ms(idx).unwrap_or(f64::NAN);
+        let front: Vec<_> = dp.frontier(idx, &ladders[idx]).into_iter().flatten().collect();
+        if front.is_empty() {
+            per_dev.row(vec![
+                src.label.clone(),
+                format!("{vanilla:.3}"),
+                "-".into(),
+                "-".into(),
+                "0 (no feasible budget)".into(),
+            ]);
+        } else {
+            let fastest = front.iter().map(|p| p.est_ms).fold(f64::INFINITY, f64::min);
+            per_dev.row(vec![
+                src.label.clone(),
+                format!("{vanilla:.3}"),
+                format!("{fastest:.3}"),
+                format!("{:.2}x", vanilla / fastest),
+                front.len().to_string(),
+            ]);
+        }
+        fronts.push(front);
+    }
+    print!("{}", per_dev.render());
 
-    let mut t = Table::new(
-        "latency of merge-by-S vs merge-by-A across budgets",
+    let joint = dp.joint_pareto(&ladders);
+    let solve_ms = t_solve.elapsed().as_secs_f64() * 1e3;
+    let (t, csv) = joint_pareto_tables(
+        &format!("joint cross-device Pareto set ({} points survive)", joint.len()),
+        &joint,
+    );
+    print!("{}", t.render());
+    println!(
+        "({} devices x {points} budgets solved + merged in {solve_ms:.2} ms — one \
+         planner pass per device)",
+        dp.sources().len()
+    );
+    let dir = root.join("reports");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("pareto_{arch}.csv"));
+    std::fs::write(&path, csv.render_csv())?;
+    println!("joint Pareto series written to {}", path.display());
+
+    // Figure 3 ablation (§5.3, "about 30% faster" with S): the network
+    // merged by the jointly-optimized S vs naively merged by A, on the
+    // primary source — kept from this example's single-device days.
+    let primary = 0usize;
+    let lat0 = &dp.sources()[primary].lat;
+    let l = pipe.cfg.spec.l();
+    let mut fig3 = Table::new(
+        &format!("Figure 3: merge-by-S vs merge-by-A [{}]", dp.sources()[primary].label),
         &["T0 (ms)", "by-S (ms)", "by-A (ms)", "A-penalty", "|A|", "|S|"],
     );
-    let mut csv = String::from("t0_ms,by_s_ms,by_a_ms\n");
-    for (t0, out) in budgets.iter().zip(outs) {
-        let Some(out) = out else {
-            continue; // budget infeasible
-        };
-        let s_segs = segments_from_s(pipe.cfg.spec.l(), &out.s);
-        let a_segs = greedy_merge(&pipe.cfg, &out.a);
-        let s_ms = segments_ms(&lat, &s_segs)?;
-        let a_ms = segments_ms(&lat, &a_segs)?;
-        t.row(vec![
-            format!("{t0:.2}"),
+    let mut fig3_csv = Table::new("csv", &["t0_ms", "by_s_ms", "by_a_ms"]);
+    for p in &fronts[primary] {
+        let s_segs = segments_from_s(l, &p.plan.s);
+        let a_segs = greedy_merge(&pipe.cfg, &p.plan.a);
+        let s_ms = segments_ms(lat0, &s_segs)?;
+        let a_ms = segments_ms(lat0, &a_segs)?;
+        fig3.row(vec![
+            format!("{:.2}", p.t0_ms),
             format!("{s_ms:.2}"),
             format!("{a_ms:.2}"),
             format!("{:+.1}%", 100.0 * (a_ms / s_ms - 1.0)),
-            out.a.len().to_string(),
-            out.s.len().to_string(),
+            p.plan.a.len().to_string(),
+            p.plan.s.len().to_string(),
         ]);
-        csv.push_str(&format!("{t0:.4},{s_ms:.4},{a_ms:.4}\n"));
+        fig3_csv.row(vec![
+            format!("{:.4}", p.t0_ms),
+            format!("{s_ms:.4}"),
+            format!("{a_ms:.4}"),
+        ]);
     }
-    print!("{}", t.render());
-    println!("({points}-point frontier solved in {solve_ms:.2} ms — one planner pass)");
-    let dir = root.join("reports");
-    std::fs::create_dir_all(&dir)?;
+    print!("{}", fig3.render());
     let path = dir.join(format!("figure3_{arch}.csv"));
-    std::fs::write(&path, csv)?;
-    println!("series written to {}", path.display());
+    std::fs::write(&path, fig3_csv.render_csv())?;
+    println!("Figure 3 series written to {}", path.display());
     Ok(())
 }

@@ -1,0 +1,79 @@
+//! Cross-device deployment-planner benchmarks: per-device latency-table
+//! build + planner construction, and the joint Pareto dominance merge,
+//! recorded in BENCH_pareto.json at the repo root so the perf
+//! trajectory of the deploy path is tracked like the DP and kernel
+//! paths (BENCH_dp.json / BENCH_kernels.json).
+
+use std::time::Instant;
+
+use repro::coordinator::experiments::proxy_importance;
+use repro::latency::devices;
+use repro::latency::gpu_model::ExecMode;
+use repro::latency::source::Analytical;
+use repro::latency::table::BlockLatencies;
+use repro::model::spec::testutil::tiny_config;
+use repro::planner::deploy::DeployPlanner;
+use repro::planner::frontier::{Space, TableImportance};
+use repro::util::bench::{black_box, Bencher};
+use repro::util::json::Json;
+
+fn main() {
+    println!("# bench_pareto — multi-device deployment planner");
+    let cfg = tiny_config();
+    let imp = proxy_importance(&cfg);
+    let points = 12usize;
+    let mut dp = DeployPlanner::new(cfg.spec.l(), Space::Extended);
+    let mut dev_records = Vec::new();
+    for dev in devices::ALL {
+        // table build = measure every block + construct the memoized
+        // planner + force its one frontier DP pass
+        let t0 = Instant::now();
+        let mut src = Analytical { dev, mode: ExecMode::Fused };
+        let lat = BlockLatencies::measure(&cfg, &mut src, 128, 200.0).expect("measure");
+        let idx = dp.add_source(lat, TableImportance::new(&cfg, imp.clone()));
+        let budgets = dp.default_budgets(idx, points, 0.47, 0.92);
+        let feasible = black_box(dp.frontier(idx, &budgets)).iter().flatten().count();
+        let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "device {:<12} table+planner+frontier built in {build_ms:.3} ms \
+             ({feasible} feasible frontier points)",
+            dev.name
+        );
+        dev_records.push((
+            dev.name,
+            Json::obj_from(vec![
+                ("build_ms", Json::num(build_ms)),
+                ("frontier_points", Json::int(feasible as i64)),
+            ]),
+        ));
+    }
+    // joint merge: tables are memoized, so this isolates the K-frontier
+    // extraction + dominance filter
+    let ladders: Vec<Vec<f64>> = (0..dp.sources().len())
+        .map(|idx| dp.default_budgets(idx, points, 0.47, 0.92))
+        .collect();
+    let joint = dp.joint_pareto(&ladders);
+    assert!(!joint.is_empty(), "joint Pareto set must not be empty on the fixture");
+    let stats = Bencher::new(&format!(
+        "joint pareto merge ({} devices x {points} budgets)",
+        dp.sources().len()
+    ))
+    .run(|| {
+        black_box(dp.joint_pareto(&ladders));
+    });
+    println!(
+        "joint set: {} surviving points, merge median {:.3} ms",
+        joint.len(),
+        stats.median_ms()
+    );
+    let mut record = vec![
+        ("bench", Json::str_of("deploy_pareto")),
+        ("points_per_device", Json::int(points as i64)),
+        ("joint_survivors", Json::int(joint.len() as i64)),
+        ("joint_merge_ms", Json::num(stats.median_ms())),
+    ];
+    record.push(("devices", Json::obj_from(dev_records)));
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_pareto.json");
+    std::fs::write(&path, Json::obj_from(record).to_string()).expect("writing BENCH_pareto.json");
+    println!("pareto record written to {}", path.display());
+}

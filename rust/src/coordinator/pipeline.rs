@@ -23,10 +23,11 @@ use crate::importance::eval::{ImportanceConfig, ImportanceEvaluator};
 use crate::importance::normalize;
 use crate::importance::table::ImpTable;
 use crate::latency::gpu_model::ExecMode;
-use crate::latency::measured::Measured;
-use crate::latency::table::{Analytical, BlockLatencies, LatencySource};
+use crate::latency::source::SourceSpec;
+use crate::latency::table::BlockLatencies;
 use crate::merge::plan::{build_merged, plan_json, segments_from_s, MergedNet};
 use crate::model::spec::ArchConfig;
+use crate::planner::deploy::{deploy_from_tables, DeployPlanner};
 use crate::planner::frontier::{Planner, Space, TableImportance};
 use crate::planner::solver::PlanOutcome as SolvedPlan;
 use crate::runtime::engine::Engine;
@@ -39,8 +40,11 @@ use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct LatencyCfg {
-    /// "sim:<device>" or "measured"
+    /// a [`SourceSpec`] string: `analytical/<device>[/fused|eager]`,
+    /// `measured[/fused|eager]`, `host[/<N>threads]`, or the legacy
+    /// alias `sim:<device>`
     pub source: String,
+    /// default exec mode when the spec string omits it
     pub mode: ExecMode,
     pub batch: usize,
     /// integer ticks per ms for the DP (paper §5.1)
@@ -49,7 +53,12 @@ pub struct LatencyCfg {
 
 impl Default for LatencyCfg {
     fn default() -> Self {
-        LatencyCfg { source: "sim:rtx2080ti".into(), mode: ExecMode::Fused, batch: 128, scale: 200.0 }
+        LatencyCfg {
+            source: "analytical/rtx2080ti".into(),
+            mode: ExecMode::Fused,
+            batch: 128,
+            scale: 200.0,
+        }
     }
 }
 
@@ -142,29 +151,32 @@ impl<'e> Pipeline<'e> {
     // -- stage 1: latency table ----------------------------------------------
 
     pub fn latency_table(&self, lcfg: &LatencyCfg, force: bool) -> Result<BlockLatencies> {
-        let tag = format!(
-            "lat_{}_{}_b{}.json",
-            lcfg.source.replace([':', '/'], "_"),
-            if lcfg.mode == ExecMode::Fused { "fused" } else { "eager" },
-            lcfg.batch
-        );
+        let spec = SourceSpec::parse_with_mode(&lcfg.source, lcfg.mode)?;
+        self.latency_table_spec(&spec, lcfg.batch, lcfg.scale, force)
+    }
+
+    /// Latency table for one parsed source spec, cached on disk under
+    /// the run dir keyed by (source label, batch, scale) — scale is in
+    /// the key because the table carries it into every tick conversion
+    /// downstream (calibration precision depends on it).
+    pub fn latency_table_spec(
+        &self,
+        spec: &SourceSpec,
+        batch: usize,
+        scale: f64,
+        force: bool,
+    ) -> Result<BlockLatencies> {
+        let tag =
+            format!("lat_{}_b{batch}_x{scale}.json", spec.label().replace([':', '/'], "_"));
         let path = self.dir.join(tag);
         if !force && path.exists() {
             return BlockLatencies::load(&path);
         }
-        let mut src: Box<dyn LatencySource + '_> = if lcfg.source == "measured" {
-            Box::new(Measured::new(self.engine, &self.arch, lcfg.mode))
-        } else if let Some(dev) = lcfg.source.strip_prefix("sim:") {
-            let dev = crate::latency::devices::by_name(dev)
-                .ok_or_else(|| anyhow!("unknown device {dev:?}"))?;
-            Box::new(Analytical { dev, mode: lcfg.mode })
-        } else {
-            return Err(anyhow!("latency source must be 'measured' or 'sim:<device>'"));
-        };
+        let mut src = spec.build(Some((self.engine, &self.arch)))?;
         if self.verbose {
             println!("[latency] measuring {} blocks via {}...", self.cfg.blocks.len(), src.name());
         }
-        let bl = BlockLatencies::measure(&self.cfg, src.as_mut(), lcfg.batch, lcfg.scale)?;
+        let bl = BlockLatencies::measure(&self.cfg, src.as_mut(), batch, scale)?;
         bl.save(&path)?;
         Ok(bl)
     }
@@ -296,6 +308,30 @@ impl<'e> Pipeline<'e> {
             .zip(budgets_ms)
             .map(|(sol, &ms)| sol.map(|s| self.outcome(s, lat, ms, alpha)))
             .collect()
+    }
+
+    /// The multi-device deployment planner: one latency table + one
+    /// memoized planner per source spec, ready for per-device frontiers,
+    /// the joint cross-device Pareto set, and budget auto-calibration
+    /// ([`DeployPlanner`]).  Tables come from the same on-disk cache as
+    /// `latency_table`; the importance table is shared across devices
+    /// (importance is a property of the network, not the hardware).
+    #[allow(clippy::too_many_arguments)]
+    pub fn plan_deploy(
+        &self,
+        specs: &[SourceSpec],
+        imp: &ImpTable,
+        batch: usize,
+        scale: f64,
+        alpha: f64,
+        extended_space: bool,
+        force: bool,
+    ) -> Result<DeployPlanner<TableImportance>> {
+        let lats = specs
+            .iter()
+            .map(|spec| self.latency_table_spec(spec, batch, scale, force))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(deploy_from_tables(&self.cfg, lats, imp, alpha, extended_space))
     }
 
     /// Write the plan JSON that `make plans` (aot pass 2) consumes.

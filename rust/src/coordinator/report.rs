@@ -54,6 +54,26 @@ impl Table {
         out
     }
 
+    /// RFC-4180-ish CSV (for `artifacts/reports/*.csv`): one header
+    /// row, cells containing a comma/quote/newline get quoted with
+    /// doubled inner quotes.  The title is not emitted — CSV consumers
+    /// key on the file name.
+    pub fn render_csv(&self) -> String {
+        fn cell(c: &str) -> String {
+            if c.contains(&[',', '"', '\n'][..]) {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.iter().map(|h| cell(h)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|c| cell(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
     /// GitHub-flavored markdown (for EXPERIMENTS.md).
     pub fn render_markdown(&self) -> String {
         let mut out = String::new();
@@ -69,6 +89,36 @@ impl Table {
         }
         out
     }
+}
+
+/// Render a joint cross-device Pareto set as (terminal table, CSV
+/// table) — the one row schema shared by `repro sweep --pareto` and the
+/// sweep_budgets example, so the provenance columns cannot drift.
+pub fn joint_pareto_tables(
+    title: &str,
+    points: &[crate::planner::deploy::ParetoPoint],
+) -> (Table, Table) {
+    let mut t = Table::new(title, &["source", "T0 (ms)", "est (ms)", "|A|", "|S|", "objective"]);
+    let mut csv = Table::new("csv", &["source", "t0_ms", "est_ms", "objective", "n_a", "n_s"]);
+    for p in points {
+        t.row(vec![
+            p.source.clone(),
+            format!("{:.3}", p.t0_ms),
+            format!("{:.3}", p.est_ms),
+            p.plan.a.len().to_string(),
+            p.plan.s.len().to_string(),
+            format!("{:+.4}", p.plan.imp_total),
+        ]);
+        csv.row(vec![
+            p.source.clone(),
+            format!("{:.4}", p.t0_ms),
+            format!("{:.4}", p.est_ms),
+            format!("{:.6}", p.plan.imp_total),
+            p.plan.a.len().to_string(),
+            p.plan.s.len().to_string(),
+        ]);
+    }
+    (t, csv)
 }
 
 pub fn fmt_ms(x: f64) -> String {
@@ -98,6 +148,22 @@ mod tests {
         let md = t.render_markdown();
         assert!(md.contains("| Network | Acc (%) | Lat (ms) |"));
         assert!(md.contains("| Ours | 87.69 | 12.53 |"));
+    }
+
+    #[test]
+    fn renders_csv_with_escaping() {
+        let mut t = Table::new("joint pareto", &["source", "t0_ms", "note"]);
+        t.row(vec!["analytical/v100/fused".into(), "12.5000".into(), "a,b \"q\"".into()]);
+        t.row(vec!["host/8threads".into(), "3.2000".into(), "plain".into()]);
+        let csv = t.render_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some("source,t0_ms,note"));
+        assert_eq!(
+            lines.next(),
+            Some("analytical/v100/fused,12.5000,\"a,b \"\"q\"\"\"")
+        );
+        assert_eq!(lines.next(), Some("host/8threads,3.2000,plain"));
+        assert_eq!(lines.next(), None);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 use anyhow::{anyhow, Result};
 
 use super::gpu_model::ExecMode;
-use super::table::LatencySource;
+use super::source::LatencySource;
 use crate::model::spec::ArchConfig;
 use crate::runtime::engine::Engine;
 

@@ -2,64 +2,19 @@
 //! pluggable latency source, with the paper's integer scaling (§5.1:
 //! "we multiply every occurrence of t and T0 by a constant factor and
 //! round to integer").
+//!
+//! The sources themselves live in [`super::source`] (the registry);
+//! this module owns the measured table and its tick arithmetic.
 
-use anyhow::{bail, Result};
+use std::collections::HashMap;
 
-use super::devices::Device;
-use super::gpu_model::{op_latency_ms, ConvGeom, ExecMode};
+use anyhow::Result;
+
+// Re-exported so pre-registry import paths keep working.
+pub use super::source::{Analytical, LatencySource};
 use crate::dp::stage1::LatTable;
 use crate::model::spec::ArchConfig;
 use crate::util::json::Json;
-
-/// Anything that can price one merged block.
-pub trait LatencySource {
-    /// latency in ms of block (i, j] of `cfg` at `batch`
-    fn block_ms(&mut self, cfg: &ArchConfig, i: usize, j: usize, batch: usize) -> Result<f64>;
-    fn name(&self) -> String;
-}
-
-/// Analytical GPU model source.
-pub struct Analytical {
-    pub dev: &'static Device,
-    pub mode: ExecMode,
-}
-
-impl LatencySource for Analytical {
-    fn block_ms(&mut self, cfg: &ArchConfig, i: usize, j: usize, batch: usize) -> Result<f64> {
-        let Some(blk) = cfg.block(i, j) else {
-            bail!("block ({i},{j}] not merge-legal");
-        };
-        let g = ConvGeom::from(blk);
-        // singleton layers keep their BN (eager pays for it); merged
-        // blocks have BN fused by construction.  Activation present when
-        // the layer ends with relu6 (worst case; fused mode ignores it).
-        let with_bn = blk.is_singleton();
-        let with_act = true;
-        let mut ms = op_latency_ms(self.dev, &g, batch, self.mode, with_bn, with_act);
-        if let Some(src) = blk.add_from {
-            // explicit residual add: one memory pass in eager mode
-            if self.mode == ExecMode::Eager {
-                let _ = src;
-                ms += super::gpu_model::mem_pass_latency_ms(
-                    self.dev,
-                    batch * blk.c_out * blk.h_out * blk.w_out,
-                );
-            }
-        }
-        Ok(ms)
-    }
-
-    fn name(&self) -> String {
-        format!(
-            "analytical/{}/{}",
-            self.dev.name,
-            match self.mode {
-                ExecMode::Fused => "fused",
-                ExecMode::Eager => "eager",
-            }
-        )
-    }
-}
 
 /// T[i, j] in milliseconds for every legal block, plus the integer
 /// scaling used by the DP.
@@ -69,11 +24,24 @@ pub struct BlockLatencies {
     pub batch: usize,
     /// ticks per millisecond (paper's "constant factor")
     pub scale: f64,
-    /// (i, j, ms)
+    /// (i, j, ms) — construct via `new` so the lookup index stays in sync
     pub entries: Vec<(usize, usize, f64)>,
+    /// (i, j) -> entries position, built once: `ms_of` is O(1), so
+    /// `network_ms` is O(L) instead of O(L * entries)
+    idx: HashMap<(usize, usize), usize>,
 }
 
 impl BlockLatencies {
+    pub fn new(
+        source: String,
+        batch: usize,
+        scale: f64,
+        entries: Vec<(usize, usize, f64)>,
+    ) -> BlockLatencies {
+        let idx = entries.iter().enumerate().map(|(n, &(i, j, _))| ((i, j), n)).collect();
+        BlockLatencies { source, batch, scale, entries, idx }
+    }
+
     pub fn measure(
         cfg: &ArchConfig,
         src: &mut dyn LatencySource,
@@ -85,7 +53,7 @@ impl BlockLatencies {
             let ms = src.block_ms(cfg, blk.i, blk.j, batch)?;
             entries.push((blk.i, blk.j, ms));
         }
-        Ok(BlockLatencies { source: src.name(), batch, scale, entries })
+        Ok(BlockLatencies::new(src.name(), batch, scale, entries))
     }
 
     /// Integer table for the DP (stage 1).
@@ -98,7 +66,7 @@ impl BlockLatencies {
     }
 
     pub fn ms_of(&self, i: usize, j: usize) -> Option<f64> {
-        self.entries.iter().find(|e| e.0 == i && e.1 == j).map(|e| e.2)
+        self.idx.get(&(i, j)).map(|&n| self.entries[n].2)
     }
 
     /// End-to-end latency (ms) of a merged network given its segments.
@@ -110,8 +78,11 @@ impl BlockLatencies {
         ticks as f64 / self.scale
     }
 
+    /// Clamped to >= 1 tick, matching `to_lat_table`: a sub-half-tick
+    /// quantity must never round-trip to 0 ticks (a 0 "budget"/block
+    /// would be infeasible by the strict `< T0` rule for free).
     pub fn ms_to_ticks(&self, ms: f64) -> u64 {
-        (ms * self.scale).round() as u64
+        ((ms * self.scale).round() as u64).max(1)
     }
 
     // -- persistence (tables are expensive to measure) ----------------------
@@ -145,12 +116,12 @@ impl BlockLatencies {
                 Ok((a[0].usize()?, a[1].usize()?, a[2].f64()?))
             })
             .collect::<Result<Vec<_>>>()?;
-        Ok(BlockLatencies {
-            source: v.get("source")?.str()?.to_string(),
-            batch: v.get("batch")?.usize()?,
-            scale: v.get("scale")?.f64()?,
+        Ok(BlockLatencies::new(
+            v.get("source")?.str()?.to_string(),
+            v.get("batch")?.usize()?,
+            v.get("scale")?.f64()?,
             entries,
-        })
+        ))
     }
 
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
@@ -170,6 +141,7 @@ impl BlockLatencies {
 mod tests {
     use super::*;
     use crate::latency::devices::RTX_2080_TI;
+    use crate::latency::gpu_model::ExecMode;
     use crate::model::spec::testutil::tiny_config;
 
     #[test]
@@ -208,17 +180,42 @@ mod tests {
         assert_eq!(re.entries.len(), bl.entries.len());
         assert_eq!(re.batch, 32);
         assert!((re.entries[3].2 - bl.entries[3].2).abs() < 1e-12);
+        // the rebuilt index answers the same queries
+        for &(i, j, ms) in &bl.entries {
+            assert_eq!(re.ms_of(i, j), Some(ms));
+        }
     }
 
     #[test]
     fn scaling_round_trips() {
-        let bl = BlockLatencies {
-            source: "x".into(),
-            batch: 1,
-            scale: 100.0,
-            entries: vec![(0, 1, 0.5)],
-        };
+        let bl = BlockLatencies::new("x".into(), 1, 100.0, vec![(0, 1, 0.5)]);
         assert_eq!(bl.ms_to_ticks(0.5), 50);
         assert!((bl.ticks_to_ms(50) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sub_half_tick_clamps_to_one_on_both_paths() {
+        // 0.004 ms at 100 ticks/ms rounds to 0.4 -> must clamp to 1 tick
+        // in BOTH the DP table and the scalar conversion, or a tiny
+        // block round-trips to a free (0-tick) block in one of them
+        let bl = BlockLatencies::new("x".into(), 1, 100.0, vec![(0, 1, 0.004)]);
+        assert_eq!(bl.ms_to_ticks(0.004), 1);
+        let t = bl.to_lat_table(1);
+        assert_eq!(t.get(0, 1), 1);
+        assert_eq!(bl.ms_to_ticks(0.004), t.get(0, 1));
+    }
+
+    #[test]
+    fn ms_of_is_indexed_and_total() {
+        let bl = BlockLatencies::new(
+            "x".into(),
+            1,
+            100.0,
+            vec![(0, 1, 0.5), (1, 2, 0.25), (0, 2, 0.6)],
+        );
+        assert_eq!(bl.ms_of(1, 2), Some(0.25));
+        assert_eq!(bl.ms_of(2, 3), None);
+        assert_eq!(bl.network_ms(&[(0, 1), (1, 2)]), Some(0.75));
+        assert_eq!(bl.network_ms(&[(0, 1), (2, 3)]), None);
     }
 }

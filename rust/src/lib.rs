@@ -19,9 +19,13 @@
 //!                budget; `brute` holds the exponential test oracles.
 //!   planner    — the uniform surface over the solvers: `solver` defines
 //!                ImportanceProvider + the Solver trait (BruteSolver /
-//!                TwoStageSolver / ExtendedSolver -> PlanOutcome), and
+//!                TwoStageSolver / ExtendedSolver -> PlanOutcome),
 //!                `frontier` the memoizing Planner with solve(t0) /
-//!                solve_frontier(budgets) one-pass budget sweeps.
+//!                solve_frontier(budgets) one-pass budget sweeps, and
+//!                `deploy` the multi-device DeployPlanner: one memoized
+//!                Planner per latency source, per-device frontiers
+//!                merged into a joint cross-device Pareto set, plus
+//!                budget auto-calibration against a target ms.
 //!   kernels    — native parallel CPU compute: `pool` (scoped worker
 //!                pool, deterministic chunk schedule), `gemm`
 //!                (cache-blocked register-tiled f32 GEMM + transposed
@@ -29,7 +33,10 @@
 //!                stride/pad/groups), `elementwise` (bias/relu6/
 //!                residual/pool/GAP).  Byte-identical at any thread
 //!                count; every host-side compute path routes here.
-//!   latency    — analytical GPU models + measured PJRT source -> T[i,j].
+//!   latency    — the source registry (`source`: one `--source` spec
+//!                grammar over analytical GPU models, the measured PJRT
+//!                source, and the native-kernel HostKernelSource that
+//!                prices blocks on the serving backend) -> T[i,j].
 //!   importance — probe evaluation, I[i,j,a,b] storage, B.3 normalize.
 //!   coordinator— pipeline stages (pretrain -> tables -> plan -> finetune
 //!                -> merge -> eval), experiment runners, serving.
@@ -78,6 +85,7 @@ pub mod latency {
     pub mod devices;
     pub mod gpu_model;
     pub mod measured;
+    pub mod source;
     pub mod table;
 }
 
@@ -89,6 +97,7 @@ pub mod dp {
 }
 
 pub mod planner {
+    pub mod deploy;
     pub mod frontier;
     pub mod solver;
 }

@@ -16,8 +16,12 @@ use repro::coordinator::server::{spawn_load, Server, ServerConfig};
 use repro::data::synth::SynthSpec;
 use repro::importance::eval::ImportanceConfig;
 use repro::latency::gpu_model::ExecMode;
+use repro::latency::source::SourceSpec;
+use repro::latency::table::BlockLatencies;
 use repro::model::cost;
 use repro::model::spec::ArchConfig;
+use repro::planner::deploy::DeployPlanner;
+use repro::planner::frontier::{Space, TableImportance};
 use repro::runtime::engine::Engine;
 use repro::runtime::host_exec::{Backend, HostExec};
 use repro::trainer::params::ParamSet;
@@ -29,17 +33,28 @@ fn usage() -> &'static str {
      commands:\n\
        info                                  list artifacts, archs, blocks\n\
        pretrain   --arch A [--steps N --lr X --seed N --classes N --force]\n\
-       latency    --arch A [--source sim:rtx2080ti|measured --eager --batch N]\n\
+       latency    --arch A [--source SPEC --eager --batch N]\n\
        importance --arch A [--steps N --lr X --force]\n\
        plan       --arch A --t0 MS [--alpha X --base] (writes artifacts/plans/)\n\
-       sweep      --arch A [--points N | --budgets MS,MS,...] [--alpha X --base]\n\
-                  one-pass Pareto frontier over budgets (+ CSV report)\n\
+       sweep      [--arch A|tiny] [--source SPEC[,SPEC...]] [--pareto]\n\
+                  [--target-ms MS] [--points N | --budgets MS,MS,...]\n\
+                  [--alpha X --base]  per-device frontiers from one planner\n\
+                  pass each; --pareto merges them into the joint\n\
+                  cross-device Pareto CSV (provenance per row);\n\
+                  --target-ms auto-calibrates the budget per source\n\
        compress   --arch A --t0 MS [--alpha X --finetune-steps N --kd --backend B]\n\
        eval       --arch A [--ckpt PATH --backend B]\n\
        serve      --arch A [--clients N --requests N --max-batch N --max-wait-ms N]\n\
-                  [--backend B --frac X]  (host backend: artifact-free —\n\
-                  plans on the analytical model, serves natively; --arch\n\
-                  tiny uses the built-in fixture with synthetic weights)\n\
+                  [--backend B --source SPEC --frac X --target-ms MS]\n\
+                  (host backend: artifact-free — prices blocks on the\n\
+                  native kernels it serves with, picks the plan off that\n\
+                  frontier; --arch tiny = built-in fixture)\n\
+     --source SPEC grammar (the latency-source registry):\n\
+       analytical/<device>[/fused|eager]   roofline model; devices:\n\
+                                           titan_xp rtx2080ti rtx3090 v100 xeon5220r\n\
+       measured[/fused|eager]              AOT probes on PJRT (needs artifacts)\n\
+       host[/<N>threads]                   wall-clock of the native serving kernels\n\
+       sim:<device>                        legacy alias for analytical/<device>\n\
      common: --artifacts DIR (default ./artifacts) --quiet\n\
              --backend pjrt|host (default pjrt; host = native kernels, no PJRT)"
 }
@@ -65,7 +80,7 @@ fn data_for(args: &Args, pipe: &Pipeline) -> Result<SynthSpec> {
 
 fn lat_cfg(args: &Args) -> Result<LatencyCfg> {
     Ok(LatencyCfg {
-        source: args.str_or("source", "sim:rtx2080ti"),
+        source: args.str_or("source", "analytical/rtx2080ti"),
         mode: if args.bool_flag("eager") { ExecMode::Eager } else { ExecMode::Fused },
         batch: args.usize_or("batch", 128)?,
         scale: args.f64_or("scale", 200.0)?,
@@ -188,85 +203,183 @@ fn main() -> Result<()> {
             println!("wrote {} — run `make plans` to emit pass-2 artifacts", path.display());
         }
         "sweep" => {
-            // Pareto frontier over latency budgets, derived from ONE
-            // planner pass (stage-1/stage-3 products + one DP table)
-            let engine = Engine::new(&root)?;
-            let arch = args.str_req("arch")?;
-            let mut pipe = Pipeline::new(&engine, &arch)?;
-            pipe.verbose = !quiet;
-            let lcfg = lat_cfg(&args)?;
-            let lat = pipe.latency_table(&lcfg, false)?;
-            let vanilla = pipe.vanilla_latency_ms(&lat)?;
-            let (imp, src) = repro::coordinator::experiments::importance_or_proxy(&pipe);
+            // per-device Pareto frontiers over latency budgets — ONE
+            // planner pass per latency source — and (--pareto) the
+            // joint cross-device Pareto set with provenance per point.
+            // `--arch tiny` runs artifact-free on the built-in fixture.
+            let arch = args.str_or("arch", "tiny");
+            let mode =
+                if args.bool_flag("eager") { ExecMode::Eager } else { ExecMode::Fused };
+            let specs =
+                SourceSpec::parse_list(&args.str_or("source", "analytical/rtx2080ti"), mode)?;
+            let batch = args.usize_or("batch", 128)?;
+            let scale = args.f64_or("scale", 200.0)?;
             let alpha = args.f64_or("alpha", 1.6)?;
             let extended = !args.bool_flag("base");
             let points = args.usize_or("points", 12)?;
             let hi = args.f64_or("max-frac", 0.92)?;
             let lo = args.f64_or("min-frac", 0.47)?;
-            let budgets: Vec<f64> = match args.str_opt("budgets") {
-                Some(s) => s
-                    .split(',')
-                    .map(|x| {
-                        x.trim().parse::<f64>().map_err(|_| {
-                            anyhow!("--budgets expects comma-separated ms, got {x:?}")
+            let pareto = args.bool_flag("pareto");
+            let target_ms = args.f64_or("target-ms", 0.0)?;
+            let force = args.bool_flag("force");
+            let budgets_explicit: Option<Vec<f64>> = match args.str_opt("budgets") {
+                Some(s) => Some(
+                    s.split(',')
+                        .map(|x| {
+                            x.trim().parse::<f64>().map_err(|_| {
+                                anyhow!("--budgets expects comma-separated ms, got {x:?}")
+                            })
                         })
-                    })
-                    .collect::<Result<_>>()?,
-                None => (0..points)
-                    .map(|n| {
-                        vanilla * (hi - (hi - lo) * n as f64 / (points - 1).max(1) as f64)
-                    })
-                    .collect(),
-            };
-            let outs = pipe.plan_frontier(&lat, &imp, &budgets, alpha, extended);
-            let mut t = Table::new(
-                &format!(
-                    "budget frontier {arch} [{}] (importance: {src}, vanilla {} ms)",
-                    lat.source,
-                    fmt_ms(vanilla)
+                        .collect::<Result<_>>()?,
                 ),
-                &["T0 (ms)", "est (ms)", "speedup", "|A|", "|S|", "objective"],
-            );
-            let mut csv = String::from("t0_ms,est_ms,objective,n_a,n_s\n");
-            for (t0, out) in budgets.iter().zip(&outs) {
-                match out {
-                    Some(o) => {
-                        t.row(vec![
-                            fmt_ms(*t0),
-                            fmt_ms(o.est_latency_ms),
-                            format!("{:.2}x", vanilla / o.est_latency_ms),
-                            o.a.len().to_string(),
-                            o.s.len().to_string(),
-                            format!("{:+.4}", o.objective),
-                        ]);
-                        csv.push_str(&format!(
-                            "{:.4},{:.4},{:.6},{},{}\n",
-                            t0,
-                            o.est_latency_ms,
-                            o.objective,
-                            o.a.len(),
-                            o.s.len()
-                        ));
+                None => None,
+            };
+            let engine_store;
+            let pipe_store;
+            let (cfg, imp, imp_tag, pipe_ref): (ArchConfig, _, &str, Option<&Pipeline>) =
+                if arch == "tiny" {
+                    let cfg = repro::model::spec::testutil::tiny_config();
+                    let imp = repro::coordinator::experiments::proxy_importance(&cfg);
+                    (cfg, imp, "proxy", None)
+                } else {
+                    engine_store = Engine::new(&root)?;
+                    let mut p = Pipeline::new(&engine_store, &arch)?;
+                    p.verbose = !quiet;
+                    pipe_store = p;
+                    let (imp, tag) =
+                        repro::coordinator::experiments::importance_or_proxy(&pipe_store);
+                    (pipe_store.cfg.clone(), imp, tag, Some(&pipe_store))
+                };
+            let dp = match pipe_ref {
+                Some(pipe) => pipe.plan_deploy(&specs, &imp, batch, scale, alpha, extended, force)?,
+                None => {
+                    // artifact-free fixture path: measure each source
+                    // directly (no engine, no on-disk cache), then the
+                    // same registration as Pipeline::plan_deploy
+                    let mut lats = Vec::with_capacity(specs.len());
+                    for spec in &specs {
+                        let mut src = spec.build(None)?;
+                        if !quiet {
+                            println!(
+                                "[latency] measuring {} blocks via {}...",
+                                cfg.blocks.len(),
+                                src.name()
+                            );
+                        }
+                        lats.push(BlockLatencies::measure(&cfg, src.as_mut(), batch, scale)?);
                     }
-                    None => {
-                        t.row(vec![
-                            fmt_ms(*t0),
-                            "-".into(),
-                            "-".into(),
-                            "-".into(),
-                            "-".into(),
-                            "infeasible".into(),
-                        ]);
-                        csv.push_str(&format!("{t0:.4},,,,\n"));
+                    repro::planner::deploy::deploy_from_tables(&cfg, lats, &imp, alpha, extended)
+                }
+            };
+            let ladders: Vec<Vec<f64>> = (0..dp.sources().len())
+                .map(|idx| match &budgets_explicit {
+                    Some(b) => b.clone(),
+                    None => dp.default_budgets(idx, points, lo, hi),
+                })
+                .collect();
+            let dir = root.join("reports");
+            std::fs::create_dir_all(&dir)?;
+            for (idx, src) in dp.sources().iter().enumerate() {
+                let vanilla = dp
+                    .vanilla_ms(idx)
+                    .ok_or_else(|| anyhow!("latency table missing a singleton"))?;
+                // position-aligned with the ladder: no float re-matching
+                let front = dp.frontier(idx, &ladders[idx]);
+                let mut t = Table::new(
+                    &format!(
+                        "budget frontier {arch} [{}] (importance: {imp_tag}, vanilla {} ms)",
+                        src.label,
+                        fmt_ms(vanilla)
+                    ),
+                    &["T0 (ms)", "est (ms)", "speedup", "|A|", "|S|", "objective"],
+                );
+                let mut csv =
+                    Table::new("csv", &["t0_ms", "est_ms", "objective", "n_a", "n_s"]);
+                for (t0, point) in ladders[idx].iter().zip(&front) {
+                    match point {
+                        Some(p) => {
+                            t.row(vec![
+                                fmt_ms(*t0),
+                                fmt_ms(p.est_ms),
+                                format!("{:.2}x", vanilla / p.est_ms),
+                                p.plan.a.len().to_string(),
+                                p.plan.s.len().to_string(),
+                                format!("{:+.4}", p.plan.imp_total),
+                            ]);
+                            csv.row(vec![
+                                format!("{t0:.4}"),
+                                format!("{:.4}", p.est_ms),
+                                format!("{:.6}", p.plan.imp_total),
+                                p.plan.a.len().to_string(),
+                                p.plan.s.len().to_string(),
+                            ]);
+                        }
+                        None => {
+                            t.row(vec![
+                                fmt_ms(*t0),
+                                "-".into(),
+                                "-".into(),
+                                "-".into(),
+                                "-".into(),
+                                "infeasible".into(),
+                            ]);
+                            csv.row(vec![
+                                format!("{t0:.4}"),
+                                String::new(),
+                                String::new(),
+                                String::new(),
+                                String::new(),
+                            ]);
+                        }
+                    }
+                }
+                print!("{}", t.render());
+                // one frontier CSV per source, always (the single-source
+                // file keeps its historical name)
+                let fname = if dp.sources().len() == 1 {
+                    format!("frontier_{arch}.csv")
+                } else {
+                    format!("frontier_{arch}_{}.csv", src.label.replace([':', '/'], "_"))
+                };
+                let path = dir.join(fname);
+                std::fs::write(&path, csv.render_csv())?;
+                println!("frontier series written to {}", path.display());
+            }
+            if pareto {
+                let joint = dp.joint_pareto(&ladders);
+                let (t, csv) = repro::coordinator::report::joint_pareto_tables(
+                    &format!(
+                        "joint cross-device Pareto set {arch} ({} sources, {} points survive)",
+                        dp.sources().len(),
+                        joint.len()
+                    ),
+                    &joint,
+                );
+                print!("{}", t.render());
+                let path = dir.join(format!("pareto_{arch}.csv"));
+                std::fs::write(&path, csv.render_csv())?;
+                println!("joint Pareto set written to {}", path.display());
+            }
+            if target_ms > 0.0 {
+                for idx in 0..dp.sources().len() {
+                    match dp.calibrate(idx, target_ms) {
+                        Some(p) => println!(
+                            "[calibrate] {}: T0 auto-calibrated to {} ms \
+                             (A={:?} S={:?} obj {:+.4})",
+                            p.source,
+                            fmt_ms(p.est_ms),
+                            p.plan.a,
+                            p.plan.s,
+                            p.plan.imp_total
+                        ),
+                        None => println!(
+                            "[calibrate] {}: no plan reaches {} ms",
+                            dp.sources()[idx].label,
+                            fmt_ms(target_ms)
+                        ),
                     }
                 }
             }
-            print!("{}", t.render());
-            let dir = root.join("reports");
-            std::fs::create_dir_all(&dir)?;
-            let path = dir.join(format!("frontier_{arch}.csv"));
-            std::fs::write(&path, csv)?;
-            println!("frontier series written to {}", path.display());
         }
         "plan-demo" => {
             // write a plan from the structural proxy importance (no
@@ -492,51 +605,90 @@ fn host_arch_source(arch: &str, root: &std::path::Path, seed: u64) -> Result<(Ar
     }
 }
 
-/// `serve --backend host`: plan on the analytical latency model +
-/// structural proxy importance, merge, and serve the compressed network
-/// natively on the kernel layer — zero PJRT, zero artifacts required.
+/// `serve --backend host`: price every block on a registry source —
+/// by default `host`, i.e. wall-clock of the VERY kernels this backend
+/// serves with — compute the importance–latency frontier over that
+/// table, pick the plan off the frontier (auto-calibrated to
+/// `--target-ms`, or to `--frac` of vanilla), merge, and serve
+/// natively.  Zero PJRT, zero artifacts required.
 fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
     use repro::coordinator::experiments::proxy_importance;
-    use repro::latency::table::{Analytical, BlockLatencies};
-    use repro::planner::frontier::{Planner, Space, TableImportance};
 
     let arch = args.str_or("arch", "tiny");
     let (cfg, ps, label) = host_arch_source(&arch, root, args.usize_or("seed", 1)? as u64)?;
-    let lcfg = lat_cfg(args)?;
-    let Some(dev_name) = lcfg.source.strip_prefix("sim:") else {
-        bail!("host serving plans on the analytical model: use --source sim:<device>");
-    };
-    let dev = repro::latency::devices::by_name(dev_name)
-        .ok_or_else(|| anyhow!("unknown device {dev_name:?}"))?;
-    let mut src = Analytical { dev, mode: lcfg.mode };
-    let bl = BlockLatencies::measure(&cfg, &mut src, lcfg.batch, lcfg.scale)?;
+    let mode = if args.bool_flag("eager") { ExecMode::Eager } else { ExecMode::Fused };
+    let spec = SourceSpec::parse_with_mode(&args.str_or("source", "host"), mode)?;
+    let max_batch = args.usize_or("max-batch", 8)?;
+    // price blocks at the serving batch size; host blocks are sub-ms,
+    // so the default tick is finer than the table-building default
+    let batch = args.usize_or("batch", max_batch)?;
+    let scale = args.f64_or("scale", 2000.0)?;
+    let mut src = spec.build(None)?; // measured needs artifacts: rejected here
+    let bl = BlockLatencies::measure(&cfg, src.as_mut(), batch, scale)?;
     let l = cfg.spec.l();
-    let singles: Vec<(usize, usize)> = (0..l).map(|i| (i, i + 1)).collect();
-    let vanilla = bl
-        .network_ms(&singles)
+    let mut dp = DeployPlanner::new(l, Space::Extended);
+    let si = dp.add_source(bl, TableImportance::new(&cfg, proxy_importance(&cfg)));
+    let vanilla = dp
+        .vanilla_ms(si)
         .ok_or_else(|| anyhow!("latency table missing a singleton"))?;
-    let frac = args.f64_or("frac", 0.65)?;
-    let planner = Planner::new(&bl.to_lat_table(l), TableImportance::new(&cfg, proxy_importance(&cfg)));
-    let (s_set, a_set) = match planner.solve(Space::Extended, bl.ms_to_ticks(vanilla * frac)) {
-        Some(sol) => (sol.s, sol.a),
-        None => {
-            // budget infeasible on this (cfg, proxy) pair: serve the
-            // uncompressed network as all-singleton merged layers
+    let points = args.usize_or("points", 9)?;
+    let front: Vec<repro::planner::deploy::ParetoPoint> = dp
+        .frontier(si, &dp.default_budgets(si, points, 0.45, 0.95))
+        .into_iter()
+        .flatten()
+        .collect();
+    if !front.is_empty() {
+        let mut t = Table::new(
+            &format!("host-source frontier [{}]", dp.sources()[si].label),
+            &["est (ms)", "speedup", "|S|", "objective"],
+        );
+        for p in &front {
+            t.row(vec![
+                fmt_ms(p.est_ms),
+                format!("{:.2}x", vanilla / p.est_ms),
+                p.plan.s.len().to_string(),
+                format!("{:+.4}", p.plan.imp_total),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    let target = {
+        let t = args.f64_or("target-ms", 0.0)?;
+        if t > 0.0 {
+            t
+        } else {
+            vanilla * args.f64_or("frac", 0.65)?
+        }
+    };
+    let (s_set, a_set) = match dp.calibrate(si, target) {
+        Some(p) => {
             println!(
-                "[serve:host] budget {:.3} ms infeasible — serving uncompressed (raise --frac)",
-                vanilla * frac
+                "[serve:host] frontier pick for target {} ms: est {} ms, obj {:+.4}",
+                fmt_ms(target),
+                fmt_ms(p.est_ms),
+                p.plan.imp_total
+            );
+            (p.plan.s, p.plan.a)
+        }
+        None => {
+            // no frontier point reaches the target on this (cfg, proxy)
+            // pair: serve the uncompressed all-singleton network
+            println!(
+                "[serve:host] target {} ms unreachable — serving uncompressed \
+                 (raise --frac / --target-ms)",
+                fmt_ms(target)
             );
             repro::merge::plan::all_singleton_plan(&cfg.spec)
         }
     };
     let segs = repro::merge::plan::segments_from_s(l, &s_set);
-    let est_ms = bl.network_ms(&segs).unwrap_or(f64::NAN);
+    let est_ms = dp.sources()[si].lat.network_ms(&segs).unwrap_or(f64::NAN);
     let net = repro::merge::plan::build_merged(&cfg, &ps, &s_set, &a_set)?;
     let depth = net.depth();
     let exec = HostExec::new(net)?;
     let hw = cfg.spec.input_hw;
     let cfg_srv = ServerConfig {
-        max_batch: args.usize_or("max-batch", 8)?,
+        max_batch,
         max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 4)?),
     };
     let server = Server::host(exec, &[3, hw, hw], cfg_srv)?;
@@ -554,7 +706,7 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
         depth,
         l,
         fmt_ms(est_ms),
-        bl.source
+        dp.sources()[si].label
     );
     println!("[serve:host] {clients} clients x {per} requests (batch <= {})", server.cfg.max_batch);
     let (rx, handles) = spawn_load(&data, clients, per, args.u64_or("think-ms", 0)?);
