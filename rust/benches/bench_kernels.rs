@@ -1,17 +1,23 @@
-//! Kernel micro-benchmarks: naive vs cache-blocked vs pool-parallel
-//! GEMM and convolution at MBV2-tail sizes, recorded to
+//! Kernel micro-benchmarks at MBV2-tail merged-conv sizes, recorded to
 //! BENCH_kernels.json (same schema discipline as BENCH_dp.json).
 //!
-//! "Naive" is the textbook ijk triple loop with strided B access —
-//! exactly what the old `fc`/glue paths did; "blocked" is the
-//! register-tiled kernel on one worker; "parallel" the same kernel on
-//! the global pool.  Before timing, every variant is cross-checked
-//! against the naive result (and blocked-vs-parallel for bitwise
-//! equality), so a broken kernel can never report a good number.
+//! GEMM: naive ijk baseline vs the explicit-lane micro-kernel at each
+//! runnable SIMD level (scalar monomorphization, then AVX2 when the
+//! host has it) vs the pool-parallel entry point.  Conv: the NCHW
+//! im2col route vs the NHWC fast paths (1x1 without im2col, depthwise
+//! stencil, general channels-last im2col), serial and parallel.
+//!
+//! Before timing, every variant is cross-checked: blocked-vs-naive
+//! numerically, and scalar-vs-AVX2 / NCHW-vs-NHWC / serial-vs-parallel
+//! for BITWISE equality — the determinism contract — so a broken
+//! kernel can never report a good number.
 
-use repro::kernels::conv::{conv2d_naive, conv2d_with, ConvGeom};
-use repro::kernels::gemm::{gemm_naive, gemm_with};
+use repro::kernels::conv::{
+    conv2d_naive, conv2d_nhwc_with, conv2d_with, nchw_to_nhwc, nhwc_to_nchw, ConvGeom,
+};
+use repro::kernels::gemm::{gemm_naive, gemm_rows_level, gemm_with};
 use repro::kernels::pool::Pool;
+use repro::kernels::simd::{bits_equal, levels_available, SimdLevel};
 use repro::util::bench::{black_box, Bencher};
 use repro::util::json::Json;
 use repro::util::rng::Rng;
@@ -22,11 +28,17 @@ fn randv(n: usize, rng: &mut Rng) -> Vec<f32> {
 
 fn main() {
     let par = Pool::global();
-    let ser = Pool::serial();
-    println!("# bench_kernels — naive vs blocked vs parallel ({} workers)", par.workers());
+    let levels = levels_available();
+    let best = *levels.last().unwrap();
+    println!(
+        "# bench_kernels — scalar vs {} vs parallel ({} workers); NCHW vs NHWC",
+        best.name(),
+        par.workers()
+    );
     let mut record = vec![
-        ("bench", Json::str_of("kernels_naive_vs_blocked_vs_parallel")),
+        ("bench", Json::str_of("kernels_simd_and_layout_variants")),
         ("workers", Json::int(par.workers() as i64)),
+        ("simd_level", Json::str_of(best.name())),
     ];
 
     // -- GEMM at MBV2-tail shapes: a 1x1 conv over (C_in, H*W) is a
@@ -42,85 +54,114 @@ fn main() {
         let a = randv(m * k, &mut rng);
         let b = randv(k * n, &mut rng);
         let mut c_naive = vec![0.0f32; m * n];
-        let mut c_blk = vec![0.0f32; m * n];
+        let mut c_scalar = vec![0.0f32; m * n];
+        let mut c_best = vec![0.0f32; m * n];
         let mut c_par = vec![0.0f32; m * n];
         // correctness gate before timing anything
         gemm_naive(m, k, n, &a, &b, &mut c_naive);
-        gemm_with(&ser, m, k, n, &a, &b, &mut c_blk);
+        gemm_rows_level(SimdLevel::Scalar, m, k, n, &a, &b, &mut c_scalar, false);
+        gemm_rows_level(best, m, k, n, &a, &b, &mut c_best, false);
         gemm_with(&par, m, k, n, &a, &b, &mut c_par);
         let max_err = c_naive
             .iter()
-            .zip(&c_blk)
+            .zip(&c_scalar)
             .map(|(x, y)| (x - y).abs())
             .fold(0.0f32, f32::max);
         // different summation orders: tolerance scales with sqrt(k)
         // (values are unit normals; a real bug is off by O(sqrt(k)))
         assert!(max_err < 1e-2 * (k as f32).sqrt(), "{tag}: blocked err {max_err}");
         assert!(
-            c_blk.iter().zip(&c_par).all(|(x, y)| x.to_bits() == y.to_bits()),
-            "{tag}: parallel result not byte-identical to blocked"
+            bits_equal(&c_scalar, &c_best),
+            "{tag}: {} result not byte-identical to scalar",
+            best.name()
         );
-        let sn = Bencher::new(&format!("gemm naive   {tag}"))
+        assert!(bits_equal(&c_best, &c_par), "{tag}: parallel result not byte-identical");
+        let sn = Bencher::new(&format!("gemm naive    {tag}"))
             .run(|| gemm_naive(m, k, n, black_box(&a), black_box(&b), &mut c_naive));
-        let sb = Bencher::new(&format!("gemm blocked {tag}"))
-            .run(|| gemm_with(&ser, m, k, n, black_box(&a), black_box(&b), &mut c_blk));
-        let sp = Bencher::new(&format!("gemm parallel{tag}"))
+        let ss = Bencher::new(&format!("gemm scalar   {tag}")).run(|| {
+            gemm_rows_level(SimdLevel::Scalar, m, k, n, black_box(&a), black_box(&b), &mut c_scalar, false)
+        });
+        let sv = Bencher::new(&format!("gemm {:<8} {tag}", best.name())).run(|| {
+            gemm_rows_level(best, m, k, n, black_box(&a), black_box(&b), &mut c_best, false)
+        });
+        let sp = Bencher::new(&format!("gemm parallel {tag}"))
             .run(|| gemm_with(&par, m, k, n, black_box(&a), black_box(&b), &mut c_par));
-        let (su_b, su_p) = (sn.median_ns / sb.median_ns, sn.median_ns / sp.median_ns);
-        println!("{tag}: blocked {su_b:.1}x, parallel {su_p:.1}x over naive");
+        let su_simd = ss.median_ns / sv.median_ns;
+        let su_par = sn.median_ns / sp.median_ns;
+        println!(
+            "{tag}: {} {su_simd:.2}x over scalar, parallel {su_par:.1}x over naive",
+            best.name()
+        );
         gemm_rows_json.push(Json::obj_from(vec![
             ("shape", Json::str_of(tag)),
             ("m", Json::int(m as i64)),
             ("k", Json::int(k as i64)),
             ("n", Json::int(n as i64)),
             ("naive_ms", Json::num(sn.median_ms())),
-            ("blocked_ms", Json::num(sb.median_ms())),
+            ("scalar_ms", Json::num(ss.median_ms())),
+            ("simd_ms", Json::num(sv.median_ms())),
             ("parallel_ms", Json::num(sp.median_ms())),
-            ("speedup_blocked", Json::num(su_b)),
-            ("speedup_parallel", Json::num(su_p)),
+            ("speedup_simd_vs_scalar", Json::num(su_simd)),
+            ("speedup_parallel_vs_naive", Json::num(su_par)),
         ]));
     }
     record.push(("gemm", Json::Arr(gemm_rows_json)));
 
-    // -- conv: merged 3x3 dense conv (MBV2 mid block after merging) and
-    // the serve-batch-8 tail conv ---------------------------------------
+    // -- conv: NCHW im2col vs the NHWC fast paths at the shapes that
+    // dominate a compressed MBV2 tail: the merged dense 3x3, the
+    // serve-batch-8 1x1 expansion (pure GEMM in NHWC), and the
+    // depthwise 3x3 (contiguous stencil in NHWC) ------------------------
+    let ser = Pool::serial();
     let mut conv_rows_json = Vec::new();
-    for (tag, n, ci, hw, co, kk, stride, pad) in [
-        ("merged_3x3 (1x96x14x14 -> 96)", 1usize, 96usize, 14usize, 96usize, 3usize, 1usize, 1usize),
-        ("tail_1x1_b8 (8x160x7x7 -> 960)", 8, 160, 7, 960, 1, 1, 0),
+    for (tag, n, ci, hw, co, kk, stride, pad, groups) in [
+        ("merged_3x3 (1x96x14x14 -> 96)", 1usize, 96usize, 14usize, 96usize, 3usize, 1usize, 1usize, 1usize),
+        ("tail_1x1_b8 (8x160x7x7 -> 960)", 8, 160, 7, 960, 1, 1, 0, 1),
+        ("depthwise_3x3 (1x96x14x14)", 1, 96, 14, 96, 3, 1, 1, 96),
     ] {
         let mut x = repro::tensor::Tensor::zeros(&[n, ci, hw, hw]);
         for v in x.data.iter_mut() {
             *v = rng.normal();
         }
-        let mut w = repro::tensor::Tensor::zeros(&[co, ci, kk, kk]);
+        let mut w = repro::tensor::Tensor::zeros(&[co, ci / groups, kk, kk]);
         for v in w.data.iter_mut() {
             *v = rng.normal() * 0.05;
         }
-        let g = ConvGeom { stride, pad, groups: 1 };
+        let g = ConvGeom { stride, pad, groups };
+        let xh = nchw_to_nhwc(&x);
         let want = conv2d_naive(&x, &w, g);
         let blk = conv2d_with(&ser, &x, &w, g).unwrap();
         let parr = conv2d_with(&par, &x, &w, g).unwrap();
+        let nh = conv2d_nhwc_with(&ser, &xh, &w, g).unwrap();
+        let nh_par = conv2d_nhwc_with(&par, &xh, &w, g).unwrap();
         assert!(want.max_abs_diff(&blk) < 1e-2, "{tag}: im2col diverges from naive");
+        assert!(bits_equal(&blk.data, &parr.data), "{tag}: parallel conv not byte-identical");
         assert!(
-            blk.data.iter().zip(&parr.data).all(|(a, b)| a.to_bits() == b.to_bits()),
-            "{tag}: parallel conv not byte-identical"
+            bits_equal(&nhwc_to_nchw(&nh).data, &blk.data),
+            "{tag}: NHWC conv not byte-identical to NCHW"
         );
-        let sn = Bencher::new(&format!("conv naive   {tag}"))
+        assert!(bits_equal(&nh.data, &nh_par.data), "{tag}: parallel NHWC not byte-identical");
+        let sn = Bencher::new(&format!("conv naive    {tag}"))
             .run(|| black_box(conv2d_naive(black_box(&x), black_box(&w), g)));
-        let sb = Bencher::new(&format!("conv im2col  {tag}"))
+        let sb = Bencher::new(&format!("conv nchw     {tag}"))
             .run(|| black_box(conv2d_with(&ser, black_box(&x), black_box(&w), g).unwrap()));
-        let sp = Bencher::new(&format!("conv parallel{tag}"))
+        let sh = Bencher::new(&format!("conv nhwc     {tag}"))
+            .run(|| black_box(conv2d_nhwc_with(&ser, black_box(&xh), black_box(&w), g).unwrap()));
+        let sbp = Bencher::new(&format!("conv nchw par {tag}"))
             .run(|| black_box(conv2d_with(&par, black_box(&x), black_box(&w), g).unwrap()));
-        let (su_b, su_p) = (sn.median_ns / sb.median_ns, sn.median_ns / sp.median_ns);
-        println!("{tag}: im2col {su_b:.1}x, parallel {su_p:.1}x over naive");
+        let shp = Bencher::new(&format!("conv nhwc par {tag}"))
+            .run(|| black_box(conv2d_nhwc_with(&par, black_box(&xh), black_box(&w), g).unwrap()));
+        let su_nhwc = sb.median_ns / sh.median_ns;
+        let su_par = sn.median_ns / shp.median_ns.min(sbp.median_ns);
+        println!("{tag}: nhwc {su_nhwc:.2}x over nchw, best-parallel {su_par:.1}x over naive");
         conv_rows_json.push(Json::obj_from(vec![
             ("shape", Json::str_of(tag)),
             ("naive_ms", Json::num(sn.median_ms())),
-            ("blocked_ms", Json::num(sb.median_ms())),
-            ("parallel_ms", Json::num(sp.median_ms())),
-            ("speedup_blocked", Json::num(su_b)),
-            ("speedup_parallel", Json::num(su_p)),
+            ("nchw_ms", Json::num(sb.median_ms())),
+            ("nhwc_ms", Json::num(sh.median_ms())),
+            ("nchw_parallel_ms", Json::num(sbp.median_ms())),
+            ("nhwc_parallel_ms", Json::num(shp.median_ms())),
+            ("speedup_nhwc_vs_nchw", Json::num(su_nhwc)),
+            ("speedup_best_parallel_vs_naive", Json::num(su_par)),
         ]));
     }
     record.push(("conv", Json::Arr(conv_rows_json)));

@@ -41,8 +41,10 @@ use crate::util::json::Json;
 #[derive(Debug, Clone)]
 pub struct LatencyCfg {
     /// a [`SourceSpec`] string: `analytical/<device>[/fused|eager]`,
-    /// `measured[/fused|eager]`, `host[/<N>threads]`, or the legacy
-    /// alias `sim:<device>`
+    /// `measured[/fused|eager]`, `host[/<N>threads][/nhwc|nchw]`, or
+    /// the legacy alias `sim:<device>` — the registry grammar defined
+    /// in [`crate::latency::source`] (NOT in `latency/table.rs`, which
+    /// only owns the assembled `BlockLatencies` + tick arithmetic)
     pub source: String,
     /// default exec mode when the spec string omits it
     pub mode: ExecMode,

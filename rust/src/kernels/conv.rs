@@ -1,23 +1,70 @@
-//! Direct convolution as im2col + GEMM on the shared kernel layer.
+//! Convolution on the shared kernel layer, in either activation layout.
 //!
-//! NCHW activations, OIHW kernels (grouped kernels as `[c_out,
-//! c_in/groups, kh, kw]`, matching the checkpoint layout).  Each
-//! (batch, group) pair lowers its receptive fields into a column matrix
-//! and multiplies by the group's weight slab — whose rows are already
-//! contiguous in the OIHW tensor, so no packing pass is needed.
+//! **NCHW** (checkpoint layout): im2col + GEMM.  Each (batch, group)
+//! pair lowers its receptive fields into a column matrix and multiplies
+//! by the group's OIHW weight slab — whose rows are already contiguous,
+//! so no packing pass is needed.
+//!
+//! **NHWC** (channels-last, [`Layout::Nhwc`]): the serving-side layout
+//! experiment.  1x1 convs skip im2col entirely — the activation IS the
+//! GEMM operand (one `[n*h*w, c_in] · [c_in, c_out]` product over the
+//! contiguous HW x C panel, batch folded into the row dimension); pure
+//! depthwise convs run as a contiguous stencil whose inner loop walks
+//! the channel dimension at unit stride.  General k x k convs lower to
+//! an NHWC im2col whose reduction dimension keeps the NCHW (c, dy, dx)
+//! order, which is what makes the two layouts bit-compatible.
+//!
+//! # Determinism contract
+//!
+//! Every output element accumulates `acc = acc + x*w` (unfused) over
+//! the SAME (c, dy, dx)-ascending tap order in every path — NCHW or
+//! NHWC, fast path or general, any SIMD level, any worker count.
+//! Out-of-bounds taps contribute an exact-zero product in the im2col
+//! paths and are skipped in the stencil path; both leave the
+//! accumulator bits unchanged (a +0.0 starting accumulator can never
+//! become -0.0 under IEEE add), so NCHW and NHWC outputs are
+//! byte-identical modulo the layout permutation — pinned by the tests
+//! below and by the `HostExec` layout suite.
 //!
 //! Parallel strategy: with several (batch, group) blocks the pool fans
 //! out over blocks (one im2col buffer per work item); a single block —
 //! the batch-1 dense conv that dominates Host serving — parallelizes
-//! inside the GEMM over output-channel rows instead.  Both schedules
-//! produce byte-identical output (per-element accumulation order is
-//! fixed by the k index alone), which the determinism tests pin.
+//! inside the GEMM over output rows instead.  Both schedules produce
+//! byte-identical output (per-element accumulation order is fixed by
+//! the k index alone), which the determinism tests pin.
 
 use anyhow::{bail, Result};
 
 use super::gemm::{gemm_rows, gemm_with};
 use super::pool::Pool;
 use crate::tensor::Tensor;
+
+/// Activation-tensor memory layout for the host compute layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layout {
+    /// `[n, c, h, w]` — the checkpoint/PJRT layout; conv via im2col.
+    Nchw,
+    /// `[n, h, w, c]` — channels-last; 1x1 convs are a straight GEMM
+    /// and depthwise convs a contiguous stencil.
+    Nhwc,
+}
+
+impl Layout {
+    pub fn parse(s: &str) -> Result<Layout> {
+        match s.to_ascii_lowercase().as_str() {
+            "nchw" => Ok(Layout::Nchw),
+            "nhwc" | "channels-last" | "channels_last" => Ok(Layout::Nhwc),
+            other => bail!("unknown layout {other:?} (want nchw|nhwc)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Layout::Nchw => "nchw",
+            Layout::Nhwc => "nhwc",
+        }
+    }
+}
 
 /// Convolution geometry (square kernel taps come from the weight shape).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,7 +91,39 @@ pub fn out_hw(h: usize, w: usize, kh: usize, kw: usize, g: ConvGeom) -> Result<(
     Ok(((h + 2 * g.pad - kh) / g.stride + 1, (w + 2 * g.pad - kw) / g.stride + 1))
 }
 
-/// Lower one (batch, group) block of `x` into a column matrix:
+/// `[n, c, h, w]` -> `[n, h, w, c]` (pure permutation, no arithmetic).
+pub fn nchw_to_nhwc(x: &Tensor) -> Tensor {
+    debug_assert_eq!(x.rank(), 4);
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = Tensor::zeros(&[n, h, w, c]);
+    for ni in 0..n {
+        for ci in 0..c {
+            let plane = &x.data[((ni * c + ci) * h) * w..][..h * w];
+            for (p, &v) in plane.iter().enumerate() {
+                out.data[(ni * h * w + p) * c + ci] = v;
+            }
+        }
+    }
+    out
+}
+
+/// `[n, h, w, c]` -> `[n, c, h, w]` (pure permutation, no arithmetic).
+pub fn nhwc_to_nchw(x: &Tensor) -> Tensor {
+    debug_assert_eq!(x.rank(), 4);
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = Tensor::zeros(&[n, c, h, w]);
+    for ni in 0..n {
+        for ci in 0..c {
+            let plane = &mut out.data[((ni * c + ci) * h) * w..][..h * w];
+            for (p, v) in plane.iter_mut().enumerate() {
+                *v = x.data[(ni * h * w + p) * c + ci];
+            }
+        }
+    }
+    out
+}
+
+/// Lower one (batch, group) block of NCHW `x` into a column matrix:
 /// col[(c*kh*kw + dy*kw + dx), (y*ow + x)] with zero padding.
 #[allow(clippy::too_many_arguments)]
 fn im2col_block(
@@ -140,6 +219,205 @@ pub fn conv2d(x: &Tensor, w: &Tensor, g: ConvGeom) -> Result<Tensor> {
     conv2d_with(&Pool::global(), x, w, g)
 }
 
+/// OIHW `[co, cg, kh, kw]` -> the NHWC GEMM's B operand `[cg*kh*kw, co]`
+/// for group `gi`, with the reduction dim ordered (c, dy, dx) — the
+/// NCHW im2col order, which keeps the two layouts bit-compatible.
+fn weight_panel(w: &Tensor, gi: usize, cog: usize) -> Vec<f32> {
+    let (cg, kh, kw) = (w.shape[1], w.shape[2], w.shape[3]);
+    let kdim = cg * kh * kw;
+    let mut panel = vec![0.0f32; kdim * cog];
+    for o in 0..cog {
+        let wrow = &w.data[(gi * cog + o) * kdim..][..kdim];
+        for (kk, &v) in wrow.iter().enumerate() {
+            panel[kk * cog + o] = v;
+        }
+    }
+    panel
+}
+
+/// Lower one batch item's group-`gi` receptive fields of NHWC `x` into
+/// row-major patches: col[(y*ow + x), (c*kh + dy)*kw + dx].  Same
+/// reduction order as the NCHW `im2col_block`, transposed.
+#[allow(clippy::too_many_arguments)]
+fn im2col_nhwc_block(
+    x: &Tensor,
+    n: usize,
+    c0: usize,
+    cg: usize,
+    kh: usize,
+    kw: usize,
+    g: ConvGeom,
+    oh: usize,
+    ow: usize,
+    col: &mut [f32],
+) {
+    let (h, w, c) = (x.shape[1], x.shape[2], x.shape[3]);
+    let kdim = cg * kh * kw;
+    debug_assert_eq!(col.len(), oh * ow * kdim);
+    col.fill(0.0);
+    let base = n * h * w * c;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let crow = &mut col[(oy * ow + ox) * kdim..][..kdim];
+            for dy in 0..kh {
+                let iy = (oy * g.stride + dy) as isize - g.pad as isize;
+                if iy < 0 || iy as usize >= h {
+                    continue;
+                }
+                for dx in 0..kw {
+                    let ix = (ox * g.stride + dx) as isize - g.pad as isize;
+                    if ix < 0 || ix as usize >= w {
+                        continue;
+                    }
+                    let src = &x.data[base + ((iy as usize * w) + ix as usize) * c + c0..][..cg];
+                    // scatter the contiguous channel run to stride kh*kw
+                    for (cc, &v) in src.iter().enumerate() {
+                        crow[(cc * kh + dy) * kw + dx] = v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pure depthwise stencil over NHWC (groups == ci == co): out row
+/// (ni, oy) at a time; the inner loop walks channels at unit stride.
+#[allow(clippy::too_many_arguments)]
+fn depthwise_nhwc_row(
+    x: &Tensor,
+    wt: &[f32], // [kh*kw, c] tap-major panel
+    ni: usize,
+    oy: usize,
+    kh: usize,
+    kw: usize,
+    g: ConvGeom,
+    ow: usize,
+    orow: &mut [f32],
+) {
+    let (h, w, c) = (x.shape[1], x.shape[2], x.shape[3]);
+    orow.fill(0.0);
+    let base = ni * h * w * c;
+    for dy in 0..kh {
+        let iy = (oy * g.stride + dy) as isize - g.pad as isize;
+        if iy < 0 || iy as usize >= h {
+            continue;
+        }
+        for dx in 0..kw {
+            let wrow = &wt[(dy * kw + dx) * c..][..c];
+            for ox in 0..ow {
+                let ix = (ox * g.stride + dx) as isize - g.pad as isize;
+                if ix < 0 || ix as usize >= w {
+                    continue;
+                }
+                let src = &x.data[base + ((iy as usize * w) + ix as usize) * c..][..c];
+                let dst = &mut orow[ox * c..(ox + 1) * c];
+                for ((d, &s), &wv) in dst.iter_mut().zip(src).zip(wrow) {
+                    *d += s * wv;
+                }
+            }
+        }
+    }
+}
+
+/// conv2d over channels-last activations: x [n, h, w, ci] * w (OIHW,
+/// the checkpoint layout) -> [n, oh, ow, co].
+///
+/// Fast paths (the reason this layout exists):
+///   * 1x1 / stride 1 / pad 0 / dense — NO im2col: one GEMM
+///     `[n*h*w, ci] · [ci, co]` straight over the activation buffer,
+///     batch folded into the row dimension.
+///   * pure depthwise (groups == ci == co) — contiguous stencil, unit
+///     stride over channels.
+/// Everything else lowers to an NHWC im2col with the NCHW reduction
+/// order (see module docs), so all paths stay byte-identical to
+/// [`conv2d_with`] modulo the layout permutation.
+pub fn conv2d_nhwc_with(pool: &Pool, x: &Tensor, w: &Tensor, g: ConvGeom) -> Result<Tensor> {
+    if x.rank() != 4 || w.rank() != 4 {
+        bail!("conv2d_nhwc expects NHWC x and OIHW w, got {:?} / {:?}", x.shape, w.shape);
+    }
+    let (n, h, wd, ci) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (co, cig, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    if g.groups == 0 || ci % g.groups != 0 || co % g.groups != 0 {
+        bail!("groups {} does not divide channels {ci} -> {co}", g.groups);
+    }
+    let cg = ci / g.groups;
+    let cog = co / g.groups;
+    if cig != cg {
+        bail!("weight c_in/g {cig} != {cg} (ci {ci}, groups {})", g.groups);
+    }
+    let (oh, ow) = out_hw(h, wd, kh, kw, g)?;
+    let ohw = oh * ow;
+    let kdim = cg * kh * kw;
+    let mut out = Tensor::zeros(&[n, oh, ow, co]);
+
+    // -- fast path: pointwise conv is a straight GEMM over the panel --
+    if kh == 1 && kw == 1 && g.groups == 1 && g.stride == 1 && g.pad == 0 {
+        let panel = weight_panel(w, 0, co); // [ci, co]
+        gemm_with(pool, n * h * wd, ci, co, &x.data, &panel, &mut out.data);
+        return Ok(out);
+    }
+
+    // -- fast path: pure depthwise stencil ----------------------------
+    if g.groups == ci && cg == 1 && co == ci {
+        // tap-major weight panel [kh*kw, c]: wt[(dy*kw+dx)*c + ch]
+        let mut wt = vec![0.0f32; kh * kw * ci];
+        for ch in 0..ci {
+            for t in 0..kh * kw {
+                wt[t * ci + ch] = w.data[ch * kh * kw + t];
+            }
+        }
+        // one output row (ow * c floats) per work item
+        pool.for_each_chunk(&mut out.data, ow * co, |bi, orow| {
+            let (ni, oy) = (bi / oh, bi % oh);
+            depthwise_nhwc_row(x, &wt, ni, oy, kh, kw, g, ow, orow);
+        });
+        return Ok(out);
+    }
+
+    // -- general path: NHWC im2col + GEMM -----------------------------
+    if g.groups == 1 {
+        if n == 1 {
+            // one block: parallelize the GEMM over output-pixel rows
+            let mut col = vec![0.0f32; ohw * kdim];
+            im2col_nhwc_block(x, 0, 0, cg, kh, kw, g, oh, ow, &mut col);
+            let panel = weight_panel(w, 0, co);
+            gemm_with(pool, ohw, kdim, co, &col, &panel, &mut out.data);
+        } else {
+            // fan batch items out; each is a contiguous [ohw, co] slab
+            let panel = weight_panel(w, 0, co);
+            pool.for_each_chunk(&mut out.data, ohw * co, |ni, oblk| {
+                let mut col = vec![0.0f32; ohw * kdim];
+                im2col_nhwc_block(x, ni, 0, cg, kh, kw, g, oh, ow, &mut col);
+                gemm_rows(ohw, kdim, co, &col, &panel, oblk, false);
+            });
+        }
+        return Ok(out);
+    }
+
+    // grouped non-depthwise (rare): per-(batch, group) GEMM into a
+    // dense temp, then scatter into the strided channel columns
+    let mut col = vec![0.0f32; ohw * kdim];
+    let mut tmp = vec![0.0f32; ohw * cog];
+    for ni in 0..n {
+        for gi in 0..g.groups {
+            im2col_nhwc_block(x, ni, gi * cg, cg, kh, kw, g, oh, ow, &mut col);
+            let panel = weight_panel(w, gi, cog);
+            gemm_rows(ohw, kdim, cog, &col, &panel, &mut tmp, false);
+            let obase = ni * ohw * co + gi * cog;
+            for p in 0..ohw {
+                out.data[obase + p * co..obase + p * co + cog]
+                    .copy_from_slice(&tmp[p * cog..(p + 1) * cog]);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// conv2d_nhwc on the process-global pool.
+pub fn conv2d_nhwc(x: &Tensor, w: &Tensor, g: ConvGeom) -> Result<Tensor> {
+    conv2d_nhwc_with(&Pool::global(), x, w, g)
+}
+
 /// Literal direct convolution (7-loop, zero-padded, grouped) — the
 /// oracle the property tests pin `conv2d` against, and the bench
 /// baseline.  Panics on malformed shapes; use `conv2d` for real work.
@@ -183,6 +461,7 @@ pub fn conv2d_naive(x: &Tensor, w: &Tensor, g: ConvGeom) -> Tensor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::simd::bits_equal;
     use crate::util::rng::Rng;
 
     fn randt(shape: &[usize], rng: &mut Rng) -> Tensor {
@@ -225,6 +504,74 @@ mod tests {
     }
 
     #[test]
+    fn nhwc_is_byte_identical_to_nchw_across_geometries() {
+        // THE layout pin: every NHWC path (1x1 GEMM, depthwise stencil,
+        // general im2col, grouped scatter) must reproduce the NCHW
+        // conv's bits exactly, modulo the layout permutation
+        crate::util::prop::forall(40, 72, |rng| {
+            let (ci, co, groups) = match rng.below(4) {
+                0 => {
+                    let c = 2 + rng.below(6);
+                    (c, c, c) // pure depthwise
+                }
+                1 => {
+                    let g = [2, 3][rng.below(2)];
+                    (g * (1 + rng.below(3)), g * (1 + rng.below(3)), g)
+                }
+                _ => (1 + rng.below(8), 1 + rng.below(8), 1), // dense (incl. 1x1)
+            };
+            let k = [1, 1, 3, 5][rng.below(4)];
+            let stride = 1 + rng.below(2);
+            let pad = rng.below(2);
+            let h = k + stride * (1 + rng.below(4));
+            let n = 1 + rng.below(3);
+            let x = randt(&[n, ci, h, h], rng);
+            let w = randt(&[co, ci / groups, k, k], rng);
+            let g = ConvGeom { stride, pad, groups };
+            let want = conv2d_with(&Pool::serial(), &x, &w, g).map_err(|e| e.to_string())?;
+            let got_nhwc = conv2d_nhwc_with(&Pool::serial(), &nchw_to_nhwc(&x), &w, g)
+                .map_err(|e| e.to_string())?;
+            crate::prop_assert!(
+                got_nhwc.shape == vec![n, want.shape[2], want.shape[3], co],
+                "NHWC shape {:?} for NCHW {:?}",
+                got_nhwc.shape,
+                want.shape
+            );
+            let got = nhwc_to_nchw(&got_nhwc);
+            crate::prop_assert!(
+                bits_equal(&got.data, &want.data),
+                "NHWC conv not byte-identical to NCHW (geom {g:?}, k {k}, {ci}->{co})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pointwise_fast_path_matches_im2col_oracle() {
+        // the 1x1 fast path (no im2col at all) against the NCHW im2col
+        // route AND the naive oracle, over random shapes
+        crate::util::prop::forall(30, 73, |rng| {
+            let (n, ci, co) = (1 + rng.below(4), 1 + rng.below(12), 1 + rng.below(12));
+            let h = 1 + rng.below(9);
+            let x = randt(&[n, ci, h, h], rng);
+            let w = randt(&[co, ci, 1, 1], rng);
+            let g = ConvGeom::unit();
+            let nhwc = conv2d_nhwc_with(&Pool::serial(), &nchw_to_nhwc(&x), &w, g)
+                .map_err(|e| e.to_string())?;
+            let got = nhwc_to_nchw(&nhwc);
+            let im2col = conv2d_with(&Pool::serial(), &x, &w, g).map_err(|e| e.to_string())?;
+            crate::prop_assert!(
+                bits_equal(&got.data, &im2col.data),
+                "1x1 fast path not byte-identical to im2col ({n}x{ci}x{h}x{h} -> {co})"
+            );
+            let naive = conv2d_naive(&x, &w, g);
+            let err = got.max_abs_diff(&naive);
+            crate::prop_assert!(err < 1e-3, "1x1 fast path vs naive err {err}");
+            Ok(())
+        });
+    }
+
+    #[test]
     fn parallel_conv_is_byte_identical() {
         let mut rng = Rng::new(5);
         // multi-block path (batch x groups) AND the single-block path
@@ -236,11 +583,58 @@ mod tests {
             for workers in [2usize, 5] {
                 let b = conv2d_with(&Pool::new(workers), &x, &w, g).unwrap();
                 assert!(
-                    a.data.iter().zip(&b.data).all(|(p, q)| p.to_bits() == q.to_bits()),
+                    bits_equal(&a.data, &b.data),
                     "conv differs between 1 and {workers} workers (n={n} g={groups})"
                 );
             }
         }
+    }
+
+    #[test]
+    fn parallel_nhwc_conv_is_byte_identical() {
+        let mut rng = Rng::new(15);
+        // all three NHWC strategies: pointwise GEMM, depthwise stencil,
+        // general batched im2col
+        let cases: Vec<(Tensor, Tensor, ConvGeom)> = vec![
+            (
+                randt(&[3, 9, 9, 16], &mut rng),
+                randt(&[24, 16, 1, 1], &mut rng),
+                ConvGeom::unit(),
+            ),
+            (
+                randt(&[2, 11, 11, 8], &mut rng),
+                randt(&[8, 1, 3, 3], &mut rng),
+                ConvGeom { stride: 1, pad: 1, groups: 8 },
+            ),
+            (
+                randt(&[3, 11, 11, 8], &mut rng),
+                randt(&[12, 8, 3, 3], &mut rng),
+                ConvGeom { stride: 2, pad: 1, groups: 1 },
+            ),
+        ];
+        for (x, w, g) in cases {
+            let a = conv2d_nhwc_with(&Pool::serial(), &x, &w, g).unwrap();
+            for workers in [2usize, 5] {
+                let b = conv2d_nhwc_with(&Pool::new(workers), &x, &w, g).unwrap();
+                assert!(
+                    bits_equal(&a.data, &b.data),
+                    "NHWC conv differs between 1 and {workers} workers (geom {g:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn layout_roundtrip_and_parse() {
+        let mut rng = Rng::new(16);
+        let x = randt(&[2, 3, 4, 5], &mut rng);
+        let rt = nhwc_to_nchw(&nchw_to_nhwc(&x));
+        assert_eq!(rt.shape, x.shape);
+        assert!(bits_equal(&rt.data, &x.data));
+        assert_eq!(Layout::parse("nhwc").unwrap(), Layout::Nhwc);
+        assert_eq!(Layout::parse("NCHW").unwrap(), Layout::Nchw);
+        assert_eq!(Layout::Nhwc.name(), "nhwc");
+        assert!(Layout::parse("nchw8").is_err());
     }
 
     #[test]
@@ -253,6 +647,9 @@ mod tests {
         let want = conv2d_naive(&x, &w, g);
         assert_eq!(got.shape, vec![2, 6, 9, 9]);
         assert!(got.max_abs_diff(&want) < 1e-4);
+        // the NHWC stencil against the same oracle
+        let nhwc = conv2d_nhwc(&nchw_to_nhwc(&x), &w, g).unwrap();
+        assert!(nhwc_to_nchw(&nhwc).max_abs_diff(&want) < 1e-4);
     }
 
     #[test]
@@ -267,5 +664,10 @@ mod tests {
         assert!(conv2d(&x, &wgrp, ConvGeom { stride: 1, pad: 1, groups: 1 }).is_err());
         // valid grouped shape passes
         assert!(conv2d(&x, &wgrp, ConvGeom { stride: 1, pad: 1, groups: 2 }).is_ok());
+        // NHWC rejects the same malformed geometries
+        let xh = Tensor::zeros(&[1, 5, 5, 4]);
+        assert!(conv2d_nhwc(&xh, &w, ConvGeom { stride: 0, pad: 0, groups: 1 }).is_err());
+        assert!(conv2d_nhwc(&xh, &wgrp, ConvGeom { stride: 1, pad: 1, groups: 1 }).is_err());
+        assert!(conv2d_nhwc(&xh, &wgrp, ConvGeom { stride: 1, pad: 1, groups: 2 }).is_ok());
     }
 }

@@ -1,9 +1,17 @@
 //! Vectorizable elementwise / pooling / bias ops shared by the merged
-//! executors (`coordinator::merged_exec`, `runtime::host_exec`).
+//! executors (`coordinator::merged_exec`, `runtime::host_exec`), in
+//! both activation layouts.
 //!
 //! Everything here walks contiguous slices with unit stride so LLVM
 //! auto-vectorizes the loops; the per-element quad-loops these replace
 //! lived in `merged_exec` and re-derived NCHW offsets per element.
+//! The `_nhwc` variants mirror their NCHW siblings with the SAME
+//! per-element operation order (bias adds once, max in
+//! `((a max b) max c) max d` order, GAP sums pixels in row-major order
+//! before one multiply by 1/HW), so a forward pass produces
+//! byte-identical numbers in either layout — the contract
+//! `runtime::host_exec` pins end-to-end.  `relu6_inplace` and
+//! `add_inplace` are layout-agnostic (pure elementwise).
 
 use anyhow::{bail, Result};
 
@@ -18,6 +26,20 @@ pub fn add_bias_nchw(y: &mut Tensor, b: &[f32]) {
     for (ch, block) in y.data.chunks_mut(plane).enumerate() {
         let bv = b[ch % c];
         for v in block.iter_mut() {
+            *v += bv;
+        }
+    }
+}
+
+/// y[n, :, :, c] += b[c] for an NHWC tensor — the bias vector aligns
+/// with the contiguous innermost dim, so this is a pure unit-stride
+/// vector add per pixel.
+pub fn add_bias_nhwc(y: &mut Tensor, b: &[f32]) {
+    debug_assert_eq!(y.rank(), 4);
+    let c = y.shape[3];
+    debug_assert_eq!(b.len(), c);
+    for pix in y.data.chunks_mut(c) {
+        for (v, bv) in pix.iter_mut().zip(b) {
             *v += bv;
         }
     }
@@ -56,6 +78,51 @@ pub fn max_pool_2x2(x: &Tensor) -> Tensor {
             for (xx, d) in drow.iter_mut().enumerate() {
                 *d = r0[2 * xx].max(r0[2 * xx + 1]).max(r1[2 * xx]).max(r1[2 * xx + 1]);
             }
+        }
+    }
+    out
+}
+
+/// 2x2 max pool, stride 2, over NHWC (floor semantics on odd dims).
+/// Same `((a max b) max c) max d` comparison order as the NCHW pool.
+pub fn max_pool_2x2_nhwc(x: &Tensor) -> Tensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(&[n, oh, ow, c]);
+    for ni in 0..n {
+        let src = &x.data[ni * h * w * c..(ni + 1) * h * w * c];
+        let dst = &mut out.data[ni * oh * ow * c..(ni + 1) * oh * ow * c];
+        for y in 0..oh {
+            let r0 = &src[2 * y * w * c..(2 * y * w + w) * c];
+            let r1 = &src[(2 * y + 1) * w * c..((2 * y + 1) * w + w) * c];
+            for xx in 0..ow {
+                let (a, b) = (&r0[2 * xx * c..], &r0[(2 * xx + 1) * c..]);
+                let (e, f) = (&r1[2 * xx * c..], &r1[(2 * xx + 1) * c..]);
+                let drow = &mut dst[(y * ow + xx) * c..(y * ow + xx + 1) * c];
+                for ch in 0..c {
+                    drow[ch] = a[ch].max(b[ch]).max(e[ch]).max(f[ch]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// [n, h, w, c] -> [n, c] spatial mean.  Pixels accumulate in row-major
+/// order — the same addition sequence per channel as the NCHW GAP.
+pub fn global_avg_pool_nhwc(x: &Tensor) -> Tensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = Tensor::zeros(&[n, c]);
+    let inv = 1.0 / (h * w) as f32;
+    for ni in 0..n {
+        let acc = &mut out.data[ni * c..(ni + 1) * c];
+        for pix in x.data[ni * h * w * c..(ni + 1) * h * w * c].chunks(c) {
+            for (a, &v) in acc.iter_mut().zip(pix) {
+                *a += v;
+            }
+        }
+        for a in acc.iter_mut() {
+            *a *= inv;
         }
     }
     out
@@ -121,6 +188,36 @@ mod tests {
         assert!(add_inplace(&mut y, &Tensor::zeros(&[3])).is_err());
         assert_eq!(argmax(&[1.0, 5.0, 5.0, 2.0]), 1);
         assert_eq!(argmax(&[-3.0]), 0);
+    }
+
+    #[test]
+    fn nhwc_ops_match_nchw_bitwise() {
+        use crate::kernels::conv::{nchw_to_nhwc, nhwc_to_nchw};
+        use crate::kernels::simd::bits_equal;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(44);
+        let mut x = Tensor::zeros(&[2, 5, 7, 6]); // odd spatial: pool floors
+        for v in x.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let bias: Vec<f32> = (0..5).map(|_| rng.normal()).collect();
+        // bias
+        let mut want = x.clone();
+        add_bias_nchw(&mut want, &bias);
+        let mut got = nchw_to_nhwc(&x);
+        add_bias_nhwc(&mut got, &bias);
+        let got = nhwc_to_nchw(&got);
+        assert!(bits_equal(&want.data, &got.data));
+        // max pool (floor semantics on the odd dims in both layouts)
+        let pw = max_pool_2x2(&want);
+        let pg = nhwc_to_nchw(&max_pool_2x2_nhwc(&nchw_to_nhwc(&want)));
+        assert_eq!(pw.shape, pg.shape);
+        assert!(bits_equal(&pw.data, &pg.data));
+        // GAP lands in the layout-free [n, c] shape
+        let gw = global_avg_pool(&want);
+        let gg = global_avg_pool_nhwc(&nchw_to_nhwc(&want));
+        assert_eq!(gw.shape, gg.shape);
+        assert!(bits_equal(&gw.data, &gg.data));
     }
 
     #[test]

@@ -1,35 +1,92 @@
-//! Cache-blocked, register-tiled f32 GEMM — the shared matmul every
-//! host-side compute path (conv via im2col, the FC head, kernel
-//! composition) routes through.
+//! Explicit-lane, cache-blocked f32 GEMM — the shared matmul every
+//! host-side compute path (conv via im2col, the NHWC 1x1 fast path, the
+//! FC head, kernel composition) routes through.
 //!
 //! Shape conventions are row-major throughout: `C[m,n] = A[m,k] ·
-//! B[k,n]`.  The micro-kernel accumulates an MR x NR register tile with
-//! a contiguous unit-stride inner loop over B rows, so rustc/LLVM
-//! auto-vectorizes it; K is panelled at `KC` to keep the active B slab
-//! cache-resident.  Parallelism (see [`super::pool`]) splits C into
-//! MC-row blocks — each output element's accumulation order is fixed by
-//! (k-panel, k) alone, independent of the block schedule, which makes
-//! results byte-identical at any worker count.
+//! B[k,n]`.  The micro-kernel accumulates an MR x NR register tile as
+//! [`super::simd::F32x8`] lanes (NR = 16 = two lanes per row), written
+//! once and monomorphized twice: the baseline build, and an
+//! `#[target_feature(enable = "avx2,fma")]` clone selected at runtime
+//! via `is_x86_feature_detected!` ([`super::simd::detect`]) that LLVM
+//! lowers to 256-bit `vmulps`/`vaddps`.  K is panelled at `KC` to keep
+//! the active B slab cache-resident.
+//!
+//! # Determinism contract
+//!
+//! Every output element is accumulated as `acc = acc + a*b` (unfused,
+//! two roundings) over k STRICTLY ASCENDING, regardless of tile shape,
+//! SIMD level, panel boundary, or thread schedule.  Because each C
+//! element's value is a pure function of that fixed order, results are
+//! byte-identical across: worker counts (parallelism splits C into
+//! MC-row blocks, see [`super::pool`]), the scalar/AVX2 dispatch
+//! branches, full tiles vs edge tiles, and the NCHW/NHWC conv layouts
+//! that both lower onto this kernel.  The tests below and the conv /
+//! host-exec suites pin all four axes.
 
 use anyhow::{bail, Result};
 
 use super::pool::Pool;
+use super::simd::{avx2_available, detect, F32x8, SimdLevel};
 use crate::tensor::Tensor;
 
 /// Register-tile rows (distinct accumulator rows live in registers).
 const MR: usize = 4;
-/// Register-tile columns (one or two SIMD vectors wide after autovec).
-const NR: usize = 8;
+/// Register-tile columns: two F32x8 lanes -> 8 independent accumulator
+/// lanes, enough to hide mul+add latency on two FMA-class ports.
+const NR: usize = 16;
 /// K-panel length: 2 * KC * NR * 4B of B stays L1/L2-resident.
 const KC: usize = 512;
 /// Rows of C per parallel work item.
 const MC: usize = 64;
 
-/// MR x NR register-tiled block: C[row..row+mr, col..col+nr] over the
-/// k-panel [kb, ke).  `init` zeroes the accumulator (first panel of an
-/// overwriting GEMM); otherwise it continues from the values in C.
-#[inline]
-fn micro_tile(
+/// Full MR x NR tile over k-panel [kb, ke): 8 lane accumulators.
+/// `init` zeroes the accumulator (first panel of an overwriting GEMM);
+/// otherwise it continues from the values in C.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn tile_full(
+    kb: usize,
+    ke: usize,
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    init: bool,
+) {
+    let mut acc = [F32x8::zero(); 2 * MR];
+    if !init {
+        for r in 0..MR {
+            let crow = &c[(row + r) * n + col..];
+            acc[2 * r] = F32x8::load(crow);
+            acc[2 * r + 1] = F32x8::load(&crow[8..]);
+        }
+    }
+    for kk in kb..ke {
+        let brow = &b[kk * n + col..];
+        let b0 = F32x8::load(brow);
+        let b1 = F32x8::load(&brow[8..]);
+        for r in 0..MR {
+            let av = F32x8::splat(a[(row + r) * k + kk]);
+            acc[2 * r] = acc[2 * r].mul_add(av, b0);
+            acc[2 * r + 1] = acc[2 * r + 1].mul_add(av, b1);
+        }
+    }
+    for r in 0..MR {
+        let crow = &mut c[(row + r) * n + col..];
+        acc[2 * r].store(crow);
+        acc[2 * r + 1].store(&mut crow[8..]);
+    }
+}
+
+/// Partial tile (mr < MR and/or nr < NR): scalar loop with the SAME
+/// per-element accumulation order as the lane path, so an element's
+/// bits never depend on which tile shape covered it.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn tile_edge(
     mr: usize,
     nr: usize,
     kb: usize,
@@ -69,12 +126,10 @@ fn micro_tile(
     }
 }
 
-/// Sequential blocked GEMM over `rows` rows: C = A·B (or C += A·B when
-/// `accumulate`).  `a` is rows x k, `c` is rows x n, both row-major and
-/// starting at row 0 of the slice.  This is the per-block body the
-/// parallel entry points fan out over — and the exact code the serial
-/// path runs, so thread count never changes the numbers.
-pub fn gemm_rows(
+/// The blocked GEMM body — compiled once at the target baseline and
+/// once under AVX2 (see `gemm_rows_avx2`); identical numerics in both.
+#[inline(always)]
+fn gemm_rows_body(
     rows: usize,
     k: usize,
     n: usize,
@@ -83,7 +138,6 @@ pub fn gemm_rows(
     c: &mut [f32],
     accumulate: bool,
 ) {
-    debug_assert!(a.len() >= rows * k && b.len() >= k * n && c.len() >= rows * n);
     if k == 0 {
         if !accumulate {
             c[..rows * n].fill(0.0);
@@ -99,9 +153,15 @@ pub fn gemm_rows(
         while r < rows {
             let mr = MR.min(rows - r);
             let mut j = 0;
+            if mr == MR {
+                while j + NR <= n {
+                    tile_full(kb, ke, r, j, k, n, a, b, c, init);
+                    j += NR;
+                }
+            }
             while j < n {
                 let nr = NR.min(n - j);
-                micro_tile(mr, nr, kb, ke, r, j, k, n, a, b, c, init);
+                tile_edge(mr, nr, kb, ke, r, j, k, n, a, b, c, init);
                 j += nr;
             }
             r += mr;
@@ -111,8 +171,82 @@ pub fn gemm_rows(
     }
 }
 
-/// C = A·B on an explicit pool (row blocks of MC fan out to workers).
-pub fn gemm_with(pool: &Pool, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+/// The AVX2+FMA monomorphization of [`gemm_rows_body`].  The target
+/// features only widen codegen (256-bit lanes); mul+add stays unfused
+/// (rustc never contracts without fast-math), so the numbers match the
+/// baseline build bit-for-bit.
+///
+/// # Safety
+/// Caller must have verified `avx2_available()`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn gemm_rows_avx2(
+    rows: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    accumulate: bool,
+) {
+    gemm_rows_body(rows, k, n, a, b, c, accumulate);
+}
+
+/// Sequential blocked GEMM over `rows` rows at an explicit [`SimdLevel`]
+/// — what the byte-identity tests and `bench_kernels` A/B over.  Falls
+/// back to the baseline body if the requested level is unavailable.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_rows_level(
+    level: SimdLevel,
+    rows: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    accumulate: bool,
+) {
+    debug_assert!(a.len() >= rows * k && b.len() >= k * n && c.len() >= rows * n);
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 if avx2_available() => unsafe {
+            gemm_rows_avx2(rows, k, n, a, b, c, accumulate)
+        },
+        _ => gemm_rows_body(rows, k, n, a, b, c, accumulate),
+    }
+}
+
+/// Sequential blocked GEMM over `rows` rows: C = A·B (or C += A·B when
+/// `accumulate`), at the best detected SIMD level.  `a` is rows x k,
+/// `c` is rows x n, both row-major and starting at row 0 of the slice.
+/// This is the per-block body the parallel entry points fan out over —
+/// and the exact code the serial path runs, so thread count never
+/// changes the numbers.
+pub fn gemm_rows(
+    rows: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    accumulate: bool,
+) {
+    gemm_rows_level(detect(), rows, k, n, a, b, c, accumulate);
+}
+
+/// C = A·B on an explicit pool at an explicit SIMD level (row blocks of
+/// MC fan out to workers).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with_level(
+    pool: &Pool,
+    level: SimdLevel,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
     assert_eq!(a.len(), m * k, "A is not m x k");
     assert_eq!(b.len(), k * n, "B is not k x n");
     assert_eq!(c.len(), m * n, "C is not m x n");
@@ -122,11 +256,26 @@ pub fn gemm_with(pool: &Pool, m: usize, k: usize, n: usize, a: &[f32], b: &[f32]
     pool.for_each_chunk(c, MC * n, |bi, cblk| {
         let row0 = bi * MC;
         let rows = cblk.len() / n;
-        gemm_rows(rows, k, n, &a[row0 * k..(row0 + rows) * k], b, cblk, false);
+        gemm_rows_level(level, rows, k, n, &a[row0 * k..(row0 + rows) * k], b, cblk, false);
     });
 }
 
+/// C = A·B on an explicit pool (best detected SIMD level).
+pub fn gemm_with(pool: &Pool, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    gemm_with_level(pool, detect(), m, k, n, a, b, c);
+}
+
 /// C = A·B on the process-global pool.
+///
+/// ```
+/// use repro::kernels::gemm::gemm;
+/// // C[2,2] = A[2,3] · B[3,2]
+/// let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+/// let b = [1.0f32, 0.0, 0.0, 1.0, 1.0, 1.0];
+/// let mut c = [0.0f32; 4];
+/// gemm(2, 3, 2, &a, &b, &mut c);
+/// assert_eq!(c, [4.0, 5.0, 10.0, 11.0]);
+/// ```
 pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     gemm_with(&Pool::global(), m, k, n, a, b, c);
 }
@@ -139,6 +288,63 @@ pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32
     assert_eq!(b.len(), k * n, "B is not k x n");
     assert_eq!(c.len(), m * n, "C is not m x n");
     gemm_rows(m, k, n, a, b, c, true);
+}
+
+/// Per-row body of the transposed-B GEMM.  Unlike the main kernel the
+/// dot product uses two strided lane accumulators + a fixed tree
+/// reduction (`F32x8::sum`) + a scalar tail — a DIFFERENT summation
+/// order from `gemm`, but the same order in every dispatch branch and
+/// at every thread count, so it is bit-stable against itself.
+#[inline(always)]
+fn gemm_bt_rows_body(rows: usize, row0: usize, k: usize, n: usize, a: &[f32], bt: &[f32], cblk: &mut [f32]) {
+    for r in 0..rows {
+        let arow = &a[(row0 + r) * k..(row0 + r) * k + k];
+        let crow = &mut cblk[r * n..(r + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let brow = &bt[j * k..(j + 1) * k];
+            let mut acc0 = F32x8::zero();
+            let mut acc1 = F32x8::zero();
+            let mut kk = 0;
+            while kk + 16 <= k {
+                acc0 = acc0.mul_add(F32x8::load(&arow[kk..]), F32x8::load(&brow[kk..]));
+                acc1 = acc1.mul_add(F32x8::load(&arow[kk + 8..]), F32x8::load(&brow[kk + 8..]));
+                kk += 16;
+            }
+            let mut acc = acc0.add(acc1).sum();
+            while kk < k {
+                acc += arow[kk] * brow[kk];
+                kk += 1;
+            }
+            *cv = acc;
+        }
+    }
+}
+
+/// # Safety
+/// Caller must have verified `avx2_available()`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn gemm_bt_rows_avx2(
+    rows: usize,
+    row0: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    bt: &[f32],
+    cblk: &mut [f32],
+) {
+    gemm_bt_rows_body(rows, row0, k, n, a, bt, cblk);
+}
+
+#[inline]
+fn gemm_bt_rows(level: SimdLevel, rows: usize, row0: usize, k: usize, n: usize, a: &[f32], bt: &[f32], cblk: &mut [f32]) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 if avx2_available() => unsafe {
+            gemm_bt_rows_avx2(rows, row0, k, n, a, bt, cblk)
+        },
+        _ => gemm_bt_rows_body(rows, row0, k, n, a, bt, cblk),
+    }
 }
 
 /// C = A·Bᵗ with `bt` given n x k row-major — both operands stream
@@ -159,21 +365,11 @@ pub fn gemm_bt_with(
     if m == 0 || n == 0 {
         return;
     }
+    let level = detect();
     pool.for_each_chunk(c, MC * n, |bi, cblk| {
         let row0 = bi * MC;
         let rows = cblk.len() / n;
-        for r in 0..rows {
-            let arow = &a[(row0 + r) * k..(row0 + r + 1) * k];
-            let crow = &mut cblk[r * n..(r + 1) * n];
-            for (j, cv) in crow.iter_mut().enumerate() {
-                let brow = &bt[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for (x, y) in arow.iter().zip(brow) {
-                    acc += x * y;
-                }
-                *cv = acc;
-            }
-        }
+        gemm_bt_rows(level, rows, row0, k, n, a, bt, cblk);
     });
 }
 
@@ -237,6 +433,7 @@ pub fn linear(x: &Tensor, w: &Tensor, b: &Tensor, layout: WeightLayout) -> Resul
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::simd::{bits_equal, levels_available};
     use crate::util::rng::Rng;
 
     fn randv(n: usize, rng: &mut Rng) -> Vec<f32> {
@@ -248,7 +445,7 @@ mod tests {
         crate::util::prop::forall(30, 41, |rng| {
             let m = 1 + rng.below(33);
             let k = 1 + rng.below(70);
-            let n = 1 + rng.below(33);
+            let n = 1 + rng.below(40);
             let a = randv(m * k, rng);
             let b = randv(k * n, rng);
             let mut want = vec![0.0f32; m * n];
@@ -286,11 +483,57 @@ mod tests {
         for workers in [2usize, 3, 8] {
             let mut cw = vec![0.0f32; m * n];
             gemm_with(&Pool::new(workers), m, k, n, &a, &b, &mut cw);
-            assert!(
-                c1.iter().zip(&cw).all(|(x, y)| x.to_bits() == y.to_bits()),
-                "GEMM differs between 1 and {workers} workers"
-            );
+            assert!(bits_equal(&c1, &cw), "GEMM differs between 1 and {workers} workers");
         }
+    }
+
+    #[test]
+    fn simd_levels_are_byte_identical() {
+        // the dispatch-branch half of the determinism contract: scalar
+        // and AVX2 monomorphizations agree bit-for-bit (on non-AVX2
+        // hosts only the scalar level runs and the test is vacuous for
+        // the second level — CI's x86-64 runners exercise both)
+        let mut rng = Rng::new(21);
+        for (m, k, n) in [(33usize, 529usize, 17usize), (64, 48, 64), (5, 3, 100)] {
+            let a = randv(m * k, &mut rng);
+            let b = randv(k * n, &mut rng);
+            let mut reference = vec![0.0f32; m * n];
+            gemm_rows_level(SimdLevel::Scalar, m, k, n, &a, &b, &mut reference, false);
+            for level in levels_available() {
+                let mut got = vec![0.0f32; m * n];
+                gemm_rows_level(level, m, k, n, &a, &b, &mut got, false);
+                assert!(
+                    bits_equal(&reference, &got),
+                    "{m}x{k}x{n}: {} differs from scalar",
+                    level.name()
+                );
+                // the accumulate variant under the same pin
+                let seed = randv(m * n, &mut Rng::new(4));
+                let mut acc_s = seed.clone();
+                gemm_rows_level(SimdLevel::Scalar, m, k, n, &a, &b, &mut acc_s, true);
+                let mut acc_l = seed.clone();
+                gemm_rows_level(level, m, k, n, &a, &b, &mut acc_l, true);
+                assert!(
+                    bits_equal(&acc_s, &acc_l),
+                    "{m}x{k}x{n}: accumulate {} differs from scalar",
+                    level.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_matches_explicit_level() {
+        // gemm_rows (auto-detect) must equal gemm_rows_level(detect())
+        let mut rng = Rng::new(22);
+        let (m, k, n) = (19, 83, 31);
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let mut auto = vec![0.0f32; m * n];
+        gemm_rows(m, k, n, &a, &b, &mut auto, false);
+        let mut explicit = vec![0.0f32; m * n];
+        gemm_rows_level(detect(), m, k, n, &a, &b, &mut explicit, false);
+        assert!(bits_equal(&auto, &explicit));
     }
 
     #[test]
@@ -321,6 +564,29 @@ mod tests {
         gemm_acc(m, k, n, &a, &b, &mut c);
         for i in 0..m * n {
             assert!((c[i] - 2.0 * once[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn bt_levels_and_threads_agree_bitwise() {
+        let mut rng = Rng::new(23);
+        let (m, k, n) = (37, 93, 21); // k exercises lane body + scalar tail
+        let a = randv(m * k, &mut rng);
+        let bt = randv(n * k, &mut rng);
+        let mut c1 = vec![0.0f32; m * n];
+        gemm_bt_with(&Pool::serial(), m, k, n, &a, &bt, &mut c1);
+        for workers in [3usize, 8] {
+            let mut cw = vec![0.0f32; m * n];
+            gemm_bt_with(&Pool::new(workers), m, k, n, &a, &bt, &mut cw);
+            assert!(bits_equal(&c1, &cw));
+        }
+        // explicit levels against each other
+        let mut reference = vec![0.0f32; m * n];
+        gemm_bt_rows(SimdLevel::Scalar, m, 0, k, n, &a, &bt, &mut reference);
+        for level in levels_available() {
+            let mut got = vec![0.0f32; m * n];
+            gemm_bt_rows(level, m, 0, k, n, &a, &bt, &mut got);
+            assert!(bits_equal(&reference, &got), "bt {} differs from scalar", level.name());
         }
     }
 

@@ -4,11 +4,13 @@
 //! Parallel regions hand out *disjoint* `&mut` chunks of the output
 //! buffer to worker threads through a mutex-guarded queue; each chunk's
 //! contents are a pure function of its chunk index, so results are
-//! byte-identical at ANY worker count (including 1) — the property the
-//! kernels determinism test pins.  The pool is a value (not a set of
-//! live threads): each `for_each_chunk` call opens a `thread::scope`,
-//! which lets workers borrow the caller's stack data without `Arc` or
-//! `'static` bounds and joins them before returning.
+//! byte-identical at ANY worker count (including 1) — the thread-count
+//! axis of the kernel layer's determinism contract (the SIMD-level and
+//! layout axes live in [`super::gemm`] / [`super::conv`]).  The pool is
+//! a value (not a set of live threads): each `for_each_chunk` call
+//! opens a `thread::scope`, which lets workers borrow the caller's
+//! stack data without `Arc` or `'static` bounds and joins them before
+//! returning.
 
 use std::sync::{Mutex, OnceLock};
 

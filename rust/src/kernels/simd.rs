@@ -1,0 +1,250 @@
+//! Portable `F32x8` lane type + runtime CPU-feature dispatch for the
+//! kernel layer's explicit-SIMD micro-kernels.
+//!
+//! `F32x8` is an array-of-8 newtype whose `add`/`mul`/`mul_add` are
+//! fully unrolled lane loops.  The kernels write their inner loops ONCE
+//! against this type; `#[target_feature(enable = "avx2,fma")]` wrapper
+//! functions (see [`super::gemm`]) re-monomorphize the same body so
+//! LLVM emits 256-bit `vmulps`/`vaddps` for it, behind an
+//! `is_x86_feature_detected!("avx2")` check at runtime.  On non-x86
+//! targets (or when the flag is absent) the identical body compiles to
+//! the scalar/SSE baseline — there is no second implementation to
+//! drift.
+//!
+//! # Determinism contract
+//!
+//! Every op here rounds exactly like the scalar f32 op it replaces:
+//! `mul_add` is deliberately UNFUSED (one `*`, one `+`, two IEEE-754
+//! roundings) so the AVX2 path, the scalar fallback, and any tile-edge
+//! scalar loop produce byte-identical results for the same per-element
+//! accumulation order.  A fused FMA (`f32::mul_add` / `vfmadd*`) would
+//! round once and change low bits between dispatch branches — and the
+//! scalar `f32::mul_add` lowers to a libm call on baseline x86-64,
+//! which is also catastrophically slow.  The byte-identity tests in
+//! `gemm`/`conv` pin this across [`SimdLevel`]s, thread counts, and
+//! layouts.
+
+/// Lane width of [`F32x8`].
+pub const LANES: usize = 8;
+
+/// Eight f32 lanes; 32-byte aligned so a `vmovaps` spill/fill is legal.
+#[derive(Debug, Clone, Copy, PartialEq)]
+#[repr(align(32))]
+pub struct F32x8(pub [f32; 8]);
+
+impl F32x8 {
+    #[inline(always)]
+    pub fn zero() -> F32x8 {
+        F32x8([0.0; 8])
+    }
+
+    #[inline(always)]
+    pub fn splat(v: f32) -> F32x8 {
+        F32x8([v; 8])
+    }
+
+    /// Load 8 contiguous lanes from `s[0..8]`.
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> F32x8 {
+        let mut v = [0.0f32; 8];
+        v.copy_from_slice(&s[..8]);
+        F32x8(v)
+    }
+
+    /// Load `s.len().min(8)` lanes, zero-filling the tail.
+    #[inline(always)]
+    pub fn load_partial(s: &[f32]) -> F32x8 {
+        let mut v = [0.0f32; 8];
+        let n = s.len().min(8);
+        v[..n].copy_from_slice(&s[..n]);
+        F32x8(v)
+    }
+
+    /// Store all 8 lanes to `d[0..8]`.
+    #[inline(always)]
+    pub fn store(self, d: &mut [f32]) {
+        d[..8].copy_from_slice(&self.0);
+    }
+
+    /// Store the first `d.len().min(8)` lanes.
+    #[inline(always)]
+    pub fn store_partial(self, d: &mut [f32]) {
+        let n = d.len().min(8);
+        d[..n].copy_from_slice(&self.0[..n]);
+    }
+
+    #[inline(always)]
+    pub fn add(self, o: F32x8) -> F32x8 {
+        let (a, b) = (self.0, o.0);
+        F32x8([
+            a[0] + b[0],
+            a[1] + b[1],
+            a[2] + b[2],
+            a[3] + b[3],
+            a[4] + b[4],
+            a[5] + b[5],
+            a[6] + b[6],
+            a[7] + b[7],
+        ])
+    }
+
+    #[inline(always)]
+    pub fn mul(self, o: F32x8) -> F32x8 {
+        let (a, b) = (self.0, o.0);
+        F32x8([
+            a[0] * b[0],
+            a[1] * b[1],
+            a[2] * b[2],
+            a[3] * b[3],
+            a[4] * b[4],
+            a[5] * b[5],
+            a[6] * b[6],
+            a[7] * b[7],
+        ])
+    }
+
+    /// `self + a * b`, UNFUSED per lane (see the module-level
+    /// determinism contract): exactly `acc = acc + a * b` with two
+    /// roundings, matching the scalar accumulation the tile edges use.
+    #[inline(always)]
+    pub fn mul_add(self, a: F32x8, b: F32x8) -> F32x8 {
+        self.add(a.mul(b))
+    }
+
+    /// Fixed-shape tree reduction (pairwise: (0+4)+(2+6), ...).  Used by
+    /// dot-product-style kernels; every dispatch branch runs the same
+    /// tree, so the sum is bit-stable across branches.
+    #[inline(always)]
+    pub fn sum(self) -> f32 {
+        let v = self.0;
+        let s0 = v[0] + v[4];
+        let s1 = v[1] + v[5];
+        let s2 = v[2] + v[6];
+        let s3 = v[3] + v[7];
+        (s0 + s2) + (s1 + s3)
+    }
+}
+
+/// True iff `a` and `b` have the same length and identical bits per
+/// element (`to_bits` equality) — the comparison every
+/// determinism-contract test and bench gate in the kernel layer uses.
+pub fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Which micro-kernel instantiation to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// The shared kernel body compiled at the target baseline
+    /// (scalar/SSE2 on x86-64, NEON on aarch64 via autovec).
+    Scalar,
+    /// The same body re-monomorphized under
+    /// `#[target_feature(enable = "avx2,fma")]` — 256-bit lanes.
+    Avx2,
+}
+
+impl SimdLevel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+        }
+    }
+}
+
+/// True iff the running CPU can execute the [`SimdLevel::Avx2`] path.
+#[inline]
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The level the kernels dispatch to by default: the best available,
+/// overridable with `REPRO_SIMD=scalar|avx2` (handy for A/B benching
+/// and for exercising the fallback on AVX2 hardware).  Cached after the
+/// first call.
+pub fn detect() -> SimdLevel {
+    use std::sync::OnceLock;
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        match std::env::var("REPRO_SIMD").as_deref() {
+            Ok("scalar") => return SimdLevel::Scalar,
+            Ok("avx2") if avx2_available() => return SimdLevel::Avx2,
+            _ => {}
+        }
+        if avx2_available() {
+            SimdLevel::Avx2
+        } else {
+            SimdLevel::Scalar
+        }
+    })
+}
+
+/// Every level runnable on this machine (Scalar always; Avx2 when
+/// detected) — what the byte-identity tests and `bench_kernels` iterate.
+pub fn levels_available() -> Vec<SimdLevel> {
+    let mut v = vec![SimdLevel::Scalar];
+    if avx2_available() {
+        v.push(SimdLevel::Avx2);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_ops_match_scalar_loops() {
+        let a = F32x8([1.0, -2.0, 3.5, 0.0, 7.25, -0.5, 2.0, 9.0]);
+        let b = F32x8([0.5, 4.0, -1.0, 2.0, 0.25, 8.0, -3.0, 1.0]);
+        let add = a.add(b);
+        let mul = a.mul(b);
+        for i in 0..8 {
+            assert_eq!(add.0[i].to_bits(), (a.0[i] + b.0[i]).to_bits());
+            assert_eq!(mul.0[i].to_bits(), (a.0[i] * b.0[i]).to_bits());
+        }
+        // mul_add is unfused: exactly acc + a*b, never fma
+        let acc = F32x8::splat(0.1);
+        let r = acc.mul_add(a, b);
+        for i in 0..8 {
+            assert_eq!(r.0[i].to_bits(), (0.1f32 + a.0[i] * b.0[i]).to_bits());
+        }
+    }
+
+    #[test]
+    fn loads_and_stores_roundtrip() {
+        let src: Vec<f32> = (0..10).map(|v| v as f32).collect();
+        let v = F32x8::load(&src);
+        let mut out = vec![0.0f32; 8];
+        v.store(&mut out);
+        assert_eq!(out, &src[..8]);
+        // partials zero-fill / truncate
+        let p = F32x8::load_partial(&src[..3]);
+        assert_eq!(p.0, [0.0, 1.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        let mut short = vec![9.0f32; 3];
+        F32x8::splat(2.0).store_partial(&mut short);
+        assert_eq!(short, vec![2.0; 3]);
+    }
+
+    #[test]
+    fn sum_is_the_fixed_tree() {
+        let v = F32x8([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let want = ((1.0f32 + 5.0) + (3.0 + 7.0)) + ((2.0 + 6.0) + (4.0 + 8.0));
+        assert_eq!(v.sum().to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn detect_returns_an_available_level() {
+        let lv = detect();
+        assert!(levels_available().contains(&lv));
+        // Scalar is always available
+        assert!(levels_available().contains(&SimdLevel::Scalar));
+    }
+}

@@ -9,10 +9,12 @@
 //!   measured[/fused|eager]             — wall-clock of the AOT probes
 //!       on the PJRT CPU client (`measured::Measured`; needs an Engine
 //!       plus `make artifacts`).
-//!   host[/<N>threads]                  — wall-clock of the NATIVE
+//!   host[/<N>threads][/nhwc|nchw]      — wall-clock of the NATIVE
 //!       kernel layer: each block is timed through the same
-//!       `kernels::conv` + elementwise chain `HostExec` serves with, so
-//!       `serve --backend host` plans on the backend it serves on.
+//!       `kernels::conv` + elementwise chain `HostExec` serves with
+//!       (in the named activation layout, default nchw), so
+//!       `serve --backend host` plans on the backend — and layout — it
+//!       serves on.
 //!
 //! `SourceSpec::parse` turns a spec string into a value; `build` turns
 //! the value into a boxed `LatencySource` (handing it the Engine only
@@ -25,8 +27,10 @@ use anyhow::{anyhow, bail, Result};
 
 use super::devices::{self, Device};
 use super::gpu_model::{mem_pass_latency_ms, op_latency_ms, ConvGeom, ExecMode};
-use crate::kernels::conv::{conv2d_with, ConvGeom as KernelGeom};
-use crate::kernels::elementwise::{add_bias_nchw, add_inplace, max_pool_2x2, relu6_inplace};
+use crate::kernels::conv::{conv2d_nhwc_with, conv2d_with, ConvGeom as KernelGeom, Layout};
+use crate::kernels::elementwise::{
+    add_bias_nchw, add_bias_nhwc, add_inplace, max_pool_2x2, max_pool_2x2_nhwc, relu6_inplace,
+};
 use crate::kernels::pool::Pool;
 use crate::model::spec::ArchConfig;
 use crate::runtime::engine::Engine;
@@ -72,26 +76,35 @@ impl LatencySource for Analytical {
     }
 }
 
-/// Native-kernel source: wall-clock of the block's serving ops (im2col
-/// conv -> bias -> residual -> relu6 -> pool) on the `kernels` layer —
-/// the exact per-layer chain `HostExec::forward` executes, on the same
-/// `Pool`.  Median over `reps` after `warmup` discarded runs.
+/// Native-kernel source: wall-clock of the block's serving ops (conv ->
+/// bias -> residual -> relu6 -> pool) on the `kernels` layer — the
+/// exact per-layer chain `HostExec::forward` executes, on the same
+/// `Pool` and in the same activation layout.  Median over `reps` after
+/// `warmup` discarded runs.
 pub struct HostKernelSource {
     pool: Pool,
     threads: usize,
+    layout: Layout,
     pub warmup: usize,
     pub reps: usize,
 }
 
 impl HostKernelSource {
     /// `threads: None` uses the process-global pool (what Host serving
-    /// runs on); `Some(n)` pins an explicit worker count.
+    /// runs on); `Some(n)` pins an explicit worker count.  NCHW layout.
     pub fn new(threads: Option<usize>) -> HostKernelSource {
+        HostKernelSource::with_layout(threads, Layout::Nchw)
+    }
+
+    /// Price blocks in an explicit activation layout — pass
+    /// `Layout::Nhwc` when serving runs `HostExec` channels-last, so
+    /// the planner optimizes the latency it will actually see.
+    pub fn with_layout(threads: Option<usize>, layout: Layout) -> HostKernelSource {
         let pool = match threads {
             Some(n) => Pool::new(n),
             None => Pool::global(),
         };
-        HostKernelSource { threads: pool.workers(), pool, warmup: 1, reps: 5 }
+        HostKernelSource { threads: pool.workers(), pool, layout, warmup: 1, reps: 5 }
     }
 }
 
@@ -102,24 +115,39 @@ impl LatencySource for HostKernelSource {
             .ok_or_else(|| anyhow!("block ({i},{j}] not merge-legal"))?;
         // synthetic operands at the block's serving geometry (non-zero
         // fill so no lane hits a denormal/zero fast path)
-        let mut x = Tensor::zeros(&[batch, blk.c_in, blk.h_in, blk.w_in]);
+        let xshape = match self.layout {
+            Layout::Nchw => [batch, blk.c_in, blk.h_in, blk.w_in],
+            Layout::Nhwc => [batch, blk.h_in, blk.w_in, blk.c_in],
+        };
+        let mut x = Tensor::zeros(&xshape);
         x.data.iter_mut().enumerate().for_each(|(n, v)| *v = 0.1 + (n % 7) as f32 * 0.01);
         let mut w = Tensor::zeros(&[blk.c_out, blk.c_in / blk.groups, blk.k, blk.k]);
         w.data.iter_mut().enumerate().for_each(|(n, v)| *v = 0.01 + (n % 5) as f32 * 0.001);
         let bias = vec![0.01f32; blk.c_out];
-        let residual = blk
-            .add_from
-            .map(|_| Tensor::zeros(&[batch, blk.c_out, blk.h_out, blk.w_out]));
+        let rshape = match self.layout {
+            Layout::Nchw => [batch, blk.c_out, blk.h_out, blk.w_out],
+            Layout::Nhwc => [batch, blk.h_out, blk.w_out, blk.c_out],
+        };
+        let residual = blk.add_from.map(|_| Tensor::zeros(&rshape));
         let geom = KernelGeom { stride: blk.stride, pad: blk.pad, groups: blk.groups };
+        let nhwc = self.layout == Layout::Nhwc;
         let mut run = || -> Result<Tensor> {
-            let mut y = conv2d_with(&self.pool, &x, &w, geom)?;
-            add_bias_nchw(&mut y, &bias);
+            let mut y = if nhwc {
+                conv2d_nhwc_with(&self.pool, &x, &w, geom)?
+            } else {
+                conv2d_with(&self.pool, &x, &w, geom)?
+            };
+            if nhwc {
+                add_bias_nhwc(&mut y, &bias);
+            } else {
+                add_bias_nchw(&mut y, &bias);
+            }
             if let Some(r) = &residual {
                 add_inplace(&mut y, r)?;
             }
             relu6_inplace(&mut y);
             if blk.pool_after {
-                y = max_pool_2x2(&y);
+                y = if nhwc { max_pool_2x2_nhwc(&y) } else { max_pool_2x2(&y) };
             }
             Ok(y)
         };
@@ -137,7 +165,10 @@ impl LatencySource for HostKernelSource {
     }
 
     fn name(&self) -> String {
-        format!("host/{}threads", self.threads)
+        match self.layout {
+            Layout::Nchw => format!("host/{}threads", self.threads),
+            Layout::Nhwc => format!("host/{}threads/nhwc", self.threads),
+        }
     }
 }
 
@@ -148,7 +179,7 @@ impl LatencySource for HostKernelSource {
 pub enum SourceSpec {
     Analytical { dev: &'static Device, mode: ExecMode },
     Measured { mode: ExecMode },
-    Host { threads: Option<usize> },
+    Host { threads: Option<usize>, layout: Layout },
 }
 
 impl SourceSpec {
@@ -159,7 +190,7 @@ impl SourceSpec {
 
     /// Grammar (see module docs):
     ///   `analytical/<device>[/fused|eager]` | `sim:<device>` (legacy)
-    ///   | `measured[/fused|eager]` | `host[/<N>threads]`
+    ///   | `measured[/fused|eager]` | `host[/<N>threads][/nhwc|nchw]`
     pub fn parse_with_mode(s: &str, default_mode: ExecMode) -> Result<SourceSpec> {
         let s = s.trim();
         // legacy alias from the original LatencyCfg grammar
@@ -185,25 +216,39 @@ impl SourceSpec {
                 let mode = parse_mode(&rest, default_mode, s)?;
                 Ok(SourceSpec::Measured { mode })
             }
-            "host" => match rest.as_slice() {
-                [] => Ok(SourceSpec::Host { threads: None }),
-                [t] => {
+            "host" => {
+                // optional segments, in any order: <N>threads, nhwc|nchw
+                let mut threads = None;
+                let mut layout = Layout::Nchw;
+                let mut seen_layout = false;
+                for t in &rest {
+                    if let Ok(lay) = Layout::parse(t) {
+                        if seen_layout {
+                            bail!("source {s:?}: layout named twice");
+                        }
+                        layout = lay;
+                        seen_layout = true;
+                        continue;
+                    }
+                    if threads.is_some() {
+                        bail!("source {s:?}: want host[/<N>threads][/nhwc|nchw]");
+                    }
                     let n = t
                         .strip_suffix("threads")
                         .unwrap_or(t)
                         .parse::<usize>()
-                        .map_err(|_| anyhow!("source {s:?}: want host[/<N>threads]"))?;
+                        .map_err(|_| anyhow!("source {s:?}: want host[/<N>threads][/nhwc|nchw]"))?;
                     if n == 0 {
                         bail!("source {s:?}: thread count must be >= 1");
                     }
-                    Ok(SourceSpec::Host { threads: Some(n) })
+                    threads = Some(n);
                 }
-                _ => bail!("source {s:?}: want host[/<N>threads]"),
-            },
+                Ok(SourceSpec::Host { threads, layout })
+            }
             other => bail!(
                 "unknown latency source kind {other:?} in {s:?} \
                  (want analytical/<device>[/fused|eager], measured[/fused|eager], \
-                 host[/<N>threads], or legacy sim:<device>)"
+                 host[/<N>threads][/nhwc|nchw], or legacy sim:<device>)"
             ),
         }
     }
@@ -229,9 +274,12 @@ impl SourceSpec {
                 format!("analytical/{}/{}", dev.name, mode_name(*mode))
             }
             SourceSpec::Measured { mode } => format!("measured/{}", mode_name(*mode)),
-            SourceSpec::Host { threads } => {
+            SourceSpec::Host { threads, layout } => {
                 let n = threads.unwrap_or_else(|| Pool::global().workers());
-                format!("host/{n}threads")
+                match layout {
+                    Layout::Nchw => format!("host/{n}threads"),
+                    Layout::Nhwc => format!("host/{n}threads/nhwc"),
+                }
             }
         }
     }
@@ -247,7 +295,9 @@ impl SourceSpec {
             SourceSpec::Analytical { dev, mode } => {
                 Ok(Box::new(Analytical { dev: *dev, mode: *mode }))
             }
-            SourceSpec::Host { threads } => Ok(Box::new(HostKernelSource::new(*threads))),
+            SourceSpec::Host { threads, layout } => {
+                Ok(Box::new(HostKernelSource::with_layout(*threads, *layout)))
+            }
             SourceSpec::Measured { mode } => {
                 let (engine, arch) = engine.ok_or_else(|| {
                     anyhow!("measured source needs an engine + AOT artifacts (run `make artifacts`)")
@@ -299,10 +349,27 @@ mod tests {
         );
         assert_eq!(
             SourceSpec::parse("host/8threads").unwrap(),
-            SourceSpec::Host { threads: Some(8) }
+            SourceSpec::Host { threads: Some(8), layout: Layout::Nchw }
         );
         assert_eq!(SourceSpec::parse("host/8threads").unwrap().label(), "host/8threads");
-        assert_eq!(SourceSpec::parse("host").unwrap(), SourceSpec::Host { threads: None });
+        assert_eq!(
+            SourceSpec::parse("host").unwrap(),
+            SourceSpec::Host { threads: None, layout: Layout::Nchw }
+        );
+        // layout segment, in either position
+        assert_eq!(
+            SourceSpec::parse("host/8threads/nhwc").unwrap(),
+            SourceSpec::Host { threads: Some(8), layout: Layout::Nhwc }
+        );
+        assert_eq!(
+            SourceSpec::parse("host/nhwc/8threads").unwrap(),
+            SourceSpec::Host { threads: Some(8), layout: Layout::Nhwc }
+        );
+        assert_eq!(SourceSpec::parse("host/8threads/nhwc").unwrap().label(), "host/8threads/nhwc");
+        assert_eq!(
+            SourceSpec::parse("host/nchw").unwrap(),
+            SourceSpec::Host { threads: None, layout: Layout::Nchw }
+        );
         assert_eq!(
             SourceSpec::parse("measured/eager").unwrap(),
             SourceSpec::Measured { mode: ExecMode::Eager }
@@ -321,6 +388,8 @@ mod tests {
         assert!(SourceSpec::parse("analytical/rtx3090/turbo").is_err());
         assert!(SourceSpec::parse("host/0threads").is_err());
         assert!(SourceSpec::parse("host/fast").is_err());
+        assert!(SourceSpec::parse("host/nhwc/nchw").is_err()); // layout twice
+        assert!(SourceSpec::parse("host/2threads/4threads").is_err());
         assert!(SourceSpec::parse("quantum").is_err());
         assert!(SourceSpec::parse_list(" , ", ExecMode::Fused).is_err());
     }
@@ -333,7 +402,7 @@ mod tests {
         )
         .unwrap();
         assert_eq!(specs.len(), 3);
-        assert_eq!(specs[2], SourceSpec::Host { threads: Some(2) });
+        assert_eq!(specs[2], SourceSpec::Host { threads: Some(2), layout: Layout::Nchw });
     }
 
     #[test]
@@ -347,7 +416,7 @@ mod tests {
 
     #[test]
     fn built_name_matches_label() {
-        for s in ["analytical/rtx3090/eager", "host/3threads", "host"] {
+        for s in ["analytical/rtx3090/eager", "host/3threads", "host", "host/3threads/nhwc"] {
             let spec = SourceSpec::parse(s).unwrap();
             assert_eq!(spec.build(None).unwrap().name(), spec.label());
         }
@@ -368,6 +437,14 @@ mod tests {
         assert_eq!(bl.entries.len(), cfg.blocks.len());
         assert!(bl.entries.iter().all(|e| e.2 > 0.0));
         assert_eq!(bl.source, "host/2threads");
+        // the NHWC variant prices the same blocks (channels-last chain)
+        let mut src = HostKernelSource::with_layout(Some(2), Layout::Nhwc);
+        src.warmup = 1;
+        src.reps = 3;
+        let bl = BlockLatencies::measure(&cfg, &mut src, 2, 1000.0).unwrap();
+        assert_eq!(bl.entries.len(), cfg.blocks.len());
+        assert!(bl.entries.iter().all(|e| e.2 > 0.0));
+        assert_eq!(bl.source, "host/2threads/nhwc");
     }
 
     /// The ISSUE acceptance pin: the host source's per-block prices must

@@ -10,8 +10,7 @@ use std::collections::HashMap;
 
 use anyhow::Result;
 
-// Re-exported so pre-registry import paths keep working.
-pub use super::source::{Analytical, LatencySource};
+use super::source::LatencySource;
 use crate::dp::stage1::LatTable;
 use crate::model::spec::ArchConfig;
 use crate::util::json::Json;
@@ -142,6 +141,7 @@ mod tests {
     use super::*;
     use crate::latency::devices::RTX_2080_TI;
     use crate::latency::gpu_model::ExecMode;
+    use crate::latency::source::Analytical;
     use crate::model::spec::testutil::tiny_config;
 
     #[test]

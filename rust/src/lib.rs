@@ -27,12 +27,15 @@
 //!                merged into a joint cross-device Pareto set, plus
 //!                budget auto-calibration against a target ms.
 //!   kernels    — native parallel CPU compute: `pool` (scoped worker
-//!                pool, deterministic chunk schedule), `gemm`
-//!                (cache-blocked register-tiled f32 GEMM + transposed
-//!                fast path), `conv` (im2col+GEMM with
-//!                stride/pad/groups), `elementwise` (bias/relu6/
-//!                residual/pool/GAP).  Byte-identical at any thread
-//!                count; every host-side compute path routes here.
+//!                pool, deterministic chunk schedule), `simd` (F32x8
+//!                lane type + runtime AVX2 dispatch), `gemm`
+//!                (explicit-lane cache-blocked f32 GEMM + transposed
+//!                fast path), `conv` (NCHW im2col+GEMM and NHWC
+//!                channels-last fast paths: 1x1 without im2col,
+//!                depthwise stencil), `elementwise` (bias/relu6/
+//!                residual/pool/GAP in both layouts).  Byte-identical
+//!                at any thread count, SIMD level, and layout; every
+//!                host-side compute path routes here.
 //!   latency    — the source registry (`source`: one `--source` spec
 //!                grammar over analytical GPU models, the measured PJRT
 //!                source, and the native-kernel HostKernelSource that
@@ -59,7 +62,14 @@
 //!   reference implementation the PJRT path is cross-checked against.
 //!
 //! Select with `--backend pjrt|host` on the CLI (`serve`, `compress`,
-//! `eval`) or `Backend::{Pjrt,Host}` in code.
+//! `eval`) or `Backend::{Pjrt,Host}` in code.  The Host backend also
+//! picks an activation layout (`--layout nchw|nhwc`, or
+//! [`kernels::conv::Layout`] on `HostExec::with_options`): NHWC runs
+//! the channels-last fast paths (1x1 convs without im2col, depthwise
+//! stencil) with byte-identical logits, and the `host[/nhwc]` latency
+//! source prices blocks in the same layout.
+//!
+//! See `docs/ARCHITECTURE.md` for the paper-to-code map.
 
 pub mod tensor;
 
@@ -107,6 +117,7 @@ pub mod kernels {
     pub mod elementwise;
     pub mod gemm;
     pub mod pool;
+    pub mod simd;
 }
 
 pub mod importance {

@@ -15,6 +15,7 @@ use repro::coordinator::report::{fmt_acc, fmt_ms, Table};
 use repro::coordinator::server::{spawn_load, Server, ServerConfig};
 use repro::data::synth::SynthSpec;
 use repro::importance::eval::ImportanceConfig;
+use repro::kernels::conv::Layout;
 use repro::latency::gpu_model::ExecMode;
 use repro::latency::source::SourceSpec;
 use repro::latency::table::BlockLatencies;
@@ -46,17 +47,21 @@ fn usage() -> &'static str {
        eval       --arch A [--ckpt PATH --backend B]\n\
        serve      --arch A [--clients N --requests N --max-batch N --max-wait-ms N]\n\
                   [--backend B --source SPEC --frac X --target-ms MS]\n\
+                  [--layout nchw|nhwc]\n\
                   (host backend: artifact-free — prices blocks on the\n\
-                  native kernels it serves with, picks the plan off that\n\
-                  frontier; --arch tiny = built-in fixture)\n\
+                  native kernels AND layout it serves with, picks the\n\
+                  plan off that frontier; --arch tiny = built-in fixture)\n\
      --source SPEC grammar (the latency-source registry):\n\
        analytical/<device>[/fused|eager]   roofline model; devices:\n\
                                            titan_xp rtx2080ti rtx3090 v100 xeon5220r\n\
        measured[/fused|eager]              AOT probes on PJRT (needs artifacts)\n\
-       host[/<N>threads]                   wall-clock of the native serving kernels\n\
+       host[/<N>threads][/nhwc|nchw]       wall-clock of the native serving kernels\n\
+                                           (channels-last when /nhwc)\n\
        sim:<device>                        legacy alias for analytical/<device>\n\
      common: --artifacts DIR (default ./artifacts) --quiet\n\
-             --backend pjrt|host (default pjrt; host = native kernels, no PJRT)"
+             --backend pjrt|host (default pjrt; host = native kernels, no PJRT)\n\
+             --layout nchw|nhwc (host serving layout; nhwc = channels-last\n\
+             fast paths, byte-identical logits)"
 }
 
 fn data_for(args: &Args, pipe: &Pipeline) -> Result<SynthSpec> {
@@ -617,7 +622,27 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
     let arch = args.str_or("arch", "tiny");
     let (cfg, ps, label) = host_arch_source(&arch, root, args.usize_or("seed", 1)? as u64)?;
     let mode = if args.bool_flag("eager") { ExecMode::Eager } else { ExecMode::Fused };
-    let spec = SourceSpec::parse_with_mode(&args.str_or("source", "host"), mode)?;
+    // serving layout: the host source follows it unless the spec names
+    // a layout itself, so the planner prices blocks in the layout
+    // HostExec will actually run
+    let layout = Layout::parse(&args.str_or("layout", "nchw"))?;
+    let source_str = args.str_or(
+        "source",
+        match layout {
+            Layout::Nchw => "host",
+            Layout::Nhwc => "host/nhwc",
+        },
+    );
+    let spec = match SourceSpec::parse_with_mode(&source_str, mode)? {
+        // an explicit host source with no layout segment inherits the
+        // serving layout (a named /nchw|/nhwc segment always wins)
+        SourceSpec::Host { threads, layout: _ }
+            if !source_str.contains("nhwc") && !source_str.contains("nchw") =>
+        {
+            SourceSpec::Host { threads, layout }
+        }
+        s => s,
+    };
     let max_batch = args.usize_or("max-batch", 8)?;
     // price blocks at the serving batch size; host blocks are sub-ms,
     // so the default tick is finer than the table-building default
@@ -685,7 +710,7 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
     let est_ms = dp.sources()[si].lat.network_ms(&segs).unwrap_or(f64::NAN);
     let net = repro::merge::plan::build_merged(&cfg, &ps, &s_set, &a_set)?;
     let depth = net.depth();
-    let exec = HostExec::new(net)?;
+    let exec = HostExec::with_options(net, repro::kernels::pool::Pool::global(), layout)?;
     let hw = cfg.spec.input_hw;
     let cfg_srv = ServerConfig {
         max_batch,

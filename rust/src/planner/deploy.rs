@@ -9,11 +9,26 @@
 //! importance–latency Pareto set across devices with full provenance
 //! (which source, which budget, which plan) per surviving point.
 //!
-//! It also closes the budget loop: `calibrate` binary-searches the
+//! # Pareto dominance
+//!
+//! Point p dominates q iff p is no slower (`est_ms <= q.est_ms`) AND no
+//! less important (`importance >= q.importance`), with at least one
+//! strict — `pareto_front` keeps exactly the non-dominated points, and
+//! the property tests pin that (a) no surviving joint point is
+//! dominated and (b) every per-device frontier point is covered by some
+//! joint point.  Provenance (source label, budget, plan) rides along so
+//! every surviving point can be re-priced on its own device.
+//!
+//! # Tick-rounding semantics
+//!
+//! The DP runs in integer ticks (`BlockLatencies::ms_to_ticks`: ms *
+//! scale, rounded, clamped to >= 1 tick so no block is ever free);
+//! real milliseconds and ticks therefore disagree by up to half a tick
+//! per block.  `calibrate` closes that gap: it binary-searches the
 //! integer budget T0 against a target merged-network latency in REAL
-//! milliseconds (the tick-rounded DP latency and the ms-space sum
-//! disagree by up to half a tick per block), at O(L) per probe on the
-//! memoized table.
+//! milliseconds, then scans the O(L)-wide rounding window top-down
+//! (exact without assuming real-ms monotonicity in T0), at O(L) per
+//! probe on the memoized table.
 
 use crate::importance::normalize;
 use crate::importance::table::ImpTable;

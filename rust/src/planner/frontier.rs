@@ -141,6 +141,44 @@ impl<P: ImportanceProvider> Planner<P> {
 
     /// Plans for every budget point (same order as `budgets`) from ONE
     /// DP table pass — identical to per-budget `solve` calls.
+    ///
+    /// ```
+    /// use repro::dp::stage1::LatTable;
+    /// use repro::planner::frontier::{Planner, Space};
+    /// use repro::planner::solver::ImportanceProvider;
+    ///
+    /// // Two layers: keeping the boundary (no merge) scores importance
+    /// // 1.0 per segment; merging (0,2] into one conv scores 0.0.
+    /// struct Imp;
+    /// impl ImportanceProvider for Imp {
+    ///     fn base(&self, i: usize, j: usize) -> f64 {
+    ///         if j == i + 1 { 1.0 } else { 0.0 }
+    ///     }
+    ///     fn ext(&self, i: usize, j: usize, _a: u8, _b: u8) -> f64 {
+    ///         self.base(i, j)
+    ///     }
+    /// }
+    ///
+    /// // Integer tick latencies: each singleton costs 2, the merged
+    /// // block costs 3.
+    /// let mut t = LatTable::new(2);
+    /// t.set(0, 1, 2);
+    /// t.set(1, 2, 2);
+    /// t.set(0, 2, 3);
+    ///
+    /// let planner = Planner::new(&t, Imp);
+    /// // budgets are STRICT (latency < t0), like the dp layer
+    /// let plans = planner.solve_frontier(Space::Base, &[4, 5]);
+    /// // tight budget (t0 = 4: only latency 3 fits): forced to merge
+    /// let tight = plans[0].as_ref().unwrap();
+    /// assert_eq!(tight.s, Vec::<usize>::new());
+    /// assert_eq!(tight.est_ticks, 3);
+    /// // relaxed (t0 = 5): keep the boundary, win importance 2.0
+    /// let relaxed = plans[1].as_ref().unwrap();
+    /// assert_eq!(relaxed.s, vec![1]);
+    /// assert_eq!(relaxed.est_ticks, 4);
+    /// assert!(relaxed.imp_total > tight.imp_total);
+    /// ```
     pub fn solve_frontier(&self, space: Space, budgets: &[u64]) -> Vec<Option<PlanOutcome>> {
         let Some(&t0_max) = budgets.iter().max() else {
             return Vec::new();

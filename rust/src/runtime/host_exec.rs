@@ -7,12 +7,22 @@
 //! execute HLO, and the reference the chained PJRT executor is checked
 //! against.  Unlike the AOT graphs it runs at the *actual* batch size —
 //! no padding to a compile-time batch.
+//!
+//! The executor runs in either activation layout
+//! ([`crate::kernels::conv::Layout`]): NCHW is the checkpoint-native
+//! default; NHWC transposes ONCE at graph entry (the exit transpose is
+//! free — global-average-pool collapses the spatial dims) and then runs
+//! every layer channels-last, where 1x1 convs skip im2col and depthwise
+//! convs are a contiguous stencil.  Both layouts produce byte-identical
+//! logits (the kernels keep one per-element accumulation order — see
+//! `kernels::gemm`'s determinism contract), which the tests here pin.
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::kernels::conv::{conv2d_with, ConvGeom};
+use crate::kernels::conv::{conv2d_nhwc_with, conv2d_with, nchw_to_nhwc, ConvGeom, Layout};
 use crate::kernels::elementwise::{
-    add_bias_nchw, add_inplace, argmax, global_avg_pool, max_pool_2x2, relu6_inplace,
+    add_bias_nchw, add_bias_nhwc, add_inplace, argmax, global_avg_pool, global_avg_pool_nhwc,
+    max_pool_2x2, max_pool_2x2_nhwc, relu6_inplace,
 };
 use crate::kernels::gemm::{linear, WeightLayout};
 use crate::kernels::pool::Pool;
@@ -66,6 +76,7 @@ pub struct HostExec {
     pub net: MergedNet,
     keep_seg: Vec<bool>,
     pool: Pool,
+    layout: Layout,
 }
 
 impl HostExec {
@@ -75,6 +86,18 @@ impl HostExec {
 
     /// Explicit worker pool (tests pin determinism with Pool::serial()).
     pub fn with_pool(net: MergedNet, pool: Pool) -> Result<HostExec> {
+        HostExec::with_options(net, pool, Layout::Nchw)
+    }
+
+    /// The layout this executor runs its layers in.
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    /// Explicit worker pool AND activation layout.  `Layout::Nhwc`
+    /// transposes the input once at graph entry and runs every layer
+    /// channels-last; the logits are byte-identical to `Layout::Nchw`.
+    pub fn with_options(net: MergedNet, pool: Pool, layout: Layout) -> Result<HostExec> {
         if net.params.len() != 2 * net.layers.len() + 2 {
             bail!(
                 "merged net has {} params for {} layers (+fc pair expected)",
@@ -101,10 +124,13 @@ impl HostExec {
             }
         }
         let keep_seg = residual_keep_set(&net.layers);
-        Ok(HostExec { net, keep_seg, pool })
+        Ok(HostExec { net, keep_seg, pool, layout })
     }
 
-    /// Logits for a batch — any size, executed at that size.
+    /// Logits for a batch — any size, executed at that size.  Input is
+    /// always NCHW (the checkpoint/data layout); in NHWC mode the ONLY
+    /// transpose happens here at graph entry — GAP collapses the
+    /// spatial dims, so the exit needs none.
     pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
         if x.rank() != 4 {
             bail!("HostExec wants NCHW input, got {:?}", x.shape);
@@ -116,14 +142,23 @@ impl HostExec {
                 self.net.layers[0].c_in
             );
         }
-        let mut cur = x.clone();
+        let nhwc = self.layout == Layout::Nhwc;
+        let mut cur = if nhwc { nchw_to_nhwc(x) } else { x.clone() };
         let mut seg_out: Vec<Option<Tensor>> = Vec::with_capacity(self.net.layers.len());
         for (li, ml) in self.net.layers.iter().enumerate() {
             let w = &self.net.params[2 * li];
             let b = &self.net.params[2 * li + 1];
             let geom = ConvGeom { stride: ml.stride, pad: ml.pad, groups: ml.groups };
-            let mut y = conv2d_with(&self.pool, &cur, w, geom)?;
-            add_bias_nchw(&mut y, &b.data);
+            let mut y = if nhwc {
+                conv2d_nhwc_with(&self.pool, &cur, w, geom)?
+            } else {
+                conv2d_with(&self.pool, &cur, w, geom)?
+            };
+            if nhwc {
+                add_bias_nhwc(&mut y, &b.data);
+            } else {
+                add_bias_nchw(&mut y, &b.data);
+            }
             if let Some(src) = ml.add_from_seg {
                 if src < 0 {
                     bail!("residual from the network input is not supported");
@@ -137,7 +172,7 @@ impl HostExec {
                 relu6_inplace(&mut y);
             }
             if ml.pool_after {
-                y = max_pool_2x2(&y);
+                y = if nhwc { max_pool_2x2_nhwc(&y) } else { max_pool_2x2(&y) };
             }
             if self.keep_seg[li] {
                 seg_out.push(Some(y.clone()));
@@ -146,7 +181,7 @@ impl HostExec {
             }
             cur = y;
         }
-        let pooled = global_avg_pool(&cur);
+        let pooled = if nhwc { global_avg_pool_nhwc(&cur) } else { global_avg_pool(&cur) };
         linear(
             &pooled,
             &self.net.params[self.net.params.len() - 2],
@@ -184,6 +219,7 @@ impl HostExec {
 mod tests {
     use super::*;
     use crate::kernels::conv::conv2d_naive;
+    use crate::kernels::simd::bits_equal;
     use crate::merge::plan::build_merged;
     use crate::model::spec::testutil::tiny_config;
     use crate::trainer::params::ParamSet;
@@ -286,6 +322,38 @@ mod tests {
     }
 
     #[test]
+    fn nhwc_forward_is_byte_identical_to_nchw() {
+        // the layout half of the determinism contract, end to end: a
+        // merged plan with residual + depthwise + pooling + 1x1 layers
+        // must produce the SAME logits bits channels-last
+        let cfg = tiny_config();
+        for (seed, s, a) in [
+            (37u64, vec![1usize, 4, 5], vec![4usize]),
+            (38, vec![1, 2, 3, 4, 5], vec![1, 2, 3, 5]), // all-singleton: residual + depthwise
+        ] {
+            let ps = ParamSet::synthetic(&cfg, seed);
+            let net = build_merged(&cfg, &ps, &s, &a).unwrap();
+            let x = rand_input(&[3, 3, 12, 12], seed);
+            let nchw = HostExec::with_options(net.clone_shallow(), Pool::serial(), Layout::Nchw)
+                .unwrap()
+                .forward(&x)
+                .unwrap();
+            for workers in [1usize, 4] {
+                let exec =
+                    HostExec::with_options(net.clone_shallow(), Pool::new(workers), Layout::Nhwc)
+                        .unwrap();
+                assert_eq!(exec.layout(), Layout::Nhwc);
+                let nhwc = exec.forward(&x).unwrap();
+                assert_eq!(nchw.shape, nhwc.shape);
+                assert!(
+                    bits_equal(&nchw.data, &nhwc.data),
+                    "NHWC logits differ from NCHW (plan s={s:?}, {workers} workers)"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn parallel_forward_is_byte_identical() {
         let cfg = tiny_config();
         let ps = ParamSet::synthetic(&cfg, 34);
@@ -301,7 +369,7 @@ mod tests {
                 .forward(&x)
                 .unwrap();
             assert!(
-                serial.data.iter().zip(&par.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                bits_equal(&serial.data, &par.data),
                 "HostExec differs between 1 and {workers} workers"
             );
         }
