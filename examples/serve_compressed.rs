@@ -58,7 +58,7 @@ fn main() -> anyhow::Result<()> {
         for l in ts.params.iter().chain(ts.state.iter()) {
             head.push(Tensor::from_literal(l)?.to_literal()?);
         }
-        let server = Server::new(&engine, &infer, head, vec![mask_lit], cfg.clone())?;
+        let mut server = Server::new(&engine, &infer, head, vec![mask_lit], cfg.clone())?;
         let (rx, handles) = spawn_load(&data, clients, requests, 0);
         let stats = server.run(rx)?;
         let correct: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
@@ -94,7 +94,7 @@ fn main() -> anyhow::Result<()> {
             let net = pipe.merge(&ps, &out)?;
             let head: Vec<xla::Literal> =
                 net.params.iter().map(|t| t.to_literal().unwrap()).collect();
-            let server = Server::new(&engine, &infer, head, vec![], cfg.clone())?;
+            let mut server = Server::new(&engine, &infer, head, vec![], cfg.clone())?;
             let (rx, handles) = spawn_load(&data, clients, requests, 0);
             let stats = server.run(rx)?;
             let correct: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
@@ -116,7 +116,7 @@ fn main() -> anyhow::Result<()> {
             let depth = net.depth();
             let exec = repro::runtime::host_exec::HostExec::new(net)?;
             let hw = pipe.entry.input[1];
-            let server = Server::host(exec, &[3, hw, hw], cfg.clone())?;
+            let mut server = Server::host(exec, &[3, hw, hw], cfg.clone())?;
             let (rx, handles) = spawn_load(&data, clients, requests, 0);
             let stats = server.run(rx)?;
             let correct: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();

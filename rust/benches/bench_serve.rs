@@ -1,0 +1,175 @@
+//! Serving-policy benchmarks: drain vs micro-batch vs work-steal under
+//! seeded open-loop load at several offered rates, on the artifact-free
+//! `tiny` fixture with a multi-plan frontier engine.  Records p50/p95/
+//! p99, shed rate, and plan-switch counts per (policy, load) cell in
+//! BENCH_serve.json at the repo root — the serving-path companion to
+//! BENCH_dp.json / BENCH_kernels.json / BENCH_pareto.json.
+//!
+//! The acceptance cell is the overload row: `drain` (legacy open
+//! admission) lets its p99 blow past the SLO, while `steal` + deadline
+//! shedding keeps the SERVED p99 near it and the controller's switch
+//! trail shows the frontier degrade in action.  Reply accounting
+//! (served + shed == offered) is asserted — that part is load-
+//! independent and must never drift.
+
+use repro::coordinator::experiments::proxy_importance;
+use repro::data::synth::SynthSpec;
+use repro::kernels::conv::Layout;
+use repro::kernels::pool::Pool;
+use repro::latency::source::SourceSpec;
+use repro::latency::table::BlockLatencies;
+use repro::model::spec::testutil::tiny_config;
+use repro::planner::deploy::{DeployPlanner, ParetoPoint};
+use repro::planner::frontier::{Space, TableImportance};
+use repro::serve::admission::AdmissionCfg;
+use repro::serve::multi_plan::MultiPlanEngine;
+use repro::serve::scheduler::{burst_trace, spawn_open_load, Policy, Scheduler, SchedulerConfig};
+use repro::serve::stats::ServeStats;
+use repro::trainer::params::ParamSet;
+use repro::util::json::Json;
+
+const SLO_MS: f64 = 5.0;
+const N_REQ: usize = 300;
+const SEED: u64 = 17;
+
+fn run_cell(
+    work: &[ParetoPoint],
+    policy: Policy,
+    gap_us: u64,
+    legacy_open: bool,
+) -> ServeStats {
+    let cfg = tiny_config();
+    let ps = ParamSet::synthetic(&cfg, SEED);
+    let exec_pool = if policy == Policy::WorkSteal { Pool::serial() } else { Pool::global() };
+    let engine = MultiPlanEngine::build(&cfg, &ps, work, exec_pool, Layout::Nchw)
+        .expect("engine build");
+    let hw = cfg.spec.input_hw;
+    let scfg = SchedulerConfig {
+        policy,
+        max_batch: 8,
+        max_wait: std::time::Duration::from_millis(2),
+        admission: if legacy_open { AdmissionCfg::open() } else { AdmissionCfg::slo(64, SLO_MS) },
+        slo_ms: if legacy_open { 0.0 } else { SLO_MS },
+        steal_workers: 0,
+    };
+    let mut sched = Scheduler::new(engine, &[3, hw, hw], scfg).expect("scheduler");
+    let mut data = SynthSpec::quickstart(hw);
+    data.num_classes = cfg.spec.num_classes;
+    let gaps = burst_trace(SEED, N_REQ, gap_us, 16);
+    let (rx, gen) = spawn_open_load(&data, N_REQ, gaps);
+    let stats = sched.run(rx).expect("serve run");
+    let replies = gen.join().expect("load generator");
+    // the reply contract is timing-independent: every request answered
+    // exactly once, and the stats agree
+    let mut answered = 0usize;
+    for (_, rrx) in &replies {
+        assert!(rrx.try_recv().is_ok(), "request got no reply");
+        assert!(rrx.try_recv().is_err(), "request got two replies");
+        answered += 1;
+    }
+    assert_eq!(answered, N_REQ);
+    assert_eq!(stats.offered(), N_REQ, "served + shed must account for every request");
+    stats
+}
+
+fn cell_json(s: &ServeStats) -> Json {
+    Json::obj_from(vec![
+        ("served", Json::int(s.served as i64)),
+        ("shed_rate", Json::num(s.shed_rate())),
+        ("p50_ms", Json::num(s.percentile_ms(0.5))),
+        ("p95_ms", Json::num(s.percentile_ms(0.95))),
+        ("p99_ms", Json::num(s.percentile_ms(0.99))),
+        ("throughput_rps", Json::num(s.throughput())),
+        ("plan_switches", Json::int(s.plan_switches as i64)),
+    ])
+}
+
+fn main() {
+    println!("# bench_serve — scheduler policies under seeded open-loop load");
+    let cfg = tiny_config();
+    let mut src = SourceSpec::parse("host").unwrap().build(None).unwrap();
+    let lat = BlockLatencies::measure(&cfg, src.as_mut(), 1, 2000.0).expect("measure");
+    let mut dp = DeployPlanner::new(cfg.spec.l(), Space::Extended);
+    let si = dp.add_source(lat, TableImportance::new(&cfg, proxy_importance(&cfg)));
+    let work = dp.serve_plans(si, 3);
+    assert!(!work.is_empty(), "tiny fixture must yield frontier plans");
+    println!(
+        "work list: {} plans, est {:?} ms",
+        work.len(),
+        work.iter().map(|p| p.est_ms).collect::<Vec<f64>>()
+    );
+
+    // offered loads: mean inter-arrival gap in µs (smaller = hotter)
+    let loads: [(&str, u64); 3] = [("light", 1500), ("heavy", 400), ("overload", 60)];
+    let policies = [Policy::DrainBatch, Policy::MicroBatch, Policy::WorkSteal];
+    let mut load_records = Vec::new();
+    let mut overload_drain_p99 = f64::NAN;
+    let mut overload_steal_p99 = f64::NAN;
+    let mut overload_steal_served = 0usize;
+    let mut overload_steal_switches = 0usize;
+    for (load_name, gap_us) in loads {
+        let mut cells = Vec::new();
+        for policy in policies {
+            // drain doubles as the legacy baseline: open admission, no
+            // controller — exactly the pre-subsystem server
+            let legacy = policy == Policy::DrainBatch;
+            let stats = run_cell(&work, policy, gap_us, legacy);
+            println!(
+                "{load_name:<9} {:<6} served {:>4} shed {:>4} p50 {:>7.2} ms \
+                 p95 {:>7.2} ms p99 {:>7.2} ms switches {}",
+                policy.name(),
+                stats.served,
+                stats.shed_total(),
+                stats.percentile_ms(0.5),
+                stats.percentile_ms(0.95),
+                stats.percentile_ms(0.99),
+                stats.plan_switches,
+            );
+            if load_name == "overload" {
+                match policy {
+                    Policy::DrainBatch => overload_drain_p99 = stats.percentile_ms(0.99),
+                    Policy::WorkSteal => {
+                        overload_steal_p99 = stats.percentile_ms(0.99);
+                        overload_steal_served = stats.served;
+                        overload_steal_switches = stats.plan_switches;
+                    }
+                    Policy::MicroBatch => {}
+                }
+            }
+            cells.push((policy.name(), cell_json(&stats)));
+        }
+        load_records.push((load_name, Json::obj_from(cells)));
+    }
+    // "holds the SLO" requires EVIDENCE: an empty percentile (0.0 on
+    // zero served) must not read as a pass
+    let steal_holds_slo = overload_steal_served > 0 && overload_steal_p99 <= SLO_MS;
+    let drain_breaches_slo = overload_drain_p99 > SLO_MS;
+    println!(
+        "verdict @ overload: drain p99 {overload_drain_p99:.2} ms ({}), steal p99 \
+         {overload_steal_p99:.2} ms ({}) vs slo {SLO_MS} ms, {overload_steal_switches} \
+         plan switches",
+        if drain_breaches_slo { "breaches SLO" } else { "within SLO" },
+        if steal_holds_slo { "holds SLO" } else { "breaches SLO" },
+    );
+    let record = Json::obj_from(vec![
+        ("bench", Json::str_of("serve_policies")),
+        ("slo_ms", Json::num(SLO_MS)),
+        ("requests_per_cell", Json::int(N_REQ as i64)),
+        ("resident_plans", Json::int(work.len() as i64)),
+        ("loads", Json::obj_from(load_records)),
+        (
+            "acceptance",
+            Json::obj_from(vec![
+                ("overload_drain_p99_ms", Json::num(overload_drain_p99)),
+                ("overload_steal_p99_ms", Json::num(overload_steal_p99)),
+                ("overload_steal_served", Json::int(overload_steal_served as i64)),
+                ("overload_steal_plan_switches", Json::int(overload_steal_switches as i64)),
+                ("drain_breaches_slo", Json::Bool(drain_breaches_slo)),
+                ("steal_holds_slo", Json::Bool(steal_holds_slo)),
+            ]),
+        ),
+    ]);
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_serve.json");
+    std::fs::write(&path, record.to_string()).expect("writing BENCH_serve.json");
+    println!("serve record written to {}", path.display());
+}

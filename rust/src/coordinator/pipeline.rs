@@ -336,6 +336,26 @@ impl<'e> Pipeline<'e> {
         Ok(deploy_from_tables(&self.cfg, lats, imp, alpha, extended_space))
     }
 
+    /// Frontier-backed serving work list for ONE source: up to `n`
+    /// distinct plans off that source's importance–latency frontier,
+    /// most accurate first — what [`crate::serve::multi_plan`] builds
+    /// its resident `HostExec` set from.  Tables come from the same
+    /// on-disk cache as every other planner path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn serve_plans(
+        &self,
+        spec: &SourceSpec,
+        imp: &ImpTable,
+        n: usize,
+        batch: usize,
+        scale: f64,
+        alpha: f64,
+        force: bool,
+    ) -> Result<Vec<crate::planner::deploy::ParetoPoint>> {
+        let dp = self.plan_deploy(&[spec.clone()], imp, batch, scale, alpha, true, force)?;
+        Ok(dp.serve_plans(0, n))
+    }
+
     /// Write the plan JSON that `make plans` (aot pass 2) consumes.
     pub fn write_plan(&self, out: &PlanOutcome, name: &str) -> Result<PathBuf> {
         let dir = self.engine.manifest.root.join("plans");

@@ -1,21 +1,23 @@
-//! Batched inference server (thread-based substrate: no tokio offline).
+//! Batched inference server — now a thin shim over the serving
+//! subsystem ([`crate::serve`]), kept for API continuity.
 //!
-//! Clients submit single images through an MPSC channel; the serving
-//! loop drains up to `max_batch` requests or waits at most `max_wait`,
-//! then runs ONE execution and replies with per-request predictions +
-//! latency.  Two backends:
+//! The request/reply types, statistics, admission control, scheduling
+//! policies, and the multi-plan engine all live under `rust/src/serve/`
+//! and are re-exported here.  What remains in this module:
 //!
-//! * **Pjrt** — the AOT static-graph artifact: the batch is padded up
-//!   to the graph's compile-time batch size and the PJRT engine stays
-//!   on the serving thread (it is not Send).
-//! * **Host** — `HostExec` on the native kernel layer: the batch runs
-//!   at its ACTUAL size (a size-1 batch does size-1 work), no graph,
-//!   no artifacts, no padding.
-//!
-//! The load-generator threads only touch channels either way.
+//! * **Host backend** — `Server::host` wraps a single-plan
+//!   [`Scheduler`] with the legacy drain policy (open admission, no
+//!   controller), so historical call sites behave exactly as before.
+//!   New code that wants micro-batching, work stealing, admission
+//!   control, or frontier-backed plan switching should construct a
+//!   [`Scheduler`] (+ [`MultiPlanEngine`]) directly.
+//! * **Pjrt backend** — the AOT static-graph path keeps its own drain
+//!   loop below: the PJRT engine is pinned to the serving thread (it is
+//!   not Send), so it cannot ride the scheduler's work-steal substrate;
+//!   batches are padded to the graph's compile-time batch size.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::time::{Duration, Instant};
+use std::sync::mpsc::Receiver;
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
@@ -25,75 +27,17 @@ use crate::runtime::host_exec::HostExec;
 use crate::runtime::manifest::ArtifactDef;
 use crate::tensor::Tensor;
 
-pub struct Request {
-    /// CHW image
-    pub image: Vec<f32>,
-    pub submitted: Instant,
-    pub reply: Sender<Reply>,
-}
-
-#[derive(Debug, Clone, Copy)]
-pub struct Reply {
-    pub pred: usize,
-    /// end-to-end latency from submit to reply
-    pub latency: Duration,
-    pub batch_size: usize,
-}
+pub use crate::serve::admission::{AdmissionCfg, ShedReason};
+pub use crate::serve::multi_plan::MultiPlanEngine;
+pub use crate::serve::scheduler::{
+    burst_trace, spawn_load, spawn_open_load, Policy, Reply, Request, Scheduler, SchedulerConfig,
+};
+pub use crate::serve::stats::ServeStats;
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub max_batch: usize,
-    pub max_wait: Duration,
-}
-
-#[derive(Debug, Clone, Default)]
-pub struct ServeStats {
-    pub served: usize,
-    pub batches: usize,
-    /// raw samples; private so the only writer is `record()` — the
-    /// sorted cache below is invalidated by length, which is airtight
-    /// exactly because nothing can mutate samples in place
-    latencies_ms: Vec<f64>,
-    pub wall: Duration,
-    /// sorted view of `latencies_ms`, built lazily on the first
-    /// percentile query and reused until the samples change — report
-    /// paths ask for p50/p95/p99 back to back and used to re-sort the
-    /// full vector for each
-    sorted_cache: std::cell::RefCell<Vec<f64>>,
-}
-
-impl ServeStats {
-    pub fn record(&mut self, latency_ms: f64) {
-        self.latencies_ms.push(latency_ms);
-        self.served += 1;
-    }
-
-    /// Percentile with linear interpolation between order statistics
-    /// (the numpy default), over a cached sorted view.
-    pub fn percentile_ms(&self, p: f64) -> f64 {
-        if self.latencies_ms.is_empty() {
-            return f64::NAN;
-        }
-        let mut cache = self.sorted_cache.borrow_mut();
-        if cache.len() != self.latencies_ms.len() {
-            *cache = self.latencies_ms.clone();
-            cache.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        }
-        let v = &*cache;
-        let rank = (v.len() - 1) as f64 * p.clamp(0.0, 1.0);
-        let lo = rank.floor() as usize;
-        let hi = rank.ceil() as usize;
-        let frac = rank - lo as f64;
-        v[lo] + (v[hi] - v[lo]) * frac
-    }
-
-    pub fn throughput(&self) -> f64 {
-        self.served as f64 / self.wall.as_secs_f64().max(1e-9)
-    }
-
-    pub fn mean_batch(&self) -> f64 {
-        self.served as f64 / self.batches.max(1) as f64
-    }
+    pub max_wait: std::time::Duration,
 }
 
 enum ServeBackend<'e> {
@@ -107,8 +51,8 @@ enum ServeBackend<'e> {
         tail: Vec<xla::Literal>,
         graph_batch: usize,
     },
-    /// Native merged-network execution at actual batch size.
-    Host { exec: HostExec, image_shape: Vec<usize> },
+    /// Native merged-network execution through the serving scheduler.
+    Host { sched: Scheduler },
 }
 
 pub struct Server<'e> {
@@ -152,19 +96,21 @@ impl<'e> Server<'e> {
         })
     }
 
-    /// Host serving: a merged network on the native kernel layer.
-    /// `image_shape` is CHW; no graph batch exists, so any `max_batch`
-    /// is legal and every batch runs unpadded.
+    /// Host serving: a merged network on the native kernel layer,
+    /// behind the scheduler's legacy drain policy (single plan, open
+    /// admission).  `image_shape` is CHW; no graph batch exists, so any
+    /// `max_batch` is legal and every batch runs unpadded.
     pub fn host(exec: HostExec, image_shape: &[usize], cfg: ServerConfig) -> Result<Server<'static>> {
         if image_shape.len() != 3 {
             bail!("image_shape must be CHW, got {image_shape:?}");
         }
         let image_elems = image_shape.iter().product();
-        Ok(Server {
-            backend: ServeBackend::Host { exec, image_shape: image_shape.to_vec() },
-            image_elems,
-            cfg,
-        })
+        let sched = Scheduler::new(
+            MultiPlanEngine::single(exec, f64::NAN),
+            image_shape,
+            SchedulerConfig::drain(cfg.max_batch, cfg.max_wait),
+        )?;
+        Ok(Server { backend: ServeBackend::Host { sched }, image_elems, cfg })
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -174,42 +120,38 @@ impl<'e> Server<'e> {
         }
     }
 
-    /// Logits for an assembled batch of `bs` requests.
-    fn execute(&self, batch: &[Request], bs: usize) -> Result<Tensor> {
-        match &self.backend {
-            ServeBackend::Pjrt { engine, infer, head, tail, graph_batch } => {
-                // pad up to the compile-time graph batch
-                let xdef = &infer.inputs[head.len()];
-                let mut x = Tensor::zeros(&xdef.shape);
-                debug_assert_eq!(xdef.shape[0], *graph_batch);
-                for (n, r) in batch.iter().enumerate() {
-                    x.data[n * self.image_elems..(n + 1) * self.image_elems]
-                        .copy_from_slice(&r.image);
-                }
-                let x_lit = x.to_literal()?;
-                let mut inputs: Vec<&xla::Literal> = head.iter().collect();
-                inputs.push(&x_lit);
-                inputs.extend(tail.iter());
-                let out = engine.exec_borrowed(infer, &inputs)?;
-                Tensor::from_literal(&out[0])
-            }
-            ServeBackend::Host { exec, image_shape } => {
-                // actual batch size: no padding, no wasted FLOPs
-                let shape =
-                    [&[bs][..], image_shape.as_slice()].concat();
-                let mut x = Tensor::zeros(&shape);
-                for (n, r) in batch.iter().enumerate() {
-                    x.data[n * self.image_elems..(n + 1) * self.image_elems]
-                        .copy_from_slice(&r.image);
-                }
-                exec.forward(&x)
-            }
+    /// Logits for an assembled batch on the padded PJRT graph.
+    fn execute_pjrt(&self, batch: &[Request]) -> Result<Tensor> {
+        let ServeBackend::Pjrt { engine, infer, head, tail, graph_batch } = &self.backend else {
+            bail!("execute_pjrt on a host server");
+        };
+        // pad up to the compile-time graph batch
+        let xdef = &infer.inputs[head.len()];
+        let mut x = Tensor::zeros(&xdef.shape);
+        debug_assert_eq!(xdef.shape[0], *graph_batch);
+        for (n, r) in batch.iter().enumerate() {
+            x.data[n * self.image_elems..(n + 1) * self.image_elems].copy_from_slice(&r.image);
         }
+        let x_lit = x.to_literal()?;
+        let mut inputs: Vec<&xla::Literal> = head.iter().collect();
+        inputs.push(&x_lit);
+        inputs.extend(tail.iter());
+        let out = engine.exec_borrowed(infer, &inputs)?;
+        Tensor::from_literal(&out[0])
     }
 
     /// Run until `rx` disconnects; returns serving statistics.
-    pub fn run(&self, rx: Receiver<Request>) -> Result<ServeStats> {
-        let mut stats = ServeStats::default();
+    pub fn run(&mut self, rx: Receiver<Request>) -> Result<ServeStats> {
+        if let ServeBackend::Host { sched } = &mut self.backend {
+            return sched.run(rx);
+        }
+        self.run_pjrt(rx)
+    }
+
+    /// The legacy drain loop, kept only for the thread-pinned PJRT
+    /// engine (see module docs).
+    fn run_pjrt(&self, rx: Receiver<Request>) -> Result<ServeStats> {
+        let mut stats = ServeStats::with_plans(1);
         let t0 = Instant::now();
         loop {
             // block for the first request of a batch
@@ -235,13 +177,13 @@ impl<'e> Server<'e> {
                 }
             }
             let bs = batch.len();
-            let logits = self.execute(&batch, bs)?;
+            let logits = self.execute_pjrt(&batch)?;
             let nc = logits.shape[1];
             for (n, r) in batch.into_iter().enumerate() {
                 let pred = argmax(&logits.data[n * nc..(n + 1) * nc]);
                 let latency = r.submitted.elapsed();
-                stats.record(latency.as_secs_f64() * 1e3);
-                let _ = r.reply.send(Reply { pred, latency, batch_size: bs });
+                stats.record_on_plan(latency.as_secs_f64() * 1e3, 0);
+                let _ = r.reply.send(Reply::Served { pred, latency, batch_size: bs, plan: 0 });
             }
             stats.batches += 1;
         }
@@ -250,107 +192,10 @@ impl<'e> Server<'e> {
     }
 }
 
-/// Spawn `clients` load-generator threads, each sending `per_client`
-/// requests with `think_ms` pacing; returns the request receiver plus
-/// join handles (images are procedurally generated inside the threads).
-pub fn spawn_load(
-    data: &crate::data::synth::SynthSpec,
-    clients: usize,
-    per_client: usize,
-    think_ms: u64,
-) -> (Receiver<Request>, Vec<std::thread::JoinHandle<usize>>) {
-    let (tx, rx) = channel::<Request>();
-    let mut handles = Vec::new();
-    for c in 0..clients {
-        let tx = tx.clone();
-        let data = data.clone();
-        handles.push(std::thread::spawn(move || {
-            let elems = 3 * data.hw * data.hw;
-            let mut correct = 0usize;
-            for n in 0..per_client {
-                let mut img = vec![0f32; elems];
-                let idx = c * per_client + n;
-                let label = crate::data::synth::sample_into(
-                    &data,
-                    crate::data::synth::Split::Val,
-                    idx % data.val_len(),
-                    &mut img,
-                );
-                let (rtx, rrx) = channel();
-                let req = Request { image: img, submitted: Instant::now(), reply: rtx };
-                if tx.send(req).is_err() {
-                    break;
-                }
-                if let Ok(rep) = rrx.recv() {
-                    if rep.pred == label {
-                        correct += 1;
-                    }
-                }
-                if think_ms > 0 {
-                    std::thread::sleep(Duration::from_millis(think_ms));
-                }
-            }
-            correct
-        }));
-    }
-    drop(tx);
-    (rx, handles)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn stats_percentiles() {
-        let mut s = ServeStats::default();
-        s.latencies_ms = vec![1.0, 2.0, 3.0, 4.0, 100.0];
-        s.served = 5;
-        s.batches = 2;
-        s.wall = Duration::from_secs(1);
-        assert_eq!(s.percentile_ms(0.5), 3.0);
-        assert!(s.percentile_ms(0.95) >= 4.0);
-        assert_eq!(s.throughput(), 5.0);
-        assert_eq!(s.mean_batch(), 2.5);
-    }
-
-    #[test]
-    fn percentiles_interpolate_and_cover_tails() {
-        // pin p50/p95/p99 on a known 1..=100 sample: rank = 99 * p,
-        // linear interpolation between order statistics
-        let mut s = ServeStats::default();
-        s.latencies_ms = (1..=100).rev().map(|x| x as f64).collect();
-        assert!((s.percentile_ms(0.50) - 50.5).abs() < 1e-12);
-        assert!((s.percentile_ms(0.95) - 95.05).abs() < 1e-12);
-        assert!((s.percentile_ms(0.99) - 99.01).abs() < 1e-12);
-        assert_eq!(s.percentile_ms(0.0), 1.0);
-        assert_eq!(s.percentile_ms(1.0), 100.0);
-
-        // the old truncating index underestimated the tail: on 5
-        // samples it returned 4.0 for p95 — now nearly the max
-        let mut t = ServeStats::default();
-        t.latencies_ms = vec![1.0, 2.0, 3.0, 4.0, 100.0];
-        assert!((t.percentile_ms(0.95) - 80.8).abs() < 1e-9);
-
-        // degenerate inputs
-        let mut one = ServeStats::default();
-        one.latencies_ms = vec![7.0];
-        assert_eq!(one.percentile_ms(0.99), 7.0);
-        assert!(ServeStats::default().percentile_ms(0.5).is_nan());
-    }
-
-    #[test]
-    fn sorted_cache_tracks_new_samples() {
-        let mut s = ServeStats::default();
-        s.record(5.0);
-        s.record(1.0);
-        assert_eq!(s.percentile_ms(0.0), 1.0);
-        assert_eq!(s.percentile_ms(1.0), 5.0);
-        // appending invalidates the cached view (length changes)
-        s.record(0.5);
-        assert_eq!(s.percentile_ms(0.0), 0.5);
-        assert_eq!(s.served, 3);
-    }
+    use std::time::Duration;
 
     #[test]
     fn host_server_serves_at_actual_batch_size() {
@@ -364,7 +209,7 @@ mod tests {
         let net = build_merged(&cfg, &ps, &[1, 4, 5], &[4]).unwrap();
         let exec = HostExec::new(net).unwrap();
         let hw = cfg.spec.input_hw;
-        let server = Server::host(
+        let mut server = Server::host(
             exec,
             &[3, hw, hw],
             ServerConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
@@ -382,6 +227,9 @@ mod tests {
         assert!(stats.batches >= 4); // 15 requests can't fit 3 batches of <=4
         assert!(stats.percentile_ms(0.5) >= 0.0);
         assert!(stats.mean_batch() >= 1.0 && stats.mean_batch() <= 4.0);
+        // the legacy shim runs open admission: nothing may be shed
+        assert_eq!(stats.shed_total(), 0);
+        assert_eq!(stats.plan_switches, 0);
     }
 
     #[test]

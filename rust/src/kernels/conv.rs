@@ -219,6 +219,46 @@ pub fn conv2d(x: &Tensor, w: &Tensor, g: ConvGeom) -> Result<Tensor> {
     conv2d_with(&Pool::global(), x, w, g)
 }
 
+/// Pre-transposed NHWC weight operands for one conv layer, derived once
+/// from the OIHW checkpoint weight.  `conv2d_nhwc_with` used to rebuild
+/// these panels on EVERY call; [`pack_nhwc`] hoists the transposition
+/// to executor construction (`HostExec`), which matters once the
+/// work-steal serving policy runs many batch-1 forwards through the
+/// same layers.  Packing is a pure permutation of the weight bits, so
+/// packed and per-call paths are byte-identical.
+#[derive(Debug, Clone)]
+pub enum NhwcPack {
+    /// per-group `[cg*kh*kw, cog]` GEMM panels (pointwise, dense, and
+    /// grouped non-depthwise paths)
+    Panels(Vec<Vec<f32>>),
+    /// `[kh*kw, c]` tap-major stencil panel (pure depthwise path)
+    Depthwise(Vec<f32>),
+}
+
+/// Build the NHWC pack matching the path `conv2d_nhwc_with` will take
+/// for this (weight, geometry) pair.  The path predicates mirror the
+/// dispatch in [`conv2d_nhwc_packed`] exactly (pointwise is checked
+/// before depthwise, as there), so the pack variant always matches.
+pub fn pack_nhwc(w: &Tensor, g: ConvGeom) -> NhwcPack {
+    let (co, cg, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    if kh == 1 && kw == 1 && g.groups == 1 && g.stride == 1 && g.pad == 0 {
+        return NhwcPack::Panels(vec![weight_panel(w, 0, co)]);
+    }
+    // pure depthwise: cg == 1 and co == groups forces ci == groups == co
+    // (validation pins ci = cg * groups), the stencil path's predicate
+    if cg == 1 && co == g.groups {
+        let mut wt = vec![0.0f32; kh * kw * co];
+        for ch in 0..co {
+            for t in 0..kh * kw {
+                wt[t * co + ch] = w.data[ch * kh * kw + t];
+            }
+        }
+        return NhwcPack::Depthwise(wt);
+    }
+    let cog = co / g.groups.max(1);
+    NhwcPack::Panels((0..g.groups.max(1)).map(|gi| weight_panel(w, gi, cog)).collect())
+}
+
 /// OIHW `[co, cg, kh, kw]` -> the NHWC GEMM's B operand `[cg*kh*kw, co]`
 /// for group `gi`, with the reduction dim ordered (c, dy, dx) — the
 /// NCHW im2col order, which keeps the two layouts bit-compatible.
@@ -332,6 +372,19 @@ fn depthwise_nhwc_row(
 /// order (see module docs), so all paths stay byte-identical to
 /// [`conv2d_with`] modulo the layout permutation.
 pub fn conv2d_nhwc_with(pool: &Pool, x: &Tensor, w: &Tensor, g: ConvGeom) -> Result<Tensor> {
+    conv2d_nhwc_packed(pool, x, w, &pack_nhwc(w, g), g)
+}
+
+/// Same as [`conv2d_nhwc_with`], with the weight panels supplied by a
+/// pre-built [`NhwcPack`] (see [`pack_nhwc`]) instead of re-derived per
+/// call — the serving path packs once at `HostExec` construction.
+pub fn conv2d_nhwc_packed(
+    pool: &Pool,
+    x: &Tensor,
+    w: &Tensor,
+    pack: &NhwcPack,
+    g: ConvGeom,
+) -> Result<Tensor> {
     if x.rank() != 4 || w.rank() != 4 {
         bail!("conv2d_nhwc expects NHWC x and OIHW w, got {:?} / {:?}", x.shape, w.shape);
     }
@@ -352,26 +405,32 @@ pub fn conv2d_nhwc_with(pool: &Pool, x: &Tensor, w: &Tensor, g: ConvGeom) -> Res
 
     // -- fast path: pointwise conv is a straight GEMM over the panel --
     if kh == 1 && kw == 1 && g.groups == 1 && g.stride == 1 && g.pad == 0 {
-        let panel = weight_panel(w, 0, co); // [ci, co]
-        gemm_with(pool, n * h * wd, ci, co, &x.data, &panel, &mut out.data);
+        let NhwcPack::Panels(panels) = pack else {
+            bail!("NHWC pack variant does not match the pointwise path");
+        };
+        gemm_with(pool, n * h * wd, ci, co, &x.data, &panels[0], &mut out.data);
         return Ok(out);
     }
 
     // -- fast path: pure depthwise stencil ----------------------------
     if g.groups == ci && cg == 1 && co == ci {
         // tap-major weight panel [kh*kw, c]: wt[(dy*kw+dx)*c + ch]
-        let mut wt = vec![0.0f32; kh * kw * ci];
-        for ch in 0..ci {
-            for t in 0..kh * kw {
-                wt[t * ci + ch] = w.data[ch * kh * kw + t];
-            }
-        }
+        let NhwcPack::Depthwise(wt) = pack else {
+            bail!("NHWC pack variant does not match the depthwise path");
+        };
         // one output row (ow * c floats) per work item
         pool.for_each_chunk(&mut out.data, ow * co, |bi, orow| {
             let (ni, oy) = (bi / oh, bi % oh);
-            depthwise_nhwc_row(x, &wt, ni, oy, kh, kw, g, ow, orow);
+            depthwise_nhwc_row(x, wt, ni, oy, kh, kw, g, ow, orow);
         });
         return Ok(out);
+    }
+
+    let NhwcPack::Panels(panels) = pack else {
+        bail!("NHWC pack variant does not match the im2col path");
+    };
+    if panels.len() != g.groups {
+        bail!("NHWC pack has {} panels for {} groups", panels.len(), g.groups);
     }
 
     // -- general path: NHWC im2col + GEMM -----------------------------
@@ -380,15 +439,13 @@ pub fn conv2d_nhwc_with(pool: &Pool, x: &Tensor, w: &Tensor, g: ConvGeom) -> Res
             // one block: parallelize the GEMM over output-pixel rows
             let mut col = vec![0.0f32; ohw * kdim];
             im2col_nhwc_block(x, 0, 0, cg, kh, kw, g, oh, ow, &mut col);
-            let panel = weight_panel(w, 0, co);
-            gemm_with(pool, ohw, kdim, co, &col, &panel, &mut out.data);
+            gemm_with(pool, ohw, kdim, co, &col, &panels[0], &mut out.data);
         } else {
             // fan batch items out; each is a contiguous [ohw, co] slab
-            let panel = weight_panel(w, 0, co);
             pool.for_each_chunk(&mut out.data, ohw * co, |ni, oblk| {
                 let mut col = vec![0.0f32; ohw * kdim];
                 im2col_nhwc_block(x, ni, 0, cg, kh, kw, g, oh, ow, &mut col);
-                gemm_rows(ohw, kdim, co, &col, &panel, oblk, false);
+                gemm_rows(ohw, kdim, co, &col, &panels[0], oblk, false);
             });
         }
         return Ok(out);
@@ -401,8 +458,7 @@ pub fn conv2d_nhwc_with(pool: &Pool, x: &Tensor, w: &Tensor, g: ConvGeom) -> Res
     for ni in 0..n {
         for gi in 0..g.groups {
             im2col_nhwc_block(x, ni, gi * cg, cg, kh, kw, g, oh, ow, &mut col);
-            let panel = weight_panel(w, gi, cog);
-            gemm_rows(ohw, kdim, cog, &col, &panel, &mut tmp, false);
+            gemm_rows(ohw, kdim, cog, &col, &panels[gi], &mut tmp, false);
             let obase = ni * ohw * co + gi * cog;
             for p in 0..ohw {
                 out.data[obase + p * co..obase + p * co + cog]
@@ -622,6 +678,65 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn prepacked_weights_match_per_call_packing_bitwise() {
+        // the hoisting satellite's pin: packing once at construction
+        // and reusing the pack across calls (the serving pattern) is
+        // byte-identical to the historical pack-per-call path, on every
+        // NHWC strategy (pointwise GEMM, depthwise stencil, dense
+        // im2col, grouped scatter)
+        crate::util::prop::forall(30, 74, |rng| {
+            let (ci, co, groups, k) = match rng.below(4) {
+                0 => {
+                    let c = 2 + rng.below(6);
+                    (c, c, c, 3) // depthwise
+                }
+                1 => (2 + rng.below(8), 2 + rng.below(8), 1, 1), // pointwise
+                2 => {
+                    let g = 2;
+                    (g * (1 + rng.below(3)), g * (1 + rng.below(3)), g, 3)
+                }
+                _ => (1 + rng.below(8), 1 + rng.below(8), 1, 3), // dense
+            };
+            let stride = 1 + rng.below(2);
+            let pad = if k == 1 { 0 } else { rng.below(2) };
+            let h = k + stride * (1 + rng.below(4));
+            let w = randt(&[co, ci / groups, k, k], rng);
+            let g = ConvGeom { stride, pad, groups };
+            let pack = pack_nhwc(&w, g);
+            for trial in 0..2 {
+                let n = 1 + rng.below(3);
+                let x = randt(&[n, h, h, ci], rng);
+                let want =
+                    conv2d_nhwc_with(&Pool::serial(), &x, &w, g).map_err(|e| e.to_string())?;
+                let got = conv2d_nhwc_packed(&Pool::serial(), &x, &w, &pack, g)
+                    .map_err(|e| e.to_string())?;
+                crate::prop_assert!(
+                    got.shape == want.shape && bits_equal(&got.data, &want.data),
+                    "prepacked NHWC conv diverges (trial {trial}, geom {g:?}, k {k}, \
+                     {ci}->{co})"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pack_variant_matches_dispatch_path() {
+        // pointwise geometry packs panels even when the weight LOOKS
+        // depthwise-shaped (1 channel in and out)...
+        let w1 = Tensor::zeros(&[1, 1, 1, 1]);
+        assert!(matches!(pack_nhwc(&w1, ConvGeom::unit()), NhwcPack::Panels(_)));
+        // ...while a strided 1-group 1-channel 3x3 packs the stencil
+        let w3 = Tensor::zeros(&[1, 1, 3, 3]);
+        let g = ConvGeom { stride: 1, pad: 1, groups: 1 };
+        assert!(matches!(pack_nhwc(&w3, g), NhwcPack::Depthwise(_)));
+        // a mismatched pack is rejected, not silently misused
+        let x = Tensor::zeros(&[1, 5, 5, 1]);
+        let wrong = NhwcPack::Panels(vec![vec![0.0; 9]]);
+        assert!(conv2d_nhwc_packed(&Pool::serial(), &x, &w3, &wrong, g).is_err());
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! stack data without `Arc` or `'static` bounds and joins them before
 //! returning.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 
 #[derive(Debug, Clone, Copy)]
@@ -88,6 +89,50 @@ impl Pool {
             }
         });
     }
+
+    /// Task-parallel entry point: run `n` independent tasks on the
+    /// pool's workers, each task stolen from ONE shared queue (an
+    /// atomic cursor) the moment a worker frees up — the substrate the
+    /// serving layer's `WorkSteal` policy dispatches per-request
+    /// batch-1 forwards onto.  Outputs come back in task order.
+    ///
+    /// Unlike `for_each_chunk` the work items need no shared output
+    /// buffer and may return any `Send` value; like it, `f` must derive
+    /// a task's result from the task index and shared read-only state
+    /// only, so results are independent of which worker ran what.
+    pub fn run_tasks<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.workers == 1 || n == 1 {
+            return (0..n).map(&f).collect();
+        }
+        let next = AtomicUsize::new(0);
+        // one slot per task; each slot is written exactly once by the
+        // worker that stole its index (the per-slot mutex is only there
+        // to make that hand-off safe — it is never contended)
+        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let threads = self.workers.min(n);
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    *slots[i].lock().unwrap() = Some(f(i));
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("task slot unfilled"))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -139,5 +184,38 @@ mod tests {
     #[test]
     fn global_pool_has_workers() {
         assert!(Pool::global().workers() >= 1);
+    }
+
+    #[test]
+    fn run_tasks_returns_every_result_in_task_order() {
+        for workers in [1usize, 3, 8] {
+            let got = Pool::new(workers).run_tasks(57, |i| i * i);
+            assert_eq!(got.len(), 57, "{workers} workers");
+            for (i, &v) in got.iter().enumerate() {
+                assert_eq!(v, i * i, "task {i} misplaced with {workers} workers");
+            }
+        }
+    }
+
+    #[test]
+    fn run_tasks_results_are_schedule_independent() {
+        let task = |i: usize| {
+            let mut acc = 0.37f32 + i as f32;
+            for k in 0..200 {
+                acc = acc * 1.000001 + (k as f32).sin();
+            }
+            acc.to_bits()
+        };
+        let serial = Pool::serial().run_tasks(40, task);
+        for workers in [2usize, 6] {
+            assert_eq!(Pool::new(workers).run_tasks(40, task), serial);
+        }
+    }
+
+    #[test]
+    fn run_tasks_handles_empty_and_single() {
+        let none: Vec<u32> = Pool::new(4).run_tasks(0, |_| panic!("no tasks expected"));
+        assert!(none.is_empty());
+        assert_eq!(Pool::new(4).run_tasks(1, |i| i + 7), vec![7]);
     }
 }

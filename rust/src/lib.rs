@@ -41,8 +41,17 @@
 //!                source, and the native-kernel HostKernelSource that
 //!                prices blocks on the serving backend) -> T[i,j].
 //!   importance — probe evaluation, I[i,j,a,b] storage, B.3 normalize.
+//!   serve      — the SLO-aware serving subsystem: `scheduler`
+//!                (DrainBatch / MicroBatch / WorkSteal dispatch over one
+//!                request lifecycle), `admission` (queue-depth caps +
+//!                deadline shedding with explicit rejects), `multi_plan`
+//!                (N resident HostExecs off the DeployPlanner frontier +
+//!                hysteresis SLO controller), `stats` (percentiles, shed
+//!                counters, the serve JSON report).
 //!   coordinator— pipeline stages (pretrain -> tables -> plan -> finetune
-//!                -> merge -> eval), experiment runners, serving.
+//!                -> merge -> eval), experiment runners; `server` is a
+//!                thin shim re-exporting the serve subsystem (plus the
+//!                thread-pinned PJRT drain loop).
 //!
 //! ## Backends
 //!
@@ -135,6 +144,13 @@ pub mod runtime {
     pub mod engine;
     pub mod host_exec;
     pub mod manifest;
+}
+
+pub mod serve {
+    pub mod admission;
+    pub mod multi_plan;
+    pub mod scheduler;
+    pub mod stats;
 }
 
 pub mod trainer {

@@ -12,7 +12,10 @@ use anyhow::{anyhow, bail, Result};
 
 use repro::coordinator::pipeline::{LatencyCfg, Pipeline};
 use repro::coordinator::report::{fmt_acc, fmt_ms, Table};
-use repro::coordinator::server::{spawn_load, Server, ServerConfig};
+use repro::coordinator::server::{
+    burst_trace, spawn_load, spawn_open_load, AdmissionCfg, MultiPlanEngine, Policy, Scheduler,
+    SchedulerConfig, Server, ServerConfig,
+};
 use repro::data::synth::SynthSpec;
 use repro::importance::eval::ImportanceConfig;
 use repro::kernels::conv::Layout;
@@ -24,7 +27,7 @@ use repro::model::spec::ArchConfig;
 use repro::planner::deploy::DeployPlanner;
 use repro::planner::frontier::{Space, TableImportance};
 use repro::runtime::engine::Engine;
-use repro::runtime::host_exec::{Backend, HostExec};
+use repro::runtime::host_exec::Backend;
 use repro::trainer::params::ParamSet;
 use repro::trainer::sgd::TrainState;
 use repro::util::cli::Args;
@@ -48,9 +51,18 @@ fn usage() -> &'static str {
        serve      --arch A [--clients N --requests N --max-batch N --max-wait-ms N]\n\
                   [--backend B --source SPEC --frac X --target-ms MS]\n\
                   [--layout nchw|nhwc]\n\
+                  [--policy drain|micro|steal --slo-ms MS --plans N\n\
+                  --shed-depth D] [--burst N --gap-us U]\n\
                   (host backend: artifact-free — prices blocks on the\n\
-                  native kernels AND layout it serves with, picks the\n\
-                  plan off that frontier; --arch tiny = built-in fixture)\n\
+                  native kernels AND layout it serves with, picks plans\n\
+                  off that frontier; --arch tiny = built-in fixture.\n\
+                  --policy micro = deadline-aware micro-batches, steal =\n\
+                  per-request work stealing; --plans N holds N frontier\n\
+                  plans resident and a hysteresis controller switches on\n\
+                  observed p95 vs --slo-ms; --shed-depth caps the queue\n\
+                  and --slo-ms sheds unmeetable requests explicitly;\n\
+                  --burst N = seeded open-loop overload trace; writes\n\
+                  reports/serve_<arch>.json)\n\
      --source SPEC grammar (the latency-source registry):\n\
        analytical/<device>[/fused|eager]   roofline model; devices:\n\
                                            titan_xp rtx2080ti rtx3090 v100 xeon5220r\n\
@@ -539,7 +551,7 @@ fn main() -> Result<()> {
                 max_batch: args.usize_or("max-batch", 8)?,
                 max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 4)?),
             };
-            let server = Server::new(&engine, &infer, head, vec![mask_lit], cfg)?;
+            let mut server = Server::new(&engine, &infer, head, vec![mask_lit], cfg)?;
             let clients = args.usize_or("clients", 4)?;
             let per = args.usize_or("requests", 32)?;
             println!("[serve] {} clients x {} requests (batch<= {})", clients, per, server.cfg.max_batch);
@@ -551,6 +563,8 @@ fn main() -> Result<()> {
             t.row(vec!["throughput (req/s)".into(), format!("{:.1}", stats.throughput())]);
             t.row(vec!["p50 latency (ms)".into(), format!("{:.2}", stats.percentile_ms(0.5))]);
             t.row(vec!["p95 latency (ms)".into(), format!("{:.2}", stats.percentile_ms(0.95))]);
+            t.row(vec!["p99 latency (ms)".into(), format!("{:.2}", stats.percentile_ms(0.99))]);
+            t.row(vec!["shed".into(), stats.shed_total().to_string()]);
             t.row(vec!["mean batch".into(), format!("{:.2}", stats.mean_batch())]);
             t.row(vec![
                 "accuracy".into(),
@@ -613,9 +627,12 @@ fn host_arch_source(arch: &str, root: &std::path::Path, seed: u64) -> Result<(Ar
 /// `serve --backend host`: price every block on a registry source —
 /// by default `host`, i.e. wall-clock of the VERY kernels this backend
 /// serves with — compute the importance–latency frontier over that
-/// table, pick the plan off the frontier (auto-calibrated to
-/// `--target-ms`, or to `--frac` of vanilla), merge, and serve
-/// natively.  Zero PJRT, zero artifacts required.
+/// table, keep `--plans N` frontier plans resident (or the single
+/// plan auto-calibrated to `--target-ms` / `--frac` of vanilla), and
+/// serve through the scheduler subsystem: `--policy drain|micro|steal`,
+/// queue caps + deadline shedding from `--shed-depth`/`--slo-ms`, and
+/// a hysteresis controller switching plans on observed p95 vs the SLO.
+/// Zero PJRT, zero artifacts required.
 fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
     use repro::coordinator::experiments::proxy_importance;
 
@@ -626,6 +643,7 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
     // a layout itself, so the planner prices blocks in the layout
     // HostExec will actually run
     let layout = Layout::parse(&args.str_or("layout", "nchw"))?;
+    let policy = Policy::parse(&args.str_or("policy", "drain"))?;
     let source_str = args.str_or(
         "source",
         match layout {
@@ -639,14 +657,26 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
         SourceSpec::Host { threads, layout: _ }
             if !source_str.contains("nhwc") && !source_str.contains("nchw") =>
         {
+            // work-steal executes each request serially (the wave is
+            // the parallelism), so price blocks on ONE thread to match
+            // what a dispatch actually costs — est_ms feeds deadline
+            // shedding and the controller's promotion prediction
+            let threads = match policy {
+                Policy::WorkSteal => threads.or(Some(1)),
+                _ => threads,
+            };
             SourceSpec::Host { threads, layout }
         }
         s => s,
     };
     let max_batch = args.usize_or("max-batch", 8)?;
-    // price blocks at the serving batch size; host blocks are sub-ms,
+    // price blocks at the DISPATCH batch size: batch-1 under work
+    // stealing, the assembled batch otherwise; host blocks are sub-ms,
     // so the default tick is finer than the table-building default
-    let batch = args.usize_or("batch", max_batch)?;
+    let batch = args.usize_or(
+        "batch",
+        if policy == Policy::WorkSteal { 1 } else { max_batch },
+    )?;
     let scale = args.f64_or("scale", 2000.0)?;
     let mut src = spec.build(None)?; // measured needs artifacts: rejected here
     let bl = BlockLatencies::measure(&cfg, src.as_mut(), batch, scale)?;
@@ -685,68 +715,147 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
             vanilla * args.f64_or("frac", 0.65)?
         }
     };
-    let (s_set, a_set) = match dp.calibrate(si, target) {
-        Some(p) => {
-            println!(
-                "[serve:host] frontier pick for target {} ms: est {} ms, obj {:+.4}",
-                fmt_ms(target),
-                fmt_ms(p.est_ms),
-                p.plan.imp_total
-            );
-            (p.plan.s, p.plan.a)
-        }
-        None => {
-            // no frontier point reaches the target on this (cfg, proxy)
-            // pair: serve the uncompressed all-singleton network
-            println!(
-                "[serve:host] target {} ms unreachable — serving uncompressed \
-                 (raise --frac / --target-ms)",
-                fmt_ms(target)
-            );
-            repro::merge::plan::all_singleton_plan(&cfg.spec)
-        }
+    let slo_ms = args.f64_or("slo-ms", 0.0)?;
+    let shed_depth = args.usize_or("shed-depth", 0)?;
+    let plans_n = args.usize_or("plans", 1)?.max(1);
+    // the serving work list: N plans off the frontier (most accurate
+    // first), or the single budget-calibrated pick — falling back to
+    // the uncompressed all-singleton network when nothing qualifies
+    let mut work: Vec<repro::planner::deploy::ParetoPoint> = if plans_n > 1 {
+        dp.serve_plans(si, plans_n)
+    } else {
+        dp.calibrate(si, target).into_iter().collect()
     };
-    let segs = repro::merge::plan::segments_from_s(l, &s_set);
-    let est_ms = dp.sources()[si].lat.network_ms(&segs).unwrap_or(f64::NAN);
-    let net = repro::merge::plan::build_merged(&cfg, &ps, &s_set, &a_set)?;
-    let depth = net.depth();
-    let exec = HostExec::with_options(net, repro::kernels::pool::Pool::global(), layout)?;
+    if work.is_empty() {
+        println!(
+            "[serve:host] no frontier plan qualifies (target {} ms) — serving \
+             uncompressed (raise --frac / --target-ms)",
+            fmt_ms(target)
+        );
+        let (s_all, a_all) = repro::merge::plan::all_singleton_plan(&cfg.spec);
+        work.push(repro::planner::deploy::ParetoPoint {
+            source: dp.sources()[si].label.clone(),
+            source_idx: si,
+            t0_ms: vanilla,
+            est_ms: vanilla,
+            plan: repro::planner::solver::PlanOutcome {
+                a: a_all,
+                b: Vec::new(),
+                s: s_all,
+                imp_total: f64::NAN,
+                est_ticks: 0,
+            },
+        });
+    }
+    // WorkSteal parallelizes ACROSS requests (batch-1 tasks on the pool
+    // workers), so each resident exec runs serially inside; the batch
+    // policies keep intra-batch parallelism instead
+    let exec_pool = match policy {
+        Policy::WorkSteal => repro::kernels::pool::Pool::serial(),
+        _ => repro::kernels::pool::Pool::global(),
+    };
+    let mp = MultiPlanEngine::build(&cfg, &ps, &work, exec_pool, layout)?;
+    let mut pt = Table::new(
+        &format!("resident plans ({} of frontier [{}])", mp.len(), dp.sources()[si].label),
+        &["plan", "convs", "est (ms)", "objective"],
+    );
+    for k in 0..mp.len() {
+        let info = mp.info(k);
+        pt.row(vec![
+            k.to_string(),
+            info.depth.to_string(),
+            fmt_ms(info.est_ms),
+            format!("{:+.4}", info.importance),
+        ]);
+    }
+    print!("{}", pt.render());
     let hw = cfg.spec.input_hw;
-    let cfg_srv = ServerConfig {
+    let scfg = SchedulerConfig {
+        policy,
         max_batch,
         max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 4)?),
+        admission: AdmissionCfg::slo(shed_depth, slo_ms),
+        slo_ms,
+        steal_workers: 0,
     };
-    let server = Server::host(exec, &[3, hw, hw], cfg_srv)?;
+    let mut sched = Scheduler::new(mp, &[3, hw, hw], scfg)?;
     let mut data = if cfg.spec.num_classes <= 10 {
         SynthSpec::quickstart(hw)
     } else {
         SynthSpec::imagenet100_analog(hw)
     };
     data.num_classes = cfg.spec.num_classes;
-    let clients = args.usize_or("clients", 4)?;
-    let per = args.usize_or("requests", 32)?;
     println!(
-        "[serve:host] {} — {} convs (vanilla {}), est {} ms @ [{}]",
+        "[serve:host] {} — vanilla {} convs @ [{}], policy {}, slo {} ms, \
+         shed-depth {}",
         label,
-        depth,
         l,
-        fmt_ms(est_ms),
-        dp.sources()[si].label
+        dp.sources()[si].label,
+        policy.name(),
+        if slo_ms > 0.0 { fmt_ms(slo_ms) } else { "-".into() },
+        shed_depth
     );
-    println!("[serve:host] {clients} clients x {per} requests (batch <= {})", server.cfg.max_batch);
-    let (rx, handles) = spawn_load(&data, clients, per, args.u64_or("think-ms", 0)?);
-    let stats = server.run(rx)?;
-    let correct: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let burst = args.usize_or("burst", 0)?;
+    let (stats, correct) = if burst > 0 {
+        // open-loop seeded burst trace: the overload mode closed-loop
+        // clients cannot produce (they self-throttle on replies)
+        let gaps = burst_trace(
+            args.usize_or("seed", 1)? as u64,
+            burst,
+            args.u64_or("gap-us", 300)?,
+            16,
+        );
+        println!("[serve:host] open-loop burst: {burst} requests (seeded trace)");
+        let (rx, gen) = spawn_open_load(&data, burst, gaps);
+        let stats = sched.run(rx)?;
+        let mut correct = 0usize;
+        for (lbl, rrx) in gen.join().expect("load generator panicked") {
+            if let Ok(rep) = rrx.try_recv() {
+                if rep.pred() == Some(lbl) {
+                    correct += 1;
+                }
+            }
+        }
+        (stats, correct)
+    } else {
+        let clients = args.usize_or("clients", 4)?;
+        let per = args.usize_or("requests", 32)?;
+        println!("[serve:host] {clients} clients x {per} requests (batch <= {max_batch})");
+        let (rx, handles) = spawn_load(&data, clients, per, args.u64_or("think-ms", 0)?);
+        let stats = sched.run(rx)?;
+        let correct: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        (stats, correct)
+    };
     let mut t = Table::new("serving (host backend, unpadded batches)", &["metric", "value"]);
+    t.row(vec!["policy".into(), policy.name().into()]);
     t.row(vec!["served".into(), stats.served.to_string()]);
+    t.row(vec![
+        "shed (queue/deadline)".into(),
+        format!("{}/{}", stats.shed_queue, stats.shed_deadline),
+    ]);
     t.row(vec!["throughput (req/s)".into(), format!("{:.1}", stats.throughput())]);
     t.row(vec!["p50 latency (ms)".into(), format!("{:.2}", stats.percentile_ms(0.5))]);
     t.row(vec!["p95 latency (ms)".into(), format!("{:.2}", stats.percentile_ms(0.95))]);
+    t.row(vec!["p99 latency (ms)".into(), format!("{:.2}", stats.percentile_ms(0.99))]);
     t.row(vec!["mean batch".into(), format!("{:.2}", stats.mean_batch())]);
+    t.row(vec!["plan switches".into(), stats.plan_switches.to_string()]);
+    t.row(vec![
+        "served per plan".into(),
+        format!("{:?}", stats.served_per_plan),
+    ]);
     t.row(vec![
         "accuracy".into(),
         fmt_acc(correct as f64 / stats.served.max(1) as f64),
     ]);
     print!("{}", t.render());
+    for &(wave, from, to) in &stats.switch_log {
+        println!("[serve:host] plan switch at wave {wave}: {from} -> {to}");
+    }
+    // the serve report record (shed counters + switch trail included)
+    let dir = root.join("reports");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("serve_{arch}.json"));
+    std::fs::write(&path, stats.report_json(policy.name(), slo_ms).to_string())?;
+    println!("serve report written to {}", path.display());
     Ok(())
 }

@@ -38,6 +38,12 @@ use crate::model::spec::ArchConfig;
 use crate::planner::frontier::{Planner, Space, TableImportance};
 use crate::planner::solver::{ImportanceProvider, PlanOutcome};
 
+/// The default budget ladder every serving consumer picks plans from:
+/// `(points, lo_frac, hi_frac)` of vanilla latency.  One definition so
+/// the CLI, bench_serve, examples, and `Pipeline::serve_plans` cannot
+/// drift apart when the ladder is retuned.
+pub const SERVE_LADDER: (usize, f64, f64) = (12, 0.45, 0.95);
+
 /// One surviving frontier point, with provenance.
 #[derive(Debug, Clone)]
 pub struct ParetoPoint {
@@ -169,6 +175,66 @@ impl<P: ImportanceProvider> DeployPlanner<P> {
             .map(|idx| self.default_budgets(idx, points, lo_frac, hi_frac))
             .collect();
         self.joint_pareto(&ladders)
+    }
+
+    /// The canonical serving work list: [`DeployPlanner::frontier_plans`]
+    /// on the one ladder every serving consumer shares
+    /// ([`SERVE_LADDER`]) — CLI, bench, example, and
+    /// `Pipeline::serve_plans` all pick from the same frontier.
+    pub fn serve_plans(&self, idx: usize, n: usize) -> Vec<ParetoPoint> {
+        let (points, lo, hi) = SERVE_LADDER;
+        self.frontier_plans(idx, n, points, lo, hi)
+    }
+
+    /// The serving work list: up to `n` DISTINCT plans spread across
+    /// source `idx`'s frontier, ordered most-important (slowest) first
+    /// — what the multi-plan serving engine keeps resident
+    /// (`serve::multi_plan`).  Built from the source's default budget
+    /// ladder (`points` budgets from `lo_frac` to `hi_frac` of
+    /// vanilla), dominance-filtered, deduplicated by (S, A), with the
+    /// two extremes always included and interior picks spread evenly by
+    /// latency.
+    pub fn frontier_plans(
+        &self,
+        idx: usize,
+        n: usize,
+        points: usize,
+        lo_frac: f64,
+        hi_frac: f64,
+    ) -> Vec<ParetoPoint> {
+        if n == 0 {
+            return Vec::new();
+        }
+        // ladder needs at least n rungs to have a chance of n distinct
+        // plans (capped: a serving engine never wants hundreds resident)
+        let budgets = self.default_budgets(idx, points.max(n.min(256)), lo_frac, hi_frac);
+        let all: Vec<ParetoPoint> = self.frontier(idx, &budgets).into_iter().flatten().collect();
+        // dominance filter + (est, imp)-dedup, then drop plan-identical
+        // points (different budgets often yield the same (S, A))
+        let mut front = pareto_front(all);
+        let mut distinct: Vec<ParetoPoint> = Vec::new();
+        for p in front.drain(..) {
+            if !distinct.iter().any(|q| q.plan.s == p.plan.s && q.plan.a == p.plan.a) {
+                distinct.push(p);
+            }
+        }
+        // pareto_front sorts latency ascending; flip to most-accurate
+        // (slowest) first — plan 0 is the server's preferred plan
+        distinct.reverse();
+        if distinct.len() <= n {
+            return distinct;
+        }
+        if n == 1 {
+            // single-plan engine: the most accurate feasible plan
+            return vec![distinct[0].clone()];
+        }
+        // even spread by rank, endpoints pinned
+        let last = distinct.len() - 1;
+        let mut picked: Vec<usize> = (0..n)
+            .map(|k| (k as f64 * last as f64 / (n - 1) as f64).round() as usize)
+            .collect();
+        picked.dedup();
+        picked.into_iter().map(|i| distinct[i].clone()).collect()
     }
 
     /// Auto-calibrate the integer budget against `target_ms`: the plan
@@ -476,6 +542,50 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn frontier_plans_are_distinct_spread_and_ordered() {
+        forall(20, 75, |rng| {
+            let l = 3 + rng.below(4);
+            let dp = rand_deploy(rng, l, 1);
+            let n = 1 + rng.below(4);
+            let plans = dp.frontier_plans(0, n, 12, 0.4, 0.95);
+            crate::prop_assert!(plans.len() <= n, "{} plans for n={n}", plans.len());
+            // most-accurate first: est_ms and importance both descend
+            for w in plans.windows(2) {
+                crate::prop_assert!(
+                    w[0].est_ms >= w[1].est_ms && w[0].plan.imp_total >= w[1].plan.imp_total,
+                    "work list not ordered most-accurate (slowest) first"
+                );
+            }
+            // distinct (S, A) per entry, and every entry on the frontier
+            // (no entry dominated by another)
+            for (i, p) in plans.iter().enumerate() {
+                for (j, q) in plans.iter().enumerate() {
+                    if i != j {
+                        crate::prop_assert!(
+                            p.plan.s != q.plan.s || p.plan.a != q.plan.a,
+                            "duplicate plan in the work list"
+                        );
+                        crate::prop_assert!(!q.dominates(p), "dominated plan in the work list");
+                    }
+                }
+            }
+            // with capacity for more than one plan, the extremes of the
+            // distinct frontier must both be present (n=12 keeps the
+            // budget ladder identical to the picks above, so `full` IS
+            // the distinct set the picker sampled from)
+            let full = dp.frontier_plans(0, 12, 12, 0.4, 0.95);
+            if !full.is_empty() && n >= 2 && plans.len() >= 2 {
+                crate::prop_assert!(
+                    plans[0].plan.s == full[0].plan.s
+                        && plans[plans.len() - 1].plan.s == full[full.len() - 1].plan.s,
+                    "endpoints of the frontier must be pinned"
+                );
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -19,7 +19,9 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::kernels::conv::{conv2d_nhwc_with, conv2d_with, nchw_to_nhwc, ConvGeom, Layout};
+use crate::kernels::conv::{
+    conv2d_nhwc_packed, conv2d_with, nchw_to_nhwc, pack_nhwc, ConvGeom, Layout, NhwcPack,
+};
 use crate::kernels::elementwise::{
     add_bias_nchw, add_bias_nhwc, add_inplace, argmax, global_avg_pool, global_avg_pool_nhwc,
     max_pool_2x2, max_pool_2x2_nhwc, relu6_inplace,
@@ -77,6 +79,11 @@ pub struct HostExec {
     keep_seg: Vec<bool>,
     pool: Pool,
     layout: Layout,
+    /// per-layer NHWC weight panels, pre-transposed ONCE here instead
+    /// of per conv call (empty in NCHW mode) — the work-steal serving
+    /// policy runs many batch-1 forwards, where per-call packing was
+    /// pure overhead
+    nhwc_packs: Vec<NhwcPack>,
 }
 
 impl HostExec {
@@ -124,7 +131,26 @@ impl HostExec {
             }
         }
         let keep_seg = residual_keep_set(&net.layers);
-        Ok(HostExec { net, keep_seg, pool, layout })
+        let nhwc_packs = match layout {
+            Layout::Nchw => Vec::new(),
+            Layout::Nhwc => net
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(li, ml)| {
+                    let g = ConvGeom { stride: ml.stride, pad: ml.pad, groups: ml.groups };
+                    pack_nhwc(&net.params[2 * li], g)
+                })
+                .collect(),
+        };
+        Ok(HostExec { net, keep_seg, pool, layout, nhwc_packs })
+    }
+
+    /// Serving-facing name for [`HostExec::forward`] — what the
+    /// scheduler policies call per dispatch (`WorkSteal` at batch 1,
+    /// the batching policies at the assembled batch size).
+    pub fn logits(&self, x: &Tensor) -> Result<Tensor> {
+        self.forward(x)
     }
 
     /// Logits for a batch — any size, executed at that size.  Input is
@@ -150,7 +176,7 @@ impl HostExec {
             let b = &self.net.params[2 * li + 1];
             let geom = ConvGeom { stride: ml.stride, pad: ml.pad, groups: ml.groups };
             let mut y = if nhwc {
-                conv2d_nhwc_with(&self.pool, &cur, w, geom)?
+                conv2d_nhwc_packed(&self.pool, &cur, w, &self.nhwc_packs[li], geom)?
             } else {
                 conv2d_with(&self.pool, &cur, w, geom)?
             };
@@ -317,6 +343,45 @@ mod tests {
                     (l1.data[c] - l3.data[b * nc + c]).abs() < 1e-5,
                     "sample {b} logit {c} differs across batch sizes"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_logits_are_byte_identical_to_single_request_calls() {
+        // the serving byte-identity pin: a MicroBatch/DrainBatch wave
+        // assembles K requests into one batch, WorkSteal runs each at
+        // batch 1 — both must reproduce the EXACT bits of a direct
+        // batch-1 `logits` call per sample.  Per-element accumulation
+        // order is fixed by the k index alone (kernels determinism
+        // contract), so batch size cannot change any sample's bits.
+        let cfg = tiny_config();
+        for (seed, s, a) in [
+            (51u64, vec![1usize, 4, 5], vec![4usize]),
+            (52, vec![1, 2, 3, 4, 5], vec![1, 2, 3, 5]), // residual + depthwise
+        ] {
+            let ps = ParamSet::synthetic(&cfg, seed);
+            let net = build_merged(&cfg, &ps, &s, &a).unwrap();
+            for layout in [Layout::Nchw, Layout::Nhwc] {
+                let exec =
+                    HostExec::with_options(net.clone_shallow(), Pool::new(2), layout).unwrap();
+                let xb = rand_input(&[4, 3, 12, 12], seed + 7);
+                let lb = exec.logits(&xb).unwrap();
+                let nc = lb.shape[1];
+                let per = 3 * 12 * 12;
+                for b in 0..4 {
+                    let x1 = Tensor::from_vec(
+                        &[1, 3, 12, 12],
+                        xb.data[b * per..(b + 1) * per].to_vec(),
+                    )
+                    .unwrap();
+                    let l1 = exec.logits(&x1).unwrap();
+                    assert!(
+                        bits_equal(&l1.data, &lb.data[b * nc..(b + 1) * nc]),
+                        "sample {b} bits differ between batch-4 and batch-1 \
+                         ({layout:?}, plan s={s:?})"
+                    );
+                }
             }
         }
     }

@@ -1,0 +1,160 @@
+//! Admission control — the piece that turns unbounded queueing into
+//! bounded tail latency.
+//!
+//! Two independent gates, both explicit (a shed request gets a
+//! [`super::scheduler::Reply::Rejected`], never silence):
+//!
+//! * **Queue-depth cap** (`shed_depth`): a new arrival is rejected when
+//!   the scheduler's queue already holds that many requests.  This is
+//!   the backpressure bound — without it a burst makes the queue (and
+//!   therefore every later request's wait) arbitrarily long.
+//! * **Deadline viability**, checked at *dispatch* time: a request
+//!   whose age plus the active plan's estimated execution time already
+//!   exceeds its deadline cannot possibly be answered within the SLO,
+//!   so executing it would only burn capacity that on-time requests
+//!   need.  Shedding it keeps the served-latency distribution inside
+//!   the budget the planner promised.
+//!
+//! Per-request deadlines override the config default; a request with
+//! neither is never deadline-shed.
+
+use std::time::{Duration, Instant};
+
+/// Why a request was rejected instead of served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// queue was at its depth cap on arrival
+    QueueFull,
+    /// deadline unmeetable at dispatch (age + estimated exec > budget)
+    Deadline,
+    /// malformed request (wrong image element count)
+    Malformed,
+    /// server-side execution error — the request was fine, the engine
+    /// failed (the reply contract still owes the client an answer)
+    Internal,
+}
+
+impl ShedReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::Deadline => "deadline",
+            ShedReason::Malformed => "malformed",
+            ShedReason::Internal => "internal",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct AdmissionCfg {
+    /// max requests waiting in the scheduler queue; 0 = unbounded
+    /// (the legacy drain behavior)
+    pub shed_depth: usize,
+    /// default per-request latency budget; None = no deadline shedding
+    pub deadline: Option<Duration>,
+}
+
+impl AdmissionCfg {
+    /// Unbounded queue, no deadlines — byte-for-byte the legacy loop.
+    pub fn open() -> AdmissionCfg {
+        AdmissionCfg::default()
+    }
+
+    /// Cap + SLO-derived deadline in one call (the CLI path).
+    pub fn slo(shed_depth: usize, slo_ms: f64) -> AdmissionCfg {
+        AdmissionCfg {
+            shed_depth,
+            deadline: (slo_ms > 0.0).then(|| Duration::from_secs_f64(slo_ms / 1e3)),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Admission {
+    pub cfg: AdmissionCfg,
+}
+
+impl Admission {
+    pub fn new(cfg: AdmissionCfg) -> Admission {
+        Admission { cfg }
+    }
+
+    /// Arrival gate: may a new request join a queue of `depth` waiters?
+    pub fn admit(&self, depth: usize) -> Result<(), ShedReason> {
+        if self.cfg.shed_depth > 0 && depth >= self.cfg.shed_depth {
+            return Err(ShedReason::QueueFull);
+        }
+        Ok(())
+    }
+
+    /// The effective deadline for a request submitted at `submitted`
+    /// with an optional explicit per-request deadline.
+    pub fn deadline_for(&self, submitted: Instant, explicit: Option<Instant>) -> Option<Instant> {
+        explicit.or_else(|| self.cfg.deadline.map(|d| submitted + d))
+    }
+
+    /// Dispatch gate: can this request still meet its deadline if
+    /// execution starts now and takes `est_exec`?
+    pub fn viable(
+        &self,
+        submitted: Instant,
+        explicit: Option<Instant>,
+        now: Instant,
+        est_exec: Duration,
+    ) -> Result<(), ShedReason> {
+        match self.deadline_for(submitted, explicit) {
+            Some(d) if now + est_exec > d => Err(ShedReason::Deadline),
+            _ => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_admission_never_sheds() {
+        let a = Admission::new(AdmissionCfg::open());
+        assert!(a.admit(0).is_ok());
+        assert!(a.admit(1_000_000).is_ok());
+        let now = Instant::now();
+        assert!(a.viable(now, None, now + Duration::from_secs(60), Duration::ZERO).is_ok());
+    }
+
+    #[test]
+    fn queue_cap_sheds_at_depth() {
+        let a = Admission::new(AdmissionCfg { shed_depth: 4, deadline: None });
+        assert!(a.admit(3).is_ok());
+        assert_eq!(a.admit(4), Err(ShedReason::QueueFull));
+        assert_eq!(a.admit(100), Err(ShedReason::QueueFull));
+    }
+
+    #[test]
+    fn deadline_viability_accounts_for_exec_estimate() {
+        let a = Admission::new(AdmissionCfg::slo(0, 10.0));
+        let t0 = Instant::now();
+        let exec = Duration::from_millis(4);
+        // 2 ms old + 4 ms exec < 10 ms budget: viable
+        assert!(a.viable(t0, None, t0 + Duration::from_millis(2), exec).is_ok());
+        // 8 ms old + 4 ms exec > 10 ms budget: shed
+        assert_eq!(
+            a.viable(t0, None, t0 + Duration::from_millis(8), exec),
+            Err(ShedReason::Deadline)
+        );
+        // an explicit per-request deadline wins over the config default
+        let long = Some(t0 + Duration::from_secs(5));
+        assert!(a.viable(t0, long, t0 + Duration::from_millis(8), exec).is_ok());
+    }
+
+    #[test]
+    fn slo_zero_means_no_deadline() {
+        let a = Admission::new(AdmissionCfg::slo(8, 0.0));
+        assert!(a.cfg.deadline.is_none());
+        assert_eq!(a.cfg.shed_depth, 8);
+        assert_eq!(ShedReason::Deadline.name(), "deadline");
+        assert_eq!(ShedReason::QueueFull.name(), "queue_full");
+        assert_eq!(ShedReason::Malformed.name(), "malformed");
+        assert_eq!(ShedReason::Internal.name(), "internal");
+    }
+}

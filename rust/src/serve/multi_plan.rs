@@ -1,0 +1,418 @@
+//! Multi-plan serving engine — the runtime consumer of the planner's
+//! accuracy–latency frontier.
+//!
+//! DepthShrinker and LayerMerge frame depth compression as picking ONE
+//! point on an accuracy–latency curve; `DeployPlanner` already computes
+//! the whole frontier.  This module keeps N merged networks from that
+//! frontier resident (all built from the SAME base `ParamSet`, ordered
+//! most-accurate first) and lets a hysteresis controller move the
+//! active plan at runtime: degrade to a shallower merged plan when the
+//! observed p95 breaches the SLO, return to the accurate plan when load
+//! drops.  Switching is O(1) — an index swap; every `HostExec` is
+//! already constructed (weight panels pre-packed, see
+//! [`crate::runtime::host_exec`]).
+//!
+//! # Anti-thrash contract
+//!
+//! [`SloController`] only promotes (toward the accurate plan) when the
+//! *predicted* p95 on the slower plan — observed p95 plus the est-ms
+//! delta between the plans — clears `up_frac * slo`, and every
+//! promotion that is punished by a breach doubles the promotion
+//! patience.  On a constant-rate load the number of switches over any
+//! horizon of N observations is therefore O(plans + log N): oscillation
+//! decays geometrically instead of ping-ponging every window.  The
+//! property test below pins that bound over seeded constant loads.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::kernels::conv::Layout;
+use crate::kernels::pool::Pool;
+use crate::merge::plan::build_merged;
+use crate::model::spec::ArchConfig;
+use crate::planner::deploy::ParetoPoint;
+use crate::runtime::host_exec::HostExec;
+use crate::tensor::Tensor;
+use crate::trainer::params::ParamSet;
+
+/// Provenance of one resident plan (for reports and tests).
+#[derive(Debug, Clone)]
+pub struct PlanInfo {
+    pub label: String,
+    /// merged-network latency estimate under the serving source (ms)
+    pub est_ms: f64,
+    pub importance: f64,
+    pub depth: usize,
+    pub s: Vec<usize>,
+    pub a: Vec<usize>,
+}
+
+pub struct MultiPlanEngine {
+    execs: Vec<HostExec>,
+    infos: Vec<PlanInfo>,
+    active: usize,
+}
+
+impl MultiPlanEngine {
+    /// Build one `HostExec` per frontier point, all from the same base
+    /// `ParamSet`.  Points are ordered most-accurate (slowest) first —
+    /// plan 0 is what the server runs when it is keeping up — and
+    /// duplicate (S, A) plans collapse to one executor.
+    pub fn build(
+        cfg: &ArchConfig,
+        ps: &ParamSet,
+        points: &[ParetoPoint],
+        pool: Pool,
+        layout: Layout,
+    ) -> Result<MultiPlanEngine> {
+        if points.is_empty() {
+            bail!("multi-plan engine needs at least one frontier point");
+        }
+        let mut sorted: Vec<&ParetoPoint> = points.iter().collect();
+        sorted.sort_by(|a, b| b.est_ms.partial_cmp(&a.est_ms).unwrap());
+        let mut execs = Vec::new();
+        let mut infos: Vec<PlanInfo> = Vec::new();
+        for p in sorted {
+            if infos.iter().any(|i| i.s == p.plan.s && i.a == p.plan.a) {
+                continue;
+            }
+            let net = build_merged(cfg, ps, &p.plan.s, &p.plan.a)?;
+            let depth = net.depth();
+            execs.push(HostExec::with_options(net, pool, layout)?);
+            infos.push(PlanInfo {
+                label: p.source.clone(),
+                est_ms: p.est_ms,
+                importance: p.plan.imp_total,
+                depth,
+                s: p.plan.s.clone(),
+                a: p.plan.a.clone(),
+            });
+        }
+        Ok(MultiPlanEngine { execs, infos, active: 0 })
+    }
+
+    /// A one-plan engine around an existing executor — what the legacy
+    /// single-plan `Server::host` path wraps itself in.
+    pub fn single(exec: HostExec, est_ms: f64) -> MultiPlanEngine {
+        let depth = exec.net.depth();
+        MultiPlanEngine {
+            execs: vec![exec],
+            infos: vec![PlanInfo {
+                label: "single".into(),
+                est_ms,
+                importance: f64::NAN,
+                depth,
+                s: Vec::new(),
+                a: Vec::new(),
+            }],
+            active: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.execs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.execs.is_empty()
+    }
+
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
+    pub fn set_active(&mut self, plan: usize) {
+        assert!(plan < self.execs.len(), "plan {plan} out of range");
+        self.active = plan;
+    }
+
+    pub fn info(&self, plan: usize) -> &PlanInfo {
+        &self.infos[plan]
+    }
+
+    pub fn exec(&self, plan: usize) -> &HostExec {
+        &self.execs[plan]
+    }
+
+    /// Per-plan est-ms table for the controller's promotion prediction.
+    pub fn est_ms_table(&self) -> Vec<f64> {
+        self.infos.iter().map(|i| i.est_ms).collect()
+    }
+
+    /// Estimated execution time of one dispatch on `plan` (zero when
+    /// the estimate is unknown — deadline shedding then degrades to a
+    /// pure age check).
+    pub fn est_exec(&self, plan: usize) -> Duration {
+        let ms = self.infos[plan].est_ms;
+        if ms.is_finite() && ms > 0.0 {
+            Duration::from_secs_f64(ms / 1e3)
+        } else {
+            Duration::ZERO
+        }
+    }
+
+    /// Logits on the active plan.
+    pub fn logits(&self, x: &Tensor) -> Result<Tensor> {
+        self.execs[self.active].logits(x)
+    }
+
+    /// Logits on an explicit plan (work-steal waves pin the plan at
+    /// wave start so a mid-wave switch cannot mix plans in one wave).
+    pub fn logits_with(&self, plan: usize, x: &Tensor) -> Result<Tensor> {
+        self.execs[plan].logits(x)
+    }
+}
+
+/// Hysteresis controller steering the active plan toward the most
+/// accurate one that holds the SLO.  Plans are indexed most-accurate
+/// (slowest) first, so "degrade" = +1 and "promote" = -1.
+#[derive(Debug, Clone)]
+pub struct SloController {
+    pub slo_ms: f64,
+    /// consecutive breach observations before degrading
+    pub patience: usize,
+    /// promote only when the PREDICTED p95 on the slower plan clears
+    /// this fraction of the SLO (the hysteresis gap)
+    pub up_frac: f64,
+    breach: usize,
+    slack: usize,
+    /// current promotion patience; doubles when a promotion is punished
+    /// by a breach-driven demotion, resets once a promotion survives
+    up_patience: usize,
+    since_switch: usize,
+    last_was_promotion: bool,
+}
+
+impl SloController {
+    pub fn new(slo_ms: f64) -> SloController {
+        SloController {
+            slo_ms,
+            patience: 3,
+            up_frac: 0.7,
+            breach: 0,
+            slack: 0,
+            up_patience: 3,
+            since_switch: 0,
+            last_was_promotion: false,
+        }
+    }
+
+    /// Feed one window's observed p95 on plan `active`; returns the
+    /// plan to switch to, if any.  `est_ms[k]` is plan k's estimated
+    /// latency (most-accurate first, so est_ms descends).
+    pub fn observe(&mut self, p95_ms: f64, active: usize, est_ms: &[f64]) -> Option<usize> {
+        let n = est_ms.len();
+        if n <= 1 || self.slo_ms <= 0.0 {
+            return None;
+        }
+        self.since_switch += 1;
+        // a promotion that survived long enough without breaching is
+        // evidence the load really dropped: forgive the backoff
+        if self.last_was_promotion && self.since_switch >= 4 * self.patience {
+            self.up_patience = self.patience;
+            self.last_was_promotion = false;
+        }
+        if p95_ms > self.slo_ms {
+            self.breach += 1;
+            self.slack = 0;
+        } else {
+            self.breach = 0;
+            if active > 0 {
+                // what would p95 be one plan up?  observed p95 plus the
+                // per-request service-time delta between the plans
+                let delta = (est_ms[active - 1] - est_ms[active]).max(0.0);
+                if p95_ms + delta < self.up_frac * self.slo_ms {
+                    self.slack += 1;
+                } else {
+                    self.slack = 0;
+                }
+            } else {
+                self.slack = 0;
+            }
+        }
+        if self.breach >= self.patience && active + 1 < n {
+            if self.last_was_promotion {
+                // the last promotion was punished: back off geometrically
+                self.up_patience = self.up_patience.saturating_mul(2);
+            }
+            self.breach = 0;
+            self.slack = 0;
+            self.since_switch = 0;
+            self.last_was_promotion = false;
+            return Some(active + 1);
+        }
+        if self.slack >= self.up_patience && active > 0 {
+            self.breach = 0;
+            self.slack = 0;
+            self.since_switch = 0;
+            self.last_was_promotion = true;
+            return Some(active - 1);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiments::proxy_importance;
+    use crate::latency::table::BlockLatencies;
+    use crate::model::spec::testutil::tiny_config;
+    use crate::planner::deploy::DeployPlanner;
+    use crate::planner::frontier::{Space, TableImportance};
+    use crate::util::prop::forall;
+
+    fn tiny_engine(n: usize) -> (MultiPlanEngine, ArchConfig) {
+        let cfg = tiny_config();
+        let mut src = crate::latency::source::Analytical {
+            dev: &crate::latency::devices::RTX_2080_TI,
+            mode: crate::latency::gpu_model::ExecMode::Fused,
+        };
+        let lat = BlockLatencies::measure(&cfg, &mut src, 8, 1.0e4).unwrap();
+        let mut dp = DeployPlanner::new(cfg.spec.l(), Space::Extended);
+        let idx = dp.add_source(lat, TableImportance::new(&cfg, proxy_importance(&cfg)));
+        let points = dp.serve_plans(idx, n);
+        assert!(!points.is_empty());
+        let ps = ParamSet::synthetic(&cfg, 9);
+        let engine =
+            MultiPlanEngine::build(&cfg, &ps, &points, Pool::serial(), Layout::Nchw).unwrap();
+        (engine, cfg)
+    }
+
+    #[test]
+    fn engine_orders_plans_accurate_first_and_switches() {
+        let (mut engine, cfg) = tiny_engine(3);
+        assert!(engine.len() >= 2, "fixture frontier should yield >= 2 distinct plans");
+        let est = engine.est_ms_table();
+        for w in est.windows(2) {
+            assert!(w[0] >= w[1], "plans must be ordered slowest (most accurate) first");
+        }
+        for w in engine.infos.windows(2) {
+            assert!(
+                w[0].importance >= w[1].importance,
+                "importance must descend with est_ms along the frontier"
+            );
+        }
+        // switching changes which network answers
+        let hw = cfg.spec.input_hw;
+        let x = Tensor::zeros(&[1, 3, hw, hw]);
+        let a = engine.logits(&x).unwrap();
+        engine.set_active(engine.len() - 1);
+        assert_eq!(engine.active(), engine.len() - 1);
+        let b = engine.logits(&x).unwrap();
+        assert_eq!(a.shape, b.shape);
+        assert!(engine.est_exec(0) >= engine.est_exec(engine.len() - 1));
+    }
+
+    #[test]
+    fn single_engine_wraps_one_exec() {
+        let cfg = tiny_config();
+        let ps = ParamSet::synthetic(&cfg, 11);
+        let net = build_merged(&cfg, &ps, &[1, 4, 5], &[4]).unwrap();
+        let engine = MultiPlanEngine::single(HostExec::new(net).unwrap(), 2.5);
+        assert_eq!(engine.len(), 1);
+        assert_eq!(engine.active(), 0);
+        assert!((engine.info(0).est_ms - 2.5).abs() < 1e-12);
+        assert!(engine.est_exec(0) > Duration::ZERO);
+    }
+
+    #[test]
+    fn controller_switches_down_then_back_up() {
+        let est = vec![6.0, 4.0, 2.0];
+        let mut c = SloController::new(5.0);
+        // sustained breach on the accurate plan: degrade after patience
+        let mut active = 0usize;
+        let mut switched_down = false;
+        for _ in 0..10 {
+            if let Some(next) = c.observe(9.0, active, &est) {
+                active = next;
+                switched_down = true;
+                break;
+            }
+        }
+        assert!(switched_down && active == 1, "controller must degrade under breach");
+        // shallow slack: predicted p95 on plan 0 = 1.6 + (6-4) = 3.6 is
+        // NOT under 0.7*5 = 3.5, so it must hold...
+        for _ in 0..20 {
+            assert_eq!(c.observe(1.6, active, &est), None);
+        }
+        // ...but with real headroom (0.1 + 2.0 < 3.5) it promotes
+        let mut promoted = false;
+        for _ in 0..20 {
+            if let Some(next) = c.observe(0.1, active, &est) {
+                assert_eq!(next, 0);
+                promoted = true;
+                break;
+            }
+        }
+        assert!(promoted, "controller must return to the accurate plan when load drops");
+    }
+
+    #[test]
+    fn controller_never_thrashes_on_constant_load() {
+        // the satellite property: on ANY constant-rate synthetic load
+        // (p95 a fixed deterministic function of the active plan), the
+        // switch count over a long horizon stays O(plans + log windows)
+        // thanks to the predictive promotion gate + geometric backoff
+        forall(40, 91, |rng| {
+            let n_plans = 2 + rng.below(4);
+            let est: Vec<f64> =
+                (0..n_plans).map(|k| 2.0 * (n_plans - k) as f64 + rng.uniform() as f64).collect();
+            let slo = 1.0 + rng.uniform() as f64 * 12.0;
+            // queueing amplification factor: p95 = load * est[plan]
+            let load = 0.2 + rng.uniform() as f64 * 2.0;
+            let mut c = SloController::new(slo);
+            let mut active = 0usize;
+            let windows = 4000usize;
+            let mut switches = 0usize;
+            let mut last_from_to: Option<(usize, usize)> = None;
+            let mut immediate_reversals = 0usize;
+            for _ in 0..windows {
+                let p95 = load * est[active];
+                if let Some(next) = c.observe(p95, active, &est) {
+                    if let Some((f, t)) = last_from_to {
+                        if f == next && t == active {
+                            immediate_reversals += 1;
+                        }
+                    }
+                    last_from_to = Some((active, next));
+                    active = next;
+                    switches += 1;
+                }
+            }
+            let bound = 2 * (n_plans + (windows as f64).log2().ceil() as usize);
+            crate::prop_assert!(
+                switches <= bound,
+                "controller thrashed: {switches} switches (> {bound}) on constant load \
+                 {load:.2} slo {slo:.2} est {est:?}"
+            );
+            // reversals specifically must decay geometrically
+            crate::prop_assert!(
+                immediate_reversals <= (windows as f64).log2().ceil() as usize + 1,
+                "{immediate_reversals} immediate reversals on constant load"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn controller_idles_in_band_and_on_single_plan() {
+        let est = vec![8.0, 4.0];
+        let mut c = SloController::new(5.0);
+        // in the hysteresis band (below SLO, predicted-above up_frac):
+        // never moves in either direction
+        for _ in 0..100 {
+            assert_eq!(c.observe(4.5, 1, &est), None);
+        }
+        // a single plan (or slo <= 0) never switches regardless of load
+        let mut one = SloController::new(5.0);
+        for _ in 0..10 {
+            assert_eq!(one.observe(100.0, 0, &[3.0]), None);
+        }
+        let mut off = SloController::new(0.0);
+        for _ in 0..10 {
+            assert_eq!(off.observe(100.0, 0, &est), None);
+        }
+    }
+}

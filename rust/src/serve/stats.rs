@@ -1,0 +1,288 @@
+//! Serving statistics — latency percentiles, shed accounting, and the
+//! plan-switch trail, shared by every scheduler policy and by the
+//! legacy PJRT drain loop.
+//!
+//! All derived metrics are total functions: with ZERO recorded requests
+//! `throughput()`, `mean_batch()`, and `percentile_ms()` return 0.0
+//! instead of dividing by zero or indexing an empty sorted view — a
+//! fully-shed overload run must still render a report.
+
+use std::time::Duration;
+
+use crate::serve::admission::ShedReason;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    /// requests executed and answered with [`super::scheduler::Reply::Served`]
+    pub served: usize,
+    /// dispatch waves (batches or steal waves) that ran the network
+    pub batches: usize,
+    /// requests shed at admission because the queue was at its depth cap
+    pub shed_queue: usize,
+    /// requests shed at dispatch because their deadline was unmeetable
+    pub shed_deadline: usize,
+    /// requests rejected as malformed (wrong image size)
+    pub shed_malformed: usize,
+    /// requests answered Rejected because the engine itself failed
+    pub shed_internal: usize,
+    /// plan switches the SLO controller performed
+    pub plan_switches: usize,
+    /// served-request count per plan index (empty until first dispatch)
+    pub served_per_plan: Vec<usize>,
+    /// `(wave_index, from_plan, to_plan)` trail of controller switches
+    pub switch_log: Vec<(usize, usize, usize)>,
+    /// raw samples; private so the only writer is `record()` — the
+    /// sorted cache below is invalidated by length, which is airtight
+    /// exactly because nothing can mutate samples in place
+    latencies_ms: Vec<f64>,
+    pub wall: Duration,
+    /// sorted view of `latencies_ms`, built lazily on the first
+    /// percentile query and reused until the samples change — report
+    /// paths ask for p50/p95/p99 back to back and used to re-sort the
+    /// full vector for each
+    sorted_cache: std::cell::RefCell<Vec<f64>>,
+}
+
+impl ServeStats {
+    /// Stats with per-plan counters sized for an `n_plans` engine.
+    pub fn with_plans(n_plans: usize) -> ServeStats {
+        ServeStats { served_per_plan: vec![0; n_plans], ..Default::default() }
+    }
+
+    pub fn record(&mut self, latency_ms: f64) {
+        self.latencies_ms.push(latency_ms);
+        self.served += 1;
+    }
+
+    /// Record a served request against the plan that executed it.
+    pub fn record_on_plan(&mut self, latency_ms: f64, plan: usize) {
+        self.record(latency_ms);
+        if plan >= self.served_per_plan.len() {
+            self.served_per_plan.resize(plan + 1, 0);
+        }
+        self.served_per_plan[plan] += 1;
+    }
+
+    pub fn shed(&mut self, reason: ShedReason) {
+        match reason {
+            ShedReason::QueueFull => self.shed_queue += 1,
+            ShedReason::Deadline => self.shed_deadline += 1,
+            ShedReason::Malformed => self.shed_malformed += 1,
+            ShedReason::Internal => self.shed_internal += 1,
+        }
+    }
+
+    /// Requests rejected for any reason.
+    pub fn shed_total(&self) -> usize {
+        self.shed_queue + self.shed_deadline + self.shed_malformed + self.shed_internal
+    }
+
+    /// Requests that got SOME reply (served or rejected).
+    pub fn offered(&self) -> usize {
+        self.served + self.shed_total()
+    }
+
+    /// Fraction of offered requests that were shed (0.0 when idle).
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.offered();
+        if offered == 0 {
+            return 0.0;
+        }
+        self.shed_total() as f64 / offered as f64
+    }
+
+    /// Percentile with linear interpolation between order statistics
+    /// (the numpy default), over a cached sorted view.  0.0 with no
+    /// recorded requests.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        let mut cache = self.sorted_cache.borrow_mut();
+        if cache.len() != self.latencies_ms.len() {
+            *cache = self.latencies_ms.clone();
+            cache.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+        percentile_sorted(&cache, p)
+    }
+
+    /// Served requests per second of wall time; 0.0 when nothing ran.
+    pub fn throughput(&self) -> f64 {
+        if self.served == 0 {
+            return 0.0;
+        }
+        self.served as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Mean served requests per dispatch wave; 0.0 before any wave.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.served as f64 / self.batches as f64
+    }
+
+    /// The serve report record: one JSON object per run, written by the
+    /// CLI next to the frontier CSVs and by `bench_serve`.
+    pub fn report_json(&self, policy: &str, slo_ms: f64) -> Json {
+        Json::obj_from(vec![
+            ("policy", Json::str_of(policy)),
+            ("slo_ms", Json::num(slo_ms)),
+            ("served", Json::int(self.served as i64)),
+            ("batches", Json::int(self.batches as i64)),
+            ("shed_queue", Json::int(self.shed_queue as i64)),
+            ("shed_deadline", Json::int(self.shed_deadline as i64)),
+            ("shed_malformed", Json::int(self.shed_malformed as i64)),
+            ("shed_internal", Json::int(self.shed_internal as i64)),
+            ("shed_rate", Json::num(self.shed_rate())),
+            ("p50_ms", Json::num(self.percentile_ms(0.5))),
+            ("p95_ms", Json::num(self.percentile_ms(0.95))),
+            ("p99_ms", Json::num(self.percentile_ms(0.99))),
+            ("throughput_rps", Json::num(self.throughput())),
+            ("mean_batch", Json::num(self.mean_batch())),
+            ("plan_switches", Json::int(self.plan_switches as i64)),
+            (
+                "served_per_plan",
+                Json::arr_of(self.served_per_plan.iter().map(|&n| Json::int(n as i64))),
+            ),
+            (
+                "switch_log",
+                Json::arr_of(self.switch_log.iter().map(|&(w, from, to)| {
+                    Json::arr_of([
+                        Json::int(w as i64),
+                        Json::int(from as i64),
+                        Json::int(to as i64),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    #[cfg(test)]
+    pub(crate) fn set_samples(&mut self, samples: Vec<f64>) {
+        self.latencies_ms = samples;
+    }
+}
+
+/// Interpolating percentile over an ALREADY-SORTED slice — THE
+/// percentile definition for the serving subsystem (`ServeStats` and
+/// the scheduler's controller window both route here, so the p95 the
+/// controller acts on is the same statistic the reports print).
+/// Returns 0.0 on an empty slice.
+pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let rank = (v.len() - 1) as f64 * p.clamp(0.0, 1.0);
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    v[lo] + (v[hi] - v[lo]) * frac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_requests_yield_zero_not_nan() {
+        // the satellite pin: every derived metric is total on the empty
+        // stats a fully-shed run produces
+        let s = ServeStats::default();
+        assert_eq!(s.percentile_ms(0.5), 0.0);
+        assert_eq!(s.percentile_ms(0.99), 0.0);
+        assert_eq!(s.throughput(), 0.0);
+        assert_eq!(s.mean_batch(), 0.0);
+        assert_eq!(s.shed_rate(), 0.0);
+        assert!(s.percentile_ms(0.5).is_finite());
+    }
+
+    #[test]
+    fn stats_percentiles() {
+        let mut s = ServeStats::default();
+        s.set_samples(vec![1.0, 2.0, 3.0, 4.0, 100.0]);
+        s.served = 5;
+        s.batches = 2;
+        s.wall = Duration::from_secs(1);
+        assert_eq!(s.percentile_ms(0.5), 3.0);
+        assert!(s.percentile_ms(0.95) >= 4.0);
+        assert_eq!(s.throughput(), 5.0);
+        assert_eq!(s.mean_batch(), 2.5);
+    }
+
+    #[test]
+    fn percentiles_interpolate_and_cover_tails() {
+        // pin p50/p95/p99 on a known 1..=100 sample: rank = 99 * p,
+        // linear interpolation between order statistics
+        let mut s = ServeStats::default();
+        s.set_samples((1..=100).rev().map(|x| x as f64).collect());
+        assert!((s.percentile_ms(0.50) - 50.5).abs() < 1e-12);
+        assert!((s.percentile_ms(0.95) - 95.05).abs() < 1e-12);
+        assert!((s.percentile_ms(0.99) - 99.01).abs() < 1e-12);
+        assert_eq!(s.percentile_ms(0.0), 1.0);
+        assert_eq!(s.percentile_ms(1.0), 100.0);
+
+        // the old truncating index underestimated the tail: on 5
+        // samples it returned 4.0 for p95 — now nearly the max
+        let mut t = ServeStats::default();
+        t.set_samples(vec![1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert!((t.percentile_ms(0.95) - 80.8).abs() < 1e-9);
+
+        // degenerate single sample
+        let mut one = ServeStats::default();
+        one.set_samples(vec![7.0]);
+        assert_eq!(one.percentile_ms(0.99), 7.0);
+    }
+
+    #[test]
+    fn sorted_cache_tracks_new_samples() {
+        let mut s = ServeStats::default();
+        s.record(5.0);
+        s.record(1.0);
+        assert_eq!(s.percentile_ms(0.0), 1.0);
+        assert_eq!(s.percentile_ms(1.0), 5.0);
+        // appending invalidates the cached view (length changes)
+        s.record(0.5);
+        assert_eq!(s.percentile_ms(0.0), 0.5);
+        assert_eq!(s.served, 3);
+    }
+
+    #[test]
+    fn shed_counters_and_rate() {
+        let mut s = ServeStats::with_plans(2);
+        s.record_on_plan(1.0, 0);
+        s.record_on_plan(2.0, 1);
+        s.record_on_plan(3.0, 1);
+        s.shed(ShedReason::QueueFull);
+        s.shed(ShedReason::QueueFull);
+        s.shed(ShedReason::Deadline);
+        assert_eq!(s.shed_total(), 3);
+        assert_eq!(s.offered(), 6);
+        assert!((s.shed_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(s.served_per_plan, vec![1, 2]);
+        // record_on_plan grows the per-plan table when a late switch
+        // lands on an index the constructor never saw
+        s.record_on_plan(1.0, 3);
+        assert_eq!(s.served_per_plan, vec![1, 2, 0, 1]);
+    }
+
+    #[test]
+    fn report_json_carries_shed_and_switches() {
+        let mut s = ServeStats::with_plans(2);
+        s.record_on_plan(4.0, 0);
+        s.shed(ShedReason::Deadline);
+        s.plan_switches = 1;
+        s.switch_log.push((3, 0, 1));
+        s.batches = 1;
+        s.wall = Duration::from_millis(10);
+        let j = s.report_json("steal", 5.0);
+        assert_eq!(j.get("policy").unwrap().str().unwrap(), "steal");
+        assert_eq!(j.get("shed_deadline").unwrap().f64().unwrap(), 1.0);
+        assert_eq!(j.get("plan_switches").unwrap().f64().unwrap(), 1.0);
+        assert_eq!(j.get("switch_log").unwrap().arr().unwrap().len(), 1);
+        // round-trips through the parser
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("served").unwrap().f64().unwrap(), 1.0);
+    }
+}

@@ -183,7 +183,7 @@ fn server_batches_and_answers() {
     for l in ts.params.iter().chain(ts.state.iter()) {
         head.push(Tensor::from_literal(l).unwrap().to_literal().unwrap());
     }
-    let server = Server::new(
+    let mut server = Server::new(
         &engine,
         &infer,
         head,
