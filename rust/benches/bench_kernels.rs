@@ -10,14 +10,22 @@
 //! Before timing, every variant is cross-checked: blocked-vs-naive
 //! numerically, and scalar-vs-AVX2 / NCHW-vs-NHWC / serial-vs-parallel
 //! for BITWISE equality — the determinism contract — so a broken
-//! kernel can never report a good number.
+//! kernel can never report a good number.  The fast-tier columns
+//! (Winograd F(2x2,3x3) vs im2col, fused epilogue vs separate passes)
+//! are gated the same way: Winograd within a pinned relative tolerance
+//! of im2col, the fused epilogue bitwise against the separate chain.
+//!
+//! Speedup columns are ratios of MINIMUM per-iteration times, not
+//! medians: scheduler noise only ever adds time, so min-of-N after
+//! warmup is the stable basis for an A/B ratio.
 
 use repro::kernels::conv::{
     conv2d_naive, conv2d_nhwc_with, conv2d_with, nchw_to_nhwc, nhwc_to_nchw, ConvGeom,
 };
-use repro::kernels::gemm::{gemm_naive, gemm_rows_level, gemm_with};
+use repro::kernels::gemm::{gemm_naive, gemm_rows_fused_level, gemm_rows_level, gemm_with, Bias, Epilogue};
 use repro::kernels::pool::Pool;
 use repro::kernels::simd::{bits_equal, levels_available, SimdLevel};
+use repro::kernels::winograd::conv2d_winograd_with;
 use repro::util::bench::{black_box, Bencher};
 use repro::util::json::Json;
 use repro::util::rng::Rng;
@@ -86,10 +94,39 @@ fn main() {
         });
         let sp = Bencher::new(&format!("gemm parallel {tag}"))
             .run(|| gemm_with(&par, m, k, n, black_box(&a), black_box(&b), &mut c_par));
-        let su_simd = ss.median_ns / sv.median_ns;
-        let su_par = sn.median_ns / sp.median_ns;
+        // fused epilogue (bias + residual + relu6 in the write-back) vs
+        // the separate full-tensor passes — gated BITWISE first: the
+        // fused path keeps the identical per-element op order
+        let bias = randv(m, &mut rng);
+        let res = randv(m * n, &mut rng);
+        let ep = Epilogue { bias: Bias::PerRow(&bias), residual: Some(&res), relu6: true };
+        let mut c_sep = vec![0.0f32; m * n];
+        let mut c_fused = vec![0.0f32; m * n];
+        let mut separate = |c_sep: &mut [f32]| {
+            gemm_rows_level(best, m, k, n, &a, &b, c_sep, false);
+            for i in 0..m {
+                for j in 0..n {
+                    let v = (c_sep[i * n + j] + bias[i] + res[i * n + j]).clamp(0.0, 6.0);
+                    c_sep[i * n + j] = v;
+                }
+            }
+        };
+        separate(&mut c_sep);
+        gemm_rows_fused_level(best, m, k, n, &a, &b, &mut c_fused, &ep);
+        assert!(
+            bits_equal(&c_sep, &c_fused),
+            "{tag}: fused epilogue not byte-identical to separate passes"
+        );
+        let se = Bencher::new(&format!("gemm sep-epi  {tag}")).run(|| separate(&mut c_sep));
+        let sf = Bencher::new(&format!("gemm fused    {tag}")).run(|| {
+            gemm_rows_fused_level(best, m, k, n, black_box(&a), black_box(&b), &mut c_fused, &ep)
+        });
+        let su_simd = ss.min_ns / sv.min_ns;
+        let su_par = sn.min_ns / sp.min_ns;
+        let su_fused = se.min_ns / sf.min_ns;
         println!(
-            "{tag}: {} {su_simd:.2}x over scalar, parallel {su_par:.1}x over naive",
+            "{tag}: {} {su_simd:.2}x over scalar, parallel {su_par:.1}x over naive, \
+             fused epilogue {su_fused:.2}x over separate",
             best.name()
         );
         gemm_rows_json.push(Json::obj_from(vec![
@@ -101,8 +138,11 @@ fn main() {
             ("scalar_ms", Json::num(ss.median_ms())),
             ("simd_ms", Json::num(sv.median_ms())),
             ("parallel_ms", Json::num(sp.median_ms())),
+            ("separate_epilogue_ms", Json::num(se.median_ms())),
+            ("fused_epilogue_ms", Json::num(sf.median_ms())),
             ("speedup_simd_vs_scalar", Json::num(su_simd)),
             ("speedup_parallel_vs_naive", Json::num(su_par)),
+            ("speedup_fused_vs_separate", Json::num(su_fused)),
         ]));
     }
     record.push(("gemm", Json::Arr(gemm_rows_json)));
@@ -150,10 +190,10 @@ fn main() {
             .run(|| black_box(conv2d_with(&par, black_box(&x), black_box(&w), g).unwrap()));
         let shp = Bencher::new(&format!("conv nhwc par {tag}"))
             .run(|| black_box(conv2d_nhwc_with(&par, black_box(&xh), black_box(&w), g).unwrap()));
-        let su_nhwc = sb.median_ns / sh.median_ns;
-        let su_par = sn.median_ns / shp.median_ns.min(sbp.median_ns);
+        let su_nhwc = sb.min_ns / sh.min_ns;
+        let su_par = sn.min_ns / shp.min_ns.min(sbp.min_ns);
         println!("{tag}: nhwc {su_nhwc:.2}x over nchw, best-parallel {su_par:.1}x over naive");
-        conv_rows_json.push(Json::obj_from(vec![
+        let mut row = vec![
             ("shape", Json::str_of(tag)),
             ("naive_ms", Json::num(sn.median_ms())),
             ("nchw_ms", Json::num(sb.median_ms())),
@@ -162,7 +202,31 @@ fn main() {
             ("nhwc_parallel_ms", Json::num(shp.median_ms())),
             ("speedup_nhwc_vs_nchw", Json::num(su_nhwc)),
             ("speedup_best_parallel_vs_naive", Json::num(su_par)),
-        ]));
+        ];
+        // Winograd F(2x2,3x3) vs im2col on the dense 3x3 shapes — gated
+        // on a relative tolerance against the im2col result (different
+        // summation order, so bitwise is the wrong gate here)
+        if kk == 3 && stride == 1 && pad == 1 && groups == 1 {
+            let wino = conv2d_winograd_with(&ser, &x, &w, g).unwrap();
+            let wino_par = conv2d_winograd_with(&par, &x, &w, g).unwrap();
+            let scale = blk.data.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+            let err = wino.max_abs_diff(&blk);
+            assert!(err < 1e-4 * scale, "{tag}: winograd err {err} vs im2col (scale {scale})");
+            assert!(
+                bits_equal(&wino.data, &wino_par.data),
+                "{tag}: parallel winograd not byte-identical"
+            );
+            let sw = Bencher::new(&format!("conv wino     {tag}"))
+                .run(|| black_box(conv2d_winograd_with(&ser, black_box(&x), black_box(&w), g).unwrap()));
+            let swp = Bencher::new(&format!("conv wino par {tag}"))
+                .run(|| black_box(conv2d_winograd_with(&par, black_box(&x), black_box(&w), g).unwrap()));
+            let su_wino = sb.min_ns / sw.min_ns;
+            println!("{tag}: winograd {su_wino:.2}x over im2col");
+            row.push(("winograd_ms", Json::num(sw.median_ms())));
+            row.push(("winograd_parallel_ms", Json::num(swp.median_ms())));
+            row.push(("speedup_winograd_vs_im2col", Json::num(su_wino)));
+        }
+        conv_rows_json.push(Json::obj_from(row));
     }
     record.push(("conv", Json::Arr(conv_rows_json)));
 

@@ -1,15 +1,61 @@
 //! Real PJRT runtime benchmarks: artifact execution latency (the actual
 //! request path), block probes, and the L1 Pallas artifact vs the plain
-//! XLA artifact at batch 1.  Requires `make artifacts`.
+//! XLA artifact at batch 1.  Requires `make artifacts` — except the
+//! leading host-executor section (fast tier vs exact tier on the tiny
+//! fixture), which is artifact-free and always runs.
 
 use std::path::PathBuf;
 
+use repro::kernels::conv::{Layout, Precision};
+use repro::kernels::pool::Pool;
+use repro::merge::plan::build_merged;
+use repro::model::spec::testutil::tiny_config;
 use repro::runtime::engine::Engine;
+use repro::runtime::host_exec::HostExec;
 use repro::tensor::Tensor;
+use repro::trainer::params::ParamSet;
 use repro::trainer::sgd::TrainState;
 use repro::util::bench::Bencher;
+use repro::util::rng::Rng;
+
+/// Fast tier (Winograd + fused epilogues) vs the bit-pinned exact tier
+/// on the artifact-free merged tiny fixture, tolerance-gated before
+/// timing.  Speedup is a ratio of minimum per-iteration times.
+fn bench_host_precision_tiers() {
+    let cfg = tiny_config();
+    let ps = ParamSet::synthetic(&cfg, 17);
+    let net = build_merged(&cfg, &ps, &[1, 4, 5], &[4]).unwrap();
+    let hw = cfg.spec.input_hw;
+    let mut rng = Rng::new(9);
+    let mut x = Tensor::zeros(&[8, 3, hw, hw]);
+    for v in x.data.iter_mut() {
+        *v = rng.normal() * 0.5;
+    }
+    let exact = HostExec::with_precision(
+        net.clone_shallow(),
+        Pool::global(),
+        Layout::Nchw,
+        Precision::Exact,
+    )
+    .unwrap();
+    let fast = HostExec::with_precision(net, Pool::global(), Layout::Nchw, Precision::Fast).unwrap();
+    let ye = exact.forward(&x).unwrap();
+    let yf = fast.forward(&x).unwrap();
+    let scale = ye.data.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+    let err = ye.max_abs_diff(&yf);
+    assert!(err < 1e-3 * scale, "fast-tier logits err {err} exceeds gate (scale {scale})");
+    let se = Bencher::new("host forward exact (tiny b8)").run(|| {
+        let _ = exact.forward(&x).unwrap();
+    });
+    let sf = Bencher::new("host forward fast  (tiny b8)").run(|| {
+        let _ = fast.forward(&x).unwrap();
+    });
+    println!("host fast tier: {:.2}x over exact (min-of-N basis)", se.min_ns / sf.min_ns);
+}
 
 fn main() {
+    bench_host_precision_tiers();
+
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !root.join("manifest.json").exists() {
         println!("bench_runtime: artifacts missing — run `make artifacts` first");

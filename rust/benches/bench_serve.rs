@@ -37,6 +37,7 @@ fn run_cell(
     policy: Policy,
     gap_us: u64,
     legacy_open: bool,
+    steal_waves: usize,
 ) -> ServeStats {
     let cfg = tiny_config();
     let ps = ParamSet::synthetic(&cfg, SEED);
@@ -51,6 +52,7 @@ fn run_cell(
         admission: if legacy_open { AdmissionCfg::open() } else { AdmissionCfg::slo(64, SLO_MS) },
         slo_ms: if legacy_open { 0.0 } else { SLO_MS },
         steal_workers: 0,
+        steal_waves,
     };
     let mut sched = Scheduler::new(engine, &[3, hw, hw], scfg).expect("scheduler");
     let mut data = SynthSpec::quickstart(hw);
@@ -113,7 +115,7 @@ fn main() {
             // drain doubles as the legacy baseline: open admission, no
             // controller — exactly the pre-subsystem server
             let legacy = policy == Policy::DrainBatch;
-            let stats = run_cell(&work, policy, gap_us, legacy);
+            let stats = run_cell(&work, policy, gap_us, legacy, 0);
             println!(
                 "{load_name:<9} {:<6} served {:>4} shed {:>4} p50 {:>7.2} ms \
                  p95 {:>7.2} ms p99 {:>7.2} ms switches {}",
@@ -140,6 +142,24 @@ fn main() {
         }
         load_records.push((load_name, Json::obj_from(cells)));
     }
+    // steal-wave sweep: how the work-steal claim cap (workers x waves)
+    // trades p99 against shed under the heavy load.  waves=0 is the
+    // historical default (4 waves); small caps re-enqueue more often,
+    // large caps let one claimant hold work past its deadline.
+    let mut wave_cells = Vec::new();
+    for waves in [1usize, 2, 4, 8] {
+        let stats = run_cell(&work, Policy::WorkSteal, 400, false, waves);
+        println!(
+            "steal-waves {waves}: served {:>4} shed {:>4} p99 {:>7.2} ms",
+            stats.served,
+            stats.shed_total(),
+            stats.percentile_ms(0.99),
+        );
+        wave_cells.push((format!("waves_{waves}"), cell_json(&stats)));
+    }
+    let wave_records: Vec<(&str, Json)> =
+        wave_cells.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+
     // "holds the SLO" requires EVIDENCE: an empty percentile (0.0 on
     // zero served) must not read as a pass
     let steal_holds_slo = overload_steal_served > 0 && overload_steal_p99 <= SLO_MS;
@@ -157,6 +177,7 @@ fn main() {
         ("requests_per_cell", Json::int(N_REQ as i64)),
         ("resident_plans", Json::int(work.len() as i64)),
         ("loads", Json::obj_from(load_records)),
+        ("steal_wave_sweep", Json::obj_from(wave_records)),
         (
             "acceptance",
             Json::obj_from(vec![

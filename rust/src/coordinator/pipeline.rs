@@ -160,7 +160,12 @@ impl<'e> Pipeline<'e> {
     /// Latency table for one parsed source spec, cached on disk under
     /// the run dir keyed by (source label, batch, scale) — scale is in
     /// the key because the table carries it into every tick conversion
-    /// downstream (calibration precision depends on it).
+    /// downstream (calibration precision depends on it).  A
+    /// non-positive `scale` auto-calibrates the tick scale per source
+    /// from its own measured block range
+    /// ([`crate::latency::table::calibrate_scale`]), so sources whose
+    /// absolute latencies differ by orders of magnitude get uniform
+    /// tick resolution in a joint sweep.
     pub fn latency_table_spec(
         &self,
         spec: &SourceSpec,
@@ -168,17 +173,23 @@ impl<'e> Pipeline<'e> {
         scale: f64,
         force: bool,
     ) -> Result<BlockLatencies> {
-        let tag =
-            format!("lat_{}_b{batch}_x{scale}.json", spec.label().replace([':', '/'], "_"));
+        let auto = scale <= 0.0;
+        let key = if auto { "auto".to_string() } else { format!("{scale}") };
+        let tag = format!("lat_{}_b{batch}_x{key}.json", spec.label().replace([':', '/'], "_"));
         let path = self.dir.join(tag);
         if !force && path.exists() {
+            // an auto table carries its calibrated scale in the JSON
             return BlockLatencies::load(&path);
         }
         let mut src = spec.build(Some((self.engine, &self.arch)))?;
         if self.verbose {
             println!("[latency] measuring {} blocks via {}...", self.cfg.blocks.len(), src.name());
         }
-        let bl = BlockLatencies::measure(&self.cfg, src.as_mut(), batch, scale)?;
+        let mut bl =
+            BlockLatencies::measure(&self.cfg, src.as_mut(), batch, if auto { 1.0 } else { scale })?;
+        if auto {
+            bl = bl.with_calibrated_scale();
+        }
         bl.save(&path)?;
         Ok(bl)
     }

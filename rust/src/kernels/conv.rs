@@ -35,7 +35,7 @@
 
 use anyhow::{bail, Result};
 
-use super::gemm::{gemm_rows, gemm_with};
+use super::gemm::{gemm_fused_with, gemm_rows, gemm_with, Bias, Epilogue};
 use super::pool::Pool;
 use crate::tensor::Tensor;
 
@@ -62,6 +62,42 @@ impl Layout {
         match self {
             Layout::Nchw => "nchw",
             Layout::Nhwc => "nhwc",
+        }
+    }
+}
+
+/// Determinism tier of the host compute layer (`--precision`).
+///
+/// `Exact` is the reference: every kernel accumulates in one pinned
+/// order, so results are byte-identical across SIMD level, thread
+/// count, and activation layout — the contract the `to_bits()` pins
+/// throughout the kernel/runtime suites enforce.  `Fast` trades that
+/// bit pin for throughput: eligible 3x3 convs run through
+/// `kernels::winograd` (different summation order and transform
+/// arithmetic) and bias/residual/relu6 epilogues fuse into the GEMM
+/// write-back; the tier is gated by relative-error tolerance tests
+/// against `Exact` instead of bit equality.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// Bit-pinned reference paths (the default everywhere).
+    Exact,
+    /// Winograd + fused epilogues; tolerance-gated against `Exact`.
+    Fast,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" => Ok(Precision::Exact),
+            "fast" => Ok(Precision::Fast),
+            other => bail!("unknown precision {other:?} (want exact|fast)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::Exact => "exact",
+            Precision::Fast => "fast",
         }
     }
 }
@@ -217,6 +253,126 @@ pub fn conv2d_with(pool: &Pool, x: &Tensor, w: &Tensor, g: ConvGeom) -> Result<T
 /// conv2d on the process-global pool.
 pub fn conv2d(x: &Tensor, w: &Tensor, g: ConvGeom) -> Result<Tensor> {
     conv2d_with(&Pool::global(), x, w, g)
+}
+
+/// NCHW conv with the bias/residual/relu6 epilogue fused into the
+/// GEMM write-back (the `--precision fast` tier for non-Winograd
+/// convs).  Per (batch, group) block: im2col, then one
+/// [`gemm_fused_with`] whose final-panel store applies bias (per
+/// output channel = per GEMM row), the residual slice, and relu6 —
+/// the exact op order of the separate `elementwise` passes, so the
+/// values match the unfused chain bit-for-bit; what makes the tier
+/// "fast" is skipping the extra full-tensor sweeps.  Blocks run
+/// serially with the GEMM parallelized inside (a different parallel
+/// split from [`conv2d_with`]'s block fan-out, same bits).
+pub fn conv2d_fused(
+    pool: &Pool,
+    x: &Tensor,
+    w: &Tensor,
+    g: ConvGeom,
+    bias: Option<&[f32]>,
+    residual: Option<&Tensor>,
+    relu6: bool,
+) -> Result<Tensor> {
+    if x.rank() != 4 || w.rank() != 4 {
+        bail!("conv2d_fused expects NCHW x and OIHW w, got {:?} / {:?}", x.shape, w.shape);
+    }
+    let (n, ci, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (co, cig, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    if g.groups == 0 || ci % g.groups != 0 || co % g.groups != 0 {
+        bail!("groups {} does not divide channels {ci} -> {co}", g.groups);
+    }
+    let cg = ci / g.groups;
+    let cog = co / g.groups;
+    if cig != cg {
+        bail!("weight c_in/g {cig} != {cg} (ci {ci}, groups {})", g.groups);
+    }
+    if let Some(b) = bias {
+        if b.len() != co {
+            bail!("fused bias has {} elems, want {co}", b.len());
+        }
+    }
+    let (oh, ow) = out_hw(h, wd, kh, kw, g)?;
+    let ohw = oh * ow;
+    let kdim = cg * kh * kw;
+    let mut out = Tensor::zeros(&[n, co, oh, ow]);
+    if let Some(r) = residual {
+        if r.shape != out.shape {
+            bail!("fused residual shape {:?} != output {:?}", r.shape, out.shape);
+        }
+    }
+    let mut col = vec![0.0f32; kdim * ohw];
+    for ni in 0..n {
+        for gi in 0..g.groups {
+            im2col_block(x, ni, gi * cg, cg, kh, kw, g, oh, ow, &mut col);
+            let obase = (ni * co + gi * cog) * ohw;
+            let ep = Epilogue {
+                bias: match bias {
+                    Some(b) => Bias::PerRow(&b[gi * cog..(gi + 1) * cog]),
+                    None => Bias::None,
+                },
+                residual: residual.map(|r| &r.data[obase..obase + cog * ohw]),
+                relu6,
+            };
+            gemm_fused_with(
+                pool,
+                cog,
+                kdim,
+                ohw,
+                &w.data[gi * cog * kdim..(gi + 1) * cog * kdim],
+                &col,
+                &mut out.data[obase..obase + cog * ohw],
+                &ep,
+            );
+        }
+    }
+    Ok(out)
+}
+
+/// NHWC pointwise (1x1 dense stride-1 pad-0) conv with the fused
+/// epilogue: the layout's no-im2col GEMM with bias (per output channel
+/// = per GEMM column), residual, and relu6 in the write-back.
+pub fn conv2d_nhwc_pointwise_fused(
+    pool: &Pool,
+    x: &Tensor,
+    w: &Tensor,
+    pack: &NhwcPack,
+    bias: Option<&[f32]>,
+    residual: Option<&Tensor>,
+    relu6: bool,
+) -> Result<Tensor> {
+    if x.rank() != 4 || w.rank() != 4 {
+        bail!("pointwise_fused expects NHWC x and OIHW w, got {:?} / {:?}", x.shape, w.shape);
+    }
+    let (n, h, wd, ci) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (co, cig, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    if kh != 1 || kw != 1 || cig != ci {
+        bail!("pointwise_fused needs a dense 1x1 weight, got {:?} over {ci} channels", w.shape);
+    }
+    if let Some(b) = bias {
+        if b.len() != co {
+            bail!("fused bias has {} elems, want {co}", b.len());
+        }
+    }
+    let NhwcPack::Panels(panels) = pack else {
+        bail!("NHWC pack variant does not match the pointwise path");
+    };
+    let mut out = Tensor::zeros(&[n, h, wd, co]);
+    if let Some(r) = residual {
+        if r.shape != out.shape {
+            bail!("fused residual shape {:?} != output {:?}", r.shape, out.shape);
+        }
+    }
+    let ep = Epilogue {
+        bias: match bias {
+            Some(b) => Bias::PerCol(b),
+            None => Bias::None,
+        },
+        residual: residual.map(|r| &r.data[..]),
+        relu6,
+    };
+    gemm_fused_with(pool, n * h * wd, ci, co, &x.data, &panels[0], &mut out.data, &ep);
+    Ok(out)
 }
 
 /// Pre-transposed NHWC weight operands for one conv layer, derived once
@@ -737,6 +893,101 @@ mod tests {
         let x = Tensor::zeros(&[1, 5, 5, 1]);
         let wrong = NhwcPack::Panels(vec![vec![0.0; 9]]);
         assert!(conv2d_nhwc_packed(&Pool::serial(), &x, &w3, &wrong, g).is_err());
+    }
+
+    #[test]
+    fn fused_conv_matches_separate_passes_bitwise() {
+        // conv2d_fused = conv2d_with + bias + residual + relu6 run as
+        // separate passes, bit-for-bit, across geometries (the per
+        // element op order is identical; only the sweeps are fused)
+        use crate::kernels::elementwise::{add_bias_nchw, add_inplace, relu6_inplace};
+        crate::util::prop::forall(30, 75, |rng| {
+            let groups = [1, 1, 2][rng.below(3)];
+            let cg = 1 + rng.below(3);
+            let cog = 1 + rng.below(3);
+            let (ci, co) = (cg * groups, cog * groups);
+            let k = [1, 3][rng.below(2)];
+            let stride = 1 + rng.below(2);
+            let pad = rng.below(k);
+            let h = k + stride * (1 + rng.below(4));
+            let n = 1 + rng.below(3);
+            let x = randt(&[n, ci, h, h], rng);
+            let w = randt(&[co, cg, k, k], rng);
+            let g = ConvGeom { stride, pad, groups };
+            let bias: Vec<f32> = (0..co).map(|_| rng.normal()).collect();
+            let mut want = conv2d_with(&Pool::serial(), &x, &w, g).map_err(|e| e.to_string())?;
+            let res = randt(&want.shape.clone(), rng);
+            add_bias_nchw(&mut want, &bias);
+            add_inplace(&mut want, &res).map_err(|e| e.to_string())?;
+            relu6_inplace(&mut want);
+            let got = conv2d_fused(&Pool::serial(), &x, &w, g, Some(&bias), Some(&res), true)
+                .map_err(|e| e.to_string())?;
+            crate::prop_assert!(
+                got.shape == want.shape && bits_equal(&got.data, &want.data),
+                "fused conv differs from separate passes (geom {g:?}, k {k}, {ci}->{co})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_pointwise_nhwc_matches_separate_passes_bitwise() {
+        use crate::kernels::elementwise::{add_bias_nhwc, add_inplace, relu6_inplace};
+        let mut rng = Rng::new(76);
+        let (n, ci, co, h) = (2, 7, 9, 6);
+        let x = randt(&[n, h, h, ci], &mut rng);
+        let w = randt(&[co, ci, 1, 1], &mut rng);
+        let g = ConvGeom::unit();
+        let bias: Vec<f32> = (0..co).map(|_| rng.normal()).collect();
+        let pack = pack_nhwc(&w, g);
+        let mut want = conv2d_nhwc_packed(&Pool::serial(), &x, &w, &pack, g).unwrap();
+        let res = randt(&want.shape.clone(), &mut rng);
+        add_bias_nhwc(&mut want, &bias);
+        add_inplace(&mut want, &res).unwrap();
+        relu6_inplace(&mut want);
+        let got = conv2d_nhwc_pointwise_fused(
+            &Pool::serial(),
+            &x,
+            &w,
+            &pack,
+            Some(&bias),
+            Some(&res),
+            true,
+        )
+        .unwrap();
+        assert!(bits_equal(&got.data, &want.data));
+        // rejects non-pointwise weights and bad residual shapes
+        let w3 = randt(&[co, ci, 3, 3], &mut rng);
+        assert!(conv2d_nhwc_pointwise_fused(
+            &Pool::serial(),
+            &x,
+            &w3,
+            &pack,
+            None,
+            None,
+            false
+        )
+        .is_err());
+        let bad = Tensor::zeros(&[n, h, h, ci]);
+        assert!(conv2d_nhwc_pointwise_fused(
+            &Pool::serial(),
+            &x,
+            &w,
+            &pack,
+            None,
+            Some(&bad),
+            false
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn precision_parse_and_name() {
+        assert_eq!(Precision::parse("exact").unwrap(), Precision::Exact);
+        assert_eq!(Precision::parse("FAST").unwrap(), Precision::Fast);
+        assert_eq!(Precision::Fast.name(), "fast");
+        assert_eq!(Precision::Exact.name(), "exact");
+        assert!(Precision::parse("approx").is_err());
     }
 
     #[test]

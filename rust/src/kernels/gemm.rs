@@ -290,6 +290,314 @@ pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32
     gemm_rows(m, k, n, a, b, c, true);
 }
 
+/// Where a fused bias vector attaches to the C tile.
+#[derive(Debug, Clone, Copy)]
+pub enum Bias<'a> {
+    /// No bias term.
+    None,
+    /// `bias[row]` added to every element of C row `row` — the NCHW
+    /// conv orientation (rows are output channels).
+    PerRow(&'a [f32]),
+    /// `bias[col]` added to every element of C column `col` — the NHWC
+    /// conv orientation (columns are output channels).
+    PerCol(&'a [f32]),
+}
+
+/// Epilogue fused into the GEMM write-back (the `--precision fast`
+/// tier): bias, then residual add, then relu6 — the exact op order of
+/// the separate `elementwise` passes, applied per element as the
+/// accumulator leaves registers instead of in extra full-tensor
+/// sweeps.  Values match the unfused sequence bit-for-bit (same ops,
+/// same order); the tier is "fast" because fusion changes *which*
+/// kernel a conv runs through, not because this epilogue rounds
+/// differently.
+#[derive(Debug, Clone, Copy)]
+pub struct Epilogue<'a> {
+    pub bias: Bias<'a>,
+    /// Same shape as C; added elementwise after bias.
+    pub residual: Option<&'a [f32]>,
+    /// Clamp to [0, 6] after bias + residual.
+    pub relu6: bool,
+}
+
+/// [`tile_full`] with the epilogue applied in the write-back when
+/// `apply` (the final k panel); earlier panels store raw partial sums.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn tile_full_ep(
+    kb: usize,
+    ke: usize,
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    init: bool,
+    ep: &Epilogue,
+    apply: bool,
+) {
+    let mut acc = [F32x8::zero(); 2 * MR];
+    if !init {
+        for r in 0..MR {
+            let crow = &c[(row + r) * n + col..];
+            acc[2 * r] = F32x8::load(crow);
+            acc[2 * r + 1] = F32x8::load(&crow[8..]);
+        }
+    }
+    for kk in kb..ke {
+        let brow = &b[kk * n + col..];
+        let b0 = F32x8::load(brow);
+        let b1 = F32x8::load(&brow[8..]);
+        for r in 0..MR {
+            let av = F32x8::splat(a[(row + r) * k + kk]);
+            acc[2 * r] = acc[2 * r].mul_add(av, b0);
+            acc[2 * r + 1] = acc[2 * r + 1].mul_add(av, b1);
+        }
+    }
+    for r in 0..MR {
+        let crow = &mut c[(row + r) * n + col..];
+        let (mut v0, mut v1) = (acc[2 * r], acc[2 * r + 1]);
+        if apply {
+            match ep.bias {
+                Bias::None => {}
+                Bias::PerRow(bias) => {
+                    let bv = F32x8::splat(bias[row + r]);
+                    v0 = v0.add(bv);
+                    v1 = v1.add(bv);
+                }
+                Bias::PerCol(bias) => {
+                    v0 = v0.add(F32x8::load(&bias[col..]));
+                    v1 = v1.add(F32x8::load(&bias[col + 8..]));
+                }
+            }
+            if let Some(res) = ep.residual {
+                let rrow = &res[(row + r) * n + col..];
+                v0 = v0.add(F32x8::load(rrow));
+                v1 = v1.add(F32x8::load(&rrow[8..]));
+            }
+            if ep.relu6 {
+                v0 = v0.clamp(0.0, 6.0);
+                v1 = v1.clamp(0.0, 6.0);
+            }
+        }
+        v0.store(crow);
+        v1.store(&mut crow[8..]);
+    }
+}
+
+/// [`tile_edge`] with the fused epilogue — same scalar accumulation
+/// order, epilogue applied per element on the final panel only.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn tile_edge_ep(
+    mr: usize,
+    nr: usize,
+    kb: usize,
+    ke: usize,
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    init: bool,
+    ep: &Epilogue,
+    apply: bool,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    if !init {
+        for r in 0..mr {
+            let crow = &c[(row + r) * n + col..];
+            for j in 0..nr {
+                acc[r][j] = crow[j];
+            }
+        }
+    }
+    for kk in kb..ke {
+        let brow = &b[kk * n + col..kk * n + col + nr];
+        for r in 0..mr {
+            let av = a[(row + r) * k + kk];
+            for j in 0..nr {
+                acc[r][j] += av * brow[j];
+            }
+        }
+    }
+    for r in 0..mr {
+        let crow = &mut c[(row + r) * n + col..(row + r) * n + col + nr];
+        for j in 0..nr {
+            let mut v = acc[r][j];
+            if apply {
+                match ep.bias {
+                    Bias::None => {}
+                    Bias::PerRow(bias) => v += bias[row + r],
+                    Bias::PerCol(bias) => v += bias[col + j],
+                }
+                if let Some(res) = ep.residual {
+                    v += res[(row + r) * n + col + j];
+                }
+                if ep.relu6 {
+                    v = v.clamp(0.0, 6.0);
+                }
+            }
+            crow[j] = v;
+        }
+    }
+}
+
+/// Blocked GEMM body with the fused epilogue: C = epilogue(A·B).
+/// Always overwrites C; the epilogue is applied exactly once per
+/// element, on the write-back of the LAST k panel.
+#[inline(always)]
+fn gemm_rows_fused_body(
+    rows: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    ep: &Epilogue,
+) {
+    if k == 0 {
+        // degenerate product is the zero matrix; still run the epilogue
+        for r in 0..rows {
+            for j in 0..n {
+                let mut v = 0.0f32;
+                match ep.bias {
+                    Bias::None => {}
+                    Bias::PerRow(bias) => v += bias[r],
+                    Bias::PerCol(bias) => v += bias[j],
+                }
+                if let Some(res) = ep.residual {
+                    v += res[r * n + j];
+                }
+                if ep.relu6 {
+                    v = v.clamp(0.0, 6.0);
+                }
+                c[r * n + j] = v;
+            }
+        }
+        return;
+    }
+    let mut kb = 0;
+    let mut first_panel = true;
+    while kb < k {
+        let ke = (kb + KC).min(k);
+        let init = first_panel;
+        let apply = ke == k;
+        let mut r = 0;
+        while r < rows {
+            let mr = MR.min(rows - r);
+            let mut j = 0;
+            if mr == MR {
+                while j + NR <= n {
+                    tile_full_ep(kb, ke, r, j, k, n, a, b, c, init, ep, apply);
+                    j += NR;
+                }
+            }
+            while j < n {
+                let nr = NR.min(n - j);
+                tile_edge_ep(mr, nr, kb, ke, r, j, k, n, a, b, c, init, ep, apply);
+                j += nr;
+            }
+            r += mr;
+        }
+        kb = ke;
+        first_panel = false;
+    }
+}
+
+/// The AVX2+FMA monomorphization of [`gemm_rows_fused_body`] — widened
+/// codegen only, same numerics as the baseline build (see
+/// [`gemm_rows_avx2`]).
+///
+/// # Safety
+/// Caller must have verified `avx2_available()`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn gemm_rows_fused_avx2(
+    rows: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    ep: &Epilogue,
+) {
+    gemm_rows_fused_body(rows, k, n, a, b, c, ep);
+}
+
+/// Sequential fused-epilogue GEMM at an explicit [`SimdLevel`] — the
+/// A/B surface for the fused-vs-separate tolerance pins and
+/// `bench_kernels`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_rows_fused_level(
+    level: SimdLevel,
+    rows: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    ep: &Epilogue,
+) {
+    debug_assert!(a.len() >= rows * k && b.len() >= k * n && c.len() >= rows * n);
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 if avx2_available() => unsafe {
+            gemm_rows_fused_avx2(rows, k, n, a, b, c, ep)
+        },
+        _ => gemm_rows_fused_body(rows, k, n, a, b, c, ep),
+    }
+}
+
+/// C = epilogue(A·B) on an explicit pool — the `--precision fast`
+/// conv/GEMM entry: bias, residual add, and relu6 ride the micro
+/// kernel's write-back instead of separate full-tensor passes.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_fused_with(
+    pool: &Pool,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    ep: &Epilogue,
+) {
+    assert_eq!(a.len(), m * k, "A is not m x k");
+    assert_eq!(b.len(), k * n, "B is not k x n");
+    assert_eq!(c.len(), m * n, "C is not m x n");
+    match ep.bias {
+        Bias::None => {}
+        Bias::PerRow(bias) => assert_eq!(bias.len(), m, "row bias is not len m"),
+        Bias::PerCol(bias) => assert_eq!(bias.len(), n, "col bias is not len n"),
+    }
+    if let Some(res) = ep.residual {
+        assert_eq!(res.len(), m * n, "residual is not m x n");
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    let level = detect();
+    pool.for_each_chunk(c, MC * n, |bi, cblk| {
+        let row0 = bi * MC;
+        let rows = cblk.len() / n;
+        let blk_ep = Epilogue {
+            bias: match ep.bias {
+                Bias::None => Bias::None,
+                Bias::PerRow(bias) => Bias::PerRow(&bias[row0..row0 + rows]),
+                Bias::PerCol(bias) => Bias::PerCol(bias),
+            },
+            residual: ep.residual.map(|res| &res[row0 * n..(row0 + rows) * n]),
+            relu6: ep.relu6,
+        };
+        gemm_rows_fused_level(level, rows, k, n, &a[row0 * k..(row0 + rows) * k], b, cblk, &blk_ep);
+    });
+}
+
 /// Per-row body of the transposed-B GEMM.  Unlike the main kernel the
 /// dot product uses two strided lane accumulators + a fixed tree
 /// reduction (`F32x8::sum`) + a scalar tail — a DIFFERENT summation
@@ -588,6 +896,101 @@ mod tests {
             gemm_bt_rows(level, m, 0, k, n, &a, &bt, &mut got);
             assert!(bits_equal(&reference, &got), "bt {} differs from scalar", level.name());
         }
+    }
+
+    #[test]
+    fn fused_epilogue_matches_separate_passes() {
+        // the fast-tier pin, per SIMD level and per thread count: the
+        // fused write-back must reproduce GEMM + bias + residual +
+        // relu6 run as separate passes.  Op order per element is
+        // identical, so the check is bitwise (stronger than the
+        // documented tolerance gate).
+        let mut rng = Rng::new(31);
+        // shapes cover full tiles, edge tiles, and a multi-KC k panel
+        for (m, k, n) in [(37usize, 65usize, 50usize), (9, 530, 33), (4, 16, 16)] {
+            let a = randv(m * k, &mut rng);
+            let b = randv(k * n, &mut rng);
+            let row_bias = randv(m, &mut rng);
+            let col_bias = randv(n, &mut rng);
+            let res = randv(m * n, &mut rng);
+            for (label, bias) in
+                [("row", Bias::PerRow(&row_bias[..])), ("col", Bias::PerCol(&col_bias[..]))]
+            {
+                let mut want = vec![0.0f32; m * n];
+                gemm_rows_level(SimdLevel::Scalar, m, k, n, &a, &b, &mut want, false);
+                for r in 0..m {
+                    for j in 0..n {
+                        want[r * n + j] += match bias {
+                            Bias::PerRow(bv) => bv[r],
+                            Bias::PerCol(bv) => bv[j],
+                            Bias::None => 0.0,
+                        };
+                    }
+                }
+                for (v, rv) in want.iter_mut().zip(&res) {
+                    *v += rv;
+                }
+                for v in want.iter_mut() {
+                    *v = v.clamp(0.0, 6.0);
+                }
+                let ep = Epilogue { bias, residual: Some(&res), relu6: true };
+                for level in levels_available() {
+                    let mut got = vec![0.0f32; m * n];
+                    gemm_rows_fused_level(level, m, k, n, &a, &b, &mut got, &ep);
+                    for (g, w) in got.iter().zip(&want) {
+                        assert!(
+                            (g - w).abs() <= 1e-5 * w.abs().max(1.0),
+                            "{m}x{k}x{n} {label} bias {}: fused {g} vs separate {w}",
+                            level.name()
+                        );
+                    }
+                    assert!(
+                        bits_equal(&got, &want),
+                        "{m}x{k}x{n} {label} bias: fused differs from separate at {}",
+                        level.name()
+                    );
+                }
+                for workers in [2usize, 5] {
+                    let mut got = vec![0.0f32; m * n];
+                    gemm_fused_with(&Pool::new(workers), m, k, n, &a, &b, &mut got, &ep);
+                    assert!(
+                        bits_equal(&got, &want),
+                        "{m}x{k}x{n} {label} bias: fused differs at {workers} workers"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_epilogue_without_terms_is_plain_gemm() {
+        // an empty epilogue must leave the kernel byte-identical to
+        // the exact-tier gemm
+        let mut rng = Rng::new(32);
+        let (m, k, n) = (21, 43, 29);
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let mut want = vec![0.0f32; m * n];
+        gemm_with(&Pool::serial(), m, k, n, &a, &b, &mut want);
+        let mut got = vec![0.0f32; m * n];
+        let ep = Epilogue { bias: Bias::None, residual: None, relu6: false };
+        gemm_fused_with(&Pool::serial(), m, k, n, &a, &b, &mut got, &ep);
+        assert!(bits_equal(&got, &want));
+    }
+
+    #[test]
+    fn fused_degenerate_k_applies_epilogue() {
+        // k = 0: zero product, epilogue still runs
+        let bias = [1.0f32, -2.0];
+        let res = [0.5f32, 0.5, 7.0, 7.0, -1.0, -1.0];
+        let ep = Epilogue { bias: Bias::PerRow(&bias[..1]), residual: None, relu6: false };
+        let mut c = vec![9.0f32; 2];
+        gemm_fused_with(&Pool::serial(), 1, 0, 2, &[], &[], &mut c, &ep);
+        assert_eq!(c, vec![1.0, 1.0]);
+        let ep = Epilogue { bias: Bias::PerCol(&[0.0, 0.0]), residual: Some(&res), relu6: true };
+        let mut c = vec![0.0f32; 6];
+        gemm_fused_with(&Pool::serial(), 3, 0, 2, &[], &[], &mut c, &ep);
+        assert_eq!(c, vec![0.5, 0.5, 6.0, 6.0, 0.0, 0.0]);
     }
 
     #[test]

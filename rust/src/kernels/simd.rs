@@ -111,6 +111,24 @@ impl F32x8 {
         self.add(a.mul(b))
     }
 
+    /// Per-lane `f32::clamp(lo, hi)` with the scalar op's exact branch
+    /// semantics (`x < lo -> lo`, `x > hi -> hi`, NaN passes through),
+    /// so a fused epilogue's relu6 matches
+    /// `elementwise::relu6_inplace` bit-for-bit.  Lowers to
+    /// `vcmpps`+`vblendvps` (or `vmaxps`/`vminps`) under AVX2.
+    #[inline(always)]
+    pub fn clamp(self, lo: f32, hi: f32) -> F32x8 {
+        let mut v = self.0;
+        for x in v.iter_mut() {
+            if *x < lo {
+                *x = lo;
+            } else if *x > hi {
+                *x = hi;
+            }
+        }
+        F32x8(v)
+    }
+
     /// Fixed-shape tree reduction (pairwise: (0+4)+(2+6), ...).  Used by
     /// dot-product-style kernels; every dispatch branch runs the same
     /// tree, so the sum is bit-stable across branches.
@@ -231,6 +249,18 @@ mod tests {
         let mut short = vec![9.0f32; 3];
         F32x8::splat(2.0).store_partial(&mut short);
         assert_eq!(short, vec![2.0; 3]);
+    }
+
+    #[test]
+    fn clamp_matches_scalar_clamp_bitwise() {
+        let v = F32x8([-1.0, 0.0, -0.0, 3.0, 6.0, 6.5, f32::NAN, 7e9]);
+        let c = v.clamp(0.0, 6.0);
+        for i in 0..8 {
+            let want = v.0[i].clamp(0.0, 6.0);
+            assert_eq!(c.0[i].to_bits(), want.to_bits(), "lane {i}");
+        }
+        // the sign of zero survives exactly like f32::clamp
+        assert_eq!(c.0[2].to_bits(), (-0.0f32).to_bits());
     }
 
     #[test]

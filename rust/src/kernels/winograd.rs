@@ -1,0 +1,522 @@
+//! Winograd F(2x2,3x3) convolution — the `--precision fast` tier's
+//! path for the stride-1 pad-1 dense 3x3 convs that dominate merged
+//! networks (see [`applies`] for the exact predicate).
+//!
+//! Each 4x4 input tile produces a 2x2 output tile through three small
+//! transforms: `V = Bt·d·B` (input, [`WinogradWeights`]-independent),
+//! `U = G·g·Gt` (weight, hoisted to `HostExec` construction by
+//! [`transform_weights`], next to [`super::conv::pack_nhwc`]), and
+//! `Y = At·M·A` (output), where `M[xi] = sum_c U[o,c,xi] * V[c,p,xi]`
+//! is an elementwise product over the 16 transform points.  That
+//! replaces the 36 multiplies of a direct 2x2-output 3x3 conv with 16
+//! — a 2.25x multiply reduction at the cost of the transform adds.
+//!
+//! The accumulation over input channels runs as two [`F32x8`] lanes
+//! per tile (the 16 transform points), monomorphized twice exactly
+//! like [`super::gemm`]: a baseline build and an
+//! `avx2,fma`-target-feature clone picked at runtime.  The tile loop
+//! parallelizes over output-channel planes on the caller's
+//! [`Pool`] with the pool's deterministic chunk schedule, so the same
+//! worker count always produces the same bits — but the *values*
+//! differ from the im2col+GEMM path (different summation order and
+//! transform arithmetic), which is why this path only runs under the
+//! `fast` precision tier and is gated by relative-error tolerance
+//! tests against the exact path (see `docs/ARCHITECTURE.md`).
+//!
+//! Epilogues (bias, residual add, relu6) are fused into the output
+//! scatter: the transform result leaves registers already biased,
+//! summed, and clamped, with the same per-element op order as the
+//! separate `elementwise` passes.
+
+use anyhow::{bail, Result};
+
+use super::conv::{nchw_to_nhwc, nhwc_to_nchw, ConvGeom};
+use super::pool::Pool;
+use super::simd::{avx2_available, detect, F32x8, SimdLevel};
+use crate::tensor::Tensor;
+
+/// True iff the F(2x2,3x3) path can serve this conv: dense (one
+/// group), 3x3 taps, stride 1, pad 1 — i.e. a shape-preserving 3x3.
+pub fn applies(kh: usize, kw: usize, g: ConvGeom) -> bool {
+    kh == 3 && kw == 3 && g.stride == 1 && g.pad == 1 && g.groups == 1
+}
+
+/// Per-layer transformed weights `U = G·g·Gt`, derived once from the
+/// OIHW checkpoint weight (the serving path hoists this to `HostExec`
+/// construction): `u[(o*ci + c)*16 + xi]` over the 16 transform points
+/// `xi` (row-major 4x4).
+#[derive(Debug, Clone)]
+pub struct WinogradWeights {
+    pub co: usize,
+    pub ci: usize,
+    pub u: Vec<f32>,
+}
+
+/// Transform an OIHW `[co, ci, 3, 3]` weight into its [`WinogradWeights`].
+pub fn transform_weights(w: &Tensor) -> Result<WinogradWeights> {
+    if w.rank() != 4 || w.shape[2] != 3 || w.shape[3] != 3 {
+        bail!("winograd weights expect OIHW [co, ci, 3, 3], got {:?}", w.shape);
+    }
+    let (co, ci) = (w.shape[0], w.shape[1]);
+    let mut u = vec![0.0f32; co * ci * 16];
+    for o in 0..co {
+        for c in 0..ci {
+            let g = &w.data[(o * ci + c) * 9..][..9];
+            // G·g (4x3): G rows [1,0,0], [.5,.5,.5], [.5,-.5,.5], [0,0,1]
+            let mut gg = [0.0f32; 12];
+            for j in 0..3 {
+                let (g0, g1, g2) = (g[j], g[3 + j], g[6 + j]);
+                gg[j] = g0;
+                gg[3 + j] = 0.5 * (g0 + g1 + g2);
+                gg[6 + j] = 0.5 * (g0 - g1 + g2);
+                gg[9 + j] = g2;
+            }
+            // U = (G·g)·Gt: the same combination along each row
+            let urow = &mut u[(o * ci + c) * 16..][..16];
+            for r in 0..4 {
+                let (t0, t1, t2) = (gg[3 * r], gg[3 * r + 1], gg[3 * r + 2]);
+                urow[4 * r] = t0;
+                urow[4 * r + 1] = 0.5 * (t0 + t1 + t2);
+                urow[4 * r + 2] = 0.5 * (t0 - t1 + t2);
+                urow[4 * r + 3] = t2;
+            }
+        }
+    }
+    Ok(WinogradWeights { co, ci, u })
+}
+
+/// `V = Bt·d·B` for one 4x4 input tile `d` (row-major), written to
+/// `v[0..16]`.  Bt rows: [1,0,-1,0], [0,1,1,0], [0,-1,1,0], [0,1,0,-1].
+#[inline(always)]
+fn input_transform(d: &[f32; 16], v: &mut [f32]) {
+    let mut t = [0.0f32; 16];
+    for j in 0..4 {
+        let (d0, d1, d2, d3) = (d[j], d[4 + j], d[8 + j], d[12 + j]);
+        t[j] = d0 - d2;
+        t[4 + j] = d1 + d2;
+        t[8 + j] = d2 - d1;
+        t[12 + j] = d1 - d3;
+    }
+    for r in 0..4 {
+        let (t0, t1, t2, t3) = (t[4 * r], t[4 * r + 1], t[4 * r + 2], t[4 * r + 3]);
+        v[4 * r] = t0 - t2;
+        v[4 * r + 1] = t1 + t2;
+        v[4 * r + 2] = t2 - t1;
+        v[4 * r + 3] = t1 - t3;
+    }
+}
+
+/// `Y = At·m·A` for one 4x4 transform-domain tile `m`: the 2x2 output
+/// quad, row-major.  At rows: [1,1,1,0], [0,1,-1,-1].
+#[inline(always)]
+fn output_transform(m: &[f32; 16]) -> [f32; 4] {
+    let mut t = [0.0f32; 8];
+    for j in 0..4 {
+        t[j] = m[j] + m[4 + j] + m[8 + j];
+        t[4 + j] = m[4 + j] - m[8 + j] - m[12 + j];
+    }
+    [t[0] + t[1] + t[2], t[1] - t[2] - t[3], t[4] + t[5] + t[6], t[5] - t[6] - t[7]]
+}
+
+/// Lower one batch image into the transform domain: `v[(p*ci + c)*16]`
+/// over tiles `p = ty*tw + tx`, gathering each 4x4 input patch (top
+/// left at `(2ty - 1, 2tx - 1)`, the pad-1 offset) with zero padding.
+fn build_v(x: &Tensor, ni: usize, th: usize, tw: usize, v: &mut [f32]) {
+    let (ci, h, w) = (x.shape[1], x.shape[2], x.shape[3]);
+    for c in 0..ci {
+        let plane = &x.data[((ni * ci + c) * h) * w..][..h * w];
+        for ty in 0..th {
+            for tx in 0..tw {
+                let mut d = [0.0f32; 16];
+                let y0 = 2 * ty as isize - 1;
+                let x0 = 2 * tx as isize - 1;
+                for dy in 0..4usize {
+                    let iy = y0 + dy as isize;
+                    if iy < 0 || iy as usize >= h {
+                        continue;
+                    }
+                    for dx in 0..4usize {
+                        let ix = x0 + dx as isize;
+                        if ix >= 0 && (ix as usize) < w {
+                            d[4 * dy + dx] = plane[iy as usize * w + ix as usize];
+                        }
+                    }
+                }
+                let p = ty * tw + tx;
+                input_transform(&d, &mut v[(p * ci + c) * 16..][..16]);
+            }
+        }
+    }
+}
+
+/// One output-channel plane: for every tile, accumulate the 16-point
+/// Hadamard product over input channels as two [`F32x8`] lanes, apply
+/// the output transform, and scatter the 2x2 quad (clipping the last
+/// row/column on odd spatial dims) with the epilogue fused in.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn co_plane_body(
+    v: &[f32],
+    u: &[f32],
+    ci: usize,
+    th: usize,
+    tw: usize,
+    oh: usize,
+    ow: usize,
+    bias: Option<f32>,
+    res: Option<&[f32]>,
+    relu6: bool,
+    out: &mut [f32],
+) {
+    for ty in 0..th {
+        for tx in 0..tw {
+            let p = ty * tw + tx;
+            let vrow = &v[p * ci * 16..];
+            let mut acc0 = F32x8::zero();
+            let mut acc1 = F32x8::zero();
+            for c in 0..ci {
+                let uv = &u[c * 16..];
+                let vv = &vrow[c * 16..];
+                acc0 = acc0.mul_add(F32x8::load(uv), F32x8::load(vv));
+                acc1 = acc1.mul_add(F32x8::load(&uv[8..]), F32x8::load(&vv[8..]));
+            }
+            let mut m = [0.0f32; 16];
+            m[..8].copy_from_slice(&acc0.0);
+            m[8..].copy_from_slice(&acc1.0);
+            let y = output_transform(&m);
+            for dy in 0..2usize {
+                let oy = 2 * ty + dy;
+                if oy >= oh {
+                    continue;
+                }
+                for dx in 0..2usize {
+                    let ox = 2 * tx + dx;
+                    if ox >= ow {
+                        continue;
+                    }
+                    let mut val = y[2 * dy + dx];
+                    if let Some(b) = bias {
+                        val += b;
+                    }
+                    if let Some(res) = res {
+                        val += res[oy * ow + ox];
+                    }
+                    if relu6 {
+                        val = val.clamp(0.0, 6.0);
+                    }
+                    out[oy * ow + ox] = val;
+                }
+            }
+        }
+    }
+}
+
+/// The AVX2+FMA monomorphization of [`co_plane_body`] (widened codegen
+/// only — same numerics as the baseline build, like `gemm_rows_avx2`).
+///
+/// # Safety
+/// Caller must have verified `avx2_available()`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn co_plane_avx2(
+    v: &[f32],
+    u: &[f32],
+    ci: usize,
+    th: usize,
+    tw: usize,
+    oh: usize,
+    ow: usize,
+    bias: Option<f32>,
+    res: Option<&[f32]>,
+    relu6: bool,
+    out: &mut [f32],
+) {
+    co_plane_body(v, u, ci, th, tw, oh, ow, bias, res, relu6, out);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn co_plane_level(
+    level: SimdLevel,
+    v: &[f32],
+    u: &[f32],
+    ci: usize,
+    th: usize,
+    tw: usize,
+    oh: usize,
+    ow: usize,
+    bias: Option<f32>,
+    res: Option<&[f32]>,
+    relu6: bool,
+    out: &mut [f32],
+) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 if avx2_available() => unsafe {
+            co_plane_avx2(v, u, ci, th, tw, oh, ow, bias, res, relu6, out)
+        },
+        _ => co_plane_body(v, u, ci, th, tw, oh, ow, bias, res, relu6, out),
+    }
+}
+
+/// Winograd conv over NCHW `x [n, ci, h, w]` with pre-transformed
+/// weights and the epilogue (bias, residual add, relu6 — in that
+/// order, matching the separate `elementwise` passes) fused into the
+/// output scatter.  Output is `[n, co, h, w]` (the predicate pins
+/// shape-preserving geometry).  `residual` must match the output shape.
+pub fn conv2d_winograd_fused(
+    pool: &Pool,
+    x: &Tensor,
+    ww: &WinogradWeights,
+    bias: Option<&[f32]>,
+    residual: Option<&Tensor>,
+    relu6: bool,
+) -> Result<Tensor> {
+    if x.rank() != 4 {
+        bail!("winograd expects NCHW x, got {:?}", x.shape);
+    }
+    let (n, ci, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    if ci != ww.ci {
+        bail!("winograd pack has {} input channels, x has {ci}", ww.ci);
+    }
+    if let Some(b) = bias {
+        if b.len() != ww.co {
+            bail!("winograd bias has {} elems, want {}", b.len(), ww.co);
+        }
+    }
+    let (oh, ow) = (h, w);
+    let mut out = Tensor::zeros(&[n, ww.co, oh, ow]);
+    if let Some(r) = residual {
+        if r.shape != out.shape {
+            bail!("winograd residual shape {:?} != output {:?}", r.shape, out.shape);
+        }
+    }
+    let (th, tw) = ((oh + 1) / 2, (ow + 1) / 2);
+    let level = detect();
+    let mut v = vec![0.0f32; th * tw * ci * 16];
+    let plane = oh * ow;
+    for ni in 0..n {
+        build_v(x, ni, th, tw, &mut v);
+        let oimg = &mut out.data[ni * ww.co * plane..(ni + 1) * ww.co * plane];
+        let res_img = residual.map(|r| &r.data[ni * ww.co * plane..(ni + 1) * ww.co * plane]);
+        let vref = &v;
+        pool.for_each_chunk(oimg, plane, |co, oplane| {
+            let b = bias.map(|b| b[co]);
+            let res = res_img.map(|r| &r[co * plane..(co + 1) * plane]);
+            co_plane_level(
+                level,
+                vref,
+                &ww.u[co * ci * 16..(co + 1) * ci * 16],
+                ci,
+                th,
+                tw,
+                oh,
+                ow,
+                b,
+                res,
+                relu6,
+                oplane,
+            );
+        });
+    }
+    Ok(out)
+}
+
+/// One-shot NCHW entry: checks [`applies`], transforms the weight, and
+/// runs the fused path with an empty epilogue — what the oracle
+/// property tests and `bench_kernels` compare against im2col.
+pub fn conv2d_winograd_with(pool: &Pool, x: &Tensor, w: &Tensor, g: ConvGeom) -> Result<Tensor> {
+    if w.rank() != 4 || !applies(w.shape[2], w.shape[3], g) {
+        bail!("winograd F(2x2,3x3) needs a dense 3x3 stride-1 pad-1 conv, got {:?} {g:?}", w.shape);
+    }
+    let ww = transform_weights(w)?;
+    conv2d_winograd_fused(pool, x, &ww, None, None, false)
+}
+
+/// NHWC wrapper: permutes activations (and the residual) into NCHW,
+/// runs [`conv2d_winograd_fused`], and permutes back.  The layout
+/// round-trip is a pure permutation, so this is byte-identical to the
+/// NCHW path — and its transform cost is part of what the
+/// `host/nhwc/fast` latency source measures, not hidden from it.
+pub fn conv2d_winograd_fused_nhwc(
+    pool: &Pool,
+    x: &Tensor,
+    ww: &WinogradWeights,
+    bias: Option<&[f32]>,
+    residual: Option<&Tensor>,
+    relu6: bool,
+) -> Result<Tensor> {
+    let xn = nhwc_to_nchw(x);
+    let resn = residual.map(nhwc_to_nchw);
+    let y = conv2d_winograd_fused(pool, &xn, ww, bias, resn.as_ref(), relu6)?;
+    Ok(nchw_to_nhwc(&y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::conv::{conv2d_naive, conv2d_with};
+    use crate::kernels::elementwise::{add_bias_nchw, add_inplace, relu6_inplace};
+    use crate::kernels::simd::bits_equal;
+    use crate::util::rng::Rng;
+
+    fn randt(shape: &[usize], rng: &mut Rng) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        for v in t.data.iter_mut() {
+            *v = rng.normal();
+        }
+        t
+    }
+
+    const G: ConvGeom = ConvGeom { stride: 1, pad: 1, groups: 1 };
+
+    #[test]
+    fn applicability_predicate() {
+        assert!(applies(3, 3, G));
+        assert!(!applies(1, 1, G));
+        assert!(!applies(3, 3, ConvGeom { stride: 2, pad: 1, groups: 1 }));
+        assert!(!applies(3, 3, ConvGeom { stride: 1, pad: 0, groups: 1 }));
+        assert!(!applies(3, 3, ConvGeom { stride: 1, pad: 1, groups: 2 }));
+        // the one-shot entry rejects what the predicate rejects
+        let x = Tensor::zeros(&[1, 2, 4, 4]);
+        let w = Tensor::zeros(&[2, 2, 3, 3]);
+        assert!(conv2d_winograd_with(&Pool::serial(), &x, &w, ConvGeom::unit()).is_err());
+        assert!(conv2d_winograd_with(&Pool::serial(), &x, &w, G).is_ok());
+    }
+
+    #[test]
+    fn delta_kernel_is_identity() {
+        // g[1][1] = 1 makes the conv an identity map; winograd must
+        // reproduce the input to transform-arithmetic accuracy
+        let mut rng = Rng::new(90);
+        let x = randt(&[2, 3, 7, 6], &mut rng);
+        let mut w = Tensor::zeros(&[3, 3, 3, 3]);
+        for o in 0..3 {
+            *w.at4_mut(o, o, 1, 1) = 1.0;
+        }
+        let y = conv2d_winograd_with(&Pool::serial(), &x, &w, G).unwrap();
+        assert_eq!(y.shape, x.shape);
+        assert!(y.max_abs_diff(&x) < 1e-5, "delta kernel err {}", y.max_abs_diff(&x));
+    }
+
+    #[test]
+    fn winograd_matches_im2col_oracle_across_shapes() {
+        // the fast-tier tolerance gate: shapes x channels x batch sweep
+        // against the exact im2col path (which is itself pinned to the
+        // naive oracle)
+        crate::util::prop::forall(40, 91, |rng| {
+            let n = 1 + rng.below(3);
+            let ci = 1 + rng.below(6);
+            let co = 1 + rng.below(8);
+            let h = 1 + rng.below(12);
+            let w = 1 + rng.below(12);
+            let x = randt(&[n, ci, h, w], rng);
+            let wt = randt(&[co, ci, 3, 3], rng);
+            let want = conv2d_with(&Pool::serial(), &x, &wt, G).map_err(|e| e.to_string())?;
+            let got =
+                conv2d_winograd_with(&Pool::serial(), &x, &wt, G).map_err(|e| e.to_string())?;
+            crate::prop_assert!(
+                got.shape == want.shape,
+                "shape {:?} vs {:?}",
+                got.shape,
+                want.shape
+            );
+            let scale = want.data.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+            let err = got.max_abs_diff(&want);
+            crate::prop_assert!(
+                err <= 1e-4 * scale,
+                "winograd vs im2col err {err} (scale {scale}, {n}x{ci}x{h}x{w} -> {co})"
+            );
+            let naive = conv2d_naive(&x, &wt, G);
+            let err_n = got.max_abs_diff(&naive);
+            crate::prop_assert!(err_n <= 1e-4 * scale, "winograd vs naive err {err_n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nhwc_wrapper_is_byte_identical_to_nchw() {
+        crate::util::prop::forall(15, 92, |rng| {
+            let n = 1 + rng.below(2);
+            let (ci, co) = (1 + rng.below(5), 1 + rng.below(5));
+            let h = 2 + rng.below(8);
+            let x = randt(&[n, ci, h, h], rng);
+            let wt = randt(&[co, ci, 3, 3], rng);
+            let bias = randt(&[co], rng);
+            let ww = transform_weights(&wt).map_err(|e| e.to_string())?;
+            let want = conv2d_winograd_fused(&Pool::serial(), &x, &ww, Some(&bias.data), None, true)
+                .map_err(|e| e.to_string())?;
+            let got = conv2d_winograd_fused_nhwc(
+                &Pool::serial(),
+                &crate::kernels::conv::nchw_to_nhwc(&x),
+                &ww,
+                Some(&bias.data),
+                None,
+                true,
+            )
+            .map_err(|e| e.to_string())?;
+            crate::prop_assert!(
+                bits_equal(&nhwc_to_nchw(&got).data, &want.data),
+                "NHWC winograd wrapper not byte-identical to NCHW"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_epilogue_matches_separate_passes_bitwise() {
+        // bias + residual + relu6 in the scatter vs the elementwise
+        // passes: same per-element op order, so the bits must match
+        let mut rng = Rng::new(93);
+        let x = randt(&[2, 4, 9, 7], &mut rng);
+        let wt = randt(&[5, 4, 3, 3], &mut rng);
+        let bias: Vec<f32> = (0..5).map(|_| rng.normal()).collect();
+        let ww = transform_weights(&wt).unwrap();
+        let res = randt(&[2, 5, 9, 7], &mut rng);
+        let mut want = conv2d_winograd_fused(&Pool::serial(), &x, &ww, None, None, false).unwrap();
+        add_bias_nchw(&mut want, &bias);
+        add_inplace(&mut want, &res).unwrap();
+        relu6_inplace(&mut want);
+        let got =
+            conv2d_winograd_fused(&Pool::serial(), &x, &ww, Some(&bias), Some(&res), true).unwrap();
+        assert!(
+            bits_equal(&got.data, &want.data),
+            "fused winograd epilogue differs from separate passes"
+        );
+    }
+
+    #[test]
+    fn parallel_winograd_is_byte_identical() {
+        let mut rng = Rng::new(94);
+        let x = randt(&[2, 6, 11, 11], &mut rng);
+        let wt = randt(&[9, 6, 3, 3], &mut rng);
+        let a = conv2d_winograd_with(&Pool::serial(), &x, &wt, G).unwrap();
+        for workers in [2usize, 5] {
+            let b = conv2d_winograd_with(&Pool::new(workers), &x, &wt, G).unwrap();
+            assert!(
+                bits_equal(&a.data, &b.data),
+                "winograd differs between 1 and {workers} workers"
+            );
+        }
+    }
+
+    #[test]
+    fn shape_errors() {
+        let x = Tensor::zeros(&[1, 2, 4, 4]);
+        let ww = transform_weights(&Tensor::zeros(&[3, 2, 3, 3])).unwrap();
+        // channel mismatch
+        let bad = Tensor::zeros(&[1, 5, 4, 4]);
+        assert!(conv2d_winograd_fused(&Pool::serial(), &bad, &ww, None, None, false).is_err());
+        // bias length
+        let short_bias = [0.0f32; 2];
+        assert!(conv2d_winograd_fused(&Pool::serial(), &x, &ww, Some(&short_bias[..]), None, false)
+            .is_err());
+        // residual shape
+        let res = Tensor::zeros(&[1, 3, 5, 5]);
+        assert!(
+            conv2d_winograd_fused(&Pool::serial(), &x, &ww, None, Some(&res), false).is_err()
+        );
+        // non-3x3 weight rejected at transform time
+        assert!(transform_weights(&Tensor::zeros(&[3, 2, 1, 1])).is_err());
+    }
+}

@@ -9,12 +9,16 @@
 //!   measured[/fused|eager]             — wall-clock of the AOT probes
 //!       on the PJRT CPU client (`measured::Measured`; needs an Engine
 //!       plus `make artifacts`).
-//!   host[/<N>threads][/nhwc|nchw]      — wall-clock of the NATIVE
+//!   host[/<N>threads][/nhwc|nchw][/fast] — wall-clock of the NATIVE
 //!       kernel layer: each block is timed through the same
 //!       `kernels::conv` + elementwise chain `HostExec` serves with
 //!       (in the named activation layout, default nchw), so
 //!       `serve --backend host` plans on the backend — and layout — it
-//!       serves on.
+//!       serves on.  A `fast` segment prices the `--precision fast`
+//!       chain instead: Winograd F(2x2,3x3) where it applies plus
+//!       fused bias/residual/relu6 epilogues, with the weight
+//!       transform hoisted outside the timing loop exactly like
+//!       `HostExec` hoists it into construction.
 //!
 //! `SourceSpec::parse` turns a spec string into a value; `build` turns
 //! the value into a boxed `LatencySource` (handing it the Engine only
@@ -27,11 +31,18 @@ use anyhow::{anyhow, bail, Result};
 
 use super::devices::{self, Device};
 use super::gpu_model::{mem_pass_latency_ms, op_latency_ms, ConvGeom, ExecMode};
-use crate::kernels::conv::{conv2d_nhwc_with, conv2d_with, ConvGeom as KernelGeom, Layout};
+use crate::kernels::conv::{
+    conv2d_fused, conv2d_nhwc_pointwise_fused, conv2d_nhwc_with, conv2d_with, pack_nhwc,
+    ConvGeom as KernelGeom, Layout, Precision,
+};
 use crate::kernels::elementwise::{
     add_bias_nchw, add_bias_nhwc, add_inplace, max_pool_2x2, max_pool_2x2_nhwc, relu6_inplace,
 };
 use crate::kernels::pool::Pool;
+use crate::kernels::winograd::{
+    applies as winograd_applies, conv2d_winograd_fused, conv2d_winograd_fused_nhwc,
+    transform_weights,
+};
 use crate::model::spec::ArchConfig;
 use crate::runtime::engine::Engine;
 use crate::tensor::Tensor;
@@ -85,6 +96,7 @@ pub struct HostKernelSource {
     pool: Pool,
     threads: usize,
     layout: Layout,
+    precision: Precision,
     pub warmup: usize,
     pub reps: usize,
 }
@@ -100,11 +112,23 @@ impl HostKernelSource {
     /// `Layout::Nhwc` when serving runs `HostExec` channels-last, so
     /// the planner optimizes the latency it will actually see.
     pub fn with_layout(threads: Option<usize>, layout: Layout) -> HostKernelSource {
+        HostKernelSource::with_precision(threads, layout, Precision::Exact)
+    }
+
+    /// Price blocks on an explicit determinism tier —
+    /// `Precision::Fast` times the Winograd + fused-epilogue chain
+    /// `HostExec` dispatches under `--precision fast`, so a fast
+    /// deployment plans on the latencies it will actually serve.
+    pub fn with_precision(
+        threads: Option<usize>,
+        layout: Layout,
+        precision: Precision,
+    ) -> HostKernelSource {
         let pool = match threads {
             Some(n) => Pool::new(n),
             None => Pool::global(),
         };
-        HostKernelSource { threads: pool.workers(), pool, layout, warmup: 1, reps: 5 }
+        HostKernelSource { threads: pool.workers(), pool, layout, precision, warmup: 1, reps: 5 }
     }
 }
 
@@ -131,21 +155,64 @@ impl LatencySource for HostKernelSource {
         let residual = blk.add_from.map(|_| Tensor::zeros(&rshape));
         let geom = KernelGeom { stride: blk.stride, pad: blk.pad, groups: blk.groups };
         let nhwc = self.layout == Layout::Nhwc;
+        // fast-tier prep, hoisted OUTSIDE the timing loop exactly like
+        // `HostExec` hoists it into construction — the plan prices
+        // steady-state serving, not one-time weight transforms
+        let fast = self.precision == Precision::Fast;
+        let wino = if fast && winograd_applies(blk.k, blk.k, geom) {
+            Some(transform_weights(&w)?)
+        } else {
+            None
+        };
+        let pointwise = blk.k == 1 && blk.groups == 1 && blk.stride == 1 && blk.pad == 0;
+        let pw_pack = if fast && nhwc && wino.is_none() && pointwise {
+            Some(pack_nhwc(&w, geom))
+        } else {
+            None
+        };
         let mut run = || -> Result<Tensor> {
-            let mut y = if nhwc {
-                conv2d_nhwc_with(&self.pool, &x, &w, geom)?
+            let mut y = if let Some(ww) = &wino {
+                if nhwc {
+                    conv2d_winograd_fused_nhwc(
+                        &self.pool,
+                        &x,
+                        ww,
+                        Some(&bias),
+                        residual.as_ref(),
+                        true,
+                    )?
+                } else {
+                    conv2d_winograd_fused(&self.pool, &x, ww, Some(&bias), residual.as_ref(), true)?
+                }
+            } else if let Some(pack) = &pw_pack {
+                conv2d_nhwc_pointwise_fused(
+                    &self.pool,
+                    &x,
+                    &w,
+                    pack,
+                    Some(&bias),
+                    residual.as_ref(),
+                    true,
+                )?
+            } else if fast && !nhwc && blk.groups == 1 {
+                conv2d_fused(&self.pool, &x, &w, geom, Some(&bias), residual.as_ref(), true)?
             } else {
-                conv2d_with(&self.pool, &x, &w, geom)?
+                let mut y = if nhwc {
+                    conv2d_nhwc_with(&self.pool, &x, &w, geom)?
+                } else {
+                    conv2d_with(&self.pool, &x, &w, geom)?
+                };
+                if nhwc {
+                    add_bias_nhwc(&mut y, &bias);
+                } else {
+                    add_bias_nchw(&mut y, &bias);
+                }
+                if let Some(r) = &residual {
+                    add_inplace(&mut y, r)?;
+                }
+                relu6_inplace(&mut y);
+                y
             };
-            if nhwc {
-                add_bias_nhwc(&mut y, &bias);
-            } else {
-                add_bias_nchw(&mut y, &bias);
-            }
-            if let Some(r) = &residual {
-                add_inplace(&mut y, r)?;
-            }
-            relu6_inplace(&mut y);
             if blk.pool_after {
                 y = if nhwc { max_pool_2x2_nhwc(&y) } else { max_pool_2x2(&y) };
             }
@@ -165,10 +232,14 @@ impl LatencySource for HostKernelSource {
     }
 
     fn name(&self) -> String {
-        match self.layout {
-            Layout::Nchw => format!("host/{}threads", self.threads),
-            Layout::Nhwc => format!("host/{}threads/nhwc", self.threads),
+        let mut s = format!("host/{}threads", self.threads);
+        if self.layout == Layout::Nhwc {
+            s.push_str("/nhwc");
         }
+        if self.precision == Precision::Fast {
+            s.push_str("/fast");
+        }
+        s
     }
 }
 
@@ -179,7 +250,7 @@ impl LatencySource for HostKernelSource {
 pub enum SourceSpec {
     Analytical { dev: &'static Device, mode: ExecMode },
     Measured { mode: ExecMode },
-    Host { threads: Option<usize>, layout: Layout },
+    Host { threads: Option<usize>, layout: Layout, precision: Precision },
 }
 
 impl SourceSpec {
@@ -190,7 +261,8 @@ impl SourceSpec {
 
     /// Grammar (see module docs):
     ///   `analytical/<device>[/fused|eager]` | `sim:<device>` (legacy)
-    ///   | `measured[/fused|eager]` | `host[/<N>threads][/nhwc|nchw]`
+    ///   | `measured[/fused|eager]`
+    ///   | `host[/<N>threads][/nhwc|nchw][/fast]`
     pub fn parse_with_mode(s: &str, default_mode: ExecMode) -> Result<SourceSpec> {
         let s = s.trim();
         // legacy alias from the original LatencyCfg grammar
@@ -217,10 +289,13 @@ impl SourceSpec {
                 Ok(SourceSpec::Measured { mode })
             }
             "host" => {
-                // optional segments, in any order: <N>threads, nhwc|nchw
+                // optional segments, in any order: <N>threads,
+                // nhwc|nchw, exact|fast
                 let mut threads = None;
                 let mut layout = Layout::Nchw;
                 let mut seen_layout = false;
+                let mut precision = Precision::Exact;
+                let mut seen_precision = false;
                 for t in &rest {
                     if let Ok(lay) = Layout::parse(t) {
                         if seen_layout {
@@ -230,25 +305,31 @@ impl SourceSpec {
                         seen_layout = true;
                         continue;
                     }
-                    if threads.is_some() {
-                        bail!("source {s:?}: want host[/<N>threads][/nhwc|nchw]");
+                    if let Ok(p) = Precision::parse(t) {
+                        if seen_precision {
+                            bail!("source {s:?}: precision named twice");
+                        }
+                        precision = p;
+                        seen_precision = true;
+                        continue;
                     }
-                    let n = t
-                        .strip_suffix("threads")
-                        .unwrap_or(t)
-                        .parse::<usize>()
-                        .map_err(|_| anyhow!("source {s:?}: want host[/<N>threads][/nhwc|nchw]"))?;
+                    if threads.is_some() {
+                        bail!("source {s:?}: want host[/<N>threads][/nhwc|nchw][/fast]");
+                    }
+                    let n = t.strip_suffix("threads").unwrap_or(t).parse::<usize>().map_err(
+                        |_| anyhow!("source {s:?}: want host[/<N>threads][/nhwc|nchw][/fast]"),
+                    )?;
                     if n == 0 {
                         bail!("source {s:?}: thread count must be >= 1");
                     }
                     threads = Some(n);
                 }
-                Ok(SourceSpec::Host { threads, layout })
+                Ok(SourceSpec::Host { threads, layout, precision })
             }
             other => bail!(
                 "unknown latency source kind {other:?} in {s:?} \
                  (want analytical/<device>[/fused|eager], measured[/fused|eager], \
-                 host[/<N>threads][/nhwc|nchw], or legacy sim:<device>)"
+                 host[/<N>threads][/nhwc|nchw][/fast], or legacy sim:<device>)"
             ),
         }
     }
@@ -274,12 +355,16 @@ impl SourceSpec {
                 format!("analytical/{}/{}", dev.name, mode_name(*mode))
             }
             SourceSpec::Measured { mode } => format!("measured/{}", mode_name(*mode)),
-            SourceSpec::Host { threads, layout } => {
+            SourceSpec::Host { threads, layout, precision } => {
                 let n = threads.unwrap_or_else(|| Pool::global().workers());
-                match layout {
-                    Layout::Nchw => format!("host/{n}threads"),
-                    Layout::Nhwc => format!("host/{n}threads/nhwc"),
+                let mut s = format!("host/{n}threads");
+                if *layout == Layout::Nhwc {
+                    s.push_str("/nhwc");
                 }
+                if *precision == Precision::Fast {
+                    s.push_str("/fast");
+                }
+                s
             }
         }
     }
@@ -295,8 +380,8 @@ impl SourceSpec {
             SourceSpec::Analytical { dev, mode } => {
                 Ok(Box::new(Analytical { dev: *dev, mode: *mode }))
             }
-            SourceSpec::Host { threads, layout } => {
-                Ok(Box::new(HostKernelSource::with_layout(*threads, *layout)))
+            SourceSpec::Host { threads, layout, precision } => {
+                Ok(Box::new(HostKernelSource::with_precision(*threads, *layout, *precision)))
             }
             SourceSpec::Measured { mode } => {
                 let (engine, arch) = engine.ok_or_else(|| {
@@ -349,27 +434,42 @@ mod tests {
         );
         assert_eq!(
             SourceSpec::parse("host/8threads").unwrap(),
-            SourceSpec::Host { threads: Some(8), layout: Layout::Nchw }
+            SourceSpec::Host { threads: Some(8), layout: Layout::Nchw, precision: Precision::Exact }
         );
         assert_eq!(SourceSpec::parse("host/8threads").unwrap().label(), "host/8threads");
         assert_eq!(
             SourceSpec::parse("host").unwrap(),
-            SourceSpec::Host { threads: None, layout: Layout::Nchw }
+            SourceSpec::Host { threads: None, layout: Layout::Nchw, precision: Precision::Exact }
         );
         // layout segment, in either position
         assert_eq!(
             SourceSpec::parse("host/8threads/nhwc").unwrap(),
-            SourceSpec::Host { threads: Some(8), layout: Layout::Nhwc }
+            SourceSpec::Host { threads: Some(8), layout: Layout::Nhwc, precision: Precision::Exact }
         );
         assert_eq!(
             SourceSpec::parse("host/nhwc/8threads").unwrap(),
-            SourceSpec::Host { threads: Some(8), layout: Layout::Nhwc }
+            SourceSpec::Host { threads: Some(8), layout: Layout::Nhwc, precision: Precision::Exact }
         );
         assert_eq!(SourceSpec::parse("host/8threads/nhwc").unwrap().label(), "host/8threads/nhwc");
         assert_eq!(
             SourceSpec::parse("host/nchw").unwrap(),
-            SourceSpec::Host { threads: None, layout: Layout::Nchw }
+            SourceSpec::Host { threads: None, layout: Layout::Nchw, precision: Precision::Exact }
         );
+        // precision segment composes with the others, in any order
+        assert_eq!(
+            SourceSpec::parse("host/4threads/fast").unwrap(),
+            SourceSpec::Host { threads: Some(4), layout: Layout::Nchw, precision: Precision::Fast }
+        );
+        assert_eq!(
+            SourceSpec::parse("host/fast/nhwc/4threads").unwrap(),
+            SourceSpec::Host { threads: Some(4), layout: Layout::Nhwc, precision: Precision::Fast }
+        );
+        assert_eq!(
+            SourceSpec::parse("host/4threads/nhwc/fast").unwrap().label(),
+            "host/4threads/nhwc/fast"
+        );
+        // an explicit `exact` is accepted and label-invisible (the default)
+        assert_eq!(SourceSpec::parse("host/4threads/exact").unwrap().label(), "host/4threads");
         assert_eq!(
             SourceSpec::parse("measured/eager").unwrap(),
             SourceSpec::Measured { mode: ExecMode::Eager }
@@ -387,8 +487,9 @@ mod tests {
         assert!(SourceSpec::parse("analytical/tpu9000").is_err());
         assert!(SourceSpec::parse("analytical/rtx3090/turbo").is_err());
         assert!(SourceSpec::parse("host/0threads").is_err());
-        assert!(SourceSpec::parse("host/fast").is_err());
+        assert!(SourceSpec::parse("host/turbo").is_err());
         assert!(SourceSpec::parse("host/nhwc/nchw").is_err()); // layout twice
+        assert!(SourceSpec::parse("host/fast/exact").is_err()); // precision twice
         assert!(SourceSpec::parse("host/2threads/4threads").is_err());
         assert!(SourceSpec::parse("quantum").is_err());
         assert!(SourceSpec::parse_list(" , ", ExecMode::Fused).is_err());
@@ -402,7 +503,10 @@ mod tests {
         )
         .unwrap();
         assert_eq!(specs.len(), 3);
-        assert_eq!(specs[2], SourceSpec::Host { threads: Some(2), layout: Layout::Nchw });
+        assert_eq!(
+            specs[2],
+            SourceSpec::Host { threads: Some(2), layout: Layout::Nchw, precision: Precision::Exact }
+        );
     }
 
     #[test]
@@ -416,7 +520,14 @@ mod tests {
 
     #[test]
     fn built_name_matches_label() {
-        for s in ["analytical/rtx3090/eager", "host/3threads", "host", "host/3threads/nhwc"] {
+        for s in [
+            "analytical/rtx3090/eager",
+            "host/3threads",
+            "host",
+            "host/3threads/nhwc",
+            "host/3threads/fast",
+            "host/3threads/nhwc/fast",
+        ] {
             let spec = SourceSpec::parse(s).unwrap();
             assert_eq!(spec.build(None).unwrap().name(), spec.label());
         }
@@ -445,6 +556,17 @@ mod tests {
         assert_eq!(bl.entries.len(), cfg.blocks.len());
         assert!(bl.entries.iter().all(|e| e.2 > 0.0));
         assert_eq!(bl.source, "host/2threads/nhwc");
+        // the fast tier prices the Winograd + fused-epilogue chain for
+        // the same block set, in both layouts
+        for layout in [Layout::Nchw, Layout::Nhwc] {
+            let mut src = HostKernelSource::with_precision(Some(2), layout, Precision::Fast);
+            src.warmup = 1;
+            src.reps = 3;
+            let bl = BlockLatencies::measure(&cfg, &mut src, 2, 1000.0).unwrap();
+            assert_eq!(bl.entries.len(), cfg.blocks.len());
+            assert!(bl.entries.iter().all(|e| e.2 > 0.0));
+            assert!(bl.source.ends_with("/fast"), "fast source name {:?}", bl.source);
+        }
     }
 
     /// The ISSUE acceptance pin: the host source's per-block prices must

@@ -30,7 +30,37 @@ pub struct BlockLatencies {
     idx: HashMap<(usize, usize), usize>,
 }
 
+/// Pick a ticks-per-ms scale from a table's measured block range so the
+/// cheapest block lands at ~[`CALIBRATION_TICKS`] ticks.  A fixed
+/// global scale gives wildly different tick resolution across sources —
+/// an analytical GPU model prices blocks in microseconds while the host
+/// source prices them in milliseconds, so in a joint `sweep --pareto`
+/// one device's table collapses into the >=1-tick clamp while another's
+/// overflows the budget axis.  Calibrating per source makes relative
+/// resolution uniform.  Non-positive or empty inputs fall back to the
+/// historical default of 200 ticks/ms.
+pub fn calibrate_scale(entries: &[(usize, usize, f64)]) -> f64 {
+    let min_ms = entries.iter().map(|e| e.2).filter(|&ms| ms > 0.0).fold(f64::INFINITY, f64::min);
+    if !min_ms.is_finite() {
+        return 200.0;
+    }
+    CALIBRATION_TICKS / min_ms
+}
+
+/// Ticks the cheapest block maps to under [`calibrate_scale`] — coarse
+/// enough that tick counts stay small for the DP, fine enough that the
+/// >=1-tick clamp only ever fires on genuinely degenerate blocks.
+pub const CALIBRATION_TICKS: f64 = 50.0;
+
 impl BlockLatencies {
+    /// Re-derive `scale` from this table's own entries (see
+    /// [`calibrate_scale`]) — what `sweep` applies per source when no
+    /// explicit `--scale` is given.
+    pub fn with_calibrated_scale(mut self) -> BlockLatencies {
+        self.scale = calibrate_scale(&self.entries);
+        self
+    }
+
     pub fn new(
         source: String,
         batch: usize,
@@ -203,6 +233,27 @@ mod tests {
         let t = bl.to_lat_table(1);
         assert_eq!(t.get(0, 1), 1);
         assert_eq!(bl.ms_to_ticks(0.004), t.get(0, 1));
+    }
+
+    #[test]
+    fn calibration_targets_the_cheapest_block() {
+        // microsecond-range entries (an analytical GPU table)
+        let us = vec![(0, 1, 0.002), (1, 2, 0.008), (0, 2, 0.009)];
+        let s = calibrate_scale(&us);
+        let bl = BlockLatencies::new("x".into(), 1, s, us.clone());
+        assert_eq!(bl.ms_to_ticks(0.002), CALIBRATION_TICKS as u64);
+        // millisecond-range entries (a host table) land on the SAME
+        // tick count for their cheapest block: uniform resolution
+        let ms = vec![(0, 1, 1.7), (1, 2, 6.0)];
+        let bl2 = BlockLatencies::new("x".into(), 1, calibrate_scale(&ms), ms)
+            .with_calibrated_scale();
+        assert_eq!(bl2.ms_to_ticks(1.7), CALIBRATION_TICKS as u64);
+        // the >=1-tick clamp stays pinned under a calibrated scale
+        assert_eq!(bl2.ms_to_ticks(1e-9), 1);
+        // degenerate inputs fall back to the historical default
+        assert_eq!(calibrate_scale(&[]), 200.0);
+        assert_eq!(calibrate_scale(&[(0, 1, 0.0)]), 200.0);
+        assert_eq!(calibrate_scale(&[(0, 1, -3.0)]), 200.0);
     }
 
     #[test]

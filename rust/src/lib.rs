@@ -30,12 +30,18 @@
 //!                pool, deterministic chunk schedule), `simd` (F32x8
 //!                lane type + runtime AVX2 dispatch), `gemm`
 //!                (explicit-lane cache-blocked f32 GEMM + transposed
-//!                fast path), `conv` (NCHW im2col+GEMM and NHWC
-//!                channels-last fast paths: 1x1 without im2col,
-//!                depthwise stencil), `elementwise` (bias/relu6/
-//!                residual/pool/GAP in both layouts).  Byte-identical
-//!                at any thread count, SIMD level, and layout; every
-//!                host-side compute path routes here.
+//!                fast path + fused bias/residual/relu6 epilogues),
+//!                `conv` (NCHW im2col+GEMM and NHWC channels-last
+//!                fast paths: 1x1 without im2col, depthwise stencil),
+//!                `winograd` (F(2x2,3x3) for dense stride-1 pad-1
+//!                3x3 convs), `elementwise` (bias/relu6/residual/
+//!                pool/GAP in both layouts).  Two determinism tiers
+//!                ([`kernels::conv::Precision`]): `exact` (the
+//!                default) is byte-identical at any thread count,
+//!                SIMD level, and layout; `fast` adds Winograd +
+//!                fused epilogues under a pinned relative-error
+//!                tolerance against `exact`.  Every host-side compute
+//!                path routes here.
 //!   latency    — the source registry (`source`: one `--source` spec
 //!                grammar over analytical GPU models, the measured PJRT
 //!                source, and the native-kernel HostKernelSource that
@@ -76,7 +82,13 @@
 //! [`kernels::conv::Layout`] on `HostExec::with_options`): NHWC runs
 //! the channels-last fast paths (1x1 convs without im2col, depthwise
 //! stencil) with byte-identical logits, and the `host[/nhwc]` latency
-//! source prices blocks in the same layout.
+//! source prices blocks in the same layout.  A second knob picks the
+//! determinism tier (`--precision exact|fast`, or
+//! [`kernels::conv::Precision`] on `HostExec::with_precision`): `fast`
+//! serves eligible 3x3 convs through `kernels::winograd` and fuses the
+//! bias/residual/relu6 epilogues into the GEMM write-back, tolerance
+//! gated against the bit-pinned `exact` tier; the `host[/fast]`
+//! latency source prices blocks on the same fast chain.
 //!
 //! See `docs/ARCHITECTURE.md` for the paper-to-code map.
 
@@ -127,6 +139,7 @@ pub mod kernels {
     pub mod gemm;
     pub mod pool;
     pub mod simd;
+    pub mod winograd;
 }
 
 pub mod importance {

@@ -18,7 +18,7 @@ use repro::coordinator::server::{
 };
 use repro::data::synth::SynthSpec;
 use repro::importance::eval::ImportanceConfig;
-use repro::kernels::conv::Layout;
+use repro::kernels::conv::{Layout, Precision};
 use repro::latency::gpu_model::ExecMode;
 use repro::latency::source::SourceSpec;
 use repro::latency::table::BlockLatencies;
@@ -45,14 +45,16 @@ fn usage() -> &'static str {
                   [--alpha X --base]  per-device frontiers from one planner\n\
                   pass each; --pareto merges them into the joint\n\
                   cross-device Pareto CSV (provenance per row);\n\
-                  --target-ms auto-calibrates the budget per source\n\
+                  --target-ms auto-calibrates the budget per source;\n\
+                  --scale X pins ticks/ms (default: auto-calibrated\n\
+                  per source from its measured block range)\n\
        compress   --arch A --t0 MS [--alpha X --finetune-steps N --kd --backend B]\n\
        eval       --arch A [--ckpt PATH --backend B]\n\
        serve      --arch A [--clients N --requests N --max-batch N --max-wait-ms N]\n\
                   [--backend B --source SPEC --frac X --target-ms MS]\n\
-                  [--layout nchw|nhwc]\n\
+                  [--layout nchw|nhwc] [--precision exact|fast]\n\
                   [--policy drain|micro|steal --slo-ms MS --plans N\n\
-                  --shed-depth D] [--burst N --gap-us U]\n\
+                  --shed-depth D --steal-waves W] [--burst N --gap-us U]\n\
                   (host backend: artifact-free — prices blocks on the\n\
                   native kernels AND layout it serves with, picks plans\n\
                   off that frontier; --arch tiny = built-in fixture.\n\
@@ -67,13 +69,17 @@ fn usage() -> &'static str {
        analytical/<device>[/fused|eager]   roofline model; devices:\n\
                                            titan_xp rtx2080ti rtx3090 v100 xeon5220r\n\
        measured[/fused|eager]              AOT probes on PJRT (needs artifacts)\n\
-       host[/<N>threads][/nhwc|nchw]       wall-clock of the native serving kernels\n\
-                                           (channels-last when /nhwc)\n\
+       host[/<N>threads][/nhwc|nchw][/fast] wall-clock of the native serving kernels\n\
+                                           (channels-last when /nhwc; /fast prices\n\
+                                           the Winograd + fused-epilogue tier)\n\
        sim:<device>                        legacy alias for analytical/<device>\n\
      common: --artifacts DIR (default ./artifacts) --quiet\n\
              --backend pjrt|host (default pjrt; host = native kernels, no PJRT)\n\
              --layout nchw|nhwc (host serving layout; nhwc = channels-last\n\
-             fast paths, byte-identical logits)"
+             fast paths, byte-identical logits)\n\
+             --precision exact|fast (host determinism tier; exact = bit-pinned\n\
+             default, fast = Winograd F(2x2,3x3) + fused epilogues,\n\
+             tolerance-gated against exact)"
 }
 
 fn data_for(args: &Args, pipe: &Pipeline) -> Result<SynthSpec> {
@@ -230,7 +236,11 @@ fn main() -> Result<()> {
             let specs =
                 SourceSpec::parse_list(&args.str_or("source", "analytical/rtx2080ti"), mode)?;
             let batch = args.usize_or("batch", 128)?;
-            let scale = args.f64_or("scale", 200.0)?;
+            // no --scale = auto-calibrate ticks/ms PER SOURCE from its
+            // measured block range, so a microsecond-range analytical
+            // table and a millisecond-range host table get uniform tick
+            // resolution in the joint --pareto merge
+            let scale = args.f64_or("scale", 0.0)?;
             let alpha = args.f64_or("alpha", 1.6)?;
             let extended = !args.bool_flag("base");
             let points = args.usize_or("points", 12)?;
@@ -283,7 +293,13 @@ fn main() -> Result<()> {
                                 src.name()
                             );
                         }
-                        lats.push(BlockLatencies::measure(&cfg, src.as_mut(), batch, scale)?);
+                        let bl = BlockLatencies::measure(
+                            &cfg,
+                            src.as_mut(),
+                            batch,
+                            if scale > 0.0 { scale } else { 1.0 },
+                        )?;
+                        lats.push(if scale > 0.0 { bl } else { bl.with_calibrated_scale() });
                     }
                     repro::planner::deploy::deploy_from_tables(&cfg, lats, &imp, alpha, extended)
                 }
@@ -643,20 +659,28 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
     // a layout itself, so the planner prices blocks in the layout
     // HostExec will actually run
     let layout = Layout::parse(&args.str_or("layout", "nchw"))?;
+    let precision = Precision::parse(&args.str_or("precision", "exact"))?;
     let policy = Policy::parse(&args.str_or("policy", "drain"))?;
-    let source_str = args.str_or(
-        "source",
-        match layout {
-            Layout::Nchw => "host",
-            Layout::Nhwc => "host/nhwc",
-        },
-    );
+    let default_source = {
+        let mut s = String::from("host");
+        if layout == Layout::Nhwc {
+            s.push_str("/nhwc");
+        }
+        if precision == Precision::Fast {
+            s.push_str("/fast");
+        }
+        s
+    };
+    let source_str = args.str_or("source", &default_source);
     let spec = match SourceSpec::parse_with_mode(&source_str, mode)? {
-        // an explicit host source with no layout segment inherits the
-        // serving layout (a named /nchw|/nhwc segment always wins)
-        SourceSpec::Host { threads, layout: _ }
-            if !source_str.contains("nhwc") && !source_str.contains("nchw") =>
-        {
+        // an explicit host source inherits the serving layout and
+        // precision for any segment it does not name itself (a named
+        // /nchw|/nhwc or /exact|/fast segment always wins)
+        SourceSpec::Host { threads, layout: src_layout, precision: src_precision } => {
+            let names_layout =
+                source_str.contains("nhwc") || source_str.contains("nchw");
+            let names_precision =
+                source_str.contains("fast") || source_str.contains("exact");
             // work-steal executes each request serially (the wave is
             // the parallelism), so price blocks on ONE thread to match
             // what a dispatch actually costs — est_ms feeds deadline
@@ -665,7 +689,11 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
                 Policy::WorkSteal => threads.or(Some(1)),
                 _ => threads,
             };
-            SourceSpec::Host { threads, layout }
+            SourceSpec::Host {
+                threads,
+                layout: if names_layout { src_layout } else { layout },
+                precision: if names_precision { src_precision } else { precision },
+            }
         }
         s => s,
     };
@@ -754,7 +782,7 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
         Policy::WorkSteal => repro::kernels::pool::Pool::serial(),
         _ => repro::kernels::pool::Pool::global(),
     };
-    let mp = MultiPlanEngine::build(&cfg, &ps, &work, exec_pool, layout)?;
+    let mp = MultiPlanEngine::build_with_precision(&cfg, &ps, &work, exec_pool, layout, precision)?;
     let mut pt = Table::new(
         &format!("resident plans ({} of frontier [{}])", mp.len(), dp.sources()[si].label),
         &["plan", "convs", "est (ms)", "objective"],
@@ -777,6 +805,7 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
         admission: AdmissionCfg::slo(shed_depth, slo_ms),
         slo_ms,
         steal_workers: 0,
+        steal_waves: args.usize_or("steal-waves", 0)?,
     };
     let mut sched = Scheduler::new(mp, &[3, hw, hw], scfg)?;
     let mut data = if cfg.spec.num_classes <= 10 {
@@ -786,12 +815,13 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
     };
     data.num_classes = cfg.spec.num_classes;
     println!(
-        "[serve:host] {} — vanilla {} convs @ [{}], policy {}, slo {} ms, \
-         shed-depth {}",
+        "[serve:host] {} — vanilla {} convs @ [{}], policy {}, precision {}, \
+         slo {} ms, shed-depth {}",
         label,
         l,
         dp.sources()[si].label,
         policy.name(),
+        precision.name(),
         if slo_ms > 0.0 { fmt_ms(slo_ms) } else { "-".into() },
         shed_depth
     );

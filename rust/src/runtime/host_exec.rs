@@ -16,11 +16,21 @@
 //! convs are a contiguous stencil.  Both layouts produce byte-identical
 //! logits (the kernels keep one per-element accumulation order — see
 //! `kernels::gemm`'s determinism contract), which the tests here pin.
+//!
+//! A second knob picks the determinism tier
+//! ([`crate::kernels::conv::Precision`], `--precision exact|fast` on
+//! the CLI).  `Exact` — every constructor's default — is the bit-pinned
+//! chain above.  `Fast` routes dense stride-1 pad-1 3x3 convs through
+//! `kernels::winograd` F(2x2,3x3) (weight transforms hoisted into
+//! construction, next to the NHWC panels) and fuses the
+//! bias/residual/relu6 epilogue into the conv/GEMM write-back; its
+//! logits are tolerance-gated against `Exact`, not bit-pinned.
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::kernels::conv::{
-    conv2d_nhwc_packed, conv2d_with, nchw_to_nhwc, pack_nhwc, ConvGeom, Layout, NhwcPack,
+    conv2d_fused, conv2d_nhwc_packed, conv2d_nhwc_pointwise_fused, conv2d_with, nchw_to_nhwc,
+    pack_nhwc, ConvGeom, Layout, NhwcPack, Precision,
 };
 use crate::kernels::elementwise::{
     add_bias_nchw, add_bias_nhwc, add_inplace, argmax, global_avg_pool, global_avg_pool_nhwc,
@@ -28,6 +38,10 @@ use crate::kernels::elementwise::{
 };
 use crate::kernels::gemm::{linear, WeightLayout};
 use crate::kernels::pool::Pool;
+use crate::kernels::winograd::{
+    applies as winograd_applies, conv2d_winograd_fused, conv2d_winograd_fused_nhwc,
+    transform_weights, WinogradWeights,
+};
 use crate::merge::plan::{MergedLayer, MergedNet};
 use crate::tensor::Tensor;
 use crate::trainer::eval::EvalResult;
@@ -84,6 +98,12 @@ pub struct HostExec {
     /// policy runs many batch-1 forwards, where per-call packing was
     /// pure overhead
     nhwc_packs: Vec<NhwcPack>,
+    /// which determinism tier `forward` dispatches through
+    precision: Precision,
+    /// per-layer Winograd weight transforms, hoisted into construction
+    /// like `nhwc_packs` (empty under `Precision::Exact`; `None` for
+    /// layers the F(2x2,3x3) predicate rejects)
+    wino_packs: Vec<Option<WinogradWeights>>,
 }
 
 impl HostExec {
@@ -101,10 +121,30 @@ impl HostExec {
         self.layout
     }
 
+    /// The determinism tier this executor dispatches through.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
     /// Explicit worker pool AND activation layout.  `Layout::Nhwc`
     /// transposes the input once at graph entry and runs every layer
     /// channels-last; the logits are byte-identical to `Layout::Nchw`.
     pub fn with_options(net: MergedNet, pool: Pool, layout: Layout) -> Result<HostExec> {
+        HostExec::with_precision(net, pool, layout, Precision::Exact)
+    }
+
+    /// Full knob set: pool, layout, AND determinism tier.
+    /// `Precision::Exact` (what every other constructor picks) keeps
+    /// the bit-pinned reference chain; `Precision::Fast` pre-transforms
+    /// Winograd weights here — next to the NHWC panel packing — and
+    /// routes eligible layers through `kernels::winograd` with the
+    /// bias/residual/relu6 epilogue fused into the conv write-back.
+    pub fn with_precision(
+        net: MergedNet,
+        pool: Pool,
+        layout: Layout,
+        precision: Precision,
+    ) -> Result<HostExec> {
         if net.params.len() != 2 * net.layers.len() + 2 {
             bail!(
                 "merged net has {} params for {} layers (+fc pair expected)",
@@ -143,7 +183,23 @@ impl HostExec {
                 })
                 .collect(),
         };
-        Ok(HostExec { net, keep_seg, pool, layout, nhwc_packs })
+        let wino_packs = match precision {
+            Precision::Exact => Vec::new(),
+            Precision::Fast => net
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(li, ml)| {
+                    let g = ConvGeom { stride: ml.stride, pad: ml.pad, groups: ml.groups };
+                    if winograd_applies(ml.k, ml.k, g) {
+                        transform_weights(&net.params[2 * li]).map(Some)
+                    } else {
+                        Ok(None)
+                    }
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        Ok(HostExec { net, keep_seg, pool, layout, nhwc_packs, precision, wino_packs })
     }
 
     /// Serving-facing name for [`HostExec::forward`] — what the
@@ -175,28 +231,86 @@ impl HostExec {
             let w = &self.net.params[2 * li];
             let b = &self.net.params[2 * li + 1];
             let geom = ConvGeom { stride: ml.stride, pad: ml.pad, groups: ml.groups };
-            let mut y = if nhwc {
-                conv2d_nhwc_packed(&self.pool, &cur, w, &self.nhwc_packs[li], geom)?
-            } else {
-                conv2d_with(&self.pool, &cur, w, geom)?
-            };
-            if nhwc {
-                add_bias_nhwc(&mut y, &b.data);
-            } else {
-                add_bias_nchw(&mut y, &b.data);
-            }
-            if let Some(src) = ml.add_from_seg {
-                if src < 0 {
-                    bail!("residual from the network input is not supported");
+            // the residual source resolves the same way in both tiers;
+            // seg_out tensors are already in the executor's layout
+            let resid = match ml.add_from_seg {
+                None => None,
+                Some(src) => {
+                    if src < 0 {
+                        bail!("residual from the network input is not supported");
+                    }
+                    Some(
+                        seg_out[src as usize]
+                            .as_ref()
+                            .ok_or_else(|| anyhow!("residual source {src} was not retained"))?,
+                    )
                 }
-                let base = seg_out[src as usize]
-                    .as_ref()
-                    .ok_or_else(|| anyhow!("residual source {src} was not retained"))?;
-                add_inplace(&mut y, base)?;
-            }
-            if ml.act {
-                relu6_inplace(&mut y);
-            }
+            };
+            let fast = self.precision == Precision::Fast;
+            let wino = self.wino_packs.get(li).and_then(|o| o.as_ref());
+            let mut y = if fast && !nhwc {
+                if let Some(ww) = wino {
+                    conv2d_winograd_fused(&self.pool, &cur, ww, Some(&b.data), resid, ml.act)?
+                } else if ml.groups == 1 {
+                    conv2d_fused(&self.pool, &cur, w, geom, Some(&b.data), resid, ml.act)?
+                } else {
+                    // grouped/depthwise: per-group GEMM rows are too
+                    // short to fuse profitably — keep the exact chain
+                    let mut y = conv2d_with(&self.pool, &cur, w, geom)?;
+                    add_bias_nchw(&mut y, &b.data);
+                    if let Some(base) = resid {
+                        add_inplace(&mut y, base)?;
+                    }
+                    if ml.act {
+                        relu6_inplace(&mut y);
+                    }
+                    y
+                }
+            } else if fast && nhwc {
+                let pointwise = ml.k == 1 && ml.groups == 1 && ml.stride == 1 && ml.pad == 0;
+                if let Some(ww) = wino {
+                    conv2d_winograd_fused_nhwc(&self.pool, &cur, ww, Some(&b.data), resid, ml.act)?
+                } else if pointwise {
+                    conv2d_nhwc_pointwise_fused(
+                        &self.pool,
+                        &cur,
+                        w,
+                        &self.nhwc_packs[li],
+                        Some(&b.data),
+                        resid,
+                        ml.act,
+                    )?
+                } else {
+                    let mut y = conv2d_nhwc_packed(&self.pool, &cur, w, &self.nhwc_packs[li], geom)?;
+                    add_bias_nhwc(&mut y, &b.data);
+                    if let Some(base) = resid {
+                        add_inplace(&mut y, base)?;
+                    }
+                    if ml.act {
+                        relu6_inplace(&mut y);
+                    }
+                    y
+                }
+            } else {
+                // Precision::Exact — the bit-pinned reference chain
+                let mut y = if nhwc {
+                    conv2d_nhwc_packed(&self.pool, &cur, w, &self.nhwc_packs[li], geom)?
+                } else {
+                    conv2d_with(&self.pool, &cur, w, geom)?
+                };
+                if nhwc {
+                    add_bias_nhwc(&mut y, &b.data);
+                } else {
+                    add_bias_nchw(&mut y, &b.data);
+                }
+                if let Some(base) = resid {
+                    add_inplace(&mut y, base)?;
+                }
+                if ml.act {
+                    relu6_inplace(&mut y);
+                }
+                y
+            };
             if ml.pool_after {
                 y = if nhwc { max_pool_2x2_nhwc(&y) } else { max_pool_2x2(&y) };
             }
@@ -415,6 +529,87 @@ mod tests {
                     "NHWC logits differ from NCHW (plan s={s:?}, {workers} workers)"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn fast_precision_logits_match_exact_within_tolerance() {
+        // the end-to-end half of the two-tier contract: `fast` swaps in
+        // Winograd (different summation order) + fused epilogues, so
+        // its logits must sit within a pinned relative tolerance of the
+        // bit-pinned `exact` tier — on BOTH tiny fixtures (the merged
+        // plan and the all-singleton residual+depthwise plan), both
+        // layouts, serial and parallel
+        let cfg = tiny_config();
+        for (seed, s, a) in [
+            (61u64, vec![1usize, 4, 5], vec![4usize]),
+            (62, vec![1, 2, 3, 4, 5], vec![1, 2, 3, 5]), // residual + depthwise
+        ] {
+            let ps = ParamSet::synthetic(&cfg, seed);
+            let net = build_merged(&cfg, &ps, &s, &a).unwrap();
+            let x = rand_input(&[2, 3, 12, 12], seed + 1);
+            let exact = HostExec::with_options(net.clone_shallow(), Pool::serial(), Layout::Nchw)
+                .unwrap()
+                .forward(&x)
+                .unwrap();
+            let scale = exact.data.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+            let tol = 1e-3 * scale;
+            for layout in [Layout::Nchw, Layout::Nhwc] {
+                let mut per_workers = Vec::new();
+                for workers in [1usize, 3] {
+                    let exec = HostExec::with_precision(
+                        net.clone_shallow(),
+                        Pool::new(workers),
+                        layout,
+                        Precision::Fast,
+                    )
+                    .unwrap();
+                    assert_eq!(exec.precision(), Precision::Fast);
+                    let got = exec.forward(&x).unwrap();
+                    assert_eq!(got.shape, exact.shape);
+                    let d = got.max_abs_diff(&exact);
+                    assert!(
+                        (d as f32) < tol,
+                        "fast tier diverges from exact by {d} (tol {tol}, \
+                         plan s={s:?}, {layout:?}, {workers} workers)"
+                    );
+                    per_workers.push(got);
+                }
+                // fast keeps the SAME per-element order at every thread
+                // count, so it is still bit-stable against itself
+                assert!(
+                    bits_equal(&per_workers[0].data, &per_workers[1].data),
+                    "fast tier differs across thread counts ({layout:?}, s={s:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exact_precision_is_byte_identical_to_default_constructor() {
+        // `--precision exact` must be a no-op: with_precision(Exact)
+        // and the legacy constructors run the identical chain
+        let cfg = tiny_config();
+        let ps = ParamSet::synthetic(&cfg, 63);
+        let net = build_merged(&cfg, &ps, &[1, 2, 3, 4, 5], &[1, 2, 3, 5]).unwrap();
+        let x = rand_input(&[2, 3, 12, 12], 64);
+        for layout in [Layout::Nchw, Layout::Nhwc] {
+            let base = HostExec::with_options(net.clone_shallow(), Pool::new(2), layout)
+                .unwrap()
+                .forward(&x)
+                .unwrap();
+            let exact = HostExec::with_precision(
+                net.clone_shallow(),
+                Pool::new(2),
+                layout,
+                Precision::Exact,
+            )
+            .unwrap();
+            assert_eq!(exact.precision(), Precision::Exact);
+            assert!(
+                bits_equal(&base.data, &exact.forward(&x).unwrap().data),
+                "Precision::Exact changed bits vs the default constructor ({layout:?})"
+            );
         }
     }
 

@@ -27,7 +27,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use crate::kernels::conv::Layout;
+use crate::kernels::conv::{Layout, Precision};
 use crate::kernels::pool::Pool;
 use crate::merge::plan::build_merged;
 use crate::model::spec::ArchConfig;
@@ -66,6 +66,20 @@ impl MultiPlanEngine {
         pool: Pool,
         layout: Layout,
     ) -> Result<MultiPlanEngine> {
+        MultiPlanEngine::build_with_precision(cfg, ps, points, pool, layout, Precision::Exact)
+    }
+
+    /// [`MultiPlanEngine::build`] with an explicit determinism tier —
+    /// `Precision::Fast` constructs every resident `HostExec` on the
+    /// Winograd + fused-epilogue chain (`serve --precision fast`).
+    pub fn build_with_precision(
+        cfg: &ArchConfig,
+        ps: &ParamSet,
+        points: &[ParetoPoint],
+        pool: Pool,
+        layout: Layout,
+        precision: Precision,
+    ) -> Result<MultiPlanEngine> {
         if points.is_empty() {
             bail!("multi-plan engine needs at least one frontier point");
         }
@@ -79,7 +93,7 @@ impl MultiPlanEngine {
             }
             let net = build_merged(cfg, ps, &p.plan.s, &p.plan.a)?;
             let depth = net.depth();
-            execs.push(HostExec::with_options(net, pool, layout)?);
+            execs.push(HostExec::with_precision(net, pool, layout, precision)?);
             infos.push(PlanInfo {
                 label: p.source.clone(),
                 est_ms: p.est_ms,

@@ -133,6 +133,12 @@ pub struct SchedulerConfig {
     pub slo_ms: f64,
     /// workers for WorkSteal task waves; 0 = the global pool's count
     pub steal_workers: usize,
+    /// WorkSteal wave cap as a multiple of the steal workers — one wave
+    /// dequeues at most `steal_workers * steal_waves` requests (before
+    /// the `max_batch` floor).  0 = the historical default of 4.  Small
+    /// values re-check admission deadlines more often under backlog;
+    /// large values amortize queue handling.  Swept by `bench_serve`.
+    pub steal_waves: usize,
 }
 
 impl SchedulerConfig {
@@ -146,6 +152,7 @@ impl SchedulerConfig {
             admission: AdmissionCfg::open(),
             slo_ms: 0.0,
             steal_workers: 0,
+            steal_waves: 0,
         }
     }
 }
@@ -234,7 +241,8 @@ impl Scheduler {
                 Policy::DrainBatch => self.gather_batch(&mut queue, &rx, &mut open, &mut stats, false),
                 Policy::MicroBatch => self.gather_batch(&mut queue, &rx, &mut open, &mut stats, true),
                 Policy::WorkSteal => {
-                    let cap = (self.steal_pool.workers() * 4).max(self.cfg.max_batch);
+                    let waves = if self.cfg.steal_waves > 0 { self.cfg.steal_waves } else { 4 };
+                    let cap = (self.steal_pool.workers() * waves).max(self.cfg.max_batch);
                     let n = queue.len().min(cap);
                     queue.drain(..n).collect::<Vec<_>>()
                 }
@@ -602,6 +610,7 @@ mod tests {
                 admission: AdmissionCfg::slo(shed_depth, slo_ms),
                 slo_ms,
                 steal_workers: 2,
+                steal_waves: 0,
             };
             let mut sched = Scheduler::new(engine, &[3, hw, hw], cfg).unwrap();
             let n = 40;
@@ -657,6 +666,7 @@ mod tests {
                 admission: AdmissionCfg::open(),
                 slo_ms: 0.0,
                 steal_workers: 3,
+                steal_waves: 0,
             };
             let mut sched = Scheduler::new(engine, &[3, hw, hw], scfg).unwrap();
             let n = 12;
@@ -694,6 +704,7 @@ mod tests {
             admission: AdmissionCfg::open(),
             slo_ms: 0.0,
             steal_workers: 4,
+            steal_waves: 2,
         };
         let mut sched = Scheduler::new(engine, &[3, hw, hw], cfg).unwrap();
         let (rx, gen) = spawn_open_load(&data_for(hw), 16, vec![0]);
@@ -716,6 +727,7 @@ mod tests {
             admission: AdmissionCfg { shed_depth: 2, deadline: None },
             slo_ms: 0.0,
             steal_workers: 1,
+            steal_waves: 0,
         };
         let mut sched = Scheduler::new(engine, &[3, hw, hw], cfg).unwrap();
         // back-to-back burst far beyond the cap
@@ -783,6 +795,7 @@ mod tests {
             admission: AdmissionCfg::slo(0, slo_ms),
             slo_ms,
             steal_workers: 2,
+            steal_waves: 0,
         };
         let mut sched = Scheduler::new(engine, &[3, hw, hw], cfg).unwrap();
         let n = 120;

@@ -18,6 +18,11 @@ pub struct Stats {
     pub median_ns: f64,
     pub p10_ns: f64,
     pub p90_ns: f64,
+    /// fastest per-iteration sample — the least-noisy basis for A/B
+    /// speedup ratios (scheduler interference only ever ADDS time, so
+    /// the minimum is the best estimate of the true cost; medians of
+    /// two noisy runs can invert a genuine win)
+    pub min_ns: f64,
     pub iters: u64,
 }
 
@@ -28,6 +33,10 @@ impl Stats {
 
     pub fn median_us(&self) -> f64 {
         self.median_ns / 1e3
+    }
+
+    pub fn min_ms(&self) -> f64 {
+        self.min_ns / 1e6
     }
 }
 
@@ -83,6 +92,7 @@ impl Bencher {
             median_ns: q(0.5),
             p10_ns: q(0.1),
             p90_ns: q(0.9),
+            min_ns: samples[0],
             iters: total_iters,
         };
         println!(
@@ -130,6 +140,10 @@ mod tests {
         assert!(stats.median_ns > 0.0);
         assert!(stats.iters > 0);
         assert!(stats.p10_ns <= stats.p90_ns * 1.001);
+        // the minimum bounds every quantile and feeds speedup ratios
+        assert!(stats.min_ns > 0.0);
+        assert!(stats.min_ns <= stats.median_ns * 1.001);
+        assert!((stats.min_ms() - stats.min_ns / 1e6).abs() < 1e-12);
     }
 
     #[test]
