@@ -73,8 +73,7 @@ fn main() -> anyhow::Result<()> {
             max_wait: std::time::Duration::from_millis(2),
             admission: if legacy { AdmissionCfg::open() } else { AdmissionCfg::slo(64, slo_ms) },
             slo_ms: if legacy { 0.0 } else { slo_ms },
-            steal_workers: 0,
-            steal_waves: 0,
+            ..SchedulerConfig::default()
         };
         let mut sched = Scheduler::new(engine, &[3, hw, hw], scfg)?;
         let gaps = burst_trace(seed, n_req, gap_us, 16);

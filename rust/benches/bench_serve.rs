@@ -11,6 +11,11 @@
 //! trail shows the frontier degrade in action.  Reply accounting
 //! (served + shed == offered) is asserted — that part is load-
 //! independent and must never drift.
+//!
+//! A fault sweep re-runs the heavy load with the seeded chaos injector
+//! armed (panics, delay spikes, NaN poisoning) and records what the
+//! resilience machinery — retries, panic isolation, circuit breakers —
+//! costs per policy; the reply-contract asserts hold there too.
 
 use repro::coordinator::experiments::proxy_importance;
 use repro::data::synth::SynthSpec;
@@ -22,6 +27,7 @@ use repro::model::spec::testutil::tiny_config;
 use repro::planner::deploy::{DeployPlanner, ParetoPoint};
 use repro::planner::frontier::{Space, TableImportance};
 use repro::serve::admission::AdmissionCfg;
+use repro::serve::faults::{silence_injected_panics, FaultSpec};
 use repro::serve::multi_plan::MultiPlanEngine;
 use repro::serve::scheduler::{burst_trace, spawn_open_load, Policy, Scheduler, SchedulerConfig};
 use repro::serve::stats::ServeStats;
@@ -38,6 +44,7 @@ fn run_cell(
     gap_us: u64,
     legacy_open: bool,
     steal_waves: usize,
+    faults: Option<FaultSpec>,
 ) -> ServeStats {
     let cfg = tiny_config();
     let ps = ParamSet::synthetic(&cfg, SEED);
@@ -51,8 +58,10 @@ fn run_cell(
         max_wait: std::time::Duration::from_millis(2),
         admission: if legacy_open { AdmissionCfg::open() } else { AdmissionCfg::slo(64, SLO_MS) },
         slo_ms: if legacy_open { 0.0 } else { SLO_MS },
-        steal_workers: 0,
         steal_waves,
+        faults,
+        fault_seed: SEED,
+        ..SchedulerConfig::default()
     };
     let mut sched = Scheduler::new(engine, &[3, hw, hw], scfg).expect("scheduler");
     let mut data = SynthSpec::quickstart(hw);
@@ -115,7 +124,7 @@ fn main() {
             // drain doubles as the legacy baseline: open admission, no
             // controller — exactly the pre-subsystem server
             let legacy = policy == Policy::DrainBatch;
-            let stats = run_cell(&work, policy, gap_us, legacy, 0);
+            let stats = run_cell(&work, policy, gap_us, legacy, 0, None);
             println!(
                 "{load_name:<9} {:<6} served {:>4} shed {:>4} p50 {:>7.2} ms \
                  p95 {:>7.2} ms p99 {:>7.2} ms switches {}",
@@ -148,7 +157,7 @@ fn main() {
     // large caps let one claimant hold work past its deadline.
     let mut wave_cells = Vec::new();
     for waves in [1usize, 2, 4, 8] {
-        let stats = run_cell(&work, Policy::WorkSteal, 400, false, waves);
+        let stats = run_cell(&work, Policy::WorkSteal, 400, false, waves, None);
         println!(
             "steal-waves {waves}: served {:>4} shed {:>4} p99 {:>7.2} ms",
             stats.served,
@@ -159,6 +168,38 @@ fn main() {
     }
     let wave_records: Vec<(&str, Json)> =
         wave_cells.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+
+    // fault sweep: the same heavy load with seeded chaos armed — worker
+    // panics, latency spikes, NaN-poisoned activations.  run_cell's
+    // reply-contract asserts still apply: chaos may shed, it may not
+    // drop or double-reply.  Records what resilience costs (retries,
+    // breaker churn, shed) at the serving layer.
+    silence_injected_panics();
+    let chaos = FaultSpec::parse("panic:0.05,delay:2:0.1,nan:0.05").expect("chaos spec");
+    let mut fault_cells = Vec::new();
+    for policy in policies {
+        let stats = run_cell(&work, policy, 400, false, 0, Some(chaos.clone()));
+        println!(
+            "faults    {:<6} served {:>4} shed {:>4} retries {:>3} exec-fail {:>3} \
+             trips {} recov {} p99 {:>7.2} ms",
+            policy.name(),
+            stats.served,
+            stats.shed_total(),
+            stats.retries,
+            stats.exec_failures,
+            stats.breaker_trips,
+            stats.breaker_recoveries,
+            stats.percentile_ms(0.99),
+        );
+        let mut cell = cell_json(&stats);
+        if let Json::Obj(m) = &mut cell {
+            m.insert("retries".into(), Json::int(stats.retries as i64));
+            m.insert("exec_failures".into(), Json::int(stats.exec_failures as i64));
+            m.insert("breaker_trips".into(), Json::int(stats.breaker_trips as i64));
+            m.insert("breaker_recoveries".into(), Json::int(stats.breaker_recoveries as i64));
+        }
+        fault_cells.push((policy.name(), cell));
+    }
 
     // "holds the SLO" requires EVIDENCE: an empty percentile (0.0 on
     // zero served) must not read as a pass
@@ -178,6 +219,14 @@ fn main() {
         ("resident_plans", Json::int(work.len() as i64)),
         ("loads", Json::obj_from(load_records)),
         ("steal_wave_sweep", Json::obj_from(wave_records)),
+        (
+            "fault_sweep",
+            Json::obj_from(vec![
+                ("spec", Json::str_of(&chaos.summary())),
+                ("fault_seed", Json::int(SEED as i64)),
+                ("cells", Json::obj_from(fault_cells)),
+            ]),
+        ),
         (
             "acceptance",
             Json::obj_from(vec![

@@ -23,7 +23,7 @@ pub fn topk_channels_by_l1(w: &Tensor, k: usize) -> Vec<usize> {
             (o, s)
         })
         .collect();
-    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    scored.sort_by(|a, b| b.1.total_cmp(&a.1));
     let mut idx: Vec<usize> = scored[..k].iter().map(|&(o, _)| o).collect();
     idx.sort_unstable();
     idx

@@ -112,11 +112,7 @@ pub fn ds_search(
         bail!("k_active {} > {} mergeable IRBs", k_active, spans.len());
     }
     // least damage (highest importance) deactivated first
-    spans.sort_by(|x, y| {
-        irb_importance(cfg, imp, y)
-            .partial_cmp(&irb_importance(cfg, imp, x))
-            .unwrap()
-    });
+    spans.sort_by(|x, y| irb_importance(cfg, imp, y).total_cmp(&irb_importance(cfg, imp, x)));
     let deact: Vec<IrbSpan> = spans[..spans.len() - k_active].to_vec();
     ds_pattern(cfg, name, &deact)
 }

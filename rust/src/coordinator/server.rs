@@ -28,7 +28,8 @@ use crate::runtime::manifest::ArtifactDef;
 use crate::tensor::Tensor;
 
 pub use crate::serve::admission::{AdmissionCfg, ShedReason};
-pub use crate::serve::multi_plan::MultiPlanEngine;
+pub use crate::serve::faults::{silence_injected_panics, FaultSpec};
+pub use crate::serve::multi_plan::{BreakerCfg, MultiPlanEngine};
 pub use crate::serve::scheduler::{
     burst_trace, spawn_load, spawn_open_load, Policy, Reply, Request, Scheduler, SchedulerConfig,
 };
@@ -183,7 +184,10 @@ impl<'e> Server<'e> {
                 let pred = argmax(&logits.data[n * nc..(n + 1) * nc]);
                 let latency = r.submitted.elapsed();
                 stats.record_on_plan(latency.as_secs_f64() * 1e3, 0);
-                let _ = r.reply.send(Reply::Served { pred, latency, batch_size: bs, plan: 0 });
+                // a hung-up client is counted, same as the scheduler path
+                if r.reply.send(Reply::Served { pred, latency, batch_size: bs, plan: 0 }).is_err() {
+                    stats.reply_dropped += 1;
+                }
             }
             stats.batches += 1;
         }

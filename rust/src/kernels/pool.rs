@@ -11,9 +11,57 @@
 //! opens a `thread::scope`, which lets workers borrow the caller's
 //! stack data without `Arc` or `'static` bounds and joins them before
 //! returning.
+//!
+//! # Panic isolation
+//!
+//! A panicking task closure must cost one task, never the process: both
+//! entry points run each task under `catch_unwind`, recover (rather
+//! than propagate) poisoned queue/slot locks, and keep the remaining
+//! tasks running to completion with their results bit-exact.  The
+//! `try_*` variants surface per-task panics as data ([`TaskPanic`]) so
+//! the serving layer can reject ONE request and keep the process alive;
+//! the plain variants preserve the historical contract and re-raise the
+//! first captured panic once every sibling task has finished.
 
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+
+/// One task's captured panic, surfaced as data instead of cascading.
+#[derive(Debug, Clone)]
+pub struct TaskPanic {
+    /// index of the task (or chunk) whose closure panicked
+    pub index: usize,
+    /// stringified panic payload (`&str` / `String` payloads verbatim)
+    pub message: String,
+}
+
+impl std::fmt::Display for TaskPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "task {} panicked: {}", self.index, self.message)
+    }
+}
+
+/// Stringify a `catch_unwind` payload (panics carry `&str` or `String`
+/// in practice; anything else gets a placeholder).
+pub fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Lock, recovering from poison: the pool's mutexes only guard a
+/// hand-off (a chunk iterator cursor, a write-once result slot) and the
+/// guard is never held across user code, so the protected data is
+/// consistent even when a sibling worker panicked mid-task.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 #[derive(Debug, Clone, Copy)]
 pub struct Pool {
@@ -62,32 +110,56 @@ impl Pool {
     where
         F: Fn(usize, &mut [f32]) + Sync,
     {
+        let panics = self.try_for_each_chunk(out, chunk_len, f);
+        if let Some(first) = panics.first() {
+            panic!("{} pool chunk task(s) panicked; first: {first}", panics.len());
+        }
+    }
+
+    /// [`Pool::for_each_chunk`] with panic isolation: a panicking chunk
+    /// closure is captured (not propagated), its siblings run to
+    /// completion unperturbed, and the captured panics come back sorted
+    /// by chunk index.  An empty return means every chunk succeeded.
+    pub fn try_for_each_chunk<F>(&self, out: &mut [f32], chunk_len: usize, f: F) -> Vec<TaskPanic>
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
         if out.is_empty() {
-            return;
+            return Vec::new();
         }
         let chunk_len = chunk_len.max(1);
         let n_chunks = out.len().div_ceil(chunk_len);
+        let run = |n: usize, c: &mut [f32]| -> Option<TaskPanic> {
+            catch_unwind(AssertUnwindSafe(|| f(n, c)))
+                .err()
+                .map(|p| TaskPanic { index: n, message: panic_message(p.as_ref()) })
+        };
         if self.workers == 1 || n_chunks == 1 {
-            for (n, c) in out.chunks_mut(chunk_len).enumerate() {
-                f(n, c);
-            }
-            return;
+            return out.chunks_mut(chunk_len).enumerate().filter_map(|(n, c)| run(n, c)).collect();
         }
         let queue: Mutex<_> = Mutex::new(out.chunks_mut(chunk_len).enumerate());
+        let panics: Mutex<Vec<TaskPanic>> = Mutex::new(Vec::new());
         let threads = self.workers.min(n_chunks);
         std::thread::scope(|s| {
             for _ in 0..threads {
                 s.spawn(|| loop {
                     // pop one chunk per lock; contention is one lock per
                     // chunk, negligible next to the chunk's GEMM work
-                    let item = queue.lock().unwrap().next();
+                    let item = lock_recover(&queue).next();
                     match item {
-                        Some((n, c)) => f(n, c),
+                        Some((n, c)) => {
+                            if let Some(tp) = run(n, c) {
+                                lock_recover(&panics).push(tp);
+                            }
+                        }
                         None => break,
                     }
                 });
             }
         });
+        let mut panics = panics.into_inner().unwrap_or_else(PoisonError::into_inner);
+        panics.sort_by_key(|t| t.index);
+        panics
     }
 
     /// Task-parallel entry point: run `n` independent tasks on the
@@ -105,17 +177,41 @@ impl Pool {
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
+        self.try_run_tasks(n, f)
+            .into_iter()
+            .map(|r| r.unwrap_or_else(|tp| panic!("pool {tp}")))
+            .collect()
+    }
+
+    /// [`Pool::run_tasks`] with panic isolation: each task's result
+    /// comes back as `Ok(T)` or `Err(TaskPanic)` in task order, and one
+    /// panicking task neither aborts the scope nor perturbs its
+    /// siblings' results — the substrate that lets the serving layer
+    /// answer `Rejected{Internal}` for exactly the request whose
+    /// execution blew up.
+    pub fn try_run_tasks<T, F>(&self, n: usize, f: F) -> Vec<Result<T, TaskPanic>>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let run = |i: usize| -> Result<T, TaskPanic> {
+            catch_unwind(AssertUnwindSafe(|| f(i)))
+                .map_err(|p| TaskPanic { index: i, message: panic_message(p.as_ref()) })
+        };
         if n == 0 {
             return Vec::new();
         }
         if self.workers == 1 || n == 1 {
-            return (0..n).map(&f).collect();
+            return (0..n).map(run).collect();
         }
         let next = AtomicUsize::new(0);
         // one slot per task; each slot is written exactly once by the
         // worker that stole its index (the per-slot mutex is only there
-        // to make that hand-off safe — it is never contended)
-        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        // to make that hand-off safe — it is never contended, and the
+        // write happens after `run` returns, so user panics can never
+        // poison it)
+        let slots: Vec<Mutex<Option<Result<T, TaskPanic>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
         let threads = self.workers.min(n);
         std::thread::scope(|s| {
             for _ in 0..threads {
@@ -124,13 +220,18 @@ impl Pool {
                     if i >= n {
                         break;
                     }
-                    *slots[i].lock().unwrap() = Some(f(i));
+                    let r = run(i);
+                    *lock_recover(&slots[i]) = Some(r);
                 });
             }
         });
         slots
             .into_iter()
-            .map(|m| m.into_inner().unwrap().expect("task slot unfilled"))
+            .map(|m| {
+                m.into_inner()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .expect("task slot unfilled")
+            })
             .collect()
     }
 }
@@ -217,5 +318,98 @@ mod tests {
         let none: Vec<u32> = Pool::new(4).run_tasks(0, |_| panic!("no tasks expected"));
         assert!(none.is_empty());
         assert_eq!(Pool::new(4).run_tasks(1, |i| i + 7), vec![7]);
+    }
+
+    // deterministic float task shared by the isolation tests
+    fn float_task(i: usize) -> u32 {
+        let mut acc = 0.41f32 + i as f32;
+        for k in 0..100 {
+            acc = acc * 1.000001 + (k as f32).sin();
+        }
+        acc.to_bits()
+    }
+
+    #[test]
+    fn panicking_task_is_isolated_and_pool_stays_usable() {
+        crate::serve::faults::silence_injected_panics();
+        let serial: Vec<u32> = (0..30).map(float_task).collect();
+        for workers in [1usize, 2, 6] {
+            let pool = Pool::new(workers);
+            let got = pool.try_run_tasks(30, |i| {
+                if i == 13 {
+                    panic!("{} boom on 13", crate::serve::faults::PANIC_MARK);
+                }
+                float_task(i)
+            });
+            assert_eq!(got.len(), 30, "{workers} workers");
+            for (i, r) in got.iter().enumerate() {
+                if i == 13 {
+                    let tp = r.as_ref().unwrap_err();
+                    assert_eq!(tp.index, 13);
+                    assert!(tp.message.contains("boom on 13"), "payload: {}", tp.message);
+                } else {
+                    // the survivors' results are bit-exact vs serial —
+                    // the panic perturbed nothing
+                    assert_eq!(*r.as_ref().unwrap(), serial[i], "task {i}, {workers} workers");
+                }
+            }
+            // the SAME pool value keeps working afterwards: no poisoned
+            // state survives the scope
+            assert_eq!(pool.run_tasks(30, float_task), serial, "{workers} workers, reuse");
+            let mut out = vec![0.0f32; 64];
+            pool.for_each_chunk(&mut out, 16, |n, c| c.fill(n as f32));
+            assert!(out[..16].iter().all(|&v| v == 0.0) && out[48..].iter().all(|&v| v == 3.0));
+        }
+    }
+
+    #[test]
+    fn panicking_chunk_is_isolated_and_siblings_bit_exact() {
+        crate::serve::faults::silence_injected_panics();
+        let work = |n: usize, c: &mut [f32]| {
+            let mut acc = 0.23f32 + n as f32;
+            for (i, v) in c.iter_mut().enumerate() {
+                acc = acc * 1.000001 + (i as f32).sin();
+                *v = acc;
+            }
+        };
+        let mut want = vec![0.0f32; 1000];
+        Pool::serial().for_each_chunk(&mut want, 96, work);
+        for workers in [1usize, 4] {
+            let mut out = vec![-1.0f32; 1000];
+            let panics = Pool::new(workers).try_for_each_chunk(&mut out, 96, |n, c| {
+                if n == 5 {
+                    panic!("{} chunk 5 died", crate::serve::faults::PANIC_MARK);
+                }
+                work(n, c);
+            });
+            assert_eq!(panics.len(), 1, "{workers} workers");
+            assert_eq!(panics[0].index, 5);
+            for (i, (&got, &exp)) in out.iter().zip(&want).enumerate() {
+                if i / 96 == 5 {
+                    continue; // the dead chunk's contents are unspecified
+                }
+                assert_eq!(got.to_bits(), exp.to_bits(), "elem {i}, {workers} workers");
+            }
+        }
+    }
+
+    #[test]
+    fn plain_entry_points_still_propagate_panics() {
+        crate::serve::faults::silence_injected_panics();
+        let mark = crate::serve::faults::PANIC_MARK;
+        let caught = std::panic::catch_unwind(|| {
+            Pool::new(3).run_tasks(8, |i| if i == 2 { panic!("{mark} die") } else { i })
+        });
+        let msg = panic_message(caught.unwrap_err().as_ref());
+        assert!(msg.contains("task 2"), "re-raise should name the task: {msg}");
+        let caught = std::panic::catch_unwind(|| {
+            let mut out = vec![0.0f32; 100];
+            Pool::new(3).for_each_chunk(&mut out, 10, |n, _| {
+                if n >= 7 {
+                    panic!("{mark} die")
+                }
+            });
+        });
+        assert!(panic_message(caught.unwrap_err().as_ref()).contains("panicked"));
     }
 }

@@ -227,7 +227,7 @@ impl LatencySource for HostKernelSource {
             std::hint::black_box(run()?);
             samples.push(t.elapsed().as_secs_f64() * 1e3);
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(|a, b| a.total_cmp(b));
         Ok(samples[samples.len() / 2])
     }
 

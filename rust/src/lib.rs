@@ -52,8 +52,11 @@
 //!                request lifecycle), `admission` (queue-depth caps +
 //!                deadline shedding with explicit rejects), `multi_plan`
 //!                (N resident HostExecs off the DeployPlanner frontier +
-//!                hysteresis SLO controller), `stats` (percentiles, shed
-//!                counters, the serve JSON report).
+//!                hysteresis SLO controller + per-plan circuit
+//!                breakers), `faults` (seeded chaos injection: panics,
+//!                delays, NaN poisoning on a deterministic schedule),
+//!                `stats` (percentiles, shed counters, the serve JSON
+//!                report).
 //!   coordinator— pipeline stages (pretrain -> tables -> plan -> finetune
 //!                -> merge -> eval), experiment runners; `server` is a
 //!                thin shim re-exporting the serve subsystem (plus the
@@ -161,6 +164,7 @@ pub mod runtime {
 
 pub mod serve {
     pub mod admission;
+    pub mod faults;
     pub mod multi_plan;
     pub mod scheduler;
     pub mod stats;

@@ -13,8 +13,8 @@ use anyhow::{anyhow, bail, Result};
 use repro::coordinator::pipeline::{LatencyCfg, Pipeline};
 use repro::coordinator::report::{fmt_acc, fmt_ms, Table};
 use repro::coordinator::server::{
-    burst_trace, spawn_load, spawn_open_load, AdmissionCfg, MultiPlanEngine, Policy, Scheduler,
-    SchedulerConfig, Server, ServerConfig,
+    burst_trace, silence_injected_panics, spawn_load, spawn_open_load, AdmissionCfg, FaultSpec,
+    MultiPlanEngine, Policy, Scheduler, SchedulerConfig, Server, ServerConfig,
 };
 use repro::data::synth::SynthSpec;
 use repro::importance::eval::ImportanceConfig;
@@ -55,6 +55,8 @@ fn usage() -> &'static str {
                   [--layout nchw|nhwc] [--precision exact|fast]\n\
                   [--policy drain|micro|steal --slo-ms MS --plans N\n\
                   --shed-depth D --steal-waves W] [--burst N --gap-us U]\n\
+                  [--retries N] [--faults panic:<p>,delay:<ms>:<p>,nan:<p>\n\
+                  --fault-seed S]\n\
                   (host backend: artifact-free — prices blocks on the\n\
                   native kernels AND layout it serves with, picks plans\n\
                   off that frontier; --arch tiny = built-in fixture.\n\
@@ -63,7 +65,12 @@ fn usage() -> &'static str {
                   plans resident and a hysteresis controller switches on\n\
                   observed p95 vs --slo-ms; --shed-depth caps the queue\n\
                   and --slo-ms sheds unmeetable requests explicitly;\n\
-                  --burst N = seeded open-loop overload trace; writes\n\
+                  --burst N = seeded open-loop overload trace;\n\
+                  --retries N = bounded re-execution after a failed\n\
+                  attempt (deadline-gated); --faults injects seeded\n\
+                  chaos — worker panics, latency spikes, NaN-poisoned\n\
+                  activations — to exercise panic isolation, retries,\n\
+                  and the per-plan circuit breakers; writes\n\
                   reports/serve_<arch>.json)\n\
      --source SPEC grammar (the latency-source registry):\n\
        analytical/<device>[/fused|eager]   roofline model; devices:\n\
@@ -172,7 +179,8 @@ fn main() -> Result<()> {
             );
             let mut t = Table::new("slowest blocks", &["(i,j]", "ms"]);
             let mut es = bl.entries.clone();
-            es.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+            // total_cmp: a NaN entry must not panic the report
+            es.sort_by(|a, b| b.2.total_cmp(&a.2));
             for &(i, j, ms) in es.iter().take(8) {
                 t.row(vec![format!("({i},{j}]"), fmt_ms(ms)]);
             }
@@ -798,14 +806,34 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
     }
     print!("{}", pt.render());
     let hw = cfg.spec.input_hw;
+    // seeded chaos: --faults arms the injector, and injected panics are
+    // muted at the hook so a high rate doesn't bury the report
+    let faults = match args.str_opt("faults") {
+        Some(s) => {
+            let spec = FaultSpec::parse(&s)?;
+            if !spec.is_noop() {
+                silence_injected_panics();
+                println!(
+                    "[serve:host] chaos armed: {} (seed {})",
+                    spec.summary(),
+                    args.u64_or("fault-seed", 1)?
+                );
+            }
+            Some(spec)
+        }
+        None => None,
+    };
     let scfg = SchedulerConfig {
         policy,
         max_batch,
         max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 4)?),
         admission: AdmissionCfg::slo(shed_depth, slo_ms),
         slo_ms,
-        steal_workers: 0,
         steal_waves: args.usize_or("steal-waves", 0)?,
+        retries: args.usize_or("retries", 1)?,
+        faults,
+        fault_seed: args.u64_or("fault-seed", 1)?,
+        ..SchedulerConfig::default()
     };
     let mut sched = Scheduler::new(mp, &[3, hw, hw], scfg)?;
     let mut data = if cfg.spec.num_classes <= 10 {
@@ -863,6 +891,19 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
         "shed (queue/deadline)".into(),
         format!("{}/{}", stats.shed_queue, stats.shed_deadline),
     ]);
+    t.row(vec![
+        "shed (internal/timeout)".into(),
+        format!("{}/{}", stats.shed_internal, stats.shed_timeout),
+    ]);
+    t.row(vec![
+        "exec failures / retries".into(),
+        format!("{}/{}", stats.exec_failures, stats.retries),
+    ]);
+    t.row(vec![
+        "breaker trips / recoveries".into(),
+        format!("{}/{}", stats.breaker_trips, stats.breaker_recoveries),
+    ]);
+    t.row(vec!["dropped replies".into(), stats.reply_dropped.to_string()]);
     t.row(vec!["throughput (req/s)".into(), format!("{:.1}", stats.throughput())]);
     t.row(vec!["p50 latency (ms)".into(), format!("{:.2}", stats.percentile_ms(0.5))]);
     t.row(vec!["p95 latency (ms)".into(), format!("{:.2}", stats.percentile_ms(0.95))]);
@@ -880,6 +921,9 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
     print!("{}", t.render());
     for &(wave, from, to) in &stats.switch_log {
         println!("[serve:host] plan switch at wave {wave}: {from} -> {to}");
+    }
+    for &(wave, plan, ev) in &stats.breaker_log {
+        println!("[serve:host] breaker {ev} on plan {plan} at wave {wave}");
     }
     // the serve report record (shed counters + switch trail included)
     let dir = root.join("reports");

@@ -344,11 +344,10 @@ pub fn deploy_from_tables(
 /// ascending (importance then strictly ascends).  Duplicate
 /// (latency, importance) pairs keep their first representative.
 pub fn pareto_front(mut points: Vec<ParetoPoint>) -> Vec<ParetoPoint> {
+    // total_cmp: a NaN estimate (e.g. the uncompressed-fallback point)
+    // must not panic the dominance filter — it orders last and loses
     points.sort_by(|a, b| {
-        a.est_ms
-            .partial_cmp(&b.est_ms)
-            .unwrap()
-            .then(b.plan.imp_total.partial_cmp(&a.plan.imp_total).unwrap())
+        a.est_ms.total_cmp(&b.est_ms).then(b.plan.imp_total.total_cmp(&a.plan.imp_total))
     });
     let mut out: Vec<ParetoPoint> = Vec::new();
     let mut best_imp = f64::NEG_INFINITY;

@@ -178,7 +178,7 @@ impl Engine {
             let _ = out[0][0].to_literal_sync()?;
             times.push(t0.elapsed().as_secs_f64() * 1e3);
         }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times.sort_by(|a, b| a.total_cmp(b));
         Ok(times[times.len() / 2])
     }
 

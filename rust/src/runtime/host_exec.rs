@@ -209,6 +209,26 @@ impl HostExec {
         self.forward(x)
     }
 
+    /// [`HostExec::logits`] plus a non-finite output guard.  The
+    /// serving layer routes here so a poisoned activation (NaN/Inf from
+    /// a corrupt input or a numerically broken plan) surfaces as a
+    /// recoverable error — one `Rejected{Internal}` reply — instead of
+    /// a NaN prediction silently served as class 0.  The forward math
+    /// itself cannot catch this: relu6 clamps propagate NaN and argmax
+    /// over an all-NaN row quietly returns index 0.
+    pub fn logits_checked(&self, x: &Tensor) -> Result<Tensor> {
+        let y = self.forward(x)?;
+        if let Some(pos) = y.data.iter().position(|v| !v.is_finite()) {
+            let nc = y.shape.get(1).copied().unwrap_or(1).max(1);
+            bail!(
+                "non-finite logit {} at batch entry {} (flat index {pos}): poisoned activation",
+                y.data[pos],
+                pos / nc
+            );
+        }
+        Ok(y)
+    }
+
     /// Logits for a batch — any size, executed at that size.  Input is
     /// always NCHW (the checkpoint/data layout); in NHWC mode the ONLY
     /// transpose happens here at graph entry — GAP collapses the
@@ -403,6 +423,26 @@ mod tests {
             WeightLayout::InOut,
         )
         .unwrap()
+    }
+
+    #[test]
+    fn logits_checked_rejects_poisoned_activations() {
+        let cfg = tiny_config();
+        let ps = ParamSet::synthetic(&cfg, 31);
+        let net = build_merged(&cfg, &ps, &[1, 4, 5], &[4]).unwrap();
+        let exec = HostExec::new(net).unwrap();
+        let hw = cfg.spec.input_hw;
+        // clean input: checked == unchecked, byte for byte
+        let x = rand_input(&[1, 3, hw, hw], 9);
+        let a = exec.logits(&x).unwrap();
+        let b = exec.logits_checked(&x).unwrap();
+        assert!(bits_equal(&a.data, &b.data));
+        // all-NaN input: the plain forward silently yields NaN logits
+        // (relu6 clamps propagate NaN), the checked one refuses
+        let poisoned = Tensor::from_vec(&[1, 3, hw, hw], vec![f32::NAN; 3 * hw * hw]).unwrap();
+        assert!(exec.logits(&poisoned).unwrap().data.iter().all(|v| v.is_nan()));
+        let err = exec.logits_checked(&poisoned).unwrap_err().to_string();
+        assert!(err.contains("non-finite logit"), "unexpected error: {err}");
     }
 
     #[test]

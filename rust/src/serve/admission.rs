@@ -32,6 +32,9 @@ pub enum ShedReason {
     /// server-side execution error — the request was fine, the engine
     /// failed (the reply contract still owes the client an answer)
     Internal,
+    /// execution failed and the deadline could not fit another retry
+    /// attempt — the SLO-derived execution timeout
+    Timeout,
 }
 
 impl ShedReason {
@@ -41,6 +44,7 @@ impl ShedReason {
             ShedReason::Deadline => "deadline",
             ShedReason::Malformed => "malformed",
             ShedReason::Internal => "internal",
+            ShedReason::Timeout => "timeout",
         }
     }
 }
@@ -156,5 +160,6 @@ mod tests {
         assert_eq!(ShedReason::QueueFull.name(), "queue_full");
         assert_eq!(ShedReason::Malformed.name(), "malformed");
         assert_eq!(ShedReason::Internal.name(), "internal");
+        assert_eq!(ShedReason::Timeout.name(), "timeout");
     }
 }

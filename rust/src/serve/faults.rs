@@ -1,0 +1,325 @@
+//! Seeded fault injection — the chaos harness the serving hardening is
+//! tested against.
+//!
+//! Production failures come in three shapes the stack must survive:
+//! a worker *panic* (a kernel bug, an assert, an OOM abort path), a
+//! latency *spike* (page fault, noisy neighbor, thermal throttle), and
+//! a *poisoned activation* (NaN/Inf from a bad input or a numerically
+//! broken plan).  [`FaultSpec`] describes per-request probabilities for
+//! each; [`FaultInjector`] turns a spec plus a seed into a
+//! **deterministic schedule**: the decision for a request is a pure
+//! function of `(seed, request sequence number, attempt)`.  Determinism
+//! matters twice over — chaos property tests replay the exact same
+//! failures on every run, and keying by `attempt` makes injected
+//! failures *transient*, so the scheduler's bounded retry path is
+//! genuinely exercised (a retry re-rolls the dice, exactly like a real
+//! transient fault).
+//!
+//! The CLI grammar (`serve --faults panic:<p>,delay:<ms>:<p>,nan:<p>
+//! --fault-seed S`) is parsed by [`FaultSpec::parse`].  Injected panics
+//! carry [`PANIC_MARK`] in their payload so [`silence_injected_panics`]
+//! can suppress their default stderr backtrace spam without hiding real
+//! panics.
+//!
+//! Faults are injected at the dispatch layer (scheduler), not inside
+//! the kernels: the point is to prove the *recovery* machinery — pool
+//! panic isolation, retry-with-backoff, circuit breakers — not to
+//! perturb kernel math.
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Rng;
+
+/// Marker embedded in every injected panic payload; the panic-hook
+/// filter and log scrapers key on it.
+pub const PANIC_MARK: &str = "[fault-injected]";
+
+/// Per-request fault probabilities (all independent; a request can draw
+/// a delay AND a panic).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSpec {
+    /// probability an execution attempt panics mid-flight
+    pub panic_p: f64,
+    /// injected latency spike length (ms) when the delay fault fires
+    pub delay_ms: f64,
+    /// probability an attempt is delayed by `delay_ms`
+    pub delay_p: f64,
+    /// probability a request's activations are poisoned to NaN
+    pub nan_p: f64,
+    /// test-only phase window: requests with sequence number >= this
+    /// run fault-free.  Lets breaker-recovery tests stage a faulty
+    /// phase followed by a clean one; not exposed in the CLI grammar.
+    pub active_until: Option<u64>,
+}
+
+impl FaultSpec {
+    /// Parse the CLI grammar: comma-separated items, each
+    /// `panic:<p>`, `delay:<ms>:<p>`, or `nan:<p>` with `p` in [0, 1].
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        fn prob(field: Option<&str>, item: &str) -> Result<f64> {
+            let raw = field
+                .filter(|f| !f.is_empty())
+                .with_context(|| format!("fault item {item:?} is missing its probability"))?;
+            let p: f64 = raw
+                .parse()
+                .with_context(|| format!("bad probability {raw:?} in fault item {item:?}"))?;
+            if !(0.0..=1.0).contains(&p) {
+                bail!("probability {p} out of [0, 1] in fault item {item:?}");
+            }
+            Ok(p)
+        }
+        let mut spec = FaultSpec::default();
+        for item in s.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let mut fields = item.split(':');
+            let kind = fields.next().unwrap_or("");
+            match kind {
+                "panic" => spec.panic_p = prob(fields.next(), item)?,
+                "nan" => spec.nan_p = prob(fields.next(), item)?,
+                "delay" => {
+                    let raw = fields
+                        .next()
+                        .filter(|f| !f.is_empty())
+                        .with_context(|| format!("delay item {item:?} wants delay:<ms>:<p>"))?;
+                    let ms: f64 = raw
+                        .parse()
+                        .with_context(|| format!("bad delay ms {raw:?} in {item:?}"))?;
+                    if !ms.is_finite() || ms < 0.0 {
+                        bail!("delay ms must be finite and >= 0, got {ms} in {item:?}");
+                    }
+                    spec.delay_ms = ms;
+                    spec.delay_p = prob(fields.next(), item)?;
+                }
+                other => bail!(
+                    "unknown fault kind {other:?} in {item:?} \
+                     (grammar: panic:<p>,delay:<ms>:<p>,nan:<p>)"
+                ),
+            }
+            if fields.next().is_some() {
+                bail!("trailing fields in fault item {item:?}");
+            }
+        }
+        Ok(spec)
+    }
+
+    /// No fault can ever fire under this spec.
+    pub fn is_noop(&self) -> bool {
+        self.panic_p <= 0.0 && self.nan_p <= 0.0 && (self.delay_p <= 0.0 || self.delay_ms <= 0.0)
+    }
+
+    /// One-line human summary for banners and reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "panic:{} delay:{}ms:{} nan:{}",
+            self.panic_p, self.delay_ms, self.delay_p, self.nan_p
+        )
+    }
+}
+
+/// What the schedule decided for one `(request, attempt)` pair.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultDecision {
+    /// panic mid-execution (after any delay, before any result)
+    pub panic: bool,
+    /// sleep this long before executing
+    pub delay: Option<Duration>,
+    /// poison the request's input image to all-NaN
+    pub nan: bool,
+}
+
+impl FaultDecision {
+    pub fn is_clean(&self) -> bool {
+        !self.panic && !self.nan && self.delay.is_none()
+    }
+}
+
+/// The seeded schedule: `decide(seq, attempt)` is pure, so any replay
+/// with the same seed sees the same faults — and a different `attempt`
+/// re-rolls, making injected failures transient under retry.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    spec: FaultSpec,
+    seed: u64,
+}
+
+impl FaultInjector {
+    pub fn new(spec: FaultSpec, seed: u64) -> FaultInjector {
+        FaultInjector { spec, seed }
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// The fault decision for dispatch sequence number `seq`, execution
+    /// attempt `attempt` (0 = first try).
+    pub fn decide(&self, seq: u64, attempt: u32) -> FaultDecision {
+        if let Some(until) = self.spec.active_until {
+            if seq >= until {
+                return FaultDecision::default();
+            }
+        }
+        // distinct multipliers keep the seq and attempt axes from
+        // aliasing (same constants as Rng::fork)
+        let mut rng = Rng::new(
+            self.seed
+                ^ seq.wrapping_mul(0xA24BAED4963EE407)
+                ^ (attempt as u64 + 1).wrapping_mul(0x9FB21C651E98DF25),
+        );
+        // fixed draw order so adding a fault kind never reshuffles the
+        // schedule of the others
+        let panic = (rng.uniform() as f64) < self.spec.panic_p;
+        let delayed = (rng.uniform() as f64) < self.spec.delay_p && self.spec.delay_ms > 0.0;
+        let nan = (rng.uniform() as f64) < self.spec.nan_p;
+        FaultDecision {
+            panic,
+            delay: delayed.then(|| Duration::from_secs_f64(self.spec.delay_ms / 1e3)),
+            nan,
+        }
+    }
+}
+
+/// Panic with the injected-fault marker — always routed here so the
+/// payload shape is uniform for the hook filter and for tests.
+pub fn injected_panic(seq: u64, attempt: u32) -> ! {
+    panic!("{PANIC_MARK} injected worker panic (request {seq}, attempt {attempt})");
+}
+
+/// Poison an activation buffer the way a numerically broken plan would:
+/// every element NaN, so the forward pass cannot launder it back to a
+/// finite logit (single-element poison can be absorbed by max-pooling).
+pub fn poison_nan(buf: &mut [f32]) {
+    buf.fill(f32::NAN);
+}
+
+/// Install a process-wide panic hook that suppresses the default stderr
+/// report for *injected* panics (payload contains [`PANIC_MARK`]) and
+/// delegates everything else to the previous hook.  Idempotent; chaos
+/// runs call this once so a high `panic:<p>` doesn't bury real output
+/// under backtrace spam.  Real panics still print.
+pub fn silence_injected_panics() {
+    use std::sync::Once;
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| info.payload().downcast_ref::<&str>().copied())
+                .is_some_and(|m| m.contains(PANIC_MARK));
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let s = FaultSpec::parse("panic:0.05,delay:2:0.1,nan:0.01").unwrap();
+        assert_eq!(s.panic_p, 0.05);
+        assert_eq!(s.delay_ms, 2.0);
+        assert_eq!(s.delay_p, 0.1);
+        assert_eq!(s.nan_p, 0.01);
+        assert!(s.active_until.is_none());
+        assert!(!s.is_noop());
+    }
+
+    #[test]
+    fn parse_partial_and_empty() {
+        let s = FaultSpec::parse("panic:1").unwrap();
+        assert_eq!(s.panic_p, 1.0);
+        assert_eq!(s.nan_p, 0.0);
+        assert!(FaultSpec::parse("").unwrap().is_noop());
+        // zero-probability items are noops even when present
+        assert!(FaultSpec::parse("panic:0,delay:5:0,nan:0").unwrap().is_noop());
+        // delay with ms but p=0 never fires
+        assert!(FaultSpec::parse("delay:5:0").unwrap().is_noop());
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FaultSpec::parse("panic:1.5").is_err(), "p > 1");
+        assert!(FaultSpec::parse("panic:-0.1").is_err(), "p < 0");
+        assert!(FaultSpec::parse("panic").is_err(), "missing p");
+        assert!(FaultSpec::parse("delay:2").is_err(), "delay missing p");
+        assert!(FaultSpec::parse("delay:-1:0.5").is_err(), "negative ms");
+        assert!(FaultSpec::parse("oom:0.5").is_err(), "unknown kind");
+        assert!(FaultSpec::parse("panic:0.5:7").is_err(), "trailing field");
+        assert!(FaultSpec::parse("panic:abc").is_err(), "non-numeric p");
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_axis_sensitive() {
+        let spec = FaultSpec::parse("panic:0.5,delay:1:0.5,nan:0.5").unwrap();
+        let inj = FaultInjector::new(spec.clone(), 42);
+        let again = FaultInjector::new(spec, 42);
+        let mut seq_varies = false;
+        let mut attempt_varies = false;
+        for seq in 0..64u64 {
+            for attempt in 0..4u32 {
+                let d = inj.decide(seq, attempt);
+                assert_eq!(d, again.decide(seq, attempt), "replay must match");
+                if d != inj.decide(seq + 64, attempt) {
+                    seq_varies = true;
+                }
+                if d != inj.decide(seq, attempt + 4) {
+                    attempt_varies = true;
+                }
+            }
+        }
+        assert!(seq_varies, "schedule must differ across requests");
+        assert!(attempt_varies, "schedule must differ across attempts (transient faults)");
+    }
+
+    #[test]
+    fn probability_extremes_are_exact() {
+        let always = FaultInjector::new(FaultSpec::parse("panic:1,nan:1").unwrap(), 7);
+        let never = FaultInjector::new(FaultSpec::parse("panic:0,delay:3:0,nan:0").unwrap(), 7);
+        for seq in 0..256u64 {
+            let d = always.decide(seq, 0);
+            assert!(d.panic && d.nan, "p=1 must always fire");
+            assert!(never.decide(seq, 0).is_clean(), "p=0 must never fire");
+        }
+    }
+
+    #[test]
+    fn active_until_windows_the_schedule() {
+        let mut spec = FaultSpec::parse("panic:1").unwrap();
+        spec.active_until = Some(10);
+        let inj = FaultInjector::new(spec, 3);
+        for seq in 0..10u64 {
+            assert!(inj.decide(seq, 0).panic, "inside the window");
+        }
+        for seq in 10..40u64 {
+            assert!(inj.decide(seq, 0).is_clean(), "past the window");
+        }
+    }
+
+    #[test]
+    fn injected_panic_carries_the_marker() {
+        silence_injected_panics();
+        let err = std::panic::catch_unwind(|| injected_panic(3, 1)).unwrap_err();
+        let msg = err.downcast_ref::<String>().expect("string payload");
+        assert!(msg.contains(PANIC_MARK), "payload {msg:?} missing marker");
+        assert!(msg.contains("request 3"), "payload should name the request");
+    }
+
+    #[test]
+    fn poison_fills_every_element() {
+        let mut buf = vec![1.0f32; 17];
+        poison_nan(&mut buf);
+        assert!(buf.iter().all(|v| v.is_nan()));
+    }
+}

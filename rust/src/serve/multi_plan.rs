@@ -84,7 +84,9 @@ impl MultiPlanEngine {
             bail!("multi-plan engine needs at least one frontier point");
         }
         let mut sorted: Vec<&ParetoPoint> = points.iter().collect();
-        sorted.sort_by(|a, b| b.est_ms.partial_cmp(&a.est_ms).unwrap());
+        // total_cmp: a NaN estimate must not panic the sort (it orders
+        // after every finite value, i.e. least-accurate last)
+        sorted.sort_by(|a, b| b.est_ms.total_cmp(&a.est_ms));
         let mut execs = Vec::new();
         let mut infos: Vec<PlanInfo> = Vec::new();
         for p in sorted {
@@ -168,13 +170,202 @@ impl MultiPlanEngine {
 
     /// Logits on the active plan.
     pub fn logits(&self, x: &Tensor) -> Result<Tensor> {
-        self.execs[self.active].logits(x)
+        self.logits_with(self.active, x)
     }
 
     /// Logits on an explicit plan (work-steal waves pin the plan at
     /// wave start so a mid-wave switch cannot mix plans in one wave).
+    /// Routed through the executor's finite guard: a poisoned
+    /// activation surfaces as a recoverable `Err` — one rejected
+    /// request — never a silently-served NaN prediction.
     pub fn logits_with(&self, plan: usize, x: &Tensor) -> Result<Tensor> {
-        self.execs[plan].logits(x)
+        self.execs[plan].logits_checked(x)
+    }
+}
+
+/// When the breaker machinery changed a plan's state this wave.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerEvent {
+    /// consecutive failures reached the threshold
+    Open,
+    /// cooldown expired; the next wave on this plan is a probe
+    HalfOpen,
+    /// a half-open probe succeeded; the plan is trusted again
+    Close,
+}
+
+impl BreakerEvent {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BreakerEvent::Open => "open",
+            BreakerEvent::HalfOpen => "half_open",
+            BreakerEvent::Close => "close",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+/// Per-plan circuit-breaker knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BreakerCfg {
+    /// consecutive request failures that open a plan's breaker;
+    /// 0 disables the breaker entirely
+    pub threshold: usize,
+    /// dispatch waves an open breaker waits before half-opening; the
+    /// wait doubles (capped at 64) each time a probe fails again
+    pub cooldown_waves: usize,
+}
+
+impl Default for BreakerCfg {
+    fn default() -> Self {
+        BreakerCfg { threshold: 3, cooldown_waves: 4 }
+    }
+}
+
+/// One plan's breaker: Closed → (threshold consecutive failures) →
+/// Open → (cooldown waves) → HalfOpen → probe success → Closed, or
+/// probe failure → Open again with doubled cooldown.  The failure-
+/// driven twin of the latency-driven [`SloController`]: the controller
+/// reacts to a plan being *slow*, the breaker to a plan being *broken*.
+#[derive(Debug, Clone)]
+struct CircuitBreaker {
+    cfg: BreakerCfg,
+    state: BreakerState,
+    consecutive_failures: usize,
+    /// waves remaining before an Open breaker half-opens
+    cooldown_left: usize,
+    /// current cooldown length (doubles on failed probes)
+    backoff_waves: usize,
+}
+
+impl CircuitBreaker {
+    fn new(cfg: BreakerCfg) -> CircuitBreaker {
+        CircuitBreaker {
+            cfg,
+            state: BreakerState::Closed,
+            consecutive_failures: 0,
+            cooldown_left: 0,
+            backoff_waves: cfg.cooldown_waves.max(1),
+        }
+    }
+
+    /// Feed one request outcome executed ON this plan.
+    fn record(&mut self, ok: bool) -> Option<BreakerEvent> {
+        if self.cfg.threshold == 0 {
+            return None;
+        }
+        match self.state {
+            // outcomes observed while Open belong to stale in-flight
+            // work; the probe decision happens in HalfOpen
+            BreakerState::Open => None,
+            BreakerState::HalfOpen => {
+                if ok {
+                    self.state = BreakerState::Closed;
+                    self.consecutive_failures = 0;
+                    self.backoff_waves = self.cfg.cooldown_waves.max(1);
+                    Some(BreakerEvent::Close)
+                } else {
+                    self.state = BreakerState::Open;
+                    self.backoff_waves = (self.backoff_waves * 2).min(64);
+                    self.cooldown_left = self.backoff_waves;
+                    Some(BreakerEvent::Open)
+                }
+            }
+            BreakerState::Closed => {
+                if ok {
+                    self.consecutive_failures = 0;
+                    None
+                } else {
+                    self.consecutive_failures += 1;
+                    if self.consecutive_failures >= self.cfg.threshold {
+                        self.state = BreakerState::Open;
+                        self.cooldown_left = self.backoff_waves;
+                        Some(BreakerEvent::Open)
+                    } else {
+                        None
+                    }
+                }
+            }
+        }
+    }
+
+    /// One dispatch wave elapsed (whatever plan it ran on).
+    fn tick(&mut self) -> Option<BreakerEvent> {
+        if self.state == BreakerState::Open {
+            self.cooldown_left = self.cooldown_left.saturating_sub(1);
+            if self.cooldown_left == 0 {
+                self.state = BreakerState::HalfOpen;
+                return Some(BreakerEvent::HalfOpen);
+            }
+        }
+        None
+    }
+}
+
+/// The scheduler-facing board: one breaker per resident plan plus the
+/// routing queries the dispatch loop asks after each wave.
+#[derive(Debug, Clone)]
+pub struct BreakerBoard {
+    breakers: Vec<CircuitBreaker>,
+    threshold: usize,
+}
+
+impl BreakerBoard {
+    pub fn new(n_plans: usize, cfg: BreakerCfg) -> BreakerBoard {
+        BreakerBoard {
+            breakers: (0..n_plans).map(|_| CircuitBreaker::new(cfg)).collect(),
+            threshold: cfg.threshold,
+        }
+    }
+
+    /// False when the breaker feature is configured off (threshold 0).
+    pub fn enabled(&self) -> bool {
+        self.threshold > 0
+    }
+
+    /// Feed one request outcome executed on `plan`.
+    pub fn record(&mut self, plan: usize, ok: bool) -> Option<BreakerEvent> {
+        self.breakers.get_mut(plan).and_then(|b| b.record(ok))
+    }
+
+    /// Advance every breaker's cooldown by one dispatch wave; returns
+    /// the `(plan, event)` transitions that fired.
+    pub fn tick_wave(&mut self) -> Vec<(usize, BreakerEvent)> {
+        self.breakers
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(p, b)| b.tick().map(|e| (p, e)))
+            .collect()
+    }
+
+    pub fn state(&self, plan: usize) -> BreakerState {
+        self.breakers.get(plan).map_or(BreakerState::Closed, |b| b.state)
+    }
+
+    pub fn is_open(&self, plan: usize) -> bool {
+        self.state(plan) == BreakerState::Open
+    }
+
+    /// The most accurate plan strictly above `active` in the ladder
+    /// whose breaker is half-open — the probe target: steering one wave
+    /// there resolves it to Closed (recovered) or Open (still broken).
+    pub fn half_open_above(&self, active: usize) -> Option<usize> {
+        (0..active.min(self.breakers.len())).find(|&p| self.state(p) == BreakerState::HalfOpen)
+    }
+
+    /// The first plan after `start` in degrade order (less accurate,
+    /// faster) whose breaker is not open — where a wave should go when
+    /// the active plan's breaker trips.  None = everything below is
+    /// open too; the caller keeps the current plan rather than serving
+    /// nothing.
+    pub fn first_available_after(&self, start: usize) -> Option<usize> {
+        (start + 1..self.breakers.len()).find(|&p| !self.is_open(p))
     }
 }
 
@@ -428,5 +619,118 @@ mod tests {
         for _ in 0..10 {
             assert_eq!(off.observe(100.0, 0, &est), None);
         }
+    }
+
+    #[test]
+    fn breaker_opens_after_threshold_and_recovers_via_probe() {
+        let mut b = BreakerBoard::new(2, BreakerCfg { threshold: 3, cooldown_waves: 2 });
+        assert!(b.enabled());
+        // two failures + a success reset the streak
+        assert_eq!(b.record(0, false), None);
+        assert_eq!(b.record(0, false), None);
+        assert_eq!(b.record(0, true), None);
+        assert_eq!(b.state(0), BreakerState::Closed);
+        // three consecutive failures open it
+        assert_eq!(b.record(0, false), None);
+        assert_eq!(b.record(0, false), None);
+        assert_eq!(b.record(0, false), Some(BreakerEvent::Open));
+        assert!(b.is_open(0));
+        // outcomes while Open are ignored (stale in-flight work)
+        assert_eq!(b.record(0, false), None);
+        assert_eq!(b.record(0, true), None);
+        assert!(b.is_open(0));
+        // cooldown: two waves to half-open
+        assert!(b.tick_wave().is_empty());
+        assert_eq!(b.tick_wave(), vec![(0, BreakerEvent::HalfOpen)]);
+        assert_eq!(b.state(0), BreakerState::HalfOpen);
+        assert_eq!(b.half_open_above(1), Some(0));
+        assert_eq!(b.half_open_above(0), None, "strictly above only");
+        // probe succeeds: closed again, and a later trip re-opens at
+        // the BASE cooldown (the successful probe reset the backoff)
+        assert_eq!(b.record(0, true), Some(BreakerEvent::Close));
+        assert_eq!(b.state(0), BreakerState::Closed);
+    }
+
+    #[test]
+    fn failed_probes_back_off_geometrically() {
+        let mut b = BreakerBoard::new(1, BreakerCfg { threshold: 1, cooldown_waves: 2 });
+        assert_eq!(b.record(0, false), Some(BreakerEvent::Open));
+        let mut expected = 2usize;
+        for _ in 0..4 {
+            // cooldown_left waves pass, then half-open
+            for w in 0..expected {
+                let evs = b.tick_wave();
+                if w + 1 == expected {
+                    assert_eq!(evs, vec![(0, BreakerEvent::HalfOpen)]);
+                } else {
+                    assert!(evs.is_empty(), "half-opened {} waves early", expected - w - 1);
+                }
+            }
+            // failed probe: open again with doubled cooldown
+            assert_eq!(b.record(0, false), Some(BreakerEvent::Open));
+            expected = (expected * 2).min(64);
+        }
+        // a successful probe finally closes it and resets the backoff
+        for _ in 0..expected {
+            b.tick_wave();
+        }
+        assert_eq!(b.record(0, true), Some(BreakerEvent::Close));
+        assert_eq!(b.state(0), BreakerState::Closed);
+    }
+
+    #[test]
+    fn breaker_threshold_zero_is_fully_disabled() {
+        let mut b = BreakerBoard::new(2, BreakerCfg { threshold: 0, cooldown_waves: 2 });
+        assert!(!b.enabled());
+        for _ in 0..50 {
+            assert_eq!(b.record(0, false), None);
+            assert!(b.tick_wave().is_empty());
+        }
+        assert_eq!(b.state(0), BreakerState::Closed);
+        assert_eq!(b.first_available_after(0), Some(1));
+    }
+
+    #[test]
+    fn degrade_routing_skips_open_plans() {
+        let mut b = BreakerBoard::new(4, BreakerCfg { threshold: 1, cooldown_waves: 8 });
+        assert_eq!(b.record(1, false), Some(BreakerEvent::Open));
+        // from plan 0, the next non-open plan after the ladder position
+        // skips the tripped plan 1
+        assert_eq!(b.first_available_after(0), Some(2));
+        b.record(2, false);
+        assert_eq!(b.first_available_after(0), Some(3));
+        b.record(3, false);
+        assert_eq!(b.first_available_after(0), None, "everything below open");
+        assert_eq!(b.first_available_after(3), None, "nothing below the last plan");
+    }
+
+    #[test]
+    fn nan_est_ms_no_longer_panics_the_frontier_sort() {
+        // the total_cmp satellite: a NaN estimate (e.g. from `single`'s
+        // unknown importance path) must build, ordered last
+        let cfg = tiny_config();
+        let ps = ParamSet::synthetic(&cfg, 5);
+        let mk = |est: f64, s: Vec<usize>, a: Vec<usize>| ParetoPoint {
+            source: "test".into(),
+            source_idx: 0,
+            t0_ms: est,
+            est_ms: est,
+            plan: crate::planner::solver::PlanOutcome {
+                a,
+                b: Vec::new(),
+                s,
+                imp_total: 1.0,
+                est_ticks: 0,
+            },
+        };
+        let points = vec![
+            mk(f64::NAN, vec![1, 2, 3, 4, 5], vec![1, 2, 3, 5]),
+            mk(1.0, vec![1, 4, 5], vec![4]),
+        ];
+        let engine =
+            MultiPlanEngine::build(&cfg, &ps, &points, Pool::serial(), Layout::Nchw).unwrap();
+        assert_eq!(engine.len(), 2);
+        assert_eq!(engine.est_ms_table()[1], 1.0, "finite plan sorts before NaN");
+        assert!(engine.est_ms_table()[0].is_nan());
     }
 }

@@ -29,15 +29,44 @@
 //! may switch the active frontier plan (degrade under sustained
 //! breach, return when load drops).
 //!
+//! # Fault tolerance
+//!
+//! Execution is allowed to FAIL — panic, error, or produce non-finite
+//! logits — without taking the process or any other request with it:
+//!
+//! * Every execution attempt runs under `catch_unwind` (steal tasks
+//!   additionally behind the pool's own isolation layer), so a worker
+//!   panic costs at most the requests in that attempt.
+//! * Failed attempts retry up to `cfg.retries` times with doubling
+//!   backoff — but a retry is only taken while the request's
+//!   SLO-derived deadline can still fit another estimated execution;
+//!   past that the request is shed `Timeout` instead of burning
+//!   capacity on an answer that would arrive dead.
+//! * Requests whose attempts are exhausted are shed `Internal`.
+//! * Per-request outcomes feed the per-plan
+//!   [`super::multi_plan::BreakerBoard`]: consecutive failures trip a
+//!   plan's circuit breaker, which forces dispatch onto the next
+//!   healthy ladder plan (a failure-driven degrade alongside the
+//!   controller's latency-driven one, recorded in the same switch
+//!   trail) until a half-open probe recovers the tripped plan.
+//! * The seeded chaos harness ([`super::faults`]) injects panics,
+//!   delays, and NaN-poisoned activations on a deterministic schedule
+//!   to prove all of the above, under `--faults` on the CLI and the
+//!   chaos property test below.
+//!
 //! # Reply contract
 //!
 //! Every submitted request receives EXACTLY ONE reply — `Served` or
 //! `Rejected`, never both, never silence — including requests still
 //! queued when the channel disconnects (the shutdown path drains the
-//! queue before returning).  The property test below pins this over
-//! seeded bursty traces for all three policies.
+//! queue before returning) and requests whose execution panicked.  A
+//! reply whose receiver hung up is counted (`ServeStats::reply_dropped`),
+//! not silently discarded.  The property tests below pin this over
+//! seeded bursty traces and seeded fault schedules for all three
+//! policies.
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::time::{Duration, Instant};
 
@@ -47,7 +76,8 @@ use crate::data::synth::SynthSpec;
 use crate::kernels::elementwise::argmax;
 use crate::kernels::pool::Pool;
 use crate::serve::admission::{Admission, AdmissionCfg, ShedReason};
-use crate::serve::multi_plan::{MultiPlanEngine, SloController};
+use crate::serve::faults::{injected_panic, poison_nan, FaultInjector, FaultSpec};
+use crate::serve::multi_plan::{BreakerBoard, BreakerCfg, BreakerEvent, MultiPlanEngine, SloController};
 use crate::serve::stats::{percentile_sorted, ServeStats};
 use crate::tensor::Tensor;
 
@@ -139,21 +169,45 @@ pub struct SchedulerConfig {
     /// values re-check admission deadlines more often under backlog;
     /// large values amortize queue handling.  Swept by `bench_serve`.
     pub steal_waves: usize,
+    /// max re-executions after a failed attempt (panic, error, or
+    /// non-finite logits); 0 = fail fast to `Rejected{Internal}`
+    pub retries: usize,
+    /// backoff before the first retry; doubles per further attempt
+    pub retry_backoff: Duration,
+    /// per-plan circuit breaker (threshold 0 disables)
+    pub breaker: BreakerCfg,
+    /// seeded chaos injection; None (or a noop spec) = production
+    pub faults: Option<FaultSpec>,
+    /// seed for the injected fault schedule
+    pub fault_seed: u64,
+}
+
+impl Default for SchedulerConfig {
+    /// The legacy drain server with the resilience defaults: one retry
+    /// with 200 µs backoff, breakers at 3 consecutive failures.
+    fn default() -> SchedulerConfig {
+        SchedulerConfig {
+            policy: Policy::DrainBatch,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            admission: AdmissionCfg::open(),
+            slo_ms: 0.0,
+            steal_workers: 0,
+            steal_waves: 0,
+            retries: 1,
+            retry_backoff: Duration::from_micros(200),
+            breaker: BreakerCfg::default(),
+            faults: None,
+            fault_seed: 0,
+        }
+    }
 }
 
 impl SchedulerConfig {
     /// The legacy server behavior: drain batching, open admission, no
     /// controller.
     pub fn drain(max_batch: usize, max_wait: Duration) -> SchedulerConfig {
-        SchedulerConfig {
-            policy: Policy::DrainBatch,
-            max_batch,
-            max_wait,
-            admission: AdmissionCfg::open(),
-            slo_ms: 0.0,
-            steal_workers: 0,
-            steal_waves: 0,
-        }
+        SchedulerConfig { max_batch, max_wait, ..SchedulerConfig::default() }
     }
 }
 
@@ -162,9 +216,27 @@ pub struct Scheduler {
     pub cfg: SchedulerConfig,
     admission: Admission,
     controller: Option<SloController>,
+    breakers: BreakerBoard,
+    injector: Option<FaultInjector>,
     steal_pool: Pool,
     image_shape: Vec<usize>,
     image_elems: usize,
+}
+
+/// One dispatch wave's aggregate result: served latencies (ms) for the
+/// controller window plus the per-request ok/fail outcomes (request
+/// order) for the breaker board.  Failures never abort the run — they
+/// were already answered `Rejected` inside the dispatch.
+struct WaveOutcome {
+    lats: Vec<f64>,
+    ok: Vec<bool>,
+}
+
+/// Reply, counting (not discarding) sends whose receiver hung up.
+fn send_reply(stats: &mut ServeStats, tx: &Sender<Reply>, reply: Reply) {
+    if tx.send(reply).is_err() {
+        stats.reply_dropped += 1;
+    }
 }
 
 impl Scheduler {
@@ -187,10 +259,18 @@ impl Scheduler {
         };
         let admission = Admission::new(cfg.admission.clone());
         let controller = (cfg.slo_ms > 0.0).then(|| SloController::new(cfg.slo_ms));
+        let breakers = BreakerBoard::new(engine.len(), cfg.breaker);
+        let injector = cfg
+            .faults
+            .clone()
+            .filter(|f| !f.is_noop())
+            .map(|f| FaultInjector::new(f, cfg.fault_seed));
         Ok(Scheduler {
             engine,
             admission,
             controller,
+            breakers,
+            injector,
             steal_pool,
             image_shape: image_shape.to_vec(),
             image_elems: image_shape.iter().product(),
@@ -211,6 +291,9 @@ impl Scheduler {
         let est_table = self.engine.est_ms_table();
         let mut open = true;
         let mut waves = 0usize;
+        // dispatch sequence number: the key of the injected-fault
+        // schedule (assigned per request at dispatch, monotonic)
+        let mut seq = 0u64;
         let t0 = Instant::now();
         while open || !queue.is_empty() {
             // block only when there is nothing at all to do
@@ -256,46 +339,100 @@ impl Scheduler {
                     Ok(()) => live.push(r),
                     Err(reason) => {
                         stats.shed(reason);
-                        let _ = r.reply.send(Reply::Rejected {
-                            reason,
-                            latency: r.submitted.elapsed(),
-                        });
+                        let latency = r.submitted.elapsed();
+                        send_reply(&mut stats, &r.reply, Reply::Rejected { reason, latency });
                     }
                 }
             }
             if live.is_empty() {
                 continue;
             }
-            let lats = match self.cfg.policy {
-                Policy::WorkSteal => self.dispatch_steal(live, &mut stats)?,
-                _ => self.dispatch_batch(live, &mut stats)?,
+            // the wave's plan is pinned here; outcomes feed ITS breaker
+            let wave_plan = self.engine.active();
+            let seq0 = seq;
+            seq += live.len() as u64;
+            let outcome = match self.cfg.policy {
+                Policy::WorkSteal => self.dispatch_steal(live, seq0, &mut stats),
+                _ => self.dispatch_batch(live, seq0, &mut stats),
             };
             waves += 1;
-            for l in lats {
+            stats.batches += 1;
+            for &l in &outcome.lats {
                 if recent.len() == P95_WINDOW {
                     recent.pop_front();
                 }
                 recent.push_back(l);
             }
-            if let Some(ctl) = self.controller.as_mut() {
+            // breaker bookkeeping: per-request outcomes, then one
+            // cooldown tick per wave
+            let mut events: Vec<(usize, BreakerEvent)> = Vec::new();
+            for &ok in &outcome.ok {
+                events.extend(self.breakers.record(wave_plan, ok).map(|e| (wave_plan, e)));
+            }
+            events.extend(self.breakers.tick_wave());
+            for &(plan, ev) in &events {
+                match ev {
+                    BreakerEvent::Open => stats.breaker_trips += 1,
+                    BreakerEvent::Close => stats.breaker_recoveries += 1,
+                    BreakerEvent::HalfOpen => {}
+                }
+                stats.breaker_log.push((waves, plan, ev.name()));
+            }
+            // failure-driven routing outranks the latency controller:
+            // serving a broken plan is worse than serving a slow one
+            if self.breaker_route(waves, &mut stats) {
+                recent.clear();
+            } else if let Some(ctl) = self.controller.as_mut() {
                 if recent.len() >= P95_MIN_SAMPLES {
                     let mut window: Vec<f64> = recent.iter().copied().collect();
-                    window.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    // total_cmp: one NaN latency sample must not panic
+                    // the serving loop
+                    window.sort_by(|a, b| a.total_cmp(b));
                     // same interpolating statistic the reports print
                     let p95 = percentile_sorted(&window, 0.95);
                     let active = self.engine.active();
                     if let Some(next) = ctl.observe(p95, active, &est_table) {
-                        self.engine.set_active(next);
-                        stats.plan_switches += 1;
-                        stats.switch_log.push((waves, active, next));
-                        // the window measured the OLD plan; start fresh
-                        recent.clear();
+                        // never steer INTO a tripped plan
+                        if !self.breakers.is_open(next) {
+                            self.engine.set_active(next);
+                            stats.plan_switches += 1;
+                            stats.switch_log.push((waves, active, next));
+                            // the window measured the OLD plan; start fresh
+                            recent.clear();
+                        }
                     }
                 }
             }
         }
         stats.wall = t0.elapsed();
         Ok(stats)
+    }
+
+    /// Post-wave breaker routing: probe a half-open, more accurate plan
+    /// (one wave there resolves it), else degrade off an open active
+    /// plan to the first healthy plan after it in the ladder.  Returns
+    /// true when the active plan changed; the switch lands in the same
+    /// trail the SLO controller writes.
+    fn breaker_route(&mut self, wave: usize, stats: &mut ServeStats) -> bool {
+        let active = self.engine.active();
+        let target = if let Some(probe) = self.breakers.half_open_above(active) {
+            Some(probe)
+        } else if self.breakers.is_open(active) {
+            // everything healthy below is fair game; if None, keep
+            // serving on the tripped plan rather than serving nothing
+            self.breakers.first_available_after(active)
+        } else {
+            None
+        };
+        match target {
+            Some(next) if next != active => {
+                self.engine.set_active(next);
+                stats.plan_switches += 1;
+                stats.switch_log.push((wave, active, next));
+                true
+            }
+            _ => false,
+        }
     }
 
     /// Arrival path: validate + admit, or reject with an explicit reply.
@@ -308,7 +445,8 @@ impl Scheduler {
         match reason {
             Some(reason) => {
                 stats.shed(reason);
-                let _ = r.reply.send(Reply::Rejected { reason, latency: r.submitted.elapsed() });
+                let latency = r.submitted.elapsed();
+                send_reply(stats, &r.reply, Reply::Rejected { reason, latency });
             }
             None => queue.push_back(r),
         }
@@ -366,71 +504,200 @@ impl Scheduler {
         batch
     }
 
-    /// One batched execution on the active plan.
-    fn dispatch_batch(&self, batch: Vec<Request>, stats: &mut ServeStats) -> Result<Vec<f64>> {
+    /// One batched execution on the active plan, with bounded retry:
+    /// an attempt that panics, errors, or yields non-finite logits is
+    /// caught whole-batch and re-executed (injected faults re-roll per
+    /// attempt, so transients clear) until the retries run out
+    /// (`Internal`) or the batch's latest deadline cannot fit another
+    /// attempt (`Timeout`).  Failure answers every member `Rejected` —
+    /// the reply contract holds on every path.
+    fn dispatch_batch(&self, batch: Vec<Request>, seq0: u64, stats: &mut ServeStats) -> WaveOutcome {
         let bs = batch.len();
         let plan = self.engine.active();
         let shape = [&[bs][..], self.image_shape.as_slice()].concat();
-        let mut x = Tensor::zeros(&shape);
-        for (n, r) in batch.iter().enumerate() {
-            x.data[n * self.image_elems..(n + 1) * self.image_elems].copy_from_slice(&r.image);
-        }
-        let logits = self.engine.logits_with(plan, &x)?;
-        let nc = logits.shape[1];
-        let mut lats = Vec::with_capacity(bs);
-        for (n, r) in batch.into_iter().enumerate() {
-            let pred = argmax(&logits.data[n * nc..(n + 1) * nc]);
+        let est = self.engine.est_exec(plan);
+        // the most permissive member deadline gates retries: once even
+        // it cannot fit another attempt, nobody in the batch can win
+        let budget = batch
+            .iter()
+            .filter_map(|r| self.admission.deadline_for(r.submitted, r.deadline))
+            .max();
+        let mut attempt = 0u32;
+        let fail_reason = loop {
+            let mut x = Tensor::zeros(&shape);
+            let mut delay = Duration::ZERO;
+            let mut panic_any = false;
+            for (n, r) in batch.iter().enumerate() {
+                let dst = &mut x.data[n * self.image_elems..(n + 1) * self.image_elems];
+                dst.copy_from_slice(&r.image);
+                if let Some(inj) = self.injector.as_ref() {
+                    let fault = inj.decide(seq0 + n as u64, attempt);
+                    if fault.nan {
+                        poison_nan(dst);
+                    }
+                    if let Some(d) = fault.delay {
+                        delay = delay.max(d);
+                    }
+                    panic_any |= fault.panic;
+                }
+            }
+            if delay > Duration::ZERO {
+                std::thread::sleep(delay);
+            }
+            let out = catch_unwind(AssertUnwindSafe(|| -> Result<Tensor> {
+                if panic_any {
+                    injected_panic(seq0, attempt);
+                }
+                self.engine.logits_with(plan, &x)
+            }));
+            match out {
+                Ok(Ok(logits)) => {
+                    let nc = logits.shape[1];
+                    let mut lats = Vec::with_capacity(bs);
+                    for (n, r) in batch.into_iter().enumerate() {
+                        let pred = argmax(&logits.data[n * nc..(n + 1) * nc]);
+                        let latency = r.submitted.elapsed();
+                        let ms = latency.as_secs_f64() * 1e3;
+                        stats.record_on_plan(ms, plan);
+                        lats.push(ms);
+                        send_reply(
+                            stats,
+                            &r.reply,
+                            Reply::Served { pred, latency, batch_size: bs, plan },
+                        );
+                    }
+                    return WaveOutcome { lats, ok: vec![true; bs] };
+                }
+                Ok(Err(_)) | Err(_) => {
+                    stats.exec_failures += 1;
+                    if attempt as usize >= self.cfg.retries {
+                        break ShedReason::Internal;
+                    }
+                    if let Some(d) = budget {
+                        if Instant::now() + est > d {
+                            break ShedReason::Timeout;
+                        }
+                    }
+                    stats.retries += 1;
+                    std::thread::sleep(self.cfg.retry_backoff * (1u32 << attempt.min(6)));
+                    attempt += 1;
+                }
+            }
+        };
+        for r in batch {
+            stats.shed(fail_reason);
             let latency = r.submitted.elapsed();
-            let ms = latency.as_secs_f64() * 1e3;
-            stats.record_on_plan(ms, plan);
-            lats.push(ms);
-            let _ = r.reply.send(Reply::Served { pred, latency, batch_size: bs, plan });
+            send_reply(stats, &r.reply, Reply::Rejected { reason: fail_reason, latency });
         }
-        stats.batches += 1;
-        Ok(lats)
+        WaveOutcome { lats: Vec::new(), ok: vec![false; bs] }
     }
 
     /// One work-steal wave: every request is a batch-1 task on the
     /// shared pool queue; workers steal the next request as they free
     /// up.  The plan is pinned at wave start so a controller switch can
-    /// never mix plans within a wave.
-    fn dispatch_steal(&self, reqs: Vec<Request>, stats: &mut ServeStats) -> Result<Vec<f64>> {
+    /// never mix plans within a wave.  Each task carries its OWN retry
+    /// loop (attempts re-roll injected faults) and its own
+    /// deadline-derived retry budget, behind the pool's panic
+    /// isolation: one blown-up request answers `Rejected`, its wave
+    /// mates are untouched.
+    fn dispatch_steal(&self, reqs: Vec<Request>, seq0: u64, stats: &mut ServeStats) -> WaveOutcome {
         let plan = self.engine.active();
         let shape = [&[1usize][..], self.image_shape.as_slice()].concat();
         let engine = &self.engine;
-        let results: Vec<Result<(usize, Duration)>> =
-            self.steal_pool.run_tasks(reqs.len(), |i| {
-                let x = Tensor::from_vec(&shape, reqs[i].image.clone())?;
-                let logits = engine.logits_with(plan, &x)?;
-                Ok((argmax(&logits.data), reqs[i].submitted.elapsed()))
-            });
+        let admission = &self.admission;
+        let injector = self.injector.as_ref();
+        let retries = self.cfg.retries;
+        let backoff = self.cfg.retry_backoff;
+        let est = engine.est_exec(plan);
+        // per task: Ok(pred) or Err(shed reason), plus attempts made
+        struct TaskDone {
+            result: std::result::Result<usize, ShedReason>,
+            attempts: u32,
+        }
+        let tasks = self.steal_pool.try_run_tasks(reqs.len(), |i| {
+            let r = &reqs[i];
+            let tseq = seq0 + i as u64;
+            let budget = admission.deadline_for(r.submitted, r.deadline);
+            let mut attempt = 0u32;
+            loop {
+                let fault = injector.map(|f| f.decide(tseq, attempt)).unwrap_or_default();
+                if let Some(d) = fault.delay {
+                    std::thread::sleep(d);
+                }
+                let out = catch_unwind(AssertUnwindSafe(|| -> Result<usize> {
+                    if fault.panic {
+                        injected_panic(tseq, attempt);
+                    }
+                    let mut img = r.image.clone();
+                    if fault.nan {
+                        poison_nan(&mut img);
+                    }
+                    let x = Tensor::from_vec(&shape, img)?;
+                    Ok(argmax(&engine.logits_with(plan, &x)?.data))
+                }));
+                match out {
+                    Ok(Ok(pred)) => {
+                        return TaskDone { result: Ok(pred), attempts: attempt + 1 };
+                    }
+                    Ok(Err(_)) | Err(_) => {
+                        if attempt as usize >= retries {
+                            return TaskDone {
+                                result: Err(ShedReason::Internal),
+                                attempts: attempt + 1,
+                            };
+                        }
+                        // retry only while the deadline still fits
+                        // another estimated execution
+                        if let Some(d) = budget {
+                            if Instant::now() + est > d {
+                                return TaskDone {
+                                    result: Err(ShedReason::Timeout),
+                                    attempts: attempt + 1,
+                                };
+                            }
+                        }
+                        std::thread::sleep(backoff * (1u32 << attempt.min(6)));
+                        attempt += 1;
+                    }
+                }
+            }
+        });
         let mut lats = Vec::with_capacity(reqs.len());
-        let mut first_err = None;
-        for (r, res) in reqs.into_iter().zip(results) {
-            match res {
-                Ok((pred, latency)) => {
+        let mut ok = Vec::with_capacity(reqs.len());
+        for (r, task) in reqs.into_iter().zip(tasks) {
+            // the pool-level Err means a panic ESCAPED the per-attempt
+            // catch above (shouldn't happen); treat it as one exhausted
+            // request, not a process problem
+            let task = task.unwrap_or_else(|tp| {
+                debug_assert!(false, "panic escaped the attempt loop: {tp}");
+                TaskDone { result: Err(ShedReason::Internal), attempts: 1 }
+            });
+            match task.result {
+                Ok(pred) => {
+                    stats.exec_failures += task.attempts as usize - 1;
+                    stats.retries += task.attempts as usize - 1;
+                    let latency = r.submitted.elapsed();
                     let ms = latency.as_secs_f64() * 1e3;
                     stats.record_on_plan(ms, plan);
                     lats.push(ms);
-                    let _ = r.reply.send(Reply::Served { pred, latency, batch_size: 1, plan });
+                    ok.push(true);
+                    send_reply(
+                        stats,
+                        &r.reply,
+                        Reply::Served { pred, latency, batch_size: 1, plan },
+                    );
                 }
-                Err(e) => {
-                    // still honor the one-reply contract before failing
-                    // — and blame the server, not the request
-                    stats.shed(ShedReason::Internal);
-                    let _ = r.reply.send(Reply::Rejected {
-                        reason: ShedReason::Internal,
-                        latency: r.submitted.elapsed(),
-                    });
-                    first_err.get_or_insert(e);
+                Err(reason) => {
+                    stats.exec_failures += task.attempts as usize;
+                    stats.retries += task.attempts as usize - 1;
+                    stats.shed(reason);
+                    ok.push(false);
+                    let latency = r.submitted.elapsed();
+                    send_reply(stats, &r.reply, Reply::Rejected { reason, latency });
                 }
             }
         }
-        if let Some(e) = first_err {
-            return Err(e);
-        }
-        stats.batches += 1;
-        Ok(lats)
+        WaveOutcome { lats, ok }
     }
 }
 
@@ -610,7 +877,7 @@ mod tests {
                 admission: AdmissionCfg::slo(shed_depth, slo_ms),
                 slo_ms,
                 steal_workers: 2,
-                steal_waves: 0,
+                ..SchedulerConfig::default()
             };
             let mut sched = Scheduler::new(engine, &[3, hw, hw], cfg).unwrap();
             let n = 40;
@@ -663,10 +930,8 @@ mod tests {
                 policy,
                 max_batch: 4,
                 max_wait: Duration::from_millis(1),
-                admission: AdmissionCfg::open(),
-                slo_ms: 0.0,
                 steal_workers: 3,
-                steal_waves: 0,
+                ..SchedulerConfig::default()
             };
             let mut sched = Scheduler::new(engine, &[3, hw, hw], scfg).unwrap();
             let n = 12;
@@ -701,10 +966,9 @@ mod tests {
             policy: Policy::WorkSteal,
             max_batch: 8,
             max_wait: Duration::from_millis(1),
-            admission: AdmissionCfg::open(),
-            slo_ms: 0.0,
             steal_workers: 4,
             steal_waves: 2,
+            ..SchedulerConfig::default()
         };
         let mut sched = Scheduler::new(engine, &[3, hw, hw], cfg).unwrap();
         let (rx, gen) = spawn_open_load(&data_for(hw), 16, vec![0]);
@@ -725,9 +989,8 @@ mod tests {
             max_batch: 2,
             max_wait: Duration::from_millis(1),
             admission: AdmissionCfg { shed_depth: 2, deadline: None },
-            slo_ms: 0.0,
             steal_workers: 1,
-            steal_waves: 0,
+            ..SchedulerConfig::default()
         };
         let mut sched = Scheduler::new(engine, &[3, hw, hw], cfg).unwrap();
         // back-to-back burst far beyond the cap
@@ -795,7 +1058,7 @@ mod tests {
             admission: AdmissionCfg::slo(0, slo_ms),
             slo_ms,
             steal_workers: 2,
-            steal_waves: 0,
+            ..SchedulerConfig::default()
         };
         let mut sched = Scheduler::new(engine, &[3, hw, hw], cfg).unwrap();
         let n = 120;
@@ -818,6 +1081,175 @@ mod tests {
                 slo_ms
             );
         }
+    }
+
+    #[test]
+    fn chaos_faults_never_break_the_reply_contract() {
+        // THE acceptance property: under a seeded fault schedule mixing
+        // panics, delays, and NaN poisoning, across all three policies,
+        // the process never aborts and every request gets exactly one
+        // reply with the stats agreeing
+        crate::serve::faults::silence_injected_panics();
+        forall(6, 93, |rng| {
+            let policy = [Policy::DrainBatch, Policy::MicroBatch, Policy::WorkSteal]
+                [rng.below(3)];
+            let spec = FaultSpec {
+                panic_p: [0.3, 0.9][rng.below(2)],
+                delay_ms: 1.0,
+                delay_p: [0.0, 0.25][rng.below(2)],
+                nan_p: [0.0, 0.3][rng.below(2)],
+                active_until: None,
+            };
+            let slo_ms = [0.0, 2.0][rng.below(2)];
+            let (engine, hw) = engine2(rng.next_u64(), 1.0, 0.2);
+            let cfg = SchedulerConfig {
+                policy,
+                max_batch: 4,
+                max_wait: Duration::from_micros(300),
+                admission: AdmissionCfg::slo(0, slo_ms),
+                slo_ms,
+                steal_workers: 2,
+                retries: rng.below(3),
+                retry_backoff: Duration::from_micros(50),
+                faults: Some(spec),
+                fault_seed: rng.next_u64(),
+                ..SchedulerConfig::default()
+            };
+            let mut sched = Scheduler::new(engine, &[3, hw, hw], cfg).unwrap();
+            let n = 30;
+            let gaps = burst_trace(rng.next_u64(), n, 150, 8);
+            let (rx, gen) = spawn_open_load(&data_for(hw), n, gaps);
+            let stats = sched.run(rx).map_err(|e| e.to_string())?;
+            let replies = gen.join().unwrap();
+            crate::prop_assert!(replies.len() == n, "generator sent {} of {n}", replies.len());
+            let mut served = 0usize;
+            let mut rejected = 0usize;
+            for (_, rrx) in &replies {
+                match rrx.try_recv() {
+                    Ok(Reply::Served { .. }) => served += 1,
+                    Ok(Reply::Rejected { .. }) => rejected += 1,
+                    Err(_) => return Err("request got NO reply under chaos".into()),
+                }
+                crate::prop_assert!(
+                    rrx.try_recv().is_err(),
+                    "request got a second reply under chaos ({policy:?})"
+                );
+            }
+            crate::prop_assert!(
+                served + rejected == n && stats.offered() == n,
+                "chaos accounting: {served} served + {rejected} rejected vs {n} \
+                 (stats offered {})",
+                stats.offered()
+            );
+            crate::prop_assert!(
+                stats.served == served && stats.shed_total() == rejected,
+                "stats disagree under chaos: served {} vs {served}, shed {} vs {rejected}",
+                stats.served,
+                stats.shed_total()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn breaker_trips_on_failures_and_recovers_via_probe() {
+        // a staged schedule: every attempt for the first 12 dispatched
+        // requests panics (active_until), then the air clears.  The
+        // breaker must (a) trip plan 0, degrading to plan 1 — visible
+        // in the switch trail, (b) trip or exhaust retries only for the
+        // faulty window, (c) half-open and recover once clean waves
+        // elapse, switching back
+        crate::serve::faults::silence_injected_panics();
+        let faulty = 12u64;
+        let spec = FaultSpec { panic_p: 1.0, active_until: Some(faulty), ..Default::default() };
+        let (engine, hw) = engine2(21, 1.0, 0.2);
+        let cfg = SchedulerConfig {
+            policy: Policy::WorkSteal,
+            max_batch: 2,
+            max_wait: Duration::from_micros(200),
+            admission: AdmissionCfg::open(),
+            slo_ms: 0.0, // latency controller off: switches are breaker-only
+            steal_workers: 2,
+            steal_waves: 1, // wave cap 2: failures spread over many waves
+            retries: 0,     // fail fast — every faulty request sheds Internal
+            breaker: BreakerCfg { threshold: 3, cooldown_waves: 3 },
+            faults: Some(spec),
+            fault_seed: 77,
+            ..SchedulerConfig::default()
+        };
+        let mut sched = Scheduler::new(engine, &[3, hw, hw], cfg).unwrap();
+        let n = 60;
+        let (rx, gen) = spawn_open_load(&data_for(hw), n, vec![150]);
+        let stats = sched.run(rx).unwrap();
+        let replies = gen.join().unwrap();
+        for (_, rrx) in &replies {
+            assert!(rrx.try_recv().is_ok(), "reply contract must hold under breaker churn");
+        }
+        // with panic_p = 1.0 and retries 0, the faulty window sheds
+        // exactly its 12 requests; everything after is served
+        assert_eq!(stats.shed_internal, faulty as usize);
+        assert_eq!(stats.served, n - faulty as usize);
+        assert_eq!(stats.offered(), n);
+        assert!(stats.exec_failures >= faulty as usize);
+        // the breaker both tripped and recovered...
+        assert!(stats.breaker_trips >= 1, "breaker never tripped: {:?}", stats.breaker_log);
+        assert!(
+            stats.breaker_recoveries >= 1,
+            "breaker never recovered: {:?}",
+            stats.breaker_log
+        );
+        assert!(
+            stats.breaker_log.iter().any(|&(_, _, ev)| ev == "half_open"),
+            "recovery must pass through a half-open probe: {:?}",
+            stats.breaker_log
+        );
+        // ...and both directions show up in the switch trail: the
+        // failure-driven degrade 0 -> 1 and the probe switch 1 -> 0
+        assert!(
+            stats.switch_log.iter().any(|&(_, from, to)| from == 0 && to == 1),
+            "missing breaker degrade in switch trail: {:?}",
+            stats.switch_log
+        );
+        assert!(
+            stats.switch_log.iter().any(|&(_, from, to)| from == 1 && to == 0),
+            "missing probe switch in switch trail: {:?}",
+            stats.switch_log
+        );
+        assert_eq!(stats.plan_switches, stats.switch_log.len());
+    }
+
+    #[test]
+    fn dropped_reply_receivers_are_counted_not_fatal() {
+        let (engine, hw) = engine2(9, 1.0, 0.2);
+        let cfg = SchedulerConfig::drain(4, Duration::from_millis(1));
+        let mut sched = Scheduler::new(engine, &[3, hw, hw], cfg).unwrap();
+        let (tx, rx) = channel::<Request>();
+        // request 0: client hangs up before the reply can be sent
+        let (rtx0, rrx0) = channel();
+        drop(rrx0);
+        tx.send(Request {
+            image: vec![0.1; 3 * hw * hw],
+            submitted: Instant::now(),
+            deadline: None,
+            reply: rtx0,
+        })
+        .unwrap();
+        // request 1: live client
+        let (rtx1, rrx1) = channel();
+        tx.send(Request {
+            image: vec![0.2; 3 * hw * hw],
+            submitted: Instant::now(),
+            deadline: None,
+            reply: rtx1,
+        })
+        .unwrap();
+        drop(tx);
+        let stats = sched.run(rx).unwrap();
+        // both executed (the server can't know the client left), the
+        // hung-up send is COUNTED, and the live client got its answer
+        assert_eq!(stats.served, 2);
+        assert_eq!(stats.reply_dropped, 1);
+        assert!(rrx1.recv().unwrap().is_served());
     }
 
     #[test]

@@ -25,7 +25,24 @@ pub struct ServeStats {
     /// requests rejected as malformed (wrong image size)
     pub shed_malformed: usize,
     /// requests answered Rejected because the engine itself failed
+    /// (execution attempts exhausted)
     pub shed_internal: usize,
+    /// requests whose failed execution could not be retried within the
+    /// SLO-derived deadline
+    pub shed_timeout: usize,
+    /// replies whose receiver hung up before the send (the reply was
+    /// produced and counted, the client just stopped listening)
+    pub reply_dropped: usize,
+    /// execution re-attempts taken after a failed attempt
+    pub retries: usize,
+    /// execution attempts that failed (panic, error, non-finite logits)
+    pub exec_failures: usize,
+    /// circuit-breaker Open transitions (plan taken out of rotation)
+    pub breaker_trips: usize,
+    /// circuit-breaker Close transitions (half-open probe succeeded)
+    pub breaker_recoveries: usize,
+    /// `(wave_index, plan, event)` trail of breaker transitions
+    pub breaker_log: Vec<(usize, usize, &'static str)>,
     /// plan switches the SLO controller performed
     pub plan_switches: usize,
     /// served-request count per plan index (empty until first dispatch)
@@ -70,12 +87,17 @@ impl ServeStats {
             ShedReason::Deadline => self.shed_deadline += 1,
             ShedReason::Malformed => self.shed_malformed += 1,
             ShedReason::Internal => self.shed_internal += 1,
+            ShedReason::Timeout => self.shed_timeout += 1,
         }
     }
 
     /// Requests rejected for any reason.
     pub fn shed_total(&self) -> usize {
-        self.shed_queue + self.shed_deadline + self.shed_malformed + self.shed_internal
+        self.shed_queue
+            + self.shed_deadline
+            + self.shed_malformed
+            + self.shed_internal
+            + self.shed_timeout
     }
 
     /// Requests that got SOME reply (served or rejected).
@@ -102,7 +124,9 @@ impl ServeStats {
         let mut cache = self.sorted_cache.borrow_mut();
         if cache.len() != self.latencies_ms.len() {
             *cache = self.latencies_ms.clone();
-            cache.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp: a NaN sample (clock anomaly, injected fault)
+            // must not panic the report path — it sorts last
+            cache.sort_by(|a, b| a.total_cmp(b));
         }
         percentile_sorted(&cache, p)
     }
@@ -135,6 +159,12 @@ impl ServeStats {
             ("shed_deadline", Json::int(self.shed_deadline as i64)),
             ("shed_malformed", Json::int(self.shed_malformed as i64)),
             ("shed_internal", Json::int(self.shed_internal as i64)),
+            ("shed_timeout", Json::int(self.shed_timeout as i64)),
+            ("reply_dropped", Json::int(self.reply_dropped as i64)),
+            ("retries", Json::int(self.retries as i64)),
+            ("exec_failures", Json::int(self.exec_failures as i64)),
+            ("breaker_trips", Json::int(self.breaker_trips as i64)),
+            ("breaker_recoveries", Json::int(self.breaker_recoveries as i64)),
             ("shed_rate", Json::num(self.shed_rate())),
             ("p50_ms", Json::num(self.percentile_ms(0.5))),
             ("p95_ms", Json::num(self.percentile_ms(0.95))),
@@ -153,6 +183,16 @@ impl ServeStats {
                         Json::int(w as i64),
                         Json::int(from as i64),
                         Json::int(to as i64),
+                    ])
+                })),
+            ),
+            (
+                "breaker_log",
+                Json::arr_of(self.breaker_log.iter().map(|&(w, plan, ev)| {
+                    Json::arr_of([
+                        Json::int(w as i64),
+                        Json::int(plan as i64),
+                        Json::str_of(ev),
                     ])
                 })),
             ),
@@ -265,6 +305,48 @@ mod tests {
         // lands on an index the constructor never saw
         s.record_on_plan(1.0, 3);
         assert_eq!(s.served_per_plan, vec![1, 2, 0, 1]);
+    }
+
+    #[test]
+    fn nan_latency_sample_does_not_panic_percentiles() {
+        // the total_cmp satellite: the old partial_cmp().unwrap() sort
+        // aborted the whole report on one NaN sample
+        let mut s = ServeStats::default();
+        s.set_samples(vec![3.0, f64::NAN, 1.0, 2.0]);
+        assert_eq!(s.percentile_ms(0.0), 1.0);
+        // NaN orders last under total_cmp, so p100 is NaN — ugly but
+        // honest, and crucially not a panic
+        assert!(s.percentile_ms(1.0).is_nan());
+        assert_eq!(s.percentile_ms(0.5), 2.5);
+    }
+
+    #[test]
+    fn fault_counters_feed_shed_total_and_report() {
+        let mut s = ServeStats::default();
+        s.shed(ShedReason::Timeout);
+        s.shed(ShedReason::Internal);
+        assert_eq!(s.shed_timeout, 1);
+        assert_eq!(s.shed_total(), 2);
+        s.reply_dropped = 3;
+        s.retries = 4;
+        s.exec_failures = 5;
+        s.breaker_trips = 2;
+        s.breaker_recoveries = 1;
+        s.breaker_log.push((7, 0, "open"));
+        s.breaker_log.push((9, 0, "close"));
+        let j = s.report_json("steal", 5.0);
+        assert_eq!(j.get("shed_timeout").unwrap().f64().unwrap(), 1.0);
+        assert_eq!(j.get("reply_dropped").unwrap().f64().unwrap(), 3.0);
+        assert_eq!(j.get("retries").unwrap().f64().unwrap(), 4.0);
+        assert_eq!(j.get("exec_failures").unwrap().f64().unwrap(), 5.0);
+        assert_eq!(j.get("breaker_trips").unwrap().f64().unwrap(), 2.0);
+        assert_eq!(j.get("breaker_recoveries").unwrap().f64().unwrap(), 1.0);
+        let log = j.get("breaker_log").unwrap().arr().unwrap();
+        assert_eq!(log.len(), 2);
+        assert_eq!(log[0].arr().unwrap()[2].str().unwrap(), "open");
+        // round-trips through the parser
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("breaker_log").unwrap().arr().unwrap().len(), 2);
     }
 
     #[test]

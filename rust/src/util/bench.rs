@@ -86,7 +86,7 @@ impl Bencher {
                 break;
             }
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(|a, b| a.total_cmp(b));
         let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
         let stats = Stats {
             median_ns: q(0.5),
