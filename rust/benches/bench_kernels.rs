@@ -14,6 +14,11 @@
 //! (Winograd F(2x2,3x3) vs im2col, fused epilogue vs separate passes)
 //! are gated the same way: Winograd within a pinned relative tolerance
 //! of im2col, the fused epilogue bitwise against the separate chain.
+//! The int8-tier columns are gated on (a) scalar-vs-AVX2 exact i32
+//! equality (integer sums are associative, so any divergence is a
+//! bug) and (b) the dequantized int8 result tracking the f32 GEMM
+//! within the analytic quantization bound before the int8-vs-f32
+//! speedup is reported.
 //!
 //! Speedup columns are ratios of MINIMUM per-iteration times, not
 //! medians: scheduler noise only ever adds time, so min-of-N after
@@ -22,8 +27,12 @@
 use repro::kernels::conv::{
     conv2d_naive, conv2d_nhwc_with, conv2d_with, nchw_to_nhwc, nhwc_to_nchw, ConvGeom,
 };
-use repro::kernels::gemm::{gemm_naive, gemm_rows_fused_level, gemm_rows_level, gemm_with, Bias, Epilogue};
+use repro::kernels::gemm::{
+    gemm_i8_fused_with, gemm_i8_requant_rows_level, gemm_i8_rows_level, gemm_naive,
+    gemm_rows_fused_level, gemm_rows_level, gemm_with, Bias, ChannelScales, Epilogue,
+};
 use repro::kernels::pool::Pool;
+use repro::kernels::quant::{absmax_checked, quantize, quantize_rows, scale_for};
 use repro::kernels::simd::{bits_equal, levels_available, SimdLevel};
 use repro::kernels::winograd::conv2d_winograd_with;
 use repro::util::bench::{black_box, Bencher};
@@ -121,12 +130,70 @@ fn main() {
         let sf = Bencher::new(&format!("gemm fused    {tag}")).run(|| {
             gemm_rows_fused_level(best, m, k, n, black_box(&a), black_box(&b), &mut c_fused, &ep)
         });
+        // int8 tier: quantize A per row, B per tensor, then gate before
+        // timing — scalar vs best level must agree EXACTLY on the i32
+        // accumulators, and the requantized result must track the f32
+        // GEMM within the analytic quantization bound
+        let (qa, a_scales) = quantize_rows(&a, m).unwrap();
+        let b_scale = scale_for(absmax_checked(&b).unwrap());
+        let qb = quantize(&b, b_scale);
+        let mut acc_scalar = vec![0i32; m * n];
+        let mut acc_best = vec![0i32; m * n];
+        gemm_i8_rows_level(SimdLevel::Scalar, m, k, n, &qa, &qb, &mut acc_scalar);
+        gemm_i8_rows_level(best, m, k, n, &qa, &qb, &mut acc_best);
+        assert_eq!(
+            acc_scalar,
+            acc_best,
+            "{tag}: {} int8 accumulators differ from scalar",
+            best.name()
+        );
+        let id_ep = Epilogue { bias: Bias::None, residual: None, relu6: false };
+        let qscales = ChannelScales::PerRow(&a_scales);
+        let mut c_i8 = vec![0.0f32; m * n];
+        gemm_i8_requant_rows_level(best, m, k, n, &qa, &qb, &mut c_i8, b_scale, &qscales, &id_ep);
+        for r in 0..m {
+            let bound = k as f32 * (a_scales[r] * 127.0) * absmax_checked(&b).unwrap() / 100.0
+                + 1e-6;
+            for j in 0..n {
+                let d = (c_i8[r * n + j] - c_naive[r * n + j]).abs();
+                assert!(d < bound, "{tag}: int8 err {d} > analytic bound {bound} at ({r},{j})");
+            }
+        }
+        let si8 = Bencher::new(&format!("gemm int8     {tag}")).run(|| {
+            gemm_i8_requant_rows_level(
+                best,
+                m,
+                k,
+                n,
+                black_box(&qa),
+                black_box(&qb),
+                &mut c_i8,
+                b_scale,
+                &qscales,
+                &id_ep,
+            )
+        });
+        let si8p = Bencher::new(&format!("gemm int8 par {tag}")).run(|| {
+            gemm_i8_fused_with(
+                &par,
+                m,
+                k,
+                n,
+                black_box(&qa),
+                black_box(&qb),
+                &mut c_i8,
+                b_scale,
+                &qscales,
+                &id_ep,
+            )
+        });
         let su_simd = ss.min_ns / sv.min_ns;
         let su_par = sn.min_ns / sp.min_ns;
         let su_fused = se.min_ns / sf.min_ns;
+        let su_i8 = sv.min_ns / si8.min_ns;
         println!(
             "{tag}: {} {su_simd:.2}x over scalar, parallel {su_par:.1}x over naive, \
-             fused epilogue {su_fused:.2}x over separate",
+             fused epilogue {su_fused:.2}x over separate, int8 {su_i8:.2}x over f32",
             best.name()
         );
         gemm_rows_json.push(Json::obj_from(vec![
@@ -143,6 +210,9 @@ fn main() {
             ("speedup_simd_vs_scalar", Json::num(su_simd)),
             ("speedup_parallel_vs_naive", Json::num(su_par)),
             ("speedup_fused_vs_separate", Json::num(su_fused)),
+            ("int8_ms", Json::num(si8.median_ms())),
+            ("int8_parallel_ms", Json::num(si8p.median_ms())),
+            ("speedup_int8_vs_f32", Json::num(su_i8)),
         ]));
     }
     record.push(("gemm", Json::Arr(gemm_rows_json)));

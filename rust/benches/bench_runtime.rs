@@ -1,8 +1,8 @@
 //! Real PJRT runtime benchmarks: artifact execution latency (the actual
 //! request path), block probes, and the L1 Pallas artifact vs the plain
 //! XLA artifact at batch 1.  Requires `make artifacts` — except the
-//! leading host-executor section (fast tier vs exact tier on the tiny
-//! fixture), which is artifact-free and always runs.
+//! leading host-executor section (fast and int8 tiers vs the exact
+//! tier on the tiny fixture), which is artifact-free and always runs.
 
 use std::path::PathBuf;
 
@@ -18,9 +18,12 @@ use repro::trainer::sgd::TrainState;
 use repro::util::bench::Bencher;
 use repro::util::rng::Rng;
 
-/// Fast tier (Winograd + fused epilogues) vs the bit-pinned exact tier
-/// on the artifact-free merged tiny fixture, tolerance-gated before
-/// timing.  Speedup is a ratio of minimum per-iteration times.
+/// Fast tier (Winograd + fused epilogues) and int8 tier (quantized
+/// w8a8 dense convs) vs the bit-pinned exact tier on the artifact-free
+/// merged tiny fixture, tolerance-gated before timing: fast within
+/// 1e-3 of the logit scale, int8 within 0.1 of the logit scale plus a
+/// top-1 agreement gate.  Speedups are ratios of minimum
+/// per-iteration times.
 fn bench_host_precision_tiers() {
     let cfg = tiny_config();
     let ps = ParamSet::synthetic(&cfg, 17);
@@ -38,19 +41,52 @@ fn bench_host_precision_tiers() {
         Precision::Exact,
     )
     .unwrap();
-    let fast = HostExec::with_precision(net, Pool::global(), Layout::Nchw, Precision::Fast).unwrap();
+    let fast = HostExec::with_precision(
+        net.clone_shallow(),
+        Pool::global(),
+        Layout::Nchw,
+        Precision::Fast,
+    )
+    .unwrap();
+    let int8 =
+        HostExec::with_precision(net, Pool::global(), Layout::Nchw, Precision::Int8).unwrap();
     let ye = exact.forward(&x).unwrap();
     let yf = fast.forward(&x).unwrap();
+    let yq = int8.forward(&x).unwrap();
     let scale = ye.data.iter().fold(1.0f32, |m, v| m.max(v.abs()));
     let err = ye.max_abs_diff(&yf);
     assert!(err < 1e-3 * scale, "fast-tier logits err {err} exceeds gate (scale {scale})");
+    let qerr = ye.max_abs_diff(&yq);
+    assert!(qerr < 0.1 * scale, "int8-tier logits err {qerr} exceeds gate (scale {scale})");
+    // top-1 agreement: the quantized tier must classify like exact on
+    // most of the batch (6/8) even where logits drift within tolerance
+    let classes = ye.data.len() / 8;
+    let argmax = |row: &[f32]| {
+        row.iter().enumerate().fold((0usize, f32::NEG_INFINITY), |best, (i, &v)| {
+            if v > best.1 { (i, v) } else { best }
+        }).0
+    };
+    let agree = (0..8)
+        .filter(|&b| {
+            argmax(&ye.data[b * classes..(b + 1) * classes])
+                == argmax(&yq.data[b * classes..(b + 1) * classes])
+        })
+        .count();
+    assert!(agree >= 6, "int8 top-1 agrees with exact on only {agree}/8 rows");
     let se = Bencher::new("host forward exact (tiny b8)").run(|| {
         let _ = exact.forward(&x).unwrap();
     });
     let sf = Bencher::new("host forward fast  (tiny b8)").run(|| {
         let _ = fast.forward(&x).unwrap();
     });
+    let sq = Bencher::new("host forward int8  (tiny b8)").run(|| {
+        let _ = int8.forward(&x).unwrap();
+    });
     println!("host fast tier: {:.2}x over exact (min-of-N basis)", se.min_ns / sf.min_ns);
+    println!(
+        "host int8 tier: {:.2}x over exact (min-of-N basis, top-1 agreement {agree}/8)",
+        se.min_ns / sq.min_ns
+    );
 }
 
 fn main() {

@@ -35,8 +35,9 @@
 
 use anyhow::{bail, Result};
 
-use super::gemm::{gemm_fused_with, gemm_rows, gemm_with, Bias, Epilogue};
+use super::gemm::{gemm_fused_with, gemm_i8_fused_with, gemm_rows, gemm_with, Bias, ChannelScales, Epilogue};
 use super::pool::Pool;
+use super::quant::{quantize, QuantConv};
 use crate::tensor::Tensor;
 
 /// Activation-tensor memory layout for the host compute layer.
@@ -66,7 +67,7 @@ impl Layout {
     }
 }
 
-/// Determinism tier of the host compute layer (`--precision`).
+/// Precision tier of the host compute layer (`--precision`).
 ///
 /// `Exact` is the reference: every kernel accumulates in one pinned
 /// order, so results are byte-identical across SIMD level, thread
@@ -76,13 +77,23 @@ impl Layout {
 /// `kernels::winograd` (different summation order and transform
 /// arithmetic) and bias/residual/relu6 epilogues fuse into the GEMM
 /// write-back; the tier is gated by relative-error tolerance tests
-/// against `Exact` instead of bit equality.
+/// against `Exact` instead of bit equality.  `Int8` quantizes dense
+/// convs (per-output-channel weight scales, per-tensor activation
+/// scale — see `kernels::quant`) and serves them through the widened
+/// i8×i8→i32 GEMM with a fused requantize epilogue; depthwise/grouped
+/// convs and the FC head stay on the exact f32 chain.  The tier is
+/// tolerance-gated against `Exact`, but byte-identical against ITSELF
+/// on every axis — including activation layout — because integer
+/// accumulation is exactly associative.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Precision {
     /// Bit-pinned reference paths (the default everywhere).
     Exact,
     /// Winograd + fused epilogues; tolerance-gated against `Exact`.
     Fast,
+    /// Quantized dense convs (w8a8, f32 carry); tolerance-gated
+    /// against `Exact`, bit-stable against itself on every axis.
+    Int8,
 }
 
 impl Precision {
@@ -90,7 +101,8 @@ impl Precision {
         match s.to_ascii_lowercase().as_str() {
             "exact" => Ok(Precision::Exact),
             "fast" => Ok(Precision::Fast),
-            other => bail!("unknown precision {other:?} (want exact|fast)"),
+            "int8" => Ok(Precision::Int8),
+            other => bail!("unknown precision {other:?} (want exact|fast|int8)"),
         }
     }
 
@@ -98,6 +110,7 @@ impl Precision {
         match self {
             Precision::Exact => "exact",
             Precision::Fast => "fast",
+            Precision::Int8 => "int8",
         }
     }
 }
@@ -325,6 +338,286 @@ pub fn conv2d_fused(
                 &ep,
             );
         }
+    }
+    Ok(out)
+}
+
+/// Int8 clone of [`im2col_block`]: lower one batch item's dense
+/// receptive fields of quantized NCHW codes into the column matrix.
+/// Identical traversal and zero fill (a 0 code contributes an exact
+/// zero product, like the f32 path's +0.0), so the integer sums match
+/// the f32 tap order element for element.
+#[allow(clippy::too_many_arguments)]
+fn im2col_i8_block(
+    x: &[i8],
+    ci: usize,
+    h: usize,
+    w: usize,
+    n: usize,
+    kh: usize,
+    kw: usize,
+    g: ConvGeom,
+    oh: usize,
+    ow: usize,
+    col: &mut [i8],
+) {
+    let ohw = oh * ow;
+    debug_assert_eq!(col.len(), ci * kh * kw * ohw);
+    col.fill(0);
+    for c in 0..ci {
+        let plane = &x[((n * ci + c) * h) * w..];
+        for dy in 0..kh {
+            for dx in 0..kw {
+                let crow = &mut col[((c * kh + dy) * kw + dx) * ohw..][..ohw];
+                for oy in 0..oh {
+                    let iy = (oy * g.stride + dy) as isize - g.pad as isize;
+                    if iy < 0 || iy as usize >= h {
+                        continue;
+                    }
+                    let src = &plane[iy as usize * w..iy as usize * w + w];
+                    let dst = &mut crow[oy * ow..(oy + 1) * ow];
+                    if g.stride == 1 {
+                        let ix0 = dx as isize - g.pad as isize;
+                        let (sa, da) = if ix0 < 0 { (0usize, (-ix0) as usize) } else { (ix0 as usize, 0) };
+                        if da >= ow || sa >= w {
+                            continue;
+                        }
+                        let len = (ow - da).min(w - sa);
+                        dst[da..da + len].copy_from_slice(&src[sa..sa + len]);
+                    } else {
+                        for (ox, d) in dst.iter_mut().enumerate() {
+                            let ix = (ox * g.stride + dx) as isize - g.pad as isize;
+                            if ix >= 0 && (ix as usize) < w {
+                                *d = src[ix as usize];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Int8 clone of [`im2col_nhwc_block`]: row-major quantized patches
+/// with the (c, dy, dx) reduction order — the same order as
+/// [`im2col_i8_block`] transposed, which is what keeps the two layouts'
+/// integer sums identical.
+#[allow(clippy::too_many_arguments)]
+fn im2col_i8_nhwc_block(
+    x: &[i8],
+    c: usize,
+    h: usize,
+    w: usize,
+    n: usize,
+    kh: usize,
+    kw: usize,
+    g: ConvGeom,
+    oh: usize,
+    ow: usize,
+    col: &mut [i8],
+) {
+    let kdim = c * kh * kw;
+    debug_assert_eq!(col.len(), oh * ow * kdim);
+    col.fill(0);
+    let base = n * h * w * c;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let crow = &mut col[(oy * ow + ox) * kdim..][..kdim];
+            for dy in 0..kh {
+                let iy = (oy * g.stride + dy) as isize - g.pad as isize;
+                if iy < 0 || iy as usize >= h {
+                    continue;
+                }
+                for dx in 0..kw {
+                    let ix = (ox * g.stride + dx) as isize - g.pad as isize;
+                    if ix < 0 || ix as usize >= w {
+                        continue;
+                    }
+                    let src = &x[base + ((iy as usize * w) + ix as usize) * c..][..c];
+                    for (cc, &v) in src.iter().enumerate() {
+                        crow[(cc * kh + dy) * kw + dx] = v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Validate the (x, w, qw) triple shared by both int8 conv entries and
+/// return `(n, h, w, ci, co, kh, kw)`.  The int8 tier covers DENSE
+/// convs only — depthwise/grouped layers stay on the exact f32 chain
+/// (their arithmetic intensity is too low for quantization to pay, and
+/// the blast radius stays small); callers fall back before getting
+/// here, so groups > 1 is a hard error.
+fn check_i8_conv(
+    x: &Tensor,
+    w: &Tensor,
+    qw: &QuantConv,
+    g: ConvGeom,
+    bias: Option<&[f32]>,
+) -> Result<(usize, usize, usize, usize, usize, usize, usize)> {
+    if x.rank() != 4 || w.rank() != 4 {
+        bail!("int8 conv expects rank-4 x and OIHW w, got {:?} / {:?}", x.shape, w.shape);
+    }
+    if g.groups != 1 {
+        bail!("int8 conv covers dense convs only (groups {}, want 1)", g.groups);
+    }
+    let (co, cig, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let kdim = cig * kh * kw;
+    if qw.scales.len() != co || qw.q.len() != co * kdim {
+        bail!(
+            "quant pack ({} codes, {} scales) does not match weight {:?}",
+            qw.q.len(),
+            qw.scales.len(),
+            w.shape
+        );
+    }
+    if let Some(b) = bias {
+        if b.len() != co {
+            bail!("fused bias has {} elems, want {co}", b.len());
+        }
+    }
+    Ok((x.shape[0], x.shape[1], x.shape[2], x.shape[3], co, kh, kw))
+}
+
+/// NCHW int8 conv with the fused requantize epilogue — the
+/// `--precision int8` tier's dense-conv path.  The f32 activation is
+/// quantized per tensor against the calibrated `qw.act_scale`, lowered
+/// through the int8 im2col, and multiplied by the per-output-channel
+/// quantized weight slab; each i32 accumulator leaves registers
+/// through dequantize → bias → residual → relu6 (the exact f32 op
+/// order).  `w` supplies shapes/validation only; the codes come from
+/// `qw` (hoisted at `HostExec` construction).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_i8_fused(
+    pool: &Pool,
+    x: &Tensor,
+    w: &Tensor,
+    qw: &QuantConv,
+    g: ConvGeom,
+    bias: Option<&[f32]>,
+    residual: Option<&Tensor>,
+    relu6: bool,
+) -> Result<Tensor> {
+    let (n, ci, h, wd, co, kh, kw) = check_i8_conv(x, w, qw, g, bias)?;
+    if w.shape[1] != ci {
+        bail!("weight c_in {} != activation channels {ci}", w.shape[1]);
+    }
+    let (oh, ow) = out_hw(h, wd, kh, kw, g)?;
+    let ohw = oh * ow;
+    let kdim = ci * kh * kw;
+    let mut out = Tensor::zeros(&[n, co, oh, ow]);
+    if let Some(r) = residual {
+        if r.shape != out.shape {
+            bail!("fused residual shape {:?} != output {:?}", r.shape, out.shape);
+        }
+    }
+    let qx = quantize(&x.data, qw.act_scale);
+    let mut col = vec![0i8; kdim * ohw];
+    for ni in 0..n {
+        im2col_i8_block(&qx, ci, h, wd, ni, kh, kw, g, oh, ow, &mut col);
+        let obase = ni * co * ohw;
+        let ep = Epilogue {
+            bias: match bias {
+                Some(b) => Bias::PerRow(b),
+                None => Bias::None,
+            },
+            residual: residual.map(|r| &r.data[obase..obase + co * ohw]),
+            relu6,
+        };
+        gemm_i8_fused_with(
+            pool,
+            co,
+            kdim,
+            ohw,
+            &qw.q,
+            &col,
+            &mut out.data[obase..obase + co * ohw],
+            qw.act_scale,
+            &ChannelScales::PerRow(&qw.scales),
+            &ep,
+        );
+    }
+    Ok(out)
+}
+
+/// NHWC int8 conv with the fused requantize epilogue.  1x1 stride-1
+/// pad-0 convs skip im2col entirely (the quantized activation IS the
+/// GEMM operand, batch folded into rows); general dense k x k convs
+/// lower through the int8 NHWC im2col.  `qw` must hold the
+/// [`QuantConv::nhwc_panel`] code layout (`[kdim, co]`, scales per
+/// column).  Because the codes are a pure permutation of the NCHW
+/// pack's and integer sums are order-exact, output bits match
+/// [`conv2d_i8_fused`] modulo the layout permutation — pinned below.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_i8_nhwc_fused(
+    pool: &Pool,
+    x: &Tensor,
+    w: &Tensor,
+    qw: &QuantConv,
+    g: ConvGeom,
+    bias: Option<&[f32]>,
+    residual: Option<&Tensor>,
+    relu6: bool,
+) -> Result<Tensor> {
+    let (n, h, wd, ci, co, kh, kw) = check_i8_conv(x, w, qw, g, bias)?;
+    if w.shape[1] != ci {
+        bail!("weight c_in {} != activation channels {ci}", w.shape[1]);
+    }
+    let (oh, ow) = out_hw(h, wd, kh, kw, g)?;
+    let ohw = oh * ow;
+    let kdim = ci * kh * kw;
+    let mut out = Tensor::zeros(&[n, oh, ow, co]);
+    if let Some(r) = residual {
+        if r.shape != out.shape {
+            bail!("fused residual shape {:?} != output {:?}", r.shape, out.shape);
+        }
+    }
+    let qx = quantize(&x.data, qw.act_scale);
+    let ep_bias = match bias {
+        Some(b) => Bias::PerCol(b),
+        None => Bias::None,
+    };
+
+    // pointwise fast path: no im2col, one GEMM over the whole batch
+    if kh == 1 && kw == 1 && g.stride == 1 && g.pad == 0 {
+        let ep = Epilogue { bias: ep_bias, residual: residual.map(|r| &r.data[..]), relu6 };
+        gemm_i8_fused_with(
+            pool,
+            n * h * wd,
+            ci,
+            co,
+            &qx,
+            &qw.q,
+            &mut out.data,
+            qw.act_scale,
+            &ChannelScales::PerCol(&qw.scales),
+            &ep,
+        );
+        return Ok(out);
+    }
+
+    let mut col = vec![0i8; ohw * kdim];
+    for ni in 0..n {
+        im2col_i8_nhwc_block(&qx, ci, h, wd, ni, kh, kw, g, oh, ow, &mut col);
+        let obase = ni * ohw * co;
+        let ep = Epilogue {
+            bias: ep_bias,
+            residual: residual.map(|r| &r.data[obase..obase + ohw * co]),
+            relu6,
+        };
+        gemm_i8_fused_with(
+            pool,
+            ohw,
+            kdim,
+            co,
+            &col,
+            &qw.q,
+            &mut out.data[obase..obase + ohw * co],
+            qw.act_scale,
+            &ChannelScales::PerCol(&qw.scales),
+            &ep,
+        );
     }
     Ok(out)
 }
@@ -985,9 +1278,147 @@ mod tests {
     fn precision_parse_and_name() {
         assert_eq!(Precision::parse("exact").unwrap(), Precision::Exact);
         assert_eq!(Precision::parse("FAST").unwrap(), Precision::Fast);
+        assert_eq!(Precision::parse("int8").unwrap(), Precision::Int8);
+        assert_eq!(Precision::parse("INT8").unwrap(), Precision::Int8);
         assert_eq!(Precision::Fast.name(), "fast");
         assert_eq!(Precision::Exact.name(), "exact");
+        assert_eq!(Precision::Int8.name(), "int8");
         assert!(Precision::parse("approx").is_err());
+        let err = Precision::parse("i8").unwrap_err().to_string();
+        assert!(err.contains("exact|fast|int8"), "stale error text: {err}");
+    }
+
+    /// quantize x per tensor + w per output channel for the int8 conv
+    /// tests, returning both pack layouts
+    fn quant_fixture(x: &Tensor, w: &Tensor) -> (QuantConv, QuantConv) {
+        use crate::kernels::quant::{absmax_checked, scale_for};
+        let act = scale_for(absmax_checked(&x.data).unwrap());
+        (QuantConv::from_oihw(w, act).unwrap(), QuantConv::nhwc_panel(w, act).unwrap())
+    }
+
+    #[test]
+    fn int8_conv_tracks_f32_oracle_within_bound() {
+        // the tier's conv-level tolerance gate: dense geometries, full
+        // epilogue, against the exact f32 chain.  Per-channel bound:
+        // kdim * xmax * wmax_row / 100 (the true quantization bound is
+        // ≈ /125; bias/residual add equally to both sides and relu6 is
+        // 1-Lipschitz, so neither widens the gap).
+        crate::util::prop::forall(25, 81, |rng| {
+            let (ci, co) = (1 + rng.below(6), 1 + rng.below(6));
+            let k = [1, 3, 5][rng.below(3)];
+            let stride = 1 + rng.below(2);
+            let pad = rng.below(k.min(2));
+            let h = k + stride * (1 + rng.below(4));
+            let n = 1 + rng.below(2);
+            let x = randt(&[n, ci, h, h], rng);
+            let w = randt(&[co, ci, k, k], rng);
+            let g = ConvGeom { stride, pad, groups: 1 };
+            let bias: Vec<f32> = (0..co).map(|_| rng.normal() * 0.1).collect();
+            let (qw, _) = quant_fixture(&x, &w);
+            let want = conv2d_fused(&Pool::serial(), &x, &w, g, Some(&bias), None, true)
+                .map_err(|e| e.to_string())?;
+            let got = conv2d_i8_fused(&Pool::serial(), &x, &w, &qw, g, Some(&bias), None, true)
+                .map_err(|e| e.to_string())?;
+            crate::prop_assert!(got.shape == want.shape, "shape {:?} vs {:?}", got.shape, want.shape);
+            let kdim = ci * k * k;
+            let ohw = want.shape[2] * want.shape[3];
+            let xmax = x.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            for (idx, (gv, wv)) in got.data.iter().zip(&want.data).enumerate() {
+                let ch = (idx / ohw) % co;
+                let tol = kdim as f32 * xmax * (qw.scales[ch] * 127.0) / 100.0 + 1e-5;
+                crate::prop_assert!(
+                    (gv - wv).abs() <= tol,
+                    "int8 conv off at {idx} (ch {ch}): {gv} vs {wv}, tol {tol} \
+                     (geom {g:?}, k {k}, {ci}->{co})"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int8_nhwc_is_byte_identical_to_nchw() {
+        // the int8 layout pin, STRONGER than the f32 fast tier can
+        // offer: integer sums are order-exact and the requant epilogue
+        // is one shared op sequence, so NCHW and NHWC (pointwise and
+        // im2col paths both) agree bit for bit, not just within
+        // tolerance
+        crate::util::prop::forall(25, 82, |rng| {
+            let (ci, co) = (1 + rng.below(6), 1 + rng.below(6));
+            let k = [1, 1, 3][rng.below(3)]; // half the cases hit pointwise
+            let stride = if k == 1 && rng.below(2) == 0 { 1 } else { 1 + rng.below(2) };
+            let pad = if k == 1 { 0 } else { rng.below(2) };
+            let h = k + stride * (1 + rng.below(4));
+            let n = 1 + rng.below(3);
+            let x = randt(&[n, ci, h, h], rng);
+            let w = randt(&[co, ci, k, k], rng);
+            let g = ConvGeom { stride, pad, groups: 1 };
+            let bias: Vec<f32> = (0..co).map(|_| rng.normal() * 0.1).collect();
+            let (qw, qw_panel) = quant_fixture(&x, &w);
+            let want = conv2d_i8_fused(&Pool::serial(), &x, &w, &qw, g, Some(&bias), None, true)
+                .map_err(|e| e.to_string())?;
+            let res = randt(&want.shape.clone(), rng);
+            let want = conv2d_i8_fused(&Pool::serial(), &x, &w, &qw, g, Some(&bias), Some(&res), true)
+                .map_err(|e| e.to_string())?;
+            let got_nhwc = conv2d_i8_nhwc_fused(
+                &Pool::serial(),
+                &nchw_to_nhwc(&x),
+                &w,
+                &qw_panel,
+                g,
+                Some(&bias),
+                Some(&nchw_to_nhwc(&res)),
+                true,
+            )
+            .map_err(|e| e.to_string())?;
+            let got = nhwc_to_nchw(&got_nhwc);
+            crate::prop_assert!(
+                got.shape == want.shape && bits_equal(&got.data, &want.data),
+                "int8 NHWC not byte-identical to NCHW (geom {g:?}, k {k}, {ci}->{co})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int8_conv_is_byte_identical_across_workers() {
+        // thread-count half of the int8 self-identity contract
+        let mut rng = Rng::new(83);
+        let x = randt(&[2, 6, 9, 9], &mut rng);
+        let w = randt(&[10, 6, 3, 3], &mut rng);
+        let g = ConvGeom { stride: 1, pad: 1, groups: 1 };
+        let bias: Vec<f32> = (0..10).map(|_| rng.normal()).collect();
+        let (qw, qw_panel) = quant_fixture(&x, &w);
+        let a = conv2d_i8_fused(&Pool::serial(), &x, &w, &qw, g, Some(&bias), None, true).unwrap();
+        let xh = nchw_to_nhwc(&x);
+        let ah = conv2d_i8_nhwc_fused(&Pool::serial(), &xh, &w, &qw_panel, g, Some(&bias), None, true)
+            .unwrap();
+        for workers in [2usize, 5] {
+            let b = conv2d_i8_fused(&Pool::new(workers), &x, &w, &qw, g, Some(&bias), None, true)
+                .unwrap();
+            assert!(bits_equal(&a.data, &b.data), "int8 NCHW differs at {workers} workers");
+            let bh =
+                conv2d_i8_nhwc_fused(&Pool::new(workers), &xh, &w, &qw_panel, g, Some(&bias), None, true)
+                    .unwrap();
+            assert!(bits_equal(&ah.data, &bh.data), "int8 NHWC differs at {workers} workers");
+        }
+    }
+
+    #[test]
+    fn int8_conv_rejects_grouped_and_mismatched_packs() {
+        let mut rng = Rng::new(84);
+        let x = randt(&[1, 4, 5, 5], &mut rng);
+        let w = randt(&[4, 2, 3, 3], &mut rng);
+        let (qw, _) = quant_fixture(&x, &w);
+        let grouped = ConvGeom { stride: 1, pad: 1, groups: 2 };
+        let err = conv2d_i8_fused(&Pool::serial(), &x, &w, &qw, grouped, None, None, false)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("dense convs only"), "unexpected error: {err}");
+        // pack built for a different weight is rejected, not misread
+        let w_other = randt(&[4, 4, 3, 3], &mut rng);
+        let g = ConvGeom { stride: 1, pad: 1, groups: 1 };
+        assert!(conv2d_i8_fused(&Pool::serial(), &x, &w_other, &qw, g, None, None, false).is_err());
     }
 
     #[test]

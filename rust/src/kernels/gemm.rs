@@ -26,7 +26,7 @@
 use anyhow::{bail, Result};
 
 use super::pool::Pool;
-use super::simd::{avx2_available, detect, F32x8, SimdLevel};
+use super::simd::{avx2_available, detect, F32x8, I32x8, SimdLevel};
 use crate::tensor::Tensor;
 
 /// Register-tile rows (distinct accumulator rows live in registers).
@@ -681,6 +681,290 @@ pub fn gemm_bt_with(
     });
 }
 
+/// Where the per-output-channel requantization scales attach to the C
+/// tile of an int8 GEMM — mirrors [`Bias`]: NCHW conv output is
+/// `[c_out, oh*ow]` (scales per row), NHWC is `[pixels, c_out]`
+/// (scales per column).
+#[derive(Debug, Clone, Copy)]
+pub enum ChannelScales<'a> {
+    /// `scales[row]` — output channels are C rows (NCHW orientation).
+    PerRow(&'a [f32]),
+    /// `scales[col]` — output channels are C columns (NHWC orientation).
+    PerCol(&'a [f32]),
+}
+
+/// Requantize one i32 accumulator and run the fused epilogue in the
+/// exact f32 op order of the separate passes: dequantize (one
+/// multiply by `act_scale * w_scale[channel]`), then bias, then
+/// residual, then relu6.  Shared by every int8 dispatch branch, so the
+/// epilogue can never be a source of cross-branch drift.
+#[inline(always)]
+fn requant_one(
+    q: i32,
+    r: usize,
+    j: usize,
+    n: usize,
+    act_scale: f32,
+    scales: &ChannelScales,
+    ep: &Epilogue,
+) -> f32 {
+    let s = act_scale
+        * match scales {
+            ChannelScales::PerRow(sv) => sv[r],
+            ChannelScales::PerCol(sv) => sv[j],
+        };
+    let mut v = q as f32 * s;
+    match ep.bias {
+        Bias::None => {}
+        Bias::PerRow(bias) => v += bias[r],
+        Bias::PerCol(bias) => v += bias[j],
+    }
+    if let Some(res) = ep.residual {
+        v += res[r * n + j];
+    }
+    if ep.relu6 {
+        v = v.clamp(0.0, 6.0);
+    }
+    v
+}
+
+/// The widened int8 GEMM body: `C[m,n] = A[m,k] · B[k,n]` with i8
+/// operands and i32 accumulation ([`I32x8::mul_acc_i8`] lanes + a
+/// scalar column tail).  Integer addition is exactly associative, so
+/// every schedule/branch/tile split of this kernel produces identical
+/// accumulators — the determinism contract holds with no rounding
+/// argument at all.  Overflow is structurally out of reach: |a·b| ≤
+/// 127² per step keeps i32 safe until k ≈ 133 000.
+#[inline(always)]
+fn gemm_i8_rows_body(rows: usize, k: usize, n: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+    for r in 0..rows {
+        let arow = &a[r * k..r * k + k];
+        let crow = &mut c[r * n..r * n + n];
+        let mut j = 0;
+        while j + 8 <= n {
+            let mut acc = I32x8::zero();
+            for (kk, &ac) in arow.iter().enumerate() {
+                acc = acc.mul_acc_i8(ac as i32, I32x8::widen_i8(&b[kk * n + j..]));
+            }
+            acc.store(&mut crow[j..]);
+            j += 8;
+        }
+        while j < n {
+            let mut acc = 0i32;
+            for (kk, &ac) in arow.iter().enumerate() {
+                acc += ac as i32 * b[kk * n + j] as i32;
+            }
+            crow[j] = acc;
+            j += 1;
+        }
+    }
+}
+
+/// The AVX2 monomorphization of [`gemm_i8_rows_body`] — LLVM lowers the
+/// widened lanes to `vpmovsxbd`+`vpmulld`+`vpaddd`.  Integer math, so
+/// equality with the baseline build is exact, not just bit-compatible.
+///
+/// # Safety
+/// Caller must have verified `avx2_available()`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn gemm_i8_rows_avx2(rows: usize, k: usize, n: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+    gemm_i8_rows_body(rows, k, n, a, b, c);
+}
+
+/// Sequential int8 GEMM at an explicit [`SimdLevel`]: raw i32
+/// accumulators, no epilogue — the A/B surface for the
+/// scalar-vs-AVX2 equality pins and the `bench_kernels` gates.  Same
+/// `REPRO_SIMD`-overridable dispatch as the f32 kernels.
+pub fn gemm_i8_rows_level(
+    level: SimdLevel,
+    rows: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    b: &[i8],
+    c: &mut [i32],
+) {
+    debug_assert!(a.len() >= rows * k && b.len() >= k * n && c.len() >= rows * n);
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 if avx2_available() => unsafe { gemm_i8_rows_avx2(rows, k, n, a, b, c) },
+        _ => gemm_i8_rows_body(rows, k, n, a, b, c),
+    }
+}
+
+/// Int8 GEMM body with the fused requantize epilogue: the i32
+/// accumulator for each element is computed exactly as in
+/// [`gemm_i8_rows_body`], then leaves registers through [`requant_one`]
+/// (dequantize → bias → residual → relu6) straight into f32 C.  The
+/// k = 0 degenerate still runs the epilogue on zero accumulators,
+/// matching [`gemm_rows_fused_body`].
+#[inline(always)]
+fn gemm_i8_requant_rows_body(
+    rows: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    b: &[i8],
+    c: &mut [f32],
+    act_scale: f32,
+    scales: &ChannelScales,
+    ep: &Epilogue,
+) {
+    for r in 0..rows {
+        let arow = &a[r * k..r * k + k];
+        let crow = &mut c[r * n..r * n + n];
+        let mut j = 0;
+        while j + 8 <= n {
+            let mut acc = I32x8::zero();
+            for (kk, &ac) in arow.iter().enumerate() {
+                acc = acc.mul_acc_i8(ac as i32, I32x8::widen_i8(&b[kk * n + j..]));
+            }
+            for (lane, &q) in acc.0.iter().enumerate() {
+                crow[j + lane] = requant_one(q, r, j + lane, n, act_scale, scales, ep);
+            }
+            j += 8;
+        }
+        while j < n {
+            let mut acc = 0i32;
+            for (kk, &ac) in arow.iter().enumerate() {
+                acc += ac as i32 * b[kk * n + j] as i32;
+            }
+            crow[j] = requant_one(acc, r, j, n, act_scale, scales, ep);
+            j += 1;
+        }
+    }
+}
+
+/// The AVX2 monomorphization of [`gemm_i8_requant_rows_body`].  The
+/// integer accumulation is exact in both builds and the f32 epilogue is
+/// one shared per-element op sequence, so the two branches are
+/// byte-identical.
+///
+/// # Safety
+/// Caller must have verified `avx2_available()`.
+#[allow(clippy::too_many_arguments)]
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn gemm_i8_requant_rows_avx2(
+    rows: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    b: &[i8],
+    c: &mut [f32],
+    act_scale: f32,
+    scales: &ChannelScales,
+    ep: &Epilogue,
+) {
+    gemm_i8_requant_rows_body(rows, k, n, a, b, c, act_scale, scales, ep);
+}
+
+/// Sequential fused-requantize int8 GEMM at an explicit [`SimdLevel`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_requant_rows_level(
+    level: SimdLevel,
+    rows: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    b: &[i8],
+    c: &mut [f32],
+    act_scale: f32,
+    scales: &ChannelScales,
+    ep: &Epilogue,
+) {
+    debug_assert!(a.len() >= rows * k && b.len() >= k * n && c.len() >= rows * n);
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 if avx2_available() => unsafe {
+            gemm_i8_requant_rows_avx2(rows, k, n, a, b, c, act_scale, scales, ep)
+        },
+        _ => gemm_i8_requant_rows_body(rows, k, n, a, b, c, act_scale, scales, ep),
+    }
+}
+
+/// C = requantize(A·B) on an explicit pool — the int8 tier's parallel
+/// conv/GEMM entry (MC-row blocks fan out like [`gemm_fused_with`];
+/// each element's i32 sum is schedule-independent by exact integer
+/// associativity, so worker count can never change the bits).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_fused_with(
+    pool: &Pool,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    b: &[i8],
+    c: &mut [f32],
+    act_scale: f32,
+    scales: &ChannelScales,
+    ep: &Epilogue,
+) {
+    assert_eq!(a.len(), m * k, "A is not m x k");
+    assert_eq!(b.len(), k * n, "B is not k x n");
+    assert_eq!(c.len(), m * n, "C is not m x n");
+    match scales {
+        ChannelScales::PerRow(sv) => assert_eq!(sv.len(), m, "row scales are not len m"),
+        ChannelScales::PerCol(sv) => assert_eq!(sv.len(), n, "col scales are not len n"),
+    }
+    match ep.bias {
+        Bias::None => {}
+        Bias::PerRow(bias) => assert_eq!(bias.len(), m, "row bias is not len m"),
+        Bias::PerCol(bias) => assert_eq!(bias.len(), n, "col bias is not len n"),
+    }
+    if let Some(res) = ep.residual {
+        assert_eq!(res.len(), m * n, "residual is not m x n");
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    let level = detect();
+    pool.for_each_chunk(c, MC * n, |bi, cblk| {
+        let row0 = bi * MC;
+        let rows = cblk.len() / n;
+        let blk_scales = match scales {
+            ChannelScales::PerRow(sv) => ChannelScales::PerRow(&sv[row0..row0 + rows]),
+            ChannelScales::PerCol(sv) => ChannelScales::PerCol(*sv),
+        };
+        let blk_ep = Epilogue {
+            bias: match ep.bias {
+                Bias::None => Bias::None,
+                Bias::PerRow(bias) => Bias::PerRow(&bias[row0..row0 + rows]),
+                Bias::PerCol(bias) => Bias::PerCol(bias),
+            },
+            residual: ep.residual.map(|res| &res[row0 * n..(row0 + rows) * n]),
+            relu6: ep.relu6,
+        };
+        gemm_i8_requant_rows_level(
+            level,
+            rows,
+            k,
+            n,
+            &a[row0 * k..(row0 + rows) * k],
+            b,
+            cblk,
+            act_scale,
+            &blk_scales,
+            &blk_ep,
+        );
+    });
+}
+
+/// Naive widened int8 triple loop — the oracle the lane kernel is
+/// pinned against (exact i32 equality; integer math has no tolerance).
+pub fn gemm_i8_naive(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for kk in 0..k {
+                acc += a[i * k + kk] as i32 * b[kk * n + j] as i32;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
 /// Naive ijk triple loop (strided B access) — the bench baseline and a
 /// correctness oracle; never used on a hot path.
 pub fn gemm_naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
@@ -991,6 +1275,179 @@ mod tests {
         let mut c = vec![0.0f32; 6];
         gemm_fused_with(&Pool::serial(), 3, 0, 2, &[], &[], &mut c, &ep);
         assert_eq!(c, vec![0.5, 0.5, 6.0, 6.0, 0.0, 0.0]);
+    }
+
+    fn randq(n: usize, rng: &mut Rng) -> Vec<i8> {
+        // full saturated code range, -127..=127 (the quantizer never
+        // emits -128, so the kernels are only exercised on that range)
+        (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect()
+    }
+
+    #[test]
+    fn int8_blocked_matches_naive_exactly() {
+        // integer GEMM has no tolerance story: lanes + scalar tail must
+        // equal the widened triple loop, accumulator for accumulator
+        crate::util::prop::forall(30, 51, |rng| {
+            let m = 1 + rng.below(20);
+            let k = 1 + rng.below(70);
+            let n = 1 + rng.below(40); // covers lane blocks and tails
+            let a = randq(m * k, rng);
+            let b = randq(k * n, rng);
+            let mut want = vec![0i32; m * n];
+            gemm_i8_naive(m, k, n, &a, &b, &mut want);
+            for level in levels_available() {
+                let mut got = vec![0i32; m * n];
+                gemm_i8_rows_level(level, m, k, n, &a, &b, &mut got);
+                crate::prop_assert!(
+                    got == want,
+                    "{m}x{k}x{n}: int8 {} differs from naive",
+                    level.name()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int8_scalar_and_avx2_accumulators_are_identical() {
+        // satellite pin: the i32 accumulators out of the scalar build
+        // and the AVX2 monomorphization are EQUAL (==, stronger than
+        // f32 bit-compat — integer math has one right answer)
+        let mut rng = Rng::new(52);
+        for (m, k, n) in [(33usize, 529usize, 17usize), (64, 48, 64), (5, 3, 100)] {
+            let a = randq(m * k, &mut rng);
+            let b = randq(k * n, &mut rng);
+            let mut reference = vec![0i32; m * n];
+            gemm_i8_rows_level(SimdLevel::Scalar, m, k, n, &a, &b, &mut reference);
+            for level in levels_available() {
+                let mut got = vec![0i32; m * n];
+                gemm_i8_rows_level(level, m, k, n, &a, &b, &mut got);
+                assert_eq!(reference, got, "{m}x{k}x{n}: int8 {} differs from scalar", level.name());
+            }
+        }
+    }
+
+    #[test]
+    fn int8_fused_requant_matches_separate_passes() {
+        // the requantize epilogue replicates the f32 op order exactly:
+        // dequantize, bias, residual, relu6 — fused output must be
+        // byte-identical to the longhand sequence, per SIMD level, per
+        // worker count, in both scale orientations
+        let mut rng = Rng::new(53);
+        for (m, k, n) in [(37usize, 65usize, 50usize), (9, 130, 33), (4, 16, 16)] {
+            let a = randq(m * k, &mut rng);
+            let b = randq(k * n, &mut rng);
+            let act_scale = 0.037f32;
+            let row_scales: Vec<f32> = (0..m).map(|_| 0.002 + rng.normal().abs() * 0.01).collect();
+            let col_scales: Vec<f32> = (0..n).map(|_| 0.002 + rng.normal().abs() * 0.01).collect();
+            let row_bias = randv(m, &mut rng);
+            let col_bias = randv(n, &mut rng);
+            let res = randv(m * n, &mut rng);
+            let mut acc = vec![0i32; m * n];
+            gemm_i8_naive(m, k, n, &a, &b, &mut acc);
+            for (label, scales, bias) in [
+                ("row", ChannelScales::PerRow(&row_scales[..]), Bias::PerRow(&row_bias[..])),
+                ("col", ChannelScales::PerCol(&col_scales[..]), Bias::PerCol(&col_bias[..])),
+            ] {
+                let mut want = vec![0.0f32; m * n];
+                for r in 0..m {
+                    for j in 0..n {
+                        let s = act_scale
+                            * match scales {
+                                ChannelScales::PerRow(sv) => sv[r],
+                                ChannelScales::PerCol(sv) => sv[j],
+                            };
+                        let mut v = acc[r * n + j] as f32 * s;
+                        v += match bias {
+                            Bias::PerRow(bv) => bv[r],
+                            Bias::PerCol(bv) => bv[j],
+                            Bias::None => 0.0,
+                        };
+                        v += res[r * n + j];
+                        want[r * n + j] = v.clamp(0.0, 6.0);
+                    }
+                }
+                let ep = Epilogue { bias, residual: Some(&res), relu6: true };
+                for level in levels_available() {
+                    let mut got = vec![0.0f32; m * n];
+                    gemm_i8_requant_rows_level(
+                        level, m, k, n, &a, &b, &mut got, act_scale, &scales, &ep,
+                    );
+                    assert!(
+                        bits_equal(&got, &want),
+                        "{m}x{k}x{n} {label}: fused requant differs at {}",
+                        level.name()
+                    );
+                }
+                for workers in [1usize, 2, 5] {
+                    let mut got = vec![0.0f32; m * n];
+                    gemm_i8_fused_with(
+                        &Pool::new(workers), m, k, n, &a, &b, &mut got, act_scale, &scales, &ep,
+                    );
+                    assert!(
+                        bits_equal(&got, &want),
+                        "{m}x{k}x{n} {label}: fused requant differs at {workers} workers"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_gemm_tracks_f32_within_quantization_bound() {
+        // the tier's tolerance gate, at GEMM granularity: per-row
+        // quantized A x per-tensor quantized B, dequantized back, must
+        // land within the analytic bound k*amax*bmax/100 of the f32
+        // product (per-element quantization error is ≤ step/2 per
+        // operand, so the true bound is ≈ k*amax*bmax/125)
+        use crate::kernels::quant;
+        crate::util::prop::forall(20, 54, |rng| {
+            let m = 1 + rng.below(12);
+            let k = 1 + rng.below(90);
+            let n = 1 + rng.below(24);
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.1).collect();
+            let (qa, a_scales) = quant::quantize_rows(&a, m).map_err(|e| e.to_string())?;
+            let b_scale =
+                quant::scale_for(quant::absmax_checked(&b).map_err(|e| e.to_string())?);
+            let qb = quant::quantize(&b, b_scale);
+            let mut want = vec![0.0f32; m * n];
+            gemm_naive(m, k, n, &a, &b, &mut want);
+            let ep = Epilogue { bias: Bias::None, residual: None, relu6: false };
+            let mut got = vec![0.0f32; m * n];
+            gemm_i8_fused_with(
+                &Pool::serial(), m, k, n, &qa, &qb, &mut got, b_scale,
+                &ChannelScales::PerRow(&a_scales), &ep,
+            );
+            let bmax = quant::absmax_checked(&b).map_err(|e| e.to_string())?;
+            for r in 0..m {
+                let amax = a_scales[r] * 127.0;
+                let tol = k as f32 * amax * bmax / 100.0 + 1e-6;
+                for j in 0..n {
+                    let (g, w) = (got[r * n + j], want[r * n + j]);
+                    crate::prop_assert!(
+                        (g - w).abs() <= tol,
+                        "{m}x{k}x{n} [{r},{j}]: int8 {g} vs f32 {w} (tol {tol})"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int8_degenerate_k_applies_epilogue() {
+        // k = 0: zero accumulators, epilogue still runs (bias through
+        // relu6), matching the f32 fused kernel's degenerate case
+        let bias = [1.0f32, 8.0];
+        let scales = [0.5f32, 0.5];
+        let ep = Epilogue { bias: Bias::PerRow(&bias), residual: None, relu6: true };
+        let mut c = vec![9.0f32; 6];
+        gemm_i8_fused_with(
+            &Pool::serial(), 2, 0, 3, &[], &[], &mut c, 1.0,
+            &ChannelScales::PerRow(&scales), &ep,
+        );
+        assert_eq!(c, vec![1.0, 1.0, 1.0, 6.0, 6.0, 6.0]);
     }
 
     #[test]

@@ -1,0 +1,275 @@
+//! Symmetric int8 quantization — the weight/activation prep layer of
+//! the `--precision int8` tier.
+//!
+//! Weights are quantized **per output channel** (one scale per row of
+//! the `[c_out, cg*kh*kw]` OIHW slab), activations **per tensor** with
+//! a scale taken from a seeded calibration pass at `HostExec`
+//! construction (see `runtime::host_exec`).  Both sides are symmetric
+//! around zero and clamped to `[-127, 127]`: the `-128` code is never
+//! produced, so negating a quantized value can never overflow and the
+//! `i8::MIN` asymmetry stays out of the arithmetic entirely (pinned by
+//! the saturation tests below).
+//!
+//! The compute contract the int8 GEMM/conv paths inherit from here:
+//! `real ≈ (q as i32 accumulation) * (act_scale * w_scale[channel])`,
+//! with the i32 accumulation *exactly* associative — so unlike the f32
+//! tiers, the int8 tier is byte-identical against itself across SIMD
+//! level, thread count, AND reduction order by construction.  Accuracy
+//! against the f32 reference is a tolerance gate, not a bit pin: each
+//! quantized operand carries at most half a quantization step of error
+//! (`scale / 2` per element), which the property tests bound through
+//! round-trips and the conv/GEMM oracle sweeps bound end to end.
+//!
+//! Non-finite inputs are rejected at scale-derivation time
+//! ([`absmax_checked`]), the same poisoned-activation stance as
+//! `HostExec::logits_checked` — a NaN absmax would silently zero every
+//! code.  The hot quantize loop itself stays branch-free and total:
+//! `±inf` saturates to `±127`, NaN casts to 0, both deterministic.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// Largest magnitude an int8 code takes: codes live in `[-127, 127]`.
+/// `-128` is deliberately unreachable (symmetric quantization).
+pub const QMAX: f32 = 127.0;
+
+/// Largest |x| over a slice, rejecting non-finite entries — the checked
+/// entry every scale derivation routes through, mirroring the
+/// `logits_checked` guard: a NaN here would poison every quantized code
+/// downstream, silently.
+pub fn absmax_checked(x: &[f32]) -> Result<f32> {
+    let mut m = 0.0f32;
+    for (i, &v) in x.iter().enumerate() {
+        if !v.is_finite() {
+            bail!("non-finite value {v} at index {i}: cannot derive a quantization scale");
+        }
+        m = m.max(v.abs());
+    }
+    Ok(m)
+}
+
+/// Symmetric scale for a tensor whose largest magnitude is `absmax`:
+/// `absmax / 127`, with an all-zero tensor falling back to scale 1.0
+/// (every code is 0 either way; 1.0 keeps downstream divisions finite).
+pub fn scale_for(absmax: f32) -> f32 {
+    if absmax > 0.0 {
+        absmax / QMAX
+    } else {
+        1.0
+    }
+}
+
+/// Quantize one value: round-to-nearest of `v / scale`, saturated into
+/// `[-127, 127]`.  Total and branch-free on every input: `±inf`
+/// saturates, NaN casts to 0 (Rust's saturating float→int cast) — the
+/// checked scale derivation upstream is what rejects poisoned tensors.
+#[inline(always)]
+pub fn quantize_one(v: f32, scale: f32) -> i8 {
+    ((v / scale).round()).clamp(-QMAX, QMAX) as i8
+}
+
+/// Quantize a slice into a caller-provided code buffer.
+pub fn quantize_into(x: &[f32], scale: f32, out: &mut [i8]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = quantize_one(v, scale);
+    }
+}
+
+/// Quantize a slice into a fresh code vector.
+pub fn quantize(x: &[f32], scale: f32) -> Vec<i8> {
+    x.iter().map(|&v| quantize_one(v, scale)).collect()
+}
+
+/// Decode int8 codes back to f32: `q * scale`.
+pub fn dequantize(q: &[i8], scale: f32) -> Vec<f32> {
+    q.iter().map(|&v| v as f32 * scale).collect()
+}
+
+/// Per-row symmetric quantization of a row-major `[rows, k]` matrix:
+/// one scale per row (= per output channel for an OIHW weight slab).
+/// Rejects non-finite weights.
+pub fn quantize_rows(w: &[f32], rows: usize) -> Result<(Vec<i8>, Vec<f32>)> {
+    if rows == 0 || w.len() % rows != 0 {
+        bail!("quantize_rows: {} elems do not split into {rows} rows", w.len());
+    }
+    let k = w.len() / rows;
+    let mut q = vec![0i8; w.len()];
+    let mut scales = vec![0.0f32; rows];
+    for r in 0..rows {
+        let row = &w[r * k..(r + 1) * k];
+        let s = scale_for(absmax_checked(row)?);
+        scales[r] = s;
+        quantize_into(row, s, &mut q[r * k..(r + 1) * k]);
+    }
+    Ok((q, scales))
+}
+
+/// One conv layer's quantized operands, derived once at `HostExec`
+/// construction (the same hoisting move as `conv::pack_nhwc` /
+/// Winograd weight transforms) and reused across every forward.
+#[derive(Debug, Clone)]
+pub struct QuantConv {
+    /// quantized weight codes.  NCHW mode: the OIHW slab row-major
+    /// `[c_out, cg*kh*kw]` (the im2col GEMM's A operand).  NHWC mode:
+    /// the transposed panel `[cg*kh*kw, c_out]` (the B operand), same
+    /// permutation as `conv::pack_nhwc` — pure code movement, so the
+    /// two layouts share identical integer sums.
+    pub q: Vec<i8>,
+    /// per-output-channel weight scales (len `c_out`)
+    pub scales: Vec<f32>,
+    /// per-tensor activation scale from the calibration pass
+    pub act_scale: f32,
+}
+
+impl QuantConv {
+    /// Quantize a dense OIHW weight per output channel, keeping the
+    /// slab layout (the NCHW im2col GEMM's A operand).
+    pub fn from_oihw(w: &Tensor, act_scale: f32) -> Result<QuantConv> {
+        if w.rank() != 4 {
+            bail!("QuantConv wants an OIHW weight, got {:?}", w.shape);
+        }
+        let (q, scales) = quantize_rows(&w.data, w.shape[0])?;
+        Ok(QuantConv { q, scales, act_scale })
+    }
+
+    /// Quantize a dense OIHW weight per output channel, then transpose
+    /// the codes into the NHWC GEMM panel `[cg*kh*kw, c_out]` (the
+    /// `conv::weight_panel` permutation on int8 codes).
+    pub fn nhwc_panel(w: &Tensor, act_scale: f32) -> Result<QuantConv> {
+        if w.rank() != 4 {
+            bail!("QuantConv wants an OIHW weight, got {:?}", w.shape);
+        }
+        let co = w.shape[0];
+        let kdim = w.shape[1] * w.shape[2] * w.shape[3];
+        let (rows, scales) = quantize_rows(&w.data, co)?;
+        let mut q = vec![0i8; rows.len()];
+        for o in 0..co {
+            for kk in 0..kdim {
+                q[kk * co + o] = rows[o * kdim + kk];
+            }
+        }
+        Ok(QuantConv { q, scales, act_scale })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn round_trip_error_is_bounded_by_half_a_step() {
+        // the round-trip property: |dequantize(quantize(x)) - x| never
+        // exceeds half a quantization step (plus rounding slop)
+        crate::util::prop::forall(40, 811, |rng| {
+            let n = 1 + rng.below(200);
+            let amp = [0.01f32, 1.0, 50.0][rng.below(3)];
+            let x: Vec<f32> = (0..n).map(|_| rng.normal() * amp).collect();
+            let s = scale_for(absmax_checked(&x).map_err(|e| e.to_string())?);
+            let q = quantize(&x, s);
+            let back = dequantize(&q, s);
+            for (i, (&orig, &dec)) in x.iter().zip(&back).enumerate() {
+                crate::prop_assert!(
+                    (orig - dec).abs() <= 0.5001 * s,
+                    "round-trip error {} > step/2 {} at {i} (amp {amp})",
+                    (orig - dec).abs(),
+                    0.5 * s
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn per_row_scales_are_monotone_in_row_magnitude() {
+        // scaling a row up scales its quantization step up with it:
+        // scales are monotone in per-row absmax, and each row's codes
+        // hit 127 at its own absmax (per-channel beats per-tensor
+        // exactly when row magnitudes differ)
+        let mut rng = Rng::new(812);
+        let k = 37;
+        let amps = [0.05f32, 0.5, 2.0, 40.0];
+        let mut w = Vec::new();
+        for &amp in &amps {
+            // plant the absmax exactly so the expected scale is known
+            let mut row: Vec<f32> = (0..k).map(|_| rng.normal() * amp * 0.3).collect();
+            row[k / 2] = amp;
+            w.extend(row);
+        }
+        let (q, scales) = quantize_rows(&w, amps.len()).unwrap();
+        for r in 1..amps.len() {
+            assert!(
+                scales[r] > scales[r - 1],
+                "scales not monotone: {} !> {}",
+                scales[r],
+                scales[r - 1]
+            );
+        }
+        for (r, &amp) in amps.iter().enumerate() {
+            assert!((scales[r] - amp / QMAX).abs() < 1e-6 * amp, "row {r} scale off");
+            let codes = &q[r * k..(r + 1) * k];
+            assert_eq!(codes[k / 2], 127, "row {r} absmax must map to code 127");
+            assert!(codes.iter().all(|&c| c >= -127), "row {r} emitted -128");
+        }
+    }
+
+    #[test]
+    fn saturating_cast_edges_are_pinned() {
+        // the i8::MIN asymmetry: -absmax maps to -127, never -128
+        assert_eq!(quantize_one(-1.0, 1.0 / QMAX), -127);
+        assert_eq!(quantize_one(1.0, 1.0 / QMAX), 127);
+        // values beyond absmax (activation clipping at serve time)
+        // saturate instead of wrapping
+        assert_eq!(quantize_one(123.0, 1.0 / QMAX), 127);
+        assert_eq!(quantize_one(-123.0, 1.0 / QMAX), -127);
+        assert_eq!(quantize_one(f32::INFINITY, 0.5), 127);
+        assert_eq!(quantize_one(f32::NEG_INFINITY, 0.5), -127);
+        // NaN is deterministic (0) on the total hot path; the checked
+        // derivation upstream is what rejects it
+        assert_eq!(quantize_one(f32::NAN, 0.5), 0);
+        // ties round away from zero like f32::round
+        assert_eq!(quantize_one(0.5, 1.0), 1);
+        assert_eq!(quantize_one(-0.5, 1.0), -1);
+    }
+
+    #[test]
+    fn non_finite_inputs_are_rejected_like_logits_checked() {
+        assert!(absmax_checked(&[0.0, 3.0, -2.0]).is_ok());
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let err = absmax_checked(&[0.0, bad, 1.0]).unwrap_err().to_string();
+            assert!(err.contains("non-finite"), "unexpected error: {err}");
+        }
+        let mut w = vec![1.0f32; 8];
+        w[5] = f32::NAN;
+        assert!(quantize_rows(&w, 2).is_err());
+        assert!(quantize_rows(&[1.0, 2.0, 3.0], 2).is_err(), "ragged rows must be rejected");
+    }
+
+    #[test]
+    fn zero_tensor_quantizes_to_zero_codes() {
+        let s = scale_for(absmax_checked(&[0.0; 9]).unwrap());
+        assert_eq!(s, 1.0);
+        assert!(quantize(&[0.0; 9], s).iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn nhwc_panel_is_a_pure_permutation_of_the_oihw_codes() {
+        let mut rng = Rng::new(813);
+        let (co, cg, k) = (5, 3, 3);
+        let mut w = Tensor::zeros(&[co, cg, k, k]);
+        for v in w.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let a = QuantConv::from_oihw(&w, 0.25).unwrap();
+        let b = QuantConv::nhwc_panel(&w, 0.25).unwrap();
+        assert_eq!(a.scales, b.scales);
+        let kdim = cg * k * k;
+        for o in 0..co {
+            for kk in 0..kdim {
+                assert_eq!(a.q[o * kdim + kk], b.q[kk * co + o], "code moved, not copied");
+            }
+        }
+    }
+}

@@ -23,6 +23,19 @@
 //! which is also catastrophically slow.  The byte-identity tests in
 //! `gemm`/`conv` pin this across [`SimdLevel`]s, thread counts, and
 //! layouts.
+//!
+//! # Integer lanes ([`I32x8`])
+//!
+//! The int8 precision tier accumulates i8×i8 products in widened i32
+//! lanes: [`I32x8::mul_acc_i8`] sign-extends 8 codes and does
+//! `acc += a * widen(b)`, which LLVM lowers to
+//! `vpmovsxbd`+`vpmulld`+`vpaddd` under the same
+//! `#[target_feature(enable = "avx2,fma")]` re-monomorphization.
+//! Integer addition is exactly associative, so — unlike the f32 tiers —
+//! the int8 accumulators are byte-identical across SIMD level, thread
+//! count, tile shape, AND reduction order by construction; the
+//! scalar-vs-AVX2 equality tests in `gemm` pin it anyway.  The same
+//! [`detect`]/`REPRO_SIMD` dispatch gates both lane widths.
 
 /// Lane width of [`F32x8`].
 pub const LANES: usize = 8;
@@ -140,6 +153,71 @@ impl F32x8 {
         let s2 = v[2] + v[6];
         let s3 = v[3] + v[7];
         (s0 + s2) + (s1 + s3)
+    }
+}
+
+/// Eight i32 lanes — the widened accumulator for the int8 tier's
+/// i8×i8→i32 micro-kernel; 32-byte aligned like [`F32x8`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(align(32))]
+pub struct I32x8(pub [i32; 8]);
+
+impl I32x8 {
+    #[inline(always)]
+    pub fn zero() -> I32x8 {
+        I32x8([0; 8])
+    }
+
+    /// Sign-extend 8 contiguous int8 codes into i32 lanes
+    /// (`vpmovsxbd` under AVX2).
+    #[inline(always)]
+    pub fn widen_i8(s: &[i8]) -> I32x8 {
+        let mut v = [0i32; 8];
+        for (lane, &c) in v.iter_mut().zip(&s[..8]) {
+            *lane = c as i32;
+        }
+        I32x8(v)
+    }
+
+    /// Sign-extend `s.len().min(8)` codes, zero-filling the tail —
+    /// harmless to the accumulation since the quantized operand is
+    /// padded with zero codes, and integer math has no -0.0 to leak.
+    #[inline(always)]
+    pub fn widen_i8_partial(s: &[i8]) -> I32x8 {
+        let mut v = [0i32; 8];
+        let n = s.len().min(8);
+        for (lane, &c) in v.iter_mut().zip(&s[..n]) {
+            *lane = c as i32;
+        }
+        I32x8(v)
+    }
+
+    /// Store all 8 lanes to `d[0..8]`.
+    #[inline(always)]
+    pub fn store(self, d: &mut [i32]) {
+        d[..8].copy_from_slice(&self.0);
+    }
+
+    /// Store the first `d.len().min(8)` lanes.
+    #[inline(always)]
+    pub fn store_partial(self, d: &mut [i32]) {
+        let n = d.len().min(8);
+        d[..n].copy_from_slice(&self.0[..n]);
+    }
+
+    /// `self + a * widen(b)` — one step of the widened int8 dot
+    /// product.  `a` is a sign-extended activation code (|a| ≤ 127),
+    /// `b` 8 weight codes (|b| ≤ 127), so each product is ≤ 16129 and
+    /// the i32 accumulator cannot overflow before k ≈ 133 000 — far
+    /// beyond any im2col depth this crate produces.  Exact integer
+    /// math: no rounding contract needed, every schedule agrees.
+    #[inline(always)]
+    pub fn mul_acc_i8(self, a: i32, b: I32x8) -> I32x8 {
+        let mut v = self.0;
+        for (lane, &c) in v.iter_mut().zip(&b.0) {
+            *lane += a * c;
+        }
+        I32x8(v)
     }
 }
 
@@ -268,6 +346,30 @@ mod tests {
         let v = F32x8([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
         let want = ((1.0f32 + 5.0) + (3.0 + 7.0)) + ((2.0 + 6.0) + (4.0 + 8.0));
         assert_eq!(v.sum().to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn integer_lanes_match_scalar_widening_loops() {
+        let codes: [i8; 10] = [1, -2, 127, -127, 0, 64, -33, 7, 5, -5];
+        let w = I32x8::widen_i8(&codes);
+        for i in 0..8 {
+            assert_eq!(w.0[i], codes[i] as i32);
+        }
+        let p = I32x8::widen_i8_partial(&codes[..3]);
+        assert_eq!(p.0, [1, -2, 127, 0, 0, 0, 0, 0]);
+        // mul_acc_i8 is exactly acc + a*widen(b), and saturated codes
+        // (±127) cannot push one step past i32 range
+        let acc = I32x8([10, -10, 0, 5, 1, 2, 3, 4]).mul_acc_i8(-127, w);
+        for i in 0..8 {
+            let want = [10, -10, 0, 5, 1, 2, 3, 4][i] + (-127) * codes[i] as i32;
+            assert_eq!(acc.0[i], want, "lane {i}");
+        }
+        let mut out = vec![0i32; 8];
+        acc.store(&mut out);
+        assert_eq!(out, acc.0);
+        let mut short = vec![9i32; 3];
+        acc.store_partial(&mut short);
+        assert_eq!(short, &acc.0[..3]);
     }
 
     #[test]

@@ -9,8 +9,8 @@
 //!   measured[/fused|eager]             — wall-clock of the AOT probes
 //!       on the PJRT CPU client (`measured::Measured`; needs an Engine
 //!       plus `make artifacts`).
-//!   host[/<N>threads][/nhwc|nchw][/fast] — wall-clock of the NATIVE
-//!       kernel layer: each block is timed through the same
+//!   host[/<N>threads][/nhwc|nchw][/fast|/int8] — wall-clock of the
+//!       NATIVE kernel layer: each block is timed through the same
 //!       `kernels::conv` + elementwise chain `HostExec` serves with
 //!       (in the named activation layout, default nchw), so
 //!       `serve --backend host` plans on the backend — and layout — it
@@ -18,7 +18,14 @@
 //!       chain instead: Winograd F(2x2,3x3) where it applies plus
 //!       fused bias/residual/relu6 epilogues, with the weight
 //!       transform hoisted outside the timing loop exactly like
-//!       `HostExec` hoists it into construction.
+//!       `HostExec` hoists it into construction.  An `int8` segment
+//!       prices the `--precision int8` chain: dense convs quantized
+//!       through `kernels::quant` + the widened-lane integer GEMM with
+//!       the requantize epilogue fused — weight quantization hoisted
+//!       outside the timing loop (it lives in `HostExec` construction),
+//!       per-forward activation quantization timed (serving pays it on
+//!       every request); grouped/depthwise blocks fall back to the
+//!       exact chain, exactly like `HostExec` dispatches them.
 //!
 //! `SourceSpec::parse` turns a spec string into a value; `build` turns
 //! the value into a boxed `LatencySource` (handing it the Engine only
@@ -32,13 +39,14 @@ use anyhow::{anyhow, bail, Result};
 use super::devices::{self, Device};
 use super::gpu_model::{mem_pass_latency_ms, op_latency_ms, ConvGeom, ExecMode};
 use crate::kernels::conv::{
-    conv2d_fused, conv2d_nhwc_pointwise_fused, conv2d_nhwc_with, conv2d_with, pack_nhwc,
-    ConvGeom as KernelGeom, Layout, Precision,
+    conv2d_fused, conv2d_i8_fused, conv2d_i8_nhwc_fused, conv2d_nhwc_pointwise_fused,
+    conv2d_nhwc_with, conv2d_with, pack_nhwc, ConvGeom as KernelGeom, Layout, Precision,
 };
 use crate::kernels::elementwise::{
     add_bias_nchw, add_bias_nhwc, add_inplace, max_pool_2x2, max_pool_2x2_nhwc, relu6_inplace,
 };
 use crate::kernels::pool::Pool;
+use crate::kernels::quant::{absmax_checked, scale_for, QuantConv};
 use crate::kernels::winograd::{
     applies as winograd_applies, conv2d_winograd_fused, conv2d_winograd_fused_nhwc,
     transform_weights,
@@ -117,8 +125,10 @@ impl HostKernelSource {
 
     /// Price blocks on an explicit determinism tier —
     /// `Precision::Fast` times the Winograd + fused-epilogue chain
-    /// `HostExec` dispatches under `--precision fast`, so a fast
-    /// deployment plans on the latencies it will actually serve.
+    /// `HostExec` dispatches under `--precision fast`, and
+    /// `Precision::Int8` the quantized integer-GEMM chain of
+    /// `--precision int8`, so each deployment plans on the latencies
+    /// it will actually serve.
     pub fn with_precision(
         threads: Option<usize>,
         layout: Layout,
@@ -170,8 +180,46 @@ impl LatencySource for HostKernelSource {
         } else {
             None
         };
+        // int8-tier prep, same hoisting split as `HostExec`: weight
+        // quantization happens at construction (outside the loop), the
+        // per-forward activation quantize is part of what serving pays
+        // and stays inside `run`.  Grouped blocks have no pack and fall
+        // through to the exact chain, mirroring the dispatch.
+        let qpack = if self.precision == Precision::Int8 && blk.groups == 1 {
+            let act_scale = scale_for(absmax_checked(&x.data)?);
+            Some(match self.layout {
+                Layout::Nchw => QuantConv::from_oihw(&w, act_scale)?,
+                Layout::Nhwc => QuantConv::nhwc_panel(&w, act_scale)?,
+            })
+        } else {
+            None
+        };
         let mut run = || -> Result<Tensor> {
-            let mut y = if let Some(ww) = &wino {
+            let mut y = if let Some(qw) = &qpack {
+                if nhwc {
+                    conv2d_i8_nhwc_fused(
+                        &self.pool,
+                        &x,
+                        &w,
+                        qw,
+                        geom,
+                        Some(&bias),
+                        residual.as_ref(),
+                        true,
+                    )?
+                } else {
+                    conv2d_i8_fused(
+                        &self.pool,
+                        &x,
+                        &w,
+                        qw,
+                        geom,
+                        Some(&bias),
+                        residual.as_ref(),
+                        true,
+                    )?
+                }
+            } else if let Some(ww) = &wino {
                 if nhwc {
                     conv2d_winograd_fused_nhwc(
                         &self.pool,
@@ -236,8 +284,10 @@ impl LatencySource for HostKernelSource {
         if self.layout == Layout::Nhwc {
             s.push_str("/nhwc");
         }
-        if self.precision == Precision::Fast {
-            s.push_str("/fast");
+        match self.precision {
+            Precision::Exact => {}
+            Precision::Fast => s.push_str("/fast"),
+            Precision::Int8 => s.push_str("/int8"),
         }
         s
     }
@@ -262,7 +312,7 @@ impl SourceSpec {
     /// Grammar (see module docs):
     ///   `analytical/<device>[/fused|eager]` | `sim:<device>` (legacy)
     ///   | `measured[/fused|eager]`
-    ///   | `host[/<N>threads][/nhwc|nchw][/fast]`
+    ///   | `host[/<N>threads][/nhwc|nchw][/fast|/int8]`
     pub fn parse_with_mode(s: &str, default_mode: ExecMode) -> Result<SourceSpec> {
         let s = s.trim();
         // legacy alias from the original LatencyCfg grammar
@@ -290,7 +340,7 @@ impl SourceSpec {
             }
             "host" => {
                 // optional segments, in any order: <N>threads,
-                // nhwc|nchw, exact|fast
+                // nhwc|nchw, exact|fast|int8
                 let mut threads = None;
                 let mut layout = Layout::Nchw;
                 let mut seen_layout = false;
@@ -314,10 +364,14 @@ impl SourceSpec {
                         continue;
                     }
                     if threads.is_some() {
-                        bail!("source {s:?}: want host[/<N>threads][/nhwc|nchw][/fast]");
+                        bail!("source {s:?}: want host[/<N>threads][/nhwc|nchw][/fast|/int8]");
                     }
                     let n = t.strip_suffix("threads").unwrap_or(t).parse::<usize>().map_err(
-                        |_| anyhow!("source {s:?}: want host[/<N>threads][/nhwc|nchw][/fast]"),
+                        |_| {
+                            anyhow!(
+                                "source {s:?}: want host[/<N>threads][/nhwc|nchw][/fast|/int8]"
+                            )
+                        },
                     )?;
                     if n == 0 {
                         bail!("source {s:?}: thread count must be >= 1");
@@ -329,7 +383,7 @@ impl SourceSpec {
             other => bail!(
                 "unknown latency source kind {other:?} in {s:?} \
                  (want analytical/<device>[/fused|eager], measured[/fused|eager], \
-                 host[/<N>threads][/nhwc|nchw][/fast], or legacy sim:<device>)"
+                 host[/<N>threads][/nhwc|nchw][/fast|/int8], or legacy sim:<device>)"
             ),
         }
     }
@@ -361,8 +415,10 @@ impl SourceSpec {
                 if *layout == Layout::Nhwc {
                     s.push_str("/nhwc");
                 }
-                if *precision == Precision::Fast {
-                    s.push_str("/fast");
+                match precision {
+                    Precision::Exact => {}
+                    Precision::Fast => s.push_str("/fast"),
+                    Precision::Int8 => s.push_str("/int8"),
                 }
                 s
             }
@@ -470,6 +526,19 @@ mod tests {
         );
         // an explicit `exact` is accepted and label-invisible (the default)
         assert_eq!(SourceSpec::parse("host/4threads/exact").unwrap().label(), "host/4threads");
+        // the int8 tier composes exactly like fast
+        assert_eq!(
+            SourceSpec::parse("host/4threads/int8").unwrap(),
+            SourceSpec::Host { threads: Some(4), layout: Layout::Nchw, precision: Precision::Int8 }
+        );
+        assert_eq!(
+            SourceSpec::parse("host/int8/nhwc/4threads").unwrap(),
+            SourceSpec::Host { threads: Some(4), layout: Layout::Nhwc, precision: Precision::Int8 }
+        );
+        assert_eq!(
+            SourceSpec::parse("host/4threads/nhwc/int8").unwrap().label(),
+            "host/4threads/nhwc/int8"
+        );
         assert_eq!(
             SourceSpec::parse("measured/eager").unwrap(),
             SourceSpec::Measured { mode: ExecMode::Eager }
@@ -490,6 +559,7 @@ mod tests {
         assert!(SourceSpec::parse("host/turbo").is_err());
         assert!(SourceSpec::parse("host/nhwc/nchw").is_err()); // layout twice
         assert!(SourceSpec::parse("host/fast/exact").is_err()); // precision twice
+        assert!(SourceSpec::parse("host/fast/int8").is_err()); // precision twice
         assert!(SourceSpec::parse("host/2threads/4threads").is_err());
         assert!(SourceSpec::parse("quantum").is_err());
         assert!(SourceSpec::parse_list(" , ", ExecMode::Fused).is_err());
@@ -527,6 +597,8 @@ mod tests {
             "host/3threads/nhwc",
             "host/3threads/fast",
             "host/3threads/nhwc/fast",
+            "host/3threads/int8",
+            "host/3threads/nhwc/int8",
         ] {
             let spec = SourceSpec::parse(s).unwrap();
             assert_eq!(spec.build(None).unwrap().name(), spec.label());
@@ -556,16 +628,19 @@ mod tests {
         assert_eq!(bl.entries.len(), cfg.blocks.len());
         assert!(bl.entries.iter().all(|e| e.2 > 0.0));
         assert_eq!(bl.source, "host/2threads/nhwc");
-        // the fast tier prices the Winograd + fused-epilogue chain for
-        // the same block set, in both layouts
-        for layout in [Layout::Nchw, Layout::Nhwc] {
-            let mut src = HostKernelSource::with_precision(Some(2), layout, Precision::Fast);
-            src.warmup = 1;
-            src.reps = 3;
-            let bl = BlockLatencies::measure(&cfg, &mut src, 2, 1000.0).unwrap();
-            assert_eq!(bl.entries.len(), cfg.blocks.len());
-            assert!(bl.entries.iter().all(|e| e.2 > 0.0));
-            assert!(bl.source.ends_with("/fast"), "fast source name {:?}", bl.source);
+        // the fast tier prices the Winograd + fused-epilogue chain and
+        // the int8 tier the quantized integer-GEMM chain, for the same
+        // block set, in both layouts
+        for (precision, suffix) in [(Precision::Fast, "/fast"), (Precision::Int8, "/int8")] {
+            for layout in [Layout::Nchw, Layout::Nhwc] {
+                let mut src = HostKernelSource::with_precision(Some(2), layout, precision);
+                src.warmup = 1;
+                src.reps = 3;
+                let bl = BlockLatencies::measure(&cfg, &mut src, 2, 1000.0).unwrap();
+                assert_eq!(bl.entries.len(), cfg.blocks.len());
+                assert!(bl.entries.iter().all(|e| e.2 > 0.0));
+                assert!(bl.source.ends_with(suffix), "source name {:?}", bl.source);
+            }
         }
     }
 

@@ -27,21 +27,28 @@
 //!                merged into a joint cross-device Pareto set, plus
 //!                budget auto-calibration against a target ms.
 //!   kernels    — native parallel CPU compute: `pool` (scoped worker
-//!                pool, deterministic chunk schedule), `simd` (F32x8
-//!                lane type + runtime AVX2 dispatch), `gemm`
-//!                (explicit-lane cache-blocked f32 GEMM + transposed
-//!                fast path + fused bias/residual/relu6 epilogues),
-//!                `conv` (NCHW im2col+GEMM and NHWC channels-last
-//!                fast paths: 1x1 without im2col, depthwise stencil),
-//!                `winograd` (F(2x2,3x3) for dense stride-1 pad-1
-//!                3x3 convs), `elementwise` (bias/relu6/residual/
-//!                pool/GAP in both layouts).  Two determinism tiers
-//!                ([`kernels::conv::Precision`]): `exact` (the
+//!                pool, deterministic chunk schedule), `simd` (F32x8 +
+//!                widened-i32 I32x8 lane types, runtime AVX2
+//!                dispatch), `gemm` (explicit-lane cache-blocked f32
+//!                GEMM + transposed fast path + fused
+//!                bias/residual/relu6 epilogues + the i8×i8→i32
+//!                micro-kernel with fused requantize), `conv` (NCHW
+//!                im2col+GEMM and NHWC channels-last fast paths: 1x1
+//!                without im2col, depthwise stencil; int8 clones of
+//!                both dense paths), `winograd` (F(2x2,3x3) for dense
+//!                stride-1 pad-1 3x3 convs), `quant` (per-channel
+//!                symmetric int8 weight quantization + per-tensor
+//!                activation scales), `elementwise` (bias/relu6/
+//!                residual/pool/GAP in both layouts).  Three precision
+//!                tiers ([`kernels::conv::Precision`]): `exact` (the
 //!                default) is byte-identical at any thread count,
 //!                SIMD level, and layout; `fast` adds Winograd +
 //!                fused epilogues under a pinned relative-error
-//!                tolerance against `exact`.  Every host-side compute
-//!                path routes here.
+//!                tolerance against `exact`; `int8` serves dense
+//!                convs quantized (w8a8, f32 carry), tolerance-gated
+//!                against `exact` and byte-identical against itself
+//!                on every axis.  Every host-side compute path routes
+//!                here.
 //!   latency    — the source registry (`source`: one `--source` spec
 //!                grammar over analytical GPU models, the measured PJRT
 //!                source, and the native-kernel HostKernelSource that
@@ -86,12 +93,16 @@
 //! the channels-last fast paths (1x1 convs without im2col, depthwise
 //! stencil) with byte-identical logits, and the `host[/nhwc]` latency
 //! source prices blocks in the same layout.  A second knob picks the
-//! determinism tier (`--precision exact|fast`, or
+//! precision tier (`--precision exact|fast|int8`, or
 //! [`kernels::conv::Precision`] on `HostExec::with_precision`): `fast`
 //! serves eligible 3x3 convs through `kernels::winograd` and fuses the
 //! bias/residual/relu6 epilogues into the GEMM write-back, tolerance
-//! gated against the bit-pinned `exact` tier; the `host[/fast]`
-//! latency source prices blocks on the same fast chain.
+//! gated against the bit-pinned `exact` tier; `int8` serves dense
+//! convs through `kernels::quant` + the widened-lane integer GEMM
+//! (per-output-channel weight scales, per-tensor activation scales
+//! from a seeded calibration pass at construction, `REPRO_INT8_CALIB`
+//! sets the calibration batch).  The `host[/fast]` and `host[/int8]`
+//! latency sources price blocks on the same chains.
 //!
 //! See `docs/ARCHITECTURE.md` for the paper-to-code map.
 
@@ -141,6 +152,7 @@ pub mod kernels {
     pub mod elementwise;
     pub mod gemm;
     pub mod pool;
+    pub mod quant;
     pub mod simd;
     pub mod winograd;
 }

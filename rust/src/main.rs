@@ -52,10 +52,11 @@ fn usage() -> &'static str {
        eval       --arch A [--ckpt PATH --backend B]\n\
        serve      --arch A [--clients N --requests N --max-batch N --max-wait-ms N]\n\
                   [--backend B --source SPEC --frac X --target-ms MS]\n\
-                  [--layout nchw|nhwc] [--precision exact|fast]\n\
+                  [--layout nchw|nhwc] [--precision exact|fast|int8]\n\
                   [--policy drain|micro|steal --slo-ms MS --plans N\n\
                   --shed-depth D --steal-waves W] [--burst N --gap-us U]\n\
-                  [--retries N] [--faults panic:<p>,delay:<ms>:<p>,nan:<p>\n\
+                  [--retries N --probe-interval W]\n\
+                  [--faults panic:<p>,delay:<ms>:<p>,nan:<p>\n\
                   --fault-seed S]\n\
                   (host backend: artifact-free — prices blocks on the\n\
                   native kernels AND layout it serves with, picks plans\n\
@@ -70,22 +71,27 @@ fn usage() -> &'static str {
                   attempt (deadline-gated); --faults injects seeded\n\
                   chaos — worker panics, latency spikes, NaN-poisoned\n\
                   activations — to exercise panic isolation, retries,\n\
-                  and the per-plan circuit breakers; writes\n\
-                  reports/serve_<arch>.json)\n\
+                  and the per-plan circuit breakers; --probe-interval W\n\
+                  spaces half-open breaker probes >= W waves apart;\n\
+                  writes reports/serve_<arch>.json)\n\
      --source SPEC grammar (the latency-source registry):\n\
        analytical/<device>[/fused|eager]   roofline model; devices:\n\
                                            titan_xp rtx2080ti rtx3090 v100 xeon5220r\n\
        measured[/fused|eager]              AOT probes on PJRT (needs artifacts)\n\
-       host[/<N>threads][/nhwc|nchw][/fast] wall-clock of the native serving kernels\n\
+       host[/<N>threads][/nhwc|nchw][/fast|/int8]\n\
+                                           wall-clock of the native serving kernels\n\
                                            (channels-last when /nhwc; /fast prices\n\
-                                           the Winograd + fused-epilogue tier)\n\
+                                           the Winograd + fused-epilogue tier, /int8\n\
+                                           the quantized integer-GEMM tier)\n\
        sim:<device>                        legacy alias for analytical/<device>\n\
      common: --artifacts DIR (default ./artifacts) --quiet\n\
              --backend pjrt|host (default pjrt; host = native kernels, no PJRT)\n\
              --layout nchw|nhwc (host serving layout; nhwc = channels-last\n\
              fast paths, byte-identical logits)\n\
-             --precision exact|fast (host determinism tier; exact = bit-pinned\n\
-             default, fast = Winograd F(2x2,3x3) + fused epilogues,\n\
+             --precision exact|fast|int8 (host determinism tier; exact =\n\
+             bit-pinned default, fast = Winograd F(2x2,3x3) + fused\n\
+             epilogues, int8 = dense convs quantized w8a8 with seeded\n\
+             calibration (REPRO_INT8_CALIB sets the batch); both\n\
              tolerance-gated against exact)"
 }
 
@@ -674,8 +680,10 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
         if layout == Layout::Nhwc {
             s.push_str("/nhwc");
         }
-        if precision == Precision::Fast {
-            s.push_str("/fast");
+        match precision {
+            Precision::Exact => {}
+            Precision::Fast => s.push_str("/fast"),
+            Precision::Int8 => s.push_str("/int8"),
         }
         s
     };
@@ -687,8 +695,9 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
         SourceSpec::Host { threads, layout: src_layout, precision: src_precision } => {
             let names_layout =
                 source_str.contains("nhwc") || source_str.contains("nchw");
-            let names_precision =
-                source_str.contains("fast") || source_str.contains("exact");
+            let names_precision = source_str.contains("fast")
+                || source_str.contains("exact")
+                || source_str.contains("int8");
             // work-steal executes each request serially (the wave is
             // the parallelism), so price blocks on ONE thread to match
             // what a dispatch actually costs — est_ms feeds deadline
@@ -831,6 +840,10 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
         slo_ms,
         steal_waves: args.usize_or("steal-waves", 0)?,
         retries: args.usize_or("retries", 1)?,
+        breaker: repro::serve::multi_plan::BreakerCfg {
+            probe_interval: args.usize_or("probe-interval", 1)?,
+            ..Default::default()
+        },
         faults,
         fault_seed: args.u64_or("fault-seed", 1)?,
         ..SchedulerConfig::default()

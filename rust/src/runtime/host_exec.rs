@@ -25,12 +25,23 @@
 //! construction, next to the NHWC panels) and fuses the
 //! bias/residual/relu6 epilogue into the conv/GEMM write-back; its
 //! logits are tolerance-gated against `Exact`, not bit-pinned.
+//! `Int8` quantizes dense convs (per-output-channel symmetric weight
+//! scales hoisted into construction, a per-tensor activation scale per
+//! layer from a seeded calibration forward — batch set by
+//! `REPRO_INT8_CALIB`, default 4) and serves them through
+//! `kernels::quant` + the widened-lane integer GEMM with the same
+//! fused epilogue; depthwise/grouped layers and the FC head stay on
+//! the exact f32 chain.  Like `Fast` it is tolerance-gated against
+//! `Exact` — but its integer sums are exactly associative, so unlike
+//! both f32 tiers it is byte-identical against ITSELF across SIMD
+//! level, thread count, AND layout by construction.
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::kernels::conv::{
-    conv2d_fused, conv2d_nhwc_packed, conv2d_nhwc_pointwise_fused, conv2d_with, nchw_to_nhwc,
-    pack_nhwc, ConvGeom, Layout, NhwcPack, Precision,
+    conv2d_fused, conv2d_i8_fused, conv2d_i8_nhwc_fused, conv2d_nhwc_packed,
+    conv2d_nhwc_pointwise_fused, conv2d_with, nchw_to_nhwc, pack_nhwc, ConvGeom, Layout, NhwcPack,
+    Precision,
 };
 use crate::kernels::elementwise::{
     add_bias_nchw, add_bias_nhwc, add_inplace, argmax, global_avg_pool, global_avg_pool_nhwc,
@@ -38,6 +49,7 @@ use crate::kernels::elementwise::{
 };
 use crate::kernels::gemm::{linear, WeightLayout};
 use crate::kernels::pool::Pool;
+use crate::kernels::quant::{absmax_checked, scale_for, QuantConv};
 use crate::kernels::winograd::{
     applies as winograd_applies, conv2d_winograd_fused, conv2d_winograd_fused_nhwc,
     transform_weights, WinogradWeights,
@@ -104,6 +116,13 @@ pub struct HostExec {
     /// like `nhwc_packs` (empty under `Precision::Exact`; `None` for
     /// layers the F(2x2,3x3) predicate rejects)
     wino_packs: Vec<Option<WinogradWeights>>,
+    /// per-layer int8 operand packs (empty except under
+    /// `Precision::Int8`; `None` for grouped/depthwise layers, which
+    /// stay on the exact f32 chain).  Weight codes + per-channel scales
+    /// are hoisted here at construction like `nhwc_packs`; each pack's
+    /// per-tensor activation scale comes from the calibration forward
+    /// in [`HostExec::with_precision`].
+    quant_packs: Vec<Option<QuantConv>>,
 }
 
 impl HostExec {
@@ -184,7 +203,7 @@ impl HostExec {
                 .collect(),
         };
         let wino_packs = match precision {
-            Precision::Exact => Vec::new(),
+            Precision::Exact | Precision::Int8 => Vec::new(),
             Precision::Fast => net
                 .layers
                 .iter()
@@ -199,7 +218,80 @@ impl HostExec {
                 })
                 .collect::<Result<Vec<_>>>()?,
         };
-        Ok(HostExec { net, keep_seg, pool, layout, nhwc_packs, precision, wino_packs })
+        let mut exec = HostExec {
+            net,
+            keep_seg,
+            pool,
+            layout,
+            nhwc_packs,
+            precision,
+            wino_packs,
+            quant_packs: Vec::new(),
+        };
+        if precision == Precision::Int8 {
+            // with quant_packs still empty the int8 dispatch falls
+            // through to the exact chain, so the calibration forward
+            // below runs bit-pinned f32 — the recorded absmaxes (and
+            // therefore the packs) are identical at every thread count
+            // and layout
+            exec.quant_packs = exec.build_quant_packs()?;
+        }
+        Ok(exec)
+    }
+
+    /// Calibration batch size: `REPRO_INT8_CALIB` (default 4).
+    fn calib_batch() -> usize {
+        std::env::var("REPRO_INT8_CALIB")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&b| b > 0)
+            .unwrap_or(4)
+    }
+
+    /// Build the per-layer int8 packs: run a seeded calibration batch
+    /// through the exact f32 chain, record every conv input's absmax,
+    /// and quantize each dense layer's weight next to a per-tensor
+    /// activation scale derived from that absmax.  The input spatial
+    /// size is the net's total downsampling factor times four, so
+    /// every layer sees a non-degenerate activation.  The seed is
+    /// fixed: scales — and therefore the served int8 logits — are
+    /// reproducible across runs, and since absmax commutes with the
+    /// NHWC permutation both layouts derive identical scales.
+    fn build_quant_packs(&self) -> Result<Vec<Option<QuantConv>>> {
+        if self.net.layers.is_empty() {
+            return Ok(Vec::new());
+        }
+        let factor: usize = self
+            .net
+            .layers
+            .iter()
+            .map(|ml| ml.stride * if ml.pool_after { 2 } else { 1 })
+            .product();
+        let hw = factor.max(1) * 4;
+        let mut rng = crate::util::rng::Rng::new(0x51C8);
+        let mut x = Tensor::zeros(&[HostExec::calib_batch(), self.net.layers[0].c_in, hw, hw]);
+        for v in x.data.iter_mut() {
+            *v = rng.normal() * 0.5;
+        }
+        let mut absmax = Vec::with_capacity(self.net.layers.len());
+        self.forward_rec(&x, Some(&mut absmax))?;
+        self.net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(li, ml)| {
+                if ml.groups != 1 {
+                    // grouped/depthwise stays on the exact f32 chain
+                    return Ok(None);
+                }
+                let act_scale = scale_for(absmax[li]);
+                let w = &self.net.params[2 * li];
+                match self.layout {
+                    Layout::Nchw => QuantConv::from_oihw(w, act_scale).map(Some),
+                    Layout::Nhwc => QuantConv::nhwc_panel(w, act_scale).map(Some),
+                }
+            })
+            .collect()
     }
 
     /// Serving-facing name for [`HostExec::forward`] — what the
@@ -234,6 +326,16 @@ impl HostExec {
     /// transpose happens here at graph entry — GAP collapses the
     /// spatial dims, so the exit needs none.
     pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        self.forward_rec(x, None)
+    }
+
+    /// [`HostExec::forward`] plus an optional per-layer absmax
+    /// recorder.  The calibration pass taps every conv *input* here —
+    /// one entry per layer, grouped layers included, so indices line
+    /// up with `net.layers` — and rejects non-finite calibration
+    /// activations the same way `logits_checked` rejects poisoned
+    /// logits.
+    fn forward_rec(&self, x: &Tensor, mut rec: Option<&mut Vec<f32>>) -> Result<Tensor> {
         if x.rank() != 4 {
             bail!("HostExec wants NCHW input, got {:?}", x.shape);
         }
@@ -251,7 +353,10 @@ impl HostExec {
             let w = &self.net.params[2 * li];
             let b = &self.net.params[2 * li + 1];
             let geom = ConvGeom { stride: ml.stride, pad: ml.pad, groups: ml.groups };
-            // the residual source resolves the same way in both tiers;
+            if let Some(r) = rec.as_deref_mut() {
+                r.push(absmax_checked(&cur.data)?);
+            }
+            // the residual source resolves the same way in all tiers;
             // seg_out tensors are already in the executor's layout
             let resid = match ml.add_from_seg {
                 None => None,
@@ -268,7 +373,31 @@ impl HostExec {
             };
             let fast = self.precision == Precision::Fast;
             let wino = self.wino_packs.get(li).and_then(|o| o.as_ref());
-            let mut y = if fast && !nhwc {
+            let qp = match self.precision {
+                Precision::Int8 => self.quant_packs.get(li).and_then(|o| o.as_ref()),
+                _ => None,
+            };
+            let mut y = if let Some(qw) = qp {
+                // int8 tier: dense convs run the integer GEMM with the
+                // requantize epilogue fused; the activation quantizes
+                // per layer against its calibrated per-tensor scale.
+                // Grouped layers have no pack and fall through to the
+                // exact chain below.
+                if nhwc {
+                    conv2d_i8_nhwc_fused(
+                        &self.pool,
+                        &cur,
+                        w,
+                        qw,
+                        geom,
+                        Some(&b.data),
+                        resid,
+                        ml.act,
+                    )?
+                } else {
+                    conv2d_i8_fused(&self.pool, &cur, w, qw, geom, Some(&b.data), resid, ml.act)?
+                }
+            } else if fast && !nhwc {
                 if let Some(ww) = wino {
                     conv2d_winograd_fused(&self.pool, &cur, ww, Some(&b.data), resid, ml.act)?
                 } else if ml.groups == 1 {
@@ -623,6 +752,130 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn int8_precision_logits_track_exact_with_top1_agreement() {
+        // end-to-end gate for the third tier: quantized logits must sit
+        // within a (looser than `fast`) relative tolerance of `exact`
+        // AND mostly agree on top-1 — on both tiny fixtures, both
+        // layouts, serial and parallel
+        let cfg = tiny_config();
+        for (seed, s, a) in [
+            (71u64, vec![1usize, 4, 5], vec![4usize]),
+            (72, vec![1, 2, 3, 4, 5], vec![1, 2, 3, 5]), // residual + depthwise
+        ] {
+            let ps = ParamSet::synthetic(&cfg, seed);
+            let net = build_merged(&cfg, &ps, &s, &a).unwrap();
+            let x = rand_input(&[8, 3, 12, 12], seed + 1);
+            let exact = HostExec::with_options(net.clone_shallow(), Pool::serial(), Layout::Nchw)
+                .unwrap()
+                .forward(&x)
+                .unwrap();
+            let scale = exact.data.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+            let tol = 0.1 * scale;
+            let nc = exact.shape[1];
+            for layout in [Layout::Nchw, Layout::Nhwc] {
+                for workers in [1usize, 3] {
+                    let exec = HostExec::with_precision(
+                        net.clone_shallow(),
+                        Pool::new(workers),
+                        layout,
+                        Precision::Int8,
+                    )
+                    .unwrap();
+                    assert_eq!(exec.precision(), Precision::Int8);
+                    let got = exec.forward(&x).unwrap();
+                    assert_eq!(got.shape, exact.shape);
+                    let d = got.max_abs_diff(&exact);
+                    assert!(
+                        (d as f32) < tol,
+                        "int8 tier diverges from exact by {d} (tol {tol}, \
+                         plan s={s:?}, {layout:?}, {workers} workers)"
+                    );
+                    let agree = (0..8)
+                        .filter(|&b| {
+                            argmax(&got.data[b * nc..(b + 1) * nc])
+                                == argmax(&exact.data[b * nc..(b + 1) * nc])
+                        })
+                        .count();
+                    assert!(
+                        agree >= 6,
+                        "top-1 agreement {agree}/8 too low (plan s={s:?}, {layout:?})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_is_byte_identical_against_itself_on_every_axis() {
+        // the flip side of the tolerance gate: integer accumulation is
+        // exactly associative, so the int8 tier reproduces the SAME
+        // logit bits across thread counts AND layouts.  Cross-layout
+        // identity also exercises the calibration pass — absmax
+        // commutes with the NHWC permutation, so both layouts derive
+        // identical scales from the same seeded calibration batch.
+        let cfg = tiny_config();
+        for (seed, s, a) in [
+            (73u64, vec![1usize, 4, 5], vec![4usize]),
+            (74, vec![1, 2, 3, 4, 5], vec![1, 2, 3, 5]), // residual + depthwise
+        ] {
+            let ps = ParamSet::synthetic(&cfg, seed);
+            let net = build_merged(&cfg, &ps, &s, &a).unwrap();
+            let x = rand_input(&[3, 3, 12, 12], seed + 2);
+            let mut runs = Vec::new();
+            for layout in [Layout::Nchw, Layout::Nhwc] {
+                for pool in [Pool::serial(), Pool::new(2), Pool::new(5)] {
+                    let exec = HostExec::with_precision(
+                        net.clone_shallow(),
+                        pool,
+                        layout,
+                        Precision::Int8,
+                    )
+                    .unwrap();
+                    runs.push((layout, exec.forward(&x).unwrap()));
+                }
+            }
+            let (_, first) = &runs[0];
+            for (layout, r) in &runs[1..] {
+                assert!(
+                    bits_equal(&first.data, &r.data),
+                    "int8 bits differ ({layout:?}, plan s={s:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn int8_grouped_layers_fall_back_to_the_exact_chain() {
+        // the all-singleton plan has a depthwise conv: its pack slot is
+        // None and the layer runs the exact f32 path — the forward must
+        // still succeed end to end, and every dense layer must carry a
+        // pack
+        let cfg = tiny_config();
+        let ps = ParamSet::synthetic(&cfg, 75);
+        let net = build_merged(&cfg, &ps, &[1, 2, 3, 4, 5], &[1, 2, 3, 5]).unwrap();
+        let exec = HostExec::with_precision(
+            net.clone_shallow(),
+            Pool::serial(),
+            Layout::Nchw,
+            Precision::Int8,
+        )
+        .unwrap();
+        assert_eq!(exec.quant_packs.len(), net.layers.len());
+        for (li, ml) in net.layers.iter().enumerate() {
+            assert_eq!(
+                exec.quant_packs[li].is_some(),
+                ml.groups == 1,
+                "layer {li} pack presence should mirror density (groups {})",
+                ml.groups
+            );
+        }
+        assert!(exec.forward(&rand_input(&[2, 3, 12, 12], 76)).is_ok());
+        // exact/fast constructors keep the pack list empty
+        let exact = HostExec::new(net.clone_shallow()).unwrap();
+        assert!(exact.quant_packs.is_empty());
     }
 
     #[test]

@@ -220,11 +220,19 @@ pub struct BreakerCfg {
     /// dispatch waves an open breaker waits before half-opening; the
     /// wait doubles (capped at 64) each time a probe fails again
     pub cooldown_waves: usize,
+    /// minimum dispatch waves between half-open probes of the SAME
+    /// plan: once a probe is steered at a plan, further
+    /// [`BreakerBoard::half_open_above`] queries skip it until this
+    /// many waves elapse.  1 (the default, and the legacy behavior)
+    /// allows a probe every wave; larger values keep a flapping plan —
+    /// or one whose probe outcome is still in flight — from absorbing
+    /// a probe wave every single wave
+    pub probe_interval: usize,
 }
 
 impl Default for BreakerCfg {
     fn default() -> Self {
-        BreakerCfg { threshold: 3, cooldown_waves: 4 }
+        BreakerCfg { threshold: 3, cooldown_waves: 4, probe_interval: 1 }
     }
 }
 
@@ -314,6 +322,11 @@ impl CircuitBreaker {
 pub struct BreakerBoard {
     breakers: Vec<CircuitBreaker>,
     threshold: usize,
+    probe_interval: usize,
+    /// dispatch waves seen so far (the probe rate limiter's clock)
+    wave: usize,
+    /// wave at which each plan last received a half-open probe
+    last_probe: Vec<Option<usize>>,
 }
 
 impl BreakerBoard {
@@ -321,6 +334,9 @@ impl BreakerBoard {
         BreakerBoard {
             breakers: (0..n_plans).map(|_| CircuitBreaker::new(cfg)).collect(),
             threshold: cfg.threshold,
+            probe_interval: cfg.probe_interval.max(1),
+            wave: 0,
+            last_probe: vec![None; n_plans],
         }
     }
 
@@ -335,8 +351,10 @@ impl BreakerBoard {
     }
 
     /// Advance every breaker's cooldown by one dispatch wave; returns
-    /// the `(plan, event)` transitions that fired.
+    /// the `(plan, event)` transitions that fired.  Also advances the
+    /// probe rate limiter's wave clock.
     pub fn tick_wave(&mut self) -> Vec<(usize, BreakerEvent)> {
+        self.wave += 1;
         self.breakers
             .iter_mut()
             .enumerate()
@@ -353,10 +371,20 @@ impl BreakerBoard {
     }
 
     /// The most accurate plan strictly above `active` in the ladder
-    /// whose breaker is half-open — the probe target: steering one wave
-    /// there resolves it to Closed (recovered) or Open (still broken).
-    pub fn half_open_above(&self, active: usize) -> Option<usize> {
-        (0..active.min(self.breakers.len())).find(|&p| self.state(p) == BreakerState::HalfOpen)
+    /// whose breaker is half-open AND is due a probe — the probe
+    /// target: steering one wave there resolves it to Closed
+    /// (recovered) or Open (still broken).  Rate-limited per plan: a
+    /// plan probed at wave w is skipped until `probe_interval` further
+    /// waves pass, so a flapping plan (or one whose probe outcome is
+    /// still in flight) cannot absorb a probe wave every single wave.
+    /// Returning a target records the probe, hence `&mut self`.
+    pub fn half_open_above(&mut self, active: usize) -> Option<usize> {
+        let due = (0..active.min(self.breakers.len())).find(|&p| {
+            self.state(p) == BreakerState::HalfOpen
+                && self.last_probe[p].is_none_or(|w| self.wave - w >= self.probe_interval)
+        })?;
+        self.last_probe[due] = Some(self.wave);
+        Some(due)
     }
 
     /// The first plan after `start` in degrade order (less accurate,
@@ -623,7 +651,8 @@ mod tests {
 
     #[test]
     fn breaker_opens_after_threshold_and_recovers_via_probe() {
-        let mut b = BreakerBoard::new(2, BreakerCfg { threshold: 3, cooldown_waves: 2 });
+        let mut b =
+            BreakerBoard::new(2, BreakerCfg { threshold: 3, cooldown_waves: 2, probe_interval: 1 });
         assert!(b.enabled());
         // two failures + a success reset the streak
         assert_eq!(b.record(0, false), None);
@@ -653,7 +682,8 @@ mod tests {
 
     #[test]
     fn failed_probes_back_off_geometrically() {
-        let mut b = BreakerBoard::new(1, BreakerCfg { threshold: 1, cooldown_waves: 2 });
+        let mut b =
+            BreakerBoard::new(1, BreakerCfg { threshold: 1, cooldown_waves: 2, probe_interval: 1 });
         assert_eq!(b.record(0, false), Some(BreakerEvent::Open));
         let mut expected = 2usize;
         for _ in 0..4 {
@@ -679,8 +709,43 @@ mod tests {
     }
 
     #[test]
+    fn half_open_probes_are_rate_limited() {
+        // the probe-cadence pin: with probe_interval 3, a plan stuck in
+        // HalfOpen (its probe outcome still in flight, or flapping)
+        // receives a probe at most once every 3 waves — legacy behavior
+        // (one wave = one probe) is probe_interval 1, the default
+        assert_eq!(BreakerCfg::default().probe_interval, 1);
+        let mut b = BreakerBoard::new(
+            2,
+            BreakerCfg { threshold: 1, cooldown_waves: 1, probe_interval: 3 },
+        );
+        assert_eq!(b.record(0, false), Some(BreakerEvent::Open));
+        assert_eq!(b.tick_wave(), vec![(0, BreakerEvent::HalfOpen)]);
+        // never-probed: the first query steers a probe immediately...
+        assert_eq!(b.half_open_above(1), Some(0));
+        // ...and a second query in the SAME wave must not double-probe
+        assert_eq!(b.half_open_above(1), None);
+        // while the plan stays half-open, only every third wave probes
+        let mut probes = Vec::new();
+        for wave in 0..9 {
+            assert!(b.tick_wave().is_empty());
+            if b.half_open_above(1).is_some() {
+                probes.push(wave);
+            }
+        }
+        assert_eq!(probes, vec![2, 5, 8], "probe cadence must honor probe_interval");
+        // a successful probe closes the plan and ends the probing
+        assert_eq!(b.record(0, true), Some(BreakerEvent::Close));
+        b.tick_wave();
+        b.tick_wave();
+        b.tick_wave();
+        assert_eq!(b.half_open_above(1), None, "closed plans are not probe targets");
+    }
+
+    #[test]
     fn breaker_threshold_zero_is_fully_disabled() {
-        let mut b = BreakerBoard::new(2, BreakerCfg { threshold: 0, cooldown_waves: 2 });
+        let mut b =
+            BreakerBoard::new(2, BreakerCfg { threshold: 0, cooldown_waves: 2, probe_interval: 1 });
         assert!(!b.enabled());
         for _ in 0..50 {
             assert_eq!(b.record(0, false), None);
@@ -692,7 +757,8 @@ mod tests {
 
     #[test]
     fn degrade_routing_skips_open_plans() {
-        let mut b = BreakerBoard::new(4, BreakerCfg { threshold: 1, cooldown_waves: 8 });
+        let mut b =
+            BreakerBoard::new(4, BreakerCfg { threshold: 1, cooldown_waves: 8, probe_interval: 1 });
         assert_eq!(b.record(1, false), Some(BreakerEvent::Open));
         // from plan 0, the next non-open plan after the ladder position
         // skips the tripped plan 1

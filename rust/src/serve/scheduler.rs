@@ -1172,7 +1172,7 @@ mod tests {
             steal_workers: 2,
             steal_waves: 1, // wave cap 2: failures spread over many waves
             retries: 0,     // fail fast — every faulty request sheds Internal
-            breaker: BreakerCfg { threshold: 3, cooldown_waves: 3 },
+            breaker: BreakerCfg { threshold: 3, cooldown_waves: 3, probe_interval: 1 },
             faults: Some(spec),
             fault_seed: 77,
             ..SchedulerConfig::default()
