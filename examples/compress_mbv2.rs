@@ -20,6 +20,7 @@ use repro::baselines::depthshrinker::ds_ladder;
 use repro::coordinator::experiments::{run_ds, run_ours};
 use repro::coordinator::pipeline::{LatencyCfg, Pipeline};
 use repro::coordinator::report::{fmt_acc, fmt_ms, Table};
+use repro::planner::frontier::Space;
 use repro::data::synth::SynthSpec;
 use repro::importance::eval::ImportanceConfig;
 use repro::latency::gpu_model::ExecMode;
@@ -77,7 +78,7 @@ fn main() -> anyhow::Result<()> {
     let t0 = vanilla_sim * frac;
     let context: Vec<f64> =
         [0.85, frac + 0.05, frac, frac - 0.05, 0.55].iter().map(|f| vanilla_sim * f).collect();
-    let frontier = pipe.plan_frontier(&fused, &imp, &context, 1.6, true);
+    let frontier = pipe.plan_frontier(&fused, &imp, &context, 1.6, Space::Extended);
     let mut ft = Table::new(
         "frontier context (sim 2080Ti)",
         &["T0 (ms)", "est (ms)", "|A|", "|S|", "objective"],

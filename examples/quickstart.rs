@@ -11,6 +11,7 @@ use std::path::PathBuf;
 
 use repro::coordinator::pipeline::{LatencyCfg, Pipeline};
 use repro::coordinator::report::{fmt_acc, fmt_ms, Table};
+use repro::planner::frontier::Space;
 use repro::data::synth::SynthSpec;
 use repro::importance::eval::ImportanceConfig;
 use repro::latency::gpu_model::ExecMode;
@@ -40,7 +41,7 @@ fn main() -> anyhow::Result<()> {
 
     // 4. two-stage DP at a 0.65x budget
     let t0 = vanilla_ms * 0.65;
-    let out = pipe.plan(&lat, &imp, t0, 1.6, true)?;
+    let out = pipe.plan(&lat, &imp, t0, 1.6, Space::Extended)?;
     println!("[dp] {}\n", out.summary());
 
     // 5. finetune the deactivated network, then 6. merge exactly

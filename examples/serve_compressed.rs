@@ -18,6 +18,7 @@ use repro::coordinator::experiments::proxy_importance;
 use repro::coordinator::pipeline::{LatencyCfg, Pipeline};
 use repro::coordinator::report::Table;
 use repro::coordinator::server::{spawn_load, Server, ServerConfig};
+use repro::planner::frontier::Space;
 use repro::data::synth::SynthSpec;
 use repro::runtime::engine::Engine;
 use repro::tensor::Tensor;
@@ -79,7 +80,7 @@ fn main() -> anyhow::Result<()> {
     let lat = pipe.latency_table(&LatencyCfg::default(), false)?;
     let vanilla_ms = pipe.vanilla_latency_ms(&lat)?;
     let imp = proxy_importance(&pipe.cfg);
-    let out = pipe.plan(&lat, &imp, vanilla_ms * 0.65, 1.6, true)?;
+    let out = pipe.plan(&lat, &imp, vanilla_ms * 0.65, 1.6, Space::Extended)?;
     let plan_name: Option<String> = engine
         .manifest
         .plans

@@ -15,6 +15,7 @@ use std::path::PathBuf;
 use repro::coordinator::experiments::{greedy_merge, importance_or_proxy, segments_ms};
 use repro::coordinator::pipeline::Pipeline;
 use repro::coordinator::report::{joint_pareto_tables, Table};
+use repro::planner::frontier::Space;
 use repro::latency::gpu_model::ExecMode;
 use repro::latency::source::SourceSpec;
 use repro::merge::plan::segments_from_s;
@@ -39,7 +40,7 @@ fn main() -> anyhow::Result<()> {
 
     // trained importance when the pipeline ran; structural proxy else
     let (imp, src_tag) = importance_or_proxy(&pipe);
-    let dp = pipe.plan_deploy(&specs, &imp, 128, 200.0, 1.6, true, false)?;
+    let dp = pipe.plan_deploy(&specs, &imp, 128, 200.0, 1.6, Space::Extended, false)?;
 
     println!("== cross-device sweep on {arch} (importance: {src_tag}) ==\n");
     let t_solve = std::time::Instant::now();

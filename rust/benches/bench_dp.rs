@@ -8,29 +8,15 @@
 //! in BENCH_dp.json at the repo root.
 
 use repro::coordinator::experiments::proxy_importance;
-use repro::dp::{extended, stage1, stage2};
+use repro::dp::{brute, extended, stage1, stage2};
 use repro::model::spec::testutil::tiny_config;
-use repro::planner::solver::{ExtendedSolver, ImportanceProvider, Solver, TwoStageSolver};
+use repro::planner::solver::{
+    ExtendedSolver, ImportanceProvider, LayerMergeSolver, Solver, TwoStageSolver,
+};
+use repro::planner::testkit::RandInstance;
 use repro::util::bench::{black_box, Bencher};
 use repro::util::json::Json;
 use repro::util::rng::Rng;
-
-/// Dense synthetic importance over a random instance, in the planner's
-/// provider shape (base view = both endpoints "on").
-struct DenseImp {
-    l: usize,
-    imp: Vec<f64>,
-}
-
-impl ImportanceProvider for DenseImp {
-    fn base(&self, i: usize, j: usize) -> f64 {
-        self.ext(i, j, 1, 1)
-    }
-
-    fn ext(&self, i: usize, j: usize, a: u8, b: u8) -> f64 {
-        self.imp[((i * (self.l + 1) + j) * 2 + a as usize) * 2 + b as usize]
-    }
-}
 
 fn random_instance(l: usize, seed: u64) -> (stage1::LatTable, Vec<f64>) {
     let mut rng = Rng::new(seed);
@@ -87,13 +73,49 @@ fn main() {
         black_box(extended::solve(cfg.spec.l(), &s1, &f4, 80));
     });
 
+    // -- layer-merge correctness gate ----------------------------------------
+    // before timing the LayerMerge column, pin it against the
+    // exhaustive joint delete x linearize oracle on small instances —
+    // a bench number for a wrong solver is worse than no number
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(40 + seed);
+        let l_small = 7usize;
+        let inst = RandInstance::gen(&mut rng, l_small);
+        let vanilla: u64 = (0..l_small).map(|i| inst.t.get(i, i + 1)).sum();
+        for t0 in [vanilla / 3 + 1, vanilla / 2 + 1, vanilla + 1] {
+            let dp = LayerMergeSolver.solve(&inst.t, &inst, t0);
+            let bf = brute::solve_layer_merge(
+                l_small,
+                &inst.t,
+                &|i, j, a, b| inst.ext(i, j, a, b),
+                &|i, j, a, b| ImportanceProvider::del(&inst, i, j, a, b),
+                t0,
+            );
+            match (&dp, &bf) {
+                (None, None) => {}
+                (Some(d), Some(b)) => assert!(
+                    (d.imp_total - b.objective).abs() < 1e-9,
+                    "layer_merge diverges from oracle at seed {seed} t0={t0}: \
+                     {} vs {}",
+                    d.imp_total,
+                    b.objective
+                ),
+                _ => panic!("layer_merge feasibility mismatch at seed {seed} t0={t0}"),
+            }
+        }
+    }
+    println!("# layer_merge gate: matches the exhaustive oracle on 6 seeds at L=7");
+
     // -- frontier sweep: K re-solves vs ONE planner pass ---------------------
     let l = 52usize;
     let points = 12usize;
-    let (t, raw) = random_instance(l, 3);
-    let imp = DenseImp { l, imp: raw };
-    let budgets: Vec<u64> =
-        (0..points).map(|n| 1500 + (n as u64) * 2500 / (points as u64 - 1)).collect();
+    // testkit instance: carries all three importance views, so the
+    // same (T, I) pair feeds every solver family below
+    let inst = RandInstance::gen(&mut Rng::new(3), l);
+    let vanilla: u64 = (0..l).map(|i| inst.t.get(i, i + 1)).sum();
+    let budgets: Vec<u64> = (0..points)
+        .map(|n| vanilla * (45 + (n as u64) * 50 / (points as u64 - 1)) / 100)
+        .collect();
     println!("# frontier: {points}-point budget sweep at L={l} (T0 in {:?}..{:?})",
         budgets.first().unwrap(), budgets.last().unwrap());
     let mut record = vec![
@@ -101,21 +123,24 @@ fn main() {
         ("l", Json::int(l as i64)),
         ("points", Json::int(points as i64)),
     ];
-    for (name, solver) in
-        [("two_stage", &TwoStageSolver as &dyn Solver), ("extended", &ExtendedSolver as &dyn Solver)]
-    {
+    for (name, solver) in [
+        ("two_stage", &TwoStageSolver as &dyn Solver),
+        ("extended", &ExtendedSolver as &dyn Solver),
+        ("layer_merge", &LayerMergeSolver as &dyn Solver),
+    ] {
+        let (t, imp) = (&inst.t, &inst);
         // sanity first: the two paths must produce identical plans
-        let swept = solver.solve_frontier(&t, &imp, &budgets);
+        let swept = solver.solve_frontier(t, imp, &budgets);
         for (n, &t0) in budgets.iter().enumerate() {
-            assert_eq!(swept[n], solver.solve(&t, &imp, t0), "{name} diverges at t0={t0}");
+            assert_eq!(swept[n], solver.solve(t, imp, t0), "{name} diverges at t0={t0}");
         }
         let rep = Bencher::new(&format!("{name}: {points} independent re-solves")).run(|| {
             for &t0 in &budgets {
-                black_box(solver.solve(&t, &imp, t0));
+                black_box(solver.solve(t, imp, t0));
             }
         });
         let fro = Bencher::new(&format!("{name}: one solve_frontier pass")).run(|| {
-            black_box(solver.solve_frontier(&t, &imp, &budgets));
+            black_box(solver.solve_frontier(t, imp, &budgets));
         });
         let speedup = rep.median_ns / fro.median_ns;
         println!("{name}: frontier speedup {speedup:.1}x over repeated solves");

@@ -21,6 +21,7 @@ use repro::coordinator::experiments::{
 };
 use repro::coordinator::pipeline::{LatencyCfg, Pipeline};
 use repro::coordinator::report::{fmt_acc, fmt_ms, Table};
+use repro::planner::frontier::Space;
 use repro::data::synth::SynthSpec;
 use repro::importance::table::ImpTable;
 use repro::latency::gpu_model::ExecMode;
@@ -194,7 +195,7 @@ fn table_cross_gpu(ctx: &mut Ctx, arch: &str, title: &str) {
         }
         row.push(fmt_ms(segments_ms(&eager, &segs).unwrap()));
         t.row(row);
-        if let Ok(out) = pipe.plan(plan_lat, &imp, ds_lat, 1.6, true) {
+        if let Ok(out) = pipe.plan(plan_lat, &imp, ds_lat, 1.6, Space::Extended) {
             let segs = repro::merge::plan::segments_from_s(l, &out.s);
             let mut row = vec![format!("Ours(T0={ds_lat:.2})")];
             for bl in &tables {
@@ -306,7 +307,7 @@ fn table_8(ctx: &mut Ctx) {
             ]);
         }
         let vanilla = pipe.vanilla_latency_ms(&fused).unwrap();
-        if let Ok(out) = pipe.plan(&fused, &imp, vanilla * 0.7, 1.6, true) {
+        if let Ok(out) = pipe.plan(&fused, &imp, vanilla * 0.7, 1.6, Space::Extended) {
             let r = result_for_sets(&pipe, &fused, "Ours(0.7x)", &out.a, &out.s, None, 128).unwrap();
             t.row(vec![
                 format!("{base} Ours"),
@@ -386,7 +387,7 @@ fn table_10(ctx: &mut Ctx) {
                 r.depth.to_string(),
             ]);
         }
-        if let Ok(out) = pipe.plan(&fused, &imp, vanilla * frac, 1.6, true) {
+        if let Ok(out) = pipe.plan(&fused, &imp, vanilla * frac, 1.6, Space::Extended) {
             let r = result_for_sets(&pipe, &fused, "Ours", &out.a, &out.s, None, 128).unwrap();
             t.row(vec![
                 format!("Ours({frac:.2}x)"),
@@ -426,7 +427,7 @@ fn table_11(ctx: &mut Ctx) {
                 format!("{:.2}x", vanilla / segments_ms(&fused, &segs).unwrap()),
             ]);
         }
-        if let Ok(out) = pipe.plan(&fused, &imp, vanilla * frac, 1.6, true) {
+        if let Ok(out) = pipe.plan(&fused, &imp, vanilla * frac, 1.6, Space::Extended) {
             let segs = repro::merge::plan::segments_from_s(l, &out.s);
             t.row(vec![
                 format!("Ours({frac:.2}x)"),
@@ -447,7 +448,7 @@ fn table_12(ctx: &mut Ctx) {
     let eager = ctx.lat(&pipe, "sim:rtx2080ti", ExecMode::Eager);
     let vanilla_f = pipe.vanilla_latency_ms(&fused).unwrap();
     let vanilla_e = pipe.vanilla_latency_ms(&eager).unwrap();
-    let out = pipe.plan(&fused, &imp, vanilla_f * 0.6, 1.6, true).unwrap();
+    let out = pipe.plan(&fused, &imp, vanilla_f * 0.6, 1.6, Space::Extended).unwrap();
     let l = pipe.cfg.spec.l();
     // "after removing activation": same layer structure, activations off.
     // In fused mode TensorRT fuses activations -> no change (the paper's
@@ -491,7 +492,7 @@ fn figure_3(ctx: &mut Ctx) {
     );
     for frac in [0.85, 0.75, 0.65, 0.58, 0.52] {
         let t0 = vanilla * frac;
-        let Ok(out) = pipe.plan(&fused, &imp, t0, 1.6, true) else { continue };
+        let Ok(out) = pipe.plan(&fused, &imp, t0, 1.6, Space::Extended) else { continue };
         let s_segs = repro::merge::plan::segments_from_s(pipe.cfg.spec.l(), &out.s);
         let a_segs = greedy_merge(&pipe.cfg, &out.a);
         let s_ms = segments_ms(&fused, &s_segs).unwrap();
@@ -512,7 +513,7 @@ fn figure_4(ctx: &mut Ctx) {
     let (imp, _) = ctx.importance(&pipe);
     let fused = ctx.lat(&pipe, "sim:rtx2080ti", ExecMode::Fused);
     let vanilla = pipe.vanilla_latency_ms(&fused).unwrap();
-    let out = pipe.plan(&fused, &imp, vanilla * 0.6, 1.6, true).unwrap();
+    let out = pipe.plan(&fused, &imp, vanilla * 0.6, 1.6, Space::Extended).unwrap();
     let segs = repro::merge::plan::segments_from_s(pipe.cfg.spec.l(), &out.s);
     println!("== Figure 4 analog — merge segments vs IRB boundaries (mbv2_w14, T0=0.6x)");
     let mut cross = 0;

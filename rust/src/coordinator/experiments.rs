@@ -13,6 +13,7 @@ use crate::latency::table::BlockLatencies;
 use crate::merge::plan::segments_from_s;
 use crate::model::cost;
 use crate::model::spec::{ArchConfig, ACT_RELU6};
+use crate::planner::frontier::Space;
 use crate::trainer::params::ParamSet;
 
 /// A structural proxy for I[i,j,a,b] used when no trained importance
@@ -37,6 +38,69 @@ pub fn proxy_importance(cfg: &ArchConfig) -> ImpTable {
             v += 0.001;
         }
         t.insert(p.i, p.j, p.a, p.b, v);
+    }
+    t
+}
+
+/// A structural proxy for the deletion importance D[i,j,a,b] of the
+/// LayerMerge joint space.  Span (i, j] is a deletion candidate only
+/// when the tensor entering layer i+1 and the tensor leaving layer j
+/// have identical shape (the identity bypass must type-check), no
+/// layer inside carries a pooling stage or consumes a residual tap,
+/// and no residual elsewhere taps a boundary strictly inside the span
+/// (that boundary vanishes with the span).  Deleting a span costs
+/// more than linearizing it — it removes weights, not just
+/// activations — and deeper spans matter slightly less, mirroring
+/// [`proxy_importance`]'s qualitative structure.  Endpoint states obey
+/// the same probe rules: virtual endpoints and original-ReLU6
+/// boundaries are pinned to state 1.
+pub fn proxy_delete_importance(cfg: &ArchConfig) -> ImpTable {
+    let mut t = ImpTable::new(0.0, "proxy(structural-delete)");
+    let l = cfg.spec.l();
+    let shape = |x: usize| -> (usize, usize, usize) {
+        if x == 0 {
+            (cfg.spec.input_ch, cfg.spec.input_hw, cfg.spec.input_hw)
+        } else {
+            let ly = cfg.spec.layer(x);
+            (ly.c_out, ly.h_out, ly.w_out)
+        }
+    };
+    let taps = cfg.spec.taps();
+    for i in 0..l {
+        for j in i + 1..=l {
+            if shape(i) != shape(j) {
+                continue;
+            }
+            if (i + 1..=j).any(|x| {
+                let ly = cfg.spec.layer(x);
+                ly.pool_after || ly.add_from.is_some()
+            }) {
+                continue;
+            }
+            if taps.iter().any(|&s| s > i && s < j) {
+                continue;
+            }
+            let depth_discount = 1.0 - 0.3 * (i as f64 / l as f64);
+            for a in 0..2u8 {
+                for b in 0..2u8 {
+                    let illegal = (i == 0 && a == 0)
+                        || (j == l && b == 0)
+                        || (i > 0 && cfg.spec.layer(i).act == ACT_RELU6 && a == 0)
+                        || (j < l && cfg.spec.layer(j).act == ACT_RELU6 && b == 0);
+                    if illegal {
+                        continue;
+                    }
+                    let mut v = -0.02 * (j - i) as f64 * depth_discount;
+                    if b == 1 {
+                        v += 0.002;
+                    }
+                    if a == 1 {
+                        v += 0.001;
+                    }
+                    t.insert(i, j, a, b, v);
+                }
+            }
+        }
     }
     t
 }
@@ -153,7 +217,7 @@ pub fn run_ours(
     finetune_steps: usize,
     kd: bool,
 ) -> Result<(MethodResult, PlanOutcome)> {
-    let out = pipe.plan(lat, imp, t0_ms, alpha, true)?;
+    let out = pipe.plan(lat, imp, t0_ms, alpha, Space::Extended)?;
     let acc = match pretrained {
         Some(pre) if finetune_steps > 0 => {
             let mask = pipe.mask_for_a(&out.a);
@@ -191,6 +255,7 @@ pub fn run_ds(
                 a: pattern.a.clone(),
                 s: pattern.s.clone(),
                 b: pattern.a.clone(),
+                deleted: Vec::new(),
                 objective: 0.0,
                 est_latency_ms: 0.0,
                 lat_source: lat.source.clone(),
@@ -217,6 +282,23 @@ mod tests {
         let small = t.get(1, 3, 1, 1);
         let big = t.get(1, 4, 1, 1);
         assert!(big < small);
+    }
+
+    #[test]
+    fn proxy_delete_importance_pins_shape_preserving_spans() {
+        use crate::dp::stage2::NEG_INF;
+        let cfg = tiny_config();
+        let t = proxy_delete_importance(&cfg);
+        // In the tiny fixture only (2, 3] preserves the boundary shape
+        // without touching a residual: (1, 4] matches shapes (8,12,12)
+        // but layer 4 consumes the tap at boundary 1.  Both endpoints
+        // of (2, 3] are original ReLU6, so only (a, b) = (1, 1) is
+        // legal — exactly one entry.
+        assert_eq!(t.len(), 1);
+        let v = t.get(2, 3, 1, 1);
+        assert!(v < 0.0 && v > NEG_INF);
+        assert_eq!(t.get(1, 4, 1, 1), NEG_INF);
+        assert_eq!(t.get(2, 3, 0, 1), NEG_INF);
     }
 
     #[test]

@@ -16,6 +16,7 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::coordinator::experiments::proxy_delete_importance;
 use crate::coordinator::merged_exec::MergedExec;
 use crate::data::batcher::Batcher;
 use crate::data::synth::SynthSpec;
@@ -257,8 +258,16 @@ impl<'e> Pipeline<'e> {
         if alpha != 0.0 {
             normalize::normalize(&mut imp, alpha);
         }
+        // Always carry the structural deletion proxy (normalized under
+        // the same alpha): it is derived purely from the arch config,
+        // ignored by the base/extended spaces, and lets the SAME
+        // memoized planner answer layer-merge solves too.
+        let mut del = proxy_delete_importance(&self.cfg);
+        if alpha != 0.0 {
+            normalize::normalize(&mut del, alpha);
+        }
         let t = lat.to_lat_table(self.cfg.spec.l());
-        let p = Rc::new(Planner::new(&t, TableImportance::new(&self.cfg, imp)));
+        let p = Rc::new(Planner::new(&t, TableImportance::with_deletion(&self.cfg, imp, del)));
         self.planners.borrow_mut().insert(key, p.clone());
         p
     }
@@ -277,6 +286,7 @@ impl<'e> Pipeline<'e> {
             a: sol.a,
             s: sol.s,
             b: sol.b,
+            deleted: sol.deleted,
             objective: sol.imp_total,
             est_latency_ms: lat.ticks_to_ms(sol.est_ticks),
             lat_source: lat.source.clone(),
@@ -291,10 +301,9 @@ impl<'e> Pipeline<'e> {
         imp: &ImpTable,
         t0_ms: f64,
         alpha: f64,
-        extended_space: bool,
+        space: Space,
     ) -> Result<PlanOutcome> {
         let planner = self.planner(lat, imp, alpha);
-        let space = if extended_space { Space::Extended } else { Space::Base };
         let sol = planner
             .solve(space, lat.ms_to_ticks(t0_ms))
             .ok_or_else(|| anyhow!("budget {t0_ms} ms infeasible"))?;
@@ -310,10 +319,9 @@ impl<'e> Pipeline<'e> {
         imp: &ImpTable,
         budgets_ms: &[f64],
         alpha: f64,
-        extended_space: bool,
+        space: Space,
     ) -> Vec<Option<PlanOutcome>> {
         let planner = self.planner(lat, imp, alpha);
-        let space = if extended_space { Space::Extended } else { Space::Base };
         let ticks: Vec<u64> = budgets_ms.iter().map(|&ms| lat.ms_to_ticks(ms)).collect();
         planner
             .solve_frontier(space, &ticks)
@@ -337,14 +345,15 @@ impl<'e> Pipeline<'e> {
         batch: usize,
         scale: f64,
         alpha: f64,
-        extended_space: bool,
+        space: Space,
         force: bool,
     ) -> Result<DeployPlanner<TableImportance>> {
         let lats = specs
             .iter()
             .map(|spec| self.latency_table_spec(spec, batch, scale, force))
             .collect::<Result<Vec<_>>>()?;
-        Ok(deploy_from_tables(&self.cfg, lats, imp, alpha, extended_space))
+        let del = proxy_delete_importance(&self.cfg);
+        Ok(deploy_from_tables(&self.cfg, lats, imp, Some(&del), alpha, space))
     }
 
     /// Frontier-backed serving work list for ONE source: up to `n`
@@ -363,12 +372,21 @@ impl<'e> Pipeline<'e> {
         alpha: f64,
         force: bool,
     ) -> Result<Vec<crate::planner::deploy::ParetoPoint>> {
-        let dp = self.plan_deploy(&[spec.clone()], imp, batch, scale, alpha, true, force)?;
+        let dp = self.plan_deploy(&[spec.clone()], imp, batch, scale, alpha, Space::Extended, force)?;
         Ok(dp.serve_plans(0, n))
     }
 
     /// Write the plan JSON that `make plans` (aot pass 2) consumes.
+    /// Plans with deleted spans cannot be materialized yet: the merged
+    /// network format has no identity-bypass block (ROADMAP follow-up).
     pub fn write_plan(&self, out: &PlanOutcome, name: &str) -> Result<PathBuf> {
+        if !out.deleted.is_empty() {
+            return Err(anyhow!(
+                "plan deletes spans {:?}: merged-net execution of deletions \
+                 is not implemented — replan with --solver twostage|extended",
+                out.deleted
+            ));
+        }
         let dir = self.engine.manifest.root.join("plans");
         std::fs::create_dir_all(&dir)?;
         let j = plan_json(name, &self.arch, &self.cfg, &out.s, &out.a)?;
@@ -433,6 +451,13 @@ impl<'e> Pipeline<'e> {
     // -- stage 5: merge + evaluate ------------------------------------------------
 
     pub fn merge(&self, finetuned: &ParamSet, out: &PlanOutcome) -> Result<MergedNet> {
+        if !out.deleted.is_empty() {
+            return Err(anyhow!(
+                "plan deletes spans {:?}: merged-net execution of deletions \
+                 is not implemented — replan with --solver twostage|extended",
+                out.deleted
+            ));
+        }
         build_merged(&self.cfg, finetuned, &out.s, &out.a)
             .context("building merged network")
     }
@@ -457,8 +482,13 @@ impl<'e> Pipeline<'e> {
     }
 
     /// End-to-end latency (ms) of the merged network under a table.
+    /// Deleted spans are identity bypasses and price at zero — only
+    /// the kept segments hit the table.
     pub fn merged_latency_ms(&self, out: &PlanOutcome, lat: &BlockLatencies) -> Result<f64> {
-        let segs = segments_from_s(self.cfg.spec.l(), &out.s);
+        let segs: Vec<(usize, usize)> = segments_from_s(self.cfg.spec.l(), &out.s)
+            .into_iter()
+            .filter(|sg| !out.deleted.contains(sg))
+            .collect();
         lat.network_ms(&segs)
             .ok_or_else(|| anyhow!("latency table missing a merged segment"))
     }
@@ -504,6 +534,9 @@ pub struct PlanOutcome {
     pub a: Vec<usize>,
     pub s: Vec<usize>,
     pub b: Vec<usize>,
+    /// spans replaced by identity bypasses (LayerMerge space only;
+    /// empty for base/extended plans)
+    pub deleted: Vec<(usize, usize)>,
     pub objective: f64,
     pub est_latency_ms: f64,
     pub lat_source: String,
@@ -511,8 +544,13 @@ pub struct PlanOutcome {
 
 impl PlanOutcome {
     pub fn summary(&self) -> String {
+        let del = if self.deleted.is_empty() {
+            String::new()
+        } else {
+            format!(" del={:?}", self.deleted)
+        };
         format!(
-            "A={:?} S={:?} | est {:.3} ms (budget {:.3}) obj {:+.4} [{}]",
+            "A={:?} S={:?}{del} | est {:.3} ms (budget {:.3}) obj {:+.4} [{}]",
             self.a, self.s, self.est_latency_ms, self.t0_ms, self.objective, self.lat_source
         )
     }

@@ -98,24 +98,34 @@ pub fn joint_pareto_tables(
     title: &str,
     points: &[crate::planner::deploy::ParetoPoint],
 ) -> (Table, Table) {
-    let mut t = Table::new(title, &["source", "T0 (ms)", "est (ms)", "|A|", "|S|", "objective"]);
-    let mut csv = Table::new("csv", &["source", "t0_ms", "est_ms", "objective", "n_a", "n_s"]);
+    let mut t = Table::new(
+        title,
+        &["source", "solver", "T0 (ms)", "est (ms)", "|A|", "|S|", "del", "objective"],
+    );
+    let mut csv = Table::new(
+        "csv",
+        &["source", "solver", "t0_ms", "est_ms", "objective", "n_a", "n_s", "n_del"],
+    );
     for p in points {
         t.row(vec![
             p.source.clone(),
+            p.solver.to_string(),
             format!("{:.3}", p.t0_ms),
             format!("{:.3}", p.est_ms),
             p.plan.a.len().to_string(),
             p.plan.s.len().to_string(),
+            p.plan.deleted.len().to_string(),
             format!("{:+.4}", p.plan.imp_total),
         ]);
         csv.row(vec![
             p.source.clone(),
+            p.solver.to_string(),
             format!("{:.4}", p.t0_ms),
             format!("{:.4}", p.est_ms),
             format!("{:.6}", p.plan.imp_total),
             p.plan.a.len().to_string(),
             p.plan.s.len().to_string(),
+            p.plan.deleted.len().to_string(),
         ]);
     }
     (t, csv)

@@ -5,6 +5,7 @@
 //! agreement with dp/stage2.rs and dp/extended.rs is real evidence of
 //! Propositions 4.1 / 4.2.
 
+use super::layer_merge::LmSolution;
 use super::stage1::{LatTable, Stage1};
 use super::stage2::{Solution, NEG_INF};
 
@@ -16,6 +17,16 @@ pub fn solve_base(
     imp: &[Vec<f64>],
     t0: u64,
 ) -> Option<Solution> {
+    if l_total == 0 {
+        // empty network: latency exactly 0, feasible iff 0 < t0 (the
+        // generic window loop below would read imp[0][0] = NEG_INF)
+        return (t0 >= 1).then(|| Solution {
+            a: Vec::new(),
+            s: Vec::new(),
+            objective: 0.0,
+            latency: 0,
+        });
+    }
     let s1 = super::stage1::solve(t);
     let mut best: Option<Solution> = None;
     // enumerate subsets A of [1, L-1]
@@ -75,6 +86,15 @@ pub fn solve_extended(
     imp4: &dyn Fn(usize, usize, u8, u8) -> f64,
     t0: u64,
 ) -> Option<ExtSolution> {
+    if l_total == 0 {
+        return (t0 >= 1).then(|| ExtSolution {
+            a: Vec::new(),
+            b: Vec::new(),
+            s: Vec::new(),
+            objective: 0.0,
+            latency: 0,
+        });
+    }
     let s1: Stage1 = super::stage1::solve(t);
     let m = l_total.saturating_sub(1);
     let mut best: Option<ExtSolution> = None;
@@ -149,6 +169,123 @@ pub fn solve_extended(
                     objective: obj,
                     latency: lat,
                 });
+            }
+        }
+    }
+    best
+}
+
+/// Layer-merge space (LayerMerge follow-up): enumerate every block
+/// structure B, every activation assignment A subset of B, AND a
+/// keep/delete mode per block.  Kept blocks score `imp4`, deleted
+/// blocks score `del` (NEG_INF = deletion illegal there).  Latency is
+/// summed over BARRIER intervals — barriers are {0, L}, state-1
+/// boundaries, and every deleted-block endpoint (a merged convolution
+/// cannot span a hole) — with deleted intervals contributing zero
+/// ticks and kept intervals T_opt.  Exponential (~5^L configs): tests
+/// only, small L.
+pub fn solve_layer_merge(
+    l_total: usize,
+    t: &LatTable,
+    imp4: &dyn Fn(usize, usize, u8, u8) -> f64,
+    del: &dyn Fn(usize, usize, u8, u8) -> f64,
+    t0: u64,
+) -> Option<LmSolution> {
+    if l_total == 0 {
+        return (t0 >= 1).then(|| LmSolution {
+            a: Vec::new(),
+            b: Vec::new(),
+            s: Vec::new(),
+            deleted: Vec::new(),
+            objective: 0.0,
+            latency: 0,
+        });
+    }
+    let s1: Stage1 = super::stage1::solve(t);
+    let m = l_total.saturating_sub(1);
+    let mut best: Option<LmSolution> = None;
+    for b_bits in 0..(1u32 << m) {
+        let mut b_set = Vec::new();
+        for p in 0..m {
+            if b_bits & (1 << p) != 0 {
+                b_set.push(p + 1);
+            }
+        }
+        let mut pts = vec![0usize];
+        pts.extend(&b_set);
+        pts.push(l_total);
+        let nb = b_set.len();
+        let n_blocks = nb + 1;
+        for a_bits in 0..(1u32 << nb) {
+            let state = |bound: usize| -> u8 {
+                if bound == 0 || bound == l_total {
+                    1
+                } else {
+                    let pos = b_set.iter().position(|&x| x == bound).unwrap();
+                    ((a_bits >> pos) & 1) as u8
+                }
+            };
+            'modes: for mode_bits in 0..(1u32 << n_blocks) {
+                let mut obj = 0.0;
+                let mut deleted: Vec<(usize, usize)> = Vec::new();
+                for (bi, w) in pts.windows(2).enumerate() {
+                    let (sa, sb) = (state(w[0]), state(w[1]));
+                    let v = if mode_bits & (1 << bi) != 0 {
+                        deleted.push((w[0], w[1]));
+                        del(w[0], w[1], sa, sb)
+                    } else {
+                        imp4(w[0], w[1], sa, sb)
+                    };
+                    if v == NEG_INF {
+                        continue 'modes;
+                    }
+                    obj += v;
+                }
+                // barriers: network ends, state-1 boundaries, deleted
+                // endpoints.  Kept runs between consecutive barriers
+                // price as one merged conv; deleted intervals are free.
+                let mut barriers = vec![0usize, l_total];
+                for &x in &b_set {
+                    if state(x) == 1 {
+                        barriers.push(x);
+                    }
+                }
+                for &(i, j) in &deleted {
+                    barriers.push(i);
+                    barriers.push(j);
+                }
+                barriers.sort_unstable();
+                barriers.dedup();
+                let mut lat: u64 = 0;
+                let mut s_set: Vec<usize> = Vec::new();
+                for w in barriers.windows(2) {
+                    if deleted.iter().any(|&(i, j)| (i, j) == (w[0], w[1])) {
+                        continue; // identity: zero ticks, no S interior
+                    }
+                    if !s1.feasible(w[0], w[1]) {
+                        continue 'modes;
+                    }
+                    lat = lat.saturating_add(s1.t_opt(w[0], w[1]));
+                    s_set.extend(s1.s_opt(w[0], w[1]));
+                }
+                if lat >= t0 {
+                    continue;
+                }
+                if best.as_ref().map_or(true, |bb| obj > bb.objective) {
+                    let a: Vec<usize> =
+                        b_set.iter().filter(|&&x| state(x) == 1).copied().collect();
+                    s_set.extend(barriers[1..barriers.len() - 1].iter().copied());
+                    s_set.sort_unstable();
+                    s_set.dedup();
+                    best = Some(LmSolution {
+                        a,
+                        b: b_set.clone(),
+                        s: s_set,
+                        deleted,
+                        objective: obj,
+                        latency: lat,
+                    });
+                }
             }
         }
     }

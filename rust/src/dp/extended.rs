@@ -132,7 +132,10 @@ pub fn build(l_total: usize, s1: &Stage1, s3: &Stage3, t0_max: u64) -> Stage4Tab
     let mut d = vec![NEG_INF; (l_total + 1) * n_t * 2];
     let mut par_k = vec![usize::MAX; (l_total + 1) * n_t * 2];
     let mut par_a = vec![0u8; (l_total + 1) * n_t * 2];
-    for t in 0..n_t {
+    // t >= 1 only: the empty prefix (latency exactly 0) satisfies the
+    // strict bound iff t >= 1 (matters for the degenerate L = 0 case;
+    // l >= 1 transitions already require rem >= 1 via the t_opt prune)
+    for t in 1..n_t {
         // boundary 0 is the network input: its "state" is fixed; both
         // slots hold 0 so k=0 transitions read D[0, t, alpha=1] too
         d[idx(0, t, 0)] = 0.0;

@@ -1,0 +1,435 @@
+//! Layer-merge DP: the follow-up paper's joint (delete layers,
+//! linearize activations) search space over the SAME inputs as the
+//! two-stage DP — one latency table, one importance provider.
+//!
+//! LayerMerge (Kim et al., the same group's follow-up to the source
+//! paper) enlarges the extended space of Appendix B.1 once more: a
+//! block (k, l] may be KEPT (merged into one convolution, priced by the
+//! stage-1 product) or DELETED (replaced by the identity — zero
+//! latency, importance from a separate deletion view `del(i, j, a, b)`,
+//! NEG_INF where deletion is structurally illegal).  Per-boundary
+//! activation states d in {0, 1} carry over unchanged, so the state
+//! jointly tracks (layer kept/deleted, activation kept/linearized).
+//!
+//! The recurrence extends Algorithm 4 with a zero-latency transition:
+//!
+//!   D[l, t, a] = max(
+//!     max_{k, alpha}  D[k, t - T_opt[k, l], alpha] + I3[k, l, alpha, a],
+//!     max_{k, alpha}  D[k, t,               alpha] + del[k, l, alpha, a])
+//!
+//! where I3 is the stage-3 product (optimal id-joint re-partition of a
+//! kept run) shared with the extended solver.  Deleted blocks act as
+//! merge BARRIERS: a merged convolution cannot span a hole, so kept
+//! runs between deletions are priced by T_opt over exactly that run,
+//! and a deleted block contributes zero ticks (it bypasses the >= 1
+//! tick clamp — identity really is free).  Every extended-space
+//! solution is a layer-merge solution with no deletions, so the
+//! layer-merge optimum dominates the extended optimum by construction.
+//!
+//! Columns stay budget-local (cell (l, t) only reads cells at t or
+//! t - seg), so ONE table built at t0_max answers every budget below it
+//! — the same build(t0_max) + extract(t0) split as stage 2 / stage 4,
+//! reused by the planner's frontier sweep.  Exactness is established
+//! against the exhaustive joint enumeration in `dp/brute.rs`
+//! (`solve_layer_merge`), property-tested in `planner::testkit`.
+
+use super::extended::{solve_stage3, Importance4, Stage3};
+use super::stage1::{Stage1, INF};
+use super::stage2::NEG_INF;
+
+/// The joint plan: kept activations A, block boundaries B, merge
+/// boundaries S (deleted spans appear as their own S-segments), the
+/// deleted spans themselves, the objective, and the merged-network
+/// latency in ticks (kept runs only — deletions are free).
+#[derive(Debug, Clone)]
+pub struct LmSolution {
+    pub a: Vec<usize>,
+    pub b: Vec<usize>,
+    pub s: Vec<usize>,
+    /// deleted spans (i, j], ascending, disjoint
+    pub deleted: Vec<(usize, usize)>,
+    pub objective: f64,
+    pub latency: u64,
+}
+
+/// The layer-merge DP table, built once up to a maximum budget.  As
+/// with `stage2::Stage2Table` / `extended::Stage4Table`, column `t`
+/// encodes the optimum under the strict constraint `latency < t` and
+/// cells are column-local, so one table answers every budget
+/// `t0 <= t0_max` identically to a fresh per-budget solve.
+#[derive(Debug, Clone)]
+pub struct LayerMergeTable {
+    pub l: usize,
+    n_t: usize,
+    d: Vec<f64>,
+    par_k: Vec<usize>,
+    par_a: Vec<u8>,
+    /// 0 = kept run (k, l], 1 = deleted block (k, l]
+    par_mode: Vec<u8>,
+}
+
+/// Build the layer-merge table for all budgets up to `t0_max`.  `s3` is
+/// the budget-independent stage-3 product over the KEEP importances
+/// (shared with the extended solver); `del` is the deletion view.
+pub fn build<D: Importance4>(
+    l_total: usize,
+    s1: &Stage1,
+    s3: &Stage3,
+    del: &D,
+    t0_max: u64,
+) -> LayerMergeTable {
+    let n_t = t0_max as usize + 1;
+    let idx = |l: usize, t: usize, a: usize| (l * n_t + t) * 2 + a;
+    // hoist the deletion view into a dense matrix: the inner loop runs
+    // n_t times per (l, k, alpha, a) cell and must not hit a map lookup
+    let dix = |i: usize, j: usize, a: usize, b: usize| ((i * (l_total + 1) + j) * 2 + a) * 2 + b;
+    let mut del4 = vec![NEG_INF; (l_total + 1) * (l_total + 1) * 4];
+    for i in 0..l_total {
+        for j in i + 1..=l_total {
+            for a in 0..2 {
+                for b in 0..2 {
+                    del4[dix(i, j, a, b)] = del.imp4(i, j, a as u8, b as u8);
+                }
+            }
+        }
+    }
+    let mut d = vec![NEG_INF; (l_total + 1) * n_t * 2];
+    let mut par_k = vec![usize::MAX; (l_total + 1) * n_t * 2];
+    let mut par_a = vec![0u8; (l_total + 1) * n_t * 2];
+    let mut par_mode = vec![0u8; (l_total + 1) * n_t * 2];
+    // boundary 0 is the network input; the empty prefix has latency
+    // exactly 0, feasible under every strict budget t >= 1 (t = 0 stays
+    // NEG_INF: latency >= 0 can never be < 0)
+    for t in 1..n_t {
+        d[idx(0, t, 0)] = 0.0;
+        d[idx(0, t, 1)] = 0.0;
+    }
+    for l in 1..=l_total {
+        // no t_min gating: unlike stage 2 / stage 4, boundary l may be
+        // reachable BELOW T_opt[0, l] (deletions are free), so every
+        // column from 1 up is live
+        for t in 1..n_t {
+            for a in 0..2usize {
+                let mut best = NEG_INF;
+                let mut bk = usize::MAX;
+                let mut ba = 0u8;
+                let mut bm = 0u8;
+                for k in 0..l {
+                    // boundary 0 has exactly one (virtual, on) state
+                    let alphas: &[u8] = if k == 0 { &[1] } else { &[0, 1] };
+                    // kept run (k, l]: costs T_opt, scores the stage-3
+                    // optimal id-joint re-partition
+                    let seg = s1.t_opt(k, l);
+                    if seg < INF && (seg as usize) < t {
+                        let rem = t - seg as usize;
+                        for &alpha in alphas {
+                            let prev = d[idx(k, rem, alpha as usize)];
+                            if prev == NEG_INF {
+                                continue;
+                            }
+                            let gain = s3.i_opt(k, l, alpha, a as u8);
+                            if gain == NEG_INF {
+                                continue;
+                            }
+                            let cand = prev + gain;
+                            if cand > best {
+                                best = cand;
+                                bk = k;
+                                ba = alpha;
+                                bm = 0;
+                            }
+                        }
+                    }
+                    // deleted block (k, l]: zero ticks, same column t
+                    // (cells for k < l at column t are already final)
+                    let dv0 = del4[dix(k, l, 0, a)];
+                    let dv1 = del4[dix(k, l, 1, a)];
+                    for &alpha in alphas {
+                        let gain = if alpha == 0 { dv0 } else { dv1 };
+                        if gain == NEG_INF {
+                            continue;
+                        }
+                        let prev = d[idx(k, t, alpha as usize)];
+                        if prev == NEG_INF {
+                            continue;
+                        }
+                        let cand = prev + gain;
+                        if cand > best {
+                            best = cand;
+                            bk = k;
+                            ba = alpha;
+                            bm = 1;
+                        }
+                    }
+                }
+                d[idx(l, t, a)] = best;
+                par_k[idx(l, t, a)] = bk;
+                par_a[idx(l, t, a)] = ba;
+                par_mode[idx(l, t, a)] = bm;
+            }
+        }
+    }
+    LayerMergeTable { l: l_total, n_t, d, par_k, par_a, par_mode }
+}
+
+impl LayerMergeTable {
+    /// Largest budget this table can answer.
+    pub fn t0_max(&self) -> u64 {
+        (self.n_t - 1) as u64
+    }
+
+    #[inline]
+    fn idx(&self, l: usize, t: usize, a: usize) -> usize {
+        (l * self.n_t + t) * 2 + a
+    }
+
+    /// Reconstruct the jointly optimal (A, B, S, deleted) at
+    /// `t0 <= t0_max`.  Identical to a fresh `solve` at `t0` — the
+    /// frontier byte-identity property in `planner::testkit`.
+    pub fn extract(&self, s1: &Stage1, s3: &Stage3, t0: u64) -> Option<LmSolution> {
+        assert!(t0 <= self.t0_max(), "budget {t0} beyond table max {}", self.t0_max());
+        let l_total = self.l;
+        let t0 = t0 as usize;
+        if l_total == 0 {
+            // empty network: latency exactly 0, feasible iff 0 < t0
+            return (t0 >= 1).then(|| LmSolution {
+                a: Vec::new(),
+                b: Vec::new(),
+                s: Vec::new(),
+                deleted: Vec::new(),
+                objective: 0.0,
+                latency: 0,
+            });
+        }
+        let a_last: usize =
+            if self.d[self.idx(l_total, t0, 1)] >= self.d[self.idx(l_total, t0, 0)] {
+                1
+            } else {
+                0
+            };
+        if self.d[self.idx(l_total, t0, a_last)] == NEG_INF {
+            return None;
+        }
+        let objective = self.d[self.idx(l_total, t0, a_last)];
+        let mut a_set = Vec::new();
+        let mut b_set = Vec::new();
+        let mut s_set = Vec::new();
+        let mut deleted = Vec::new();
+        let mut latency = 0u64;
+        let (mut l, mut t, mut a) = (l_total, t0, a_last);
+        while l > 0 {
+            let k = self.par_k[self.idx(l, t, a)];
+            let alpha = self.par_a[self.idx(l, t, a)];
+            let mode = self.par_mode[self.idx(l, t, a)];
+            if k == usize::MAX {
+                return None;
+            }
+            if mode == 0 {
+                // kept run: id joints become B boundaries only (merging
+                // may cross them — Algorithm 4 semantics)
+                for m in s3.b_opt(k, l, alpha, a as u8) {
+                    b_set.push(m);
+                }
+                latency += s1.t_opt(k, l);
+                s_set.extend(s1.s_opt(k, l));
+                t -= s1.t_opt(k, l) as usize;
+            } else {
+                // deleted block: free, and BOTH endpoints are merge
+                // barriers — the span is its own S-segment (the upper
+                // endpoint l was pushed by the unit above, or is L)
+                deleted.push((k, l));
+            }
+            if k > 0 {
+                b_set.push(k);
+                s_set.push(k);
+                if alpha == 1 {
+                    a_set.push(k);
+                }
+            }
+            l = k;
+            a = alpha as usize;
+        }
+        a_set.sort_unstable();
+        b_set.sort_unstable();
+        b_set.dedup();
+        s_set.sort_unstable();
+        s_set.dedup();
+        deleted.reverse();
+        Some(LmSolution { a: a_set, b: b_set, s: s_set, deleted, objective, latency })
+    }
+}
+
+/// One-shot solve: stage 3 + table build + extract at `t0` (strict:
+/// latency < t0).  `imp` is the keep view, `del` the deletion view.
+pub fn solve<I: Importance4, D: Importance4>(
+    l_total: usize,
+    s1: &Stage1,
+    imp: &I,
+    del: &D,
+    t0: u64,
+) -> Option<LmSolution> {
+    let s3 = solve_stage3(l_total, imp);
+    build(l_total, s1, &s3, del, t0).extract(s1, &s3, t0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dp::stage1::{self, LatTable};
+
+    #[test]
+    fn deletion_bypasses_the_tick_floor() {
+        // two layers, no merged (0,2] entry: the cheapest KEPT network
+        // costs 20 ticks, but deleting (1,2] leaves only 10
+        let mut t = LatTable::new(2);
+        t.set(0, 1, 10);
+        t.set(1, 2, 10);
+        let s1 = stage1::solve(&t);
+        let keep = |_: usize, _: usize, _: u8, _: u8| 0.0;
+        let del = |i: usize, j: usize, _: u8, _: u8| {
+            if (i, j) == (1, 2) {
+                -0.5
+            } else {
+                NEG_INF
+            }
+        };
+        // strict budget: 10 ticks does NOT fit t0 = 10, does fit 11
+        assert!(solve(2, &s1, &keep, &del, 10).is_none());
+        let sol = solve(2, &s1, &keep, &del, 11).unwrap();
+        assert_eq!(sol.deleted, vec![(1, 2)]);
+        assert_eq!(sol.latency, 10);
+        assert!((sol.objective - -0.5).abs() < 1e-12);
+        // the deleted span is its own S-segment: S = {1}, segments
+        // (0,1] kept + (1,2] deleted
+        assert_eq!(sol.s, vec![1]);
+        // with room for both layers the keep plan wins (0.0 > -0.5)
+        let sol = solve(2, &s1, &keep, &del, 21).unwrap();
+        assert!(sol.deleted.is_empty());
+        assert_eq!(sol.latency, 20);
+    }
+
+    #[test]
+    fn whole_network_deletion_is_latency_zero() {
+        let mut t = LatTable::new(2);
+        t.set(0, 1, 10);
+        t.set(1, 2, 10);
+        let s1 = stage1::solve(&t);
+        let keep = |_: usize, _: usize, _: u8, _: u8| 0.0;
+        let del = |_: usize, _: usize, _: u8, _: u8| -1.0;
+        // budget 1 tick: no conv fits, but deleting (0,2] whole does
+        let sol = solve(2, &s1, &keep, &del, 1).unwrap();
+        assert_eq!(sol.latency, 0);
+        assert_eq!(sol.deleted, vec![(0, 2)]);
+        assert!(sol.s.is_empty());
+        // budget 0 is infeasible even for the free plan (strict <)
+        assert!(solve(2, &s1, &keep, &del, 0).is_none());
+    }
+
+    #[test]
+    fn no_deletions_degenerates_to_extended() {
+        // del = NEG_INF everywhere: the layer-merge optimum must equal
+        // the extended optimum exactly, plan for plan
+        let mut t = LatTable::new(3);
+        t.set(0, 1, 4);
+        t.set(1, 2, 4);
+        t.set(2, 3, 4);
+        t.set(0, 2, 6);
+        t.set(1, 3, 6);
+        t.set(0, 3, 7);
+        let s1 = stage1::solve(&t);
+        let keep =
+            |i: usize, j: usize, _a: u8, b: u8| -((j - i) as f64 - 1.0) + 0.05 * b as f64;
+        let del = |_: usize, _: usize, _: u8, _: u8| NEG_INF;
+        for t0 in [5u64, 8, 9, 13, 20] {
+            let lm = solve(3, &s1, &keep, &del, t0);
+            let ext = crate::dp::extended::solve(3, &s1, &keep, t0);
+            match (lm, ext) {
+                (None, None) => {}
+                (Some(m), Some(e)) => {
+                    assert!(
+                        (m.objective - e.objective).abs() < 1e-12,
+                        "t0={t0}: lm {} != ext {}",
+                        m.objective,
+                        e.objective
+                    );
+                    assert_eq!(m.latency, e.latency, "t0={t0}");
+                    assert!(m.deleted.is_empty());
+                }
+                (m, e) => panic!(
+                    "t0={t0}: feasibility diverges (lm {:?}, ext {:?})",
+                    m.map(|x| x.objective),
+                    e.map(|x| x.objective)
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn deleted_blocks_are_merge_barriers() {
+        // three layers; merged (0,3] would be cheap (3 ticks) but
+        // deleting the MIDDLE layer forbids merging across the hole:
+        // kept runs (0,1] and (2,3] price separately (5 + 5)
+        let mut t = LatTable::new(3);
+        t.set(0, 1, 5);
+        t.set(1, 2, 50);
+        t.set(2, 3, 5);
+        t.set(0, 3, 3);
+        let s1 = stage1::solve(&t);
+        let keep = |_: usize, _: usize, _: u8, _: u8| 0.0;
+        let del = |i: usize, j: usize, _: u8, _: u8| {
+            if (i, j) == (1, 2) {
+                1.0 // deletion strictly helps here
+            } else {
+                NEG_INF
+            }
+        };
+        let sol = solve(3, &s1, &keep, &del, 100).unwrap();
+        assert_eq!(sol.deleted, vec![(1, 2)]);
+        assert_eq!(sol.latency, 10, "kept runs must not merge across the hole");
+        assert!((sol.objective - 1.0).abs() < 1e-12);
+        // S isolates the deleted span: {1, 2}
+        assert_eq!(sol.s, vec![1, 2]);
+    }
+
+    #[test]
+    fn one_table_answers_every_budget() {
+        let mut t = LatTable::new(3);
+        t.set(0, 1, 4);
+        t.set(1, 2, 6);
+        t.set(2, 3, 4);
+        t.set(1, 3, 8);
+        let s1 = stage1::solve(&t);
+        let keep = |i: usize, j: usize, a: u8, b: u8| {
+            -0.3 * (j - i) as f64 + 0.1 * (a as f64 + b as f64)
+        };
+        let del = |i: usize, j: usize, _: u8, _: u8| {
+            if j == i + 1 {
+                -0.9
+            } else {
+                NEG_INF
+            }
+        };
+        let s3 = solve_stage3(3, &keep);
+        let table = build(3, &s1, &s3, &del, 40);
+        for t0 in [0u64, 1, 3, 5, 9, 14, 40] {
+            let fresh = solve(3, &s1, &keep, &del, t0);
+            let swept = table.extract(&s1, &s3, t0);
+            match (fresh, swept) {
+                (None, None) => {}
+                (Some(f), Some(w)) => {
+                    assert_eq!(f.a, w.a, "t0={t0}");
+                    assert_eq!(f.b, w.b, "t0={t0}");
+                    assert_eq!(f.s, w.s, "t0={t0}");
+                    assert_eq!(f.deleted, w.deleted, "t0={t0}");
+                    assert_eq!(f.latency, w.latency, "t0={t0}");
+                    assert!((f.objective - w.objective).abs() < 1e-12, "t0={t0}");
+                }
+                (f, w) => panic!(
+                    "t0={t0}: feasibility diverges (fresh {:?}, swept {:?})",
+                    f.map(|x| x.objective),
+                    w.map(|x| x.objective)
+                ),
+            }
+        }
+    }
+}

@@ -55,8 +55,12 @@ pub fn build<I: Importance>(l_total: usize, s1: &Stage1, imp: &I, t0_max: u64) -
     let n_t = t0_max as usize + 1;
     let mut d = vec![NEG_INF; (l_total + 1) * n_t];
     let mut par = vec![usize::MAX; (l_total + 1) * n_t];
-    for t in 0..n_t {
-        d[t] = 0.0; // D[0, t] = 0
+    // D[0, t] = 0 for t >= 1 only: the empty prefix has latency exactly
+    // 0, which satisfies the strict bound `latency < t` iff t >= 1
+    // (matters for the degenerate L = 0 instance; for l >= 1 the k = 0
+    // transition is already pruned to rem >= 1 by the t_opt check)
+    for t in 1..n_t {
+        d[t] = 0.0;
     }
     for l in 1..=l_total {
         let t_min = s1.t_opt(0, l);

@@ -13,19 +13,27 @@
 //! AOT artifacts under `artifacts/`.
 //!
 //! Module map (solver path, bottom-up):
-//!   dp         — Algorithms 1–4 as reusable tables: `stage1` (optimal
-//!                block latencies), `stage2`/`extended` expose
-//!                build(t0_max) + extract(t0) so ONE table answers every
-//!                budget; `brute` holds the exponential test oracles.
+//!   dp         — the DP decompositions as reusable tables: `stage1`
+//!                (optimal block latencies), `stage2`/`extended`
+//!                (Algorithms 1–4), and `layer_merge` (the LayerMerge
+//!                follow-up's joint delete × linearize space) all
+//!                expose build(t0_max) + extract(t0) so ONE table
+//!                answers every budget; `brute` holds the exponential
+//!                test oracles for all three spaces.
 //!   planner    — the uniform surface over the solvers: `solver` defines
-//!                ImportanceProvider + the Solver trait (BruteSolver /
-//!                TwoStageSolver / ExtendedSolver -> PlanOutcome),
-//!                `frontier` the memoizing Planner with solve(t0) /
-//!                solve_frontier(budgets) one-pass budget sweeps, and
-//!                `deploy` the multi-device DeployPlanner: one memoized
-//!                Planner per latency source, per-device frontiers
-//!                merged into a joint cross-device Pareto set, plus
-//!                budget auto-calibration against a target ms.
+//!                ImportanceProvider (base/ext/del views) + the Solver
+//!                trait (BruteSolver / TwoStageSolver / ExtendedSolver /
+//!                LayerMergeSolver -> PlanOutcome) + the solver
+//!                `registry`, `frontier` the memoizing Planner with
+//!                solve(t0) / solve_frontier(budgets) one-pass budget
+//!                sweeps in any Space, `deploy` the multi-device
+//!                DeployPlanner: one memoized Planner per latency
+//!                source, per-device frontiers (optionally mixing
+//!                solver families) merged into a joint cross-device
+//!                Pareto set with per-point solver provenance, plus
+//!                budget auto-calibration against a target ms, and
+//!                `testkit` the shared seeded instance generator +
+//!                plan validators behind the differential test suite.
 //!   kernels    — native parallel CPU compute: `pool` (scoped worker
 //!                pool, deterministic chunk schedule), `simd` (F32x8 +
 //!                widened-i32 I32x8 lane types, runtime AVX2
@@ -137,6 +145,7 @@ pub mod latency {
 pub mod dp {
     pub mod brute;
     pub mod extended;
+    pub mod layer_merge;
     pub mod stage1;
     pub mod stage2;
 }
@@ -145,6 +154,7 @@ pub mod planner {
     pub mod deploy;
     pub mod frontier;
     pub mod solver;
+    pub mod testkit;
 }
 
 pub mod kernels {

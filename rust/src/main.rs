@@ -39,12 +39,13 @@ fn usage() -> &'static str {
        pretrain   --arch A [--steps N --lr X --seed N --classes N --force]\n\
        latency    --arch A [--source SPEC --eager --batch N]\n\
        importance --arch A [--steps N --lr X --force]\n\
-       plan       --arch A --t0 MS [--alpha X --base] (writes artifacts/plans/)\n\
+       plan       --arch A --t0 MS [--alpha X --solver F] (writes artifacts/plans/)\n\
        sweep      [--arch A|tiny] [--source SPEC[,SPEC...]] [--pareto]\n\
                   [--target-ms MS] [--points N | --budgets MS,MS,...]\n\
-                  [--alpha X --base]  per-device frontiers from one planner\n\
-                  pass each; --pareto merges them into the joint\n\
-                  cross-device Pareto CSV (provenance per row);\n\
+                  [--alpha X --solver F[,F...]]  per-device frontiers from\n\
+                  one planner pass each; --pareto merges every\n\
+                  (source, solver) frontier into the joint Pareto CSV\n\
+                  (source + solver provenance per row);\n\
                   --target-ms auto-calibrates the budget per source;\n\
                   --scale X pins ticks/ms (default: auto-calibrated\n\
                   per source from its measured block range)\n\
@@ -84,6 +85,16 @@ fn usage() -> &'static str {
                                            the Winograd + fused-epilogue tier, /int8\n\
                                            the quantized integer-GEMM tier)\n\
        sim:<device>                        legacy alias for analytical/<device>\n\
+     --solver F grammar (the solver-family registry):\n\
+       twostage | extended | layermerge    aliases: base/two-stage, ext,\n\
+                                           layer-merge/lm (case-insensitive);\n\
+                                           sweep takes a comma list to mix\n\
+                                           families; default extended\n\
+                                           (--base = --solver twostage);\n\
+                                           layermerge may DELETE spans —\n\
+                                           such plans price kept segments\n\
+                                           only and cannot be merged/served\n\
+                                           yet (planning + reports only)\n\
      common: --artifacts DIR (default ./artifacts) --quiet\n\
              --backend pjrt|host (default pjrt; host = native kernels, no PJRT)\n\
              --layout nchw|nhwc (host serving layout; nhwc = channels-last\n\
@@ -93,6 +104,33 @@ fn usage() -> &'static str {
              epilogues, int8 = dense convs quantized w8a8 with seeded\n\
              calibration (REPRO_INT8_CALIB sets the batch); both\n\
              tolerance-gated against exact)"
+}
+
+/// `--solver F[,F...]` -> solver families ([`Space::parse`] grammar),
+/// deduplicated, order-preserving.  `--base` stays as back-compat for
+/// `--solver twostage`; the default is the extended space.  Commands
+/// that take ONE family use the first entry.
+fn solver_spaces(args: &Args) -> Result<Vec<Space>> {
+    match args.str_opt("solver") {
+        Some(s) => {
+            let mut out: Vec<Space> = Vec::new();
+            for part in s.split(',') {
+                let part = part.trim();
+                let sp = Space::parse(part).ok_or_else(|| {
+                    anyhow!("unknown solver {part:?} (twostage|extended|layermerge)")
+                })?;
+                if !out.contains(&sp) {
+                    out.push(sp);
+                }
+            }
+            if out.is_empty() {
+                bail!("--solver needs at least one family");
+            }
+            Ok(out)
+        }
+        None if args.bool_flag("base") => Ok(vec![Space::Base]),
+        None => Ok(vec![Space::Extended]),
+    }
 }
 
 fn data_for(args: &Args, pipe: &Pipeline) -> Result<SynthSpec> {
@@ -233,7 +271,7 @@ fn main() -> Result<()> {
             if t0 <= 0.0 {
                 bail!("--t0 <ms> required (vanilla is {} ms)", fmt_ms(pipe.vanilla_latency_ms(&lat)?));
             }
-            let out = pipe.plan(&lat, &imp, t0, args.f64_or("alpha", 1.6)?, !args.bool_flag("base"))?;
+            let out = pipe.plan(&lat, &imp, t0, args.f64_or("alpha", 1.6)?, solver_spaces(&args)?[0])?;
             println!("plan: {}", out.summary());
             let name = args.str_or("name", &format!("{arch}_t{}", (t0 * 100.0) as u64));
             let path = pipe.write_plan(&out, &name)?;
@@ -256,7 +294,7 @@ fn main() -> Result<()> {
             // resolution in the joint --pareto merge
             let scale = args.f64_or("scale", 0.0)?;
             let alpha = args.f64_or("alpha", 1.6)?;
-            let extended = !args.bool_flag("base");
+            let spaces = solver_spaces(&args)?;
             let points = args.usize_or("points", 12)?;
             let hi = args.f64_or("max-frac", 0.92)?;
             let lo = args.f64_or("min-frac", 0.47)?;
@@ -292,7 +330,7 @@ fn main() -> Result<()> {
                     (pipe_store.cfg.clone(), imp, tag, Some(&pipe_store))
                 };
             let dp = match pipe_ref {
-                Some(pipe) => pipe.plan_deploy(&specs, &imp, batch, scale, alpha, extended, force)?,
+                Some(pipe) => pipe.plan_deploy(&specs, &imp, batch, scale, alpha, spaces[0], force)?,
                 None => {
                     // artifact-free fixture path: measure each source
                     // directly (no engine, no on-disk cache), then the
@@ -315,7 +353,15 @@ fn main() -> Result<()> {
                         )?;
                         lats.push(if scale > 0.0 { bl } else { bl.with_calibrated_scale() });
                     }
-                    repro::planner::deploy::deploy_from_tables(&cfg, lats, &imp, alpha, extended)
+                    let del = repro::coordinator::experiments::proxy_delete_importance(&cfg);
+                    repro::planner::deploy::deploy_from_tables(
+                        &cfg,
+                        lats,
+                        &imp,
+                        Some(&del),
+                        alpha,
+                        spaces[0],
+                    )
                 }
             };
             let ladders: Vec<Vec<f64>> = (0..dp.sources().len())
@@ -330,70 +376,83 @@ fn main() -> Result<()> {
                 let vanilla = dp
                     .vanilla_ms(idx)
                     .ok_or_else(|| anyhow!("latency table missing a singleton"))?;
-                // position-aligned with the ladder: no float re-matching
-                let front = dp.frontier(idx, &ladders[idx]);
-                let mut t = Table::new(
-                    &format!(
-                        "budget frontier {arch} [{}] (importance: {imp_tag}, vanilla {} ms)",
-                        src.label,
-                        fmt_ms(vanilla)
-                    ),
-                    &["T0 (ms)", "est (ms)", "speedup", "|A|", "|S|", "objective"],
-                );
-                let mut csv =
-                    Table::new("csv", &["t0_ms", "est_ms", "objective", "n_a", "n_s"]);
-                for (t0, point) in ladders[idx].iter().zip(&front) {
-                    match point {
-                        Some(p) => {
-                            t.row(vec![
-                                fmt_ms(*t0),
-                                fmt_ms(p.est_ms),
-                                format!("{:.2}x", vanilla / p.est_ms),
-                                p.plan.a.len().to_string(),
-                                p.plan.s.len().to_string(),
-                                format!("{:+.4}", p.plan.imp_total),
-                            ]);
-                            csv.row(vec![
-                                format!("{t0:.4}"),
-                                format!("{:.4}", p.est_ms),
-                                format!("{:.6}", p.plan.imp_total),
-                                p.plan.a.len().to_string(),
-                                p.plan.s.len().to_string(),
-                            ]);
-                        }
-                        None => {
-                            t.row(vec![
-                                fmt_ms(*t0),
-                                "-".into(),
-                                "-".into(),
-                                "-".into(),
-                                "-".into(),
-                                "infeasible".into(),
-                            ]);
-                            csv.row(vec![
-                                format!("{t0:.4}"),
-                                String::new(),
-                                String::new(),
-                                String::new(),
-                                String::new(),
-                            ]);
+                for &space in &spaces {
+                    // position-aligned with the ladder: no float re-matching
+                    let front = dp.frontier_in(idx, space, &ladders[idx]);
+                    let mut t = Table::new(
+                        &format!(
+                            "budget frontier {arch} [{}] solver {} \
+                             (importance: {imp_tag}, vanilla {} ms)",
+                            src.label,
+                            space.label(),
+                            fmt_ms(vanilla)
+                        ),
+                        &["T0 (ms)", "est (ms)", "speedup", "|A|", "|S|", "del", "objective"],
+                    );
+                    let mut csv =
+                        Table::new("csv", &["t0_ms", "est_ms", "objective", "n_a", "n_s", "n_del"]);
+                    for (t0, point) in ladders[idx].iter().zip(&front) {
+                        match point {
+                            Some(p) => {
+                                t.row(vec![
+                                    fmt_ms(*t0),
+                                    fmt_ms(p.est_ms),
+                                    format!("{:.2}x", vanilla / p.est_ms),
+                                    p.plan.a.len().to_string(),
+                                    p.plan.s.len().to_string(),
+                                    p.plan.deleted.len().to_string(),
+                                    format!("{:+.4}", p.plan.imp_total),
+                                ]);
+                                csv.row(vec![
+                                    format!("{t0:.4}"),
+                                    format!("{:.4}", p.est_ms),
+                                    format!("{:.6}", p.plan.imp_total),
+                                    p.plan.a.len().to_string(),
+                                    p.plan.s.len().to_string(),
+                                    p.plan.deleted.len().to_string(),
+                                ]);
+                            }
+                            None => {
+                                t.row(vec![
+                                    fmt_ms(*t0),
+                                    "-".into(),
+                                    "-".into(),
+                                    "-".into(),
+                                    "-".into(),
+                                    "-".into(),
+                                    "infeasible".into(),
+                                ]);
+                                csv.row(vec![
+                                    format!("{t0:.4}"),
+                                    String::new(),
+                                    String::new(),
+                                    String::new(),
+                                    String::new(),
+                                    String::new(),
+                                ]);
+                            }
                         }
                     }
+                    print!("{}", t.render());
+                    // one frontier CSV per (source, solver); the
+                    // single-source single-solver file keeps its
+                    // historical name, extra axes append suffixes
+                    let src_tag = src.label.replace([':', '/'], "_");
+                    let fname = match (dp.sources().len() == 1, spaces.len() == 1) {
+                        (true, true) => format!("frontier_{arch}.csv"),
+                        (false, true) => format!("frontier_{arch}_{src_tag}.csv"),
+                        (true, false) => format!("frontier_{arch}_{}.csv", space.label()),
+                        (false, false) => {
+                            format!("frontier_{arch}_{src_tag}_{}.csv", space.label())
+                        }
+                    };
+                    let path = dir.join(fname);
+                    std::fs::write(&path, csv.render_csv())?;
+                    println!("frontier series written to {}", path.display());
                 }
-                print!("{}", t.render());
-                // one frontier CSV per source, always (the single-source
-                // file keeps its historical name)
-                let fname = if dp.sources().len() == 1 {
-                    format!("frontier_{arch}.csv")
-                } else {
-                    format!("frontier_{arch}_{}.csv", src.label.replace([':', '/'], "_"))
-                };
-                let path = dir.join(fname);
-                std::fs::write(&path, csv.render_csv())?;
-                println!("frontier series written to {}", path.display());
             }
             if pareto {
-                let joint = dp.joint_pareto(&ladders);
+                let joint = dp.joint_pareto_spaces(&spaces, &ladders);
                 let (t, csv) = repro::coordinator::report::joint_pareto_tables(
                     &format!(
                         "joint cross-device Pareto set {arch} ({} sources, {} points survive)",
@@ -439,7 +498,7 @@ fn main() -> Result<()> {
             let imp = repro::coordinator::experiments::proxy_importance(&pipe.cfg);
             let vanilla = pipe.vanilla_latency_ms(&lat)?;
             let frac = args.f64_or("frac", 0.65)?;
-            let out = pipe.plan(&lat, &imp, vanilla * frac, 1.6, true)?;
+            let out = pipe.plan(&lat, &imp, vanilla * frac, 1.6, Space::Extended)?;
             println!("plan: {}", out.summary());
             let name = args.str_or("name", &format!("{arch}_demo"));
             let path = pipe.write_plan(&out, &name)?;
@@ -466,7 +525,7 @@ fn main() -> Result<()> {
             if t0 <= 0.0 {
                 bail!("--t0 <ms> required (vanilla is {} ms)", fmt_ms(vanilla_ms));
             }
-            let out = pipe.plan(&lat, &imp, t0, args.f64_or("alpha", 1.6)?, !args.bool_flag("base"))?;
+            let out = pipe.plan(&lat, &imp, t0, args.f64_or("alpha", 1.6)?, solver_spaces(&args)?[0])?;
             println!("[plan] {}", out.summary());
             let mask = pipe.mask_for_a(&out.a);
             let (fine, masked_acc, _log) = pipe.finetune(
@@ -781,12 +840,14 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
         work.push(repro::planner::deploy::ParetoPoint {
             source: dp.sources()[si].label.clone(),
             source_idx: si,
+            solver: Space::Extended.label(),
             t0_ms: vanilla,
             est_ms: vanilla,
             plan: repro::planner::solver::PlanOutcome {
                 a: a_all,
                 b: Vec::new(),
                 s: s_all,
+                deleted: Vec::new(),
                 imp_total: f64::NAN,
                 est_ticks: 0,
             },

@@ -33,7 +33,6 @@
 use crate::importance::normalize;
 use crate::importance::table::ImpTable;
 use crate::latency::table::BlockLatencies;
-use crate::merge::plan::segments_from_s;
 use crate::model::spec::ArchConfig;
 use crate::planner::frontier::{Planner, Space, TableImportance};
 use crate::planner::solver::{ImportanceProvider, PlanOutcome};
@@ -50,6 +49,9 @@ pub struct ParetoPoint {
     /// latency-source label (device provenance)
     pub source: String,
     pub source_idx: usize,
+    /// solver-family label (`Space::label`) — which search space won
+    /// this point when frontiers mix solver families
+    pub solver: &'static str,
     /// the budget that produced the plan
     pub t0_ms: f64,
     /// merged-network latency in real (unrounded) ms under its source
@@ -136,11 +138,20 @@ impl<P: ImportanceProvider> DeployPlanner<P> {
             .collect()
     }
 
-    fn point(&self, idx: usize, t0_ms: f64, plan: PlanOutcome) -> ParetoPoint {
+    fn point(&self, idx: usize, space: Space, t0_ms: f64, plan: PlanOutcome) -> ParetoPoint {
         let s = &self.sources[idx];
-        let segs = segments_from_s(self.l, &plan.s);
+        // price KEPT segments only: a deleted span is an identity and
+        // must not be billed as a merged convolution
+        let segs = plan.kept_segments(self.l);
         let est_ms = s.lat.network_ms(&segs).unwrap_or_else(|| s.lat.ticks_to_ms(plan.est_ticks));
-        ParetoPoint { source: s.label.clone(), source_idx: idx, t0_ms, est_ms, plan }
+        ParetoPoint {
+            source: s.label.clone(),
+            source_idx: idx,
+            solver: space.label(),
+            t0_ms,
+            est_ms,
+            plan,
+        }
     }
 
     /// Per-source frontier: the plan per budget, from ONE DP table pass
@@ -148,23 +159,51 @@ impl<P: ImportanceProvider> DeployPlanner<P> {
     /// (None where the budget is infeasible) so callers keep the
     /// budget->plan correspondence without re-matching on floats.
     pub fn frontier(&self, idx: usize, budgets_ms: &[f64]) -> Vec<Option<ParetoPoint>> {
+        self.frontier_in(idx, self.space, budgets_ms)
+    }
+
+    /// Same, in an explicit solution space.  The memoized planner holds
+    /// one table per space (stage 1 and stage 3 shared), so mixing
+    /// solver families over one source costs one extra table build, not
+    /// a re-measure.
+    pub fn frontier_in(
+        &self,
+        idx: usize,
+        space: Space,
+        budgets_ms: &[f64],
+    ) -> Vec<Option<ParetoPoint>> {
         let s = &self.sources[idx];
         let ticks: Vec<u64> = budgets_ms.iter().map(|&ms| s.lat.ms_to_ticks(ms)).collect();
         s.planner
-            .solve_frontier(self.space, &ticks)
+            .solve_frontier(space, &ticks)
             .into_iter()
             .zip(budgets_ms)
-            .map(|(sol, &ms)| sol.map(|plan| self.point(idx, ms, plan)))
+            .map(|(sol, &ms)| sol.map(|plan| self.point(idx, space, ms, plan)))
             .collect()
     }
 
     /// The joint cross-device Pareto set: per-source frontiers merged
     /// and dominance-filtered.  `budgets_ms[k]` is source k's ladder.
     pub fn joint_pareto(&self, budgets_ms: &[Vec<f64>]) -> Vec<ParetoPoint> {
+        self.joint_pareto_spaces(&[self.space], budgets_ms)
+    }
+
+    /// The joint Pareto set across devices AND solver families: every
+    /// (source, space) frontier merged, dominance-filtered, with each
+    /// surviving point's `solver` provenance recording which family won
+    /// it.  `budgets_ms[k]` is source k's ladder (shared by spaces).
+    pub fn joint_pareto_spaces(
+        &self,
+        spaces: &[Space],
+        budgets_ms: &[Vec<f64>],
+    ) -> Vec<ParetoPoint> {
         assert_eq!(budgets_ms.len(), self.sources.len(), "one budget ladder per source");
+        assert!(!spaces.is_empty(), "at least one solver family");
         let mut all = Vec::new();
-        for (idx, budgets) in budgets_ms.iter().enumerate() {
-            all.extend(self.frontier(idx, budgets).into_iter().flatten());
+        for &space in spaces {
+            for (idx, budgets) in budgets_ms.iter().enumerate() {
+                all.extend(self.frontier_in(idx, space, budgets).into_iter().flatten());
+            }
         }
         pareto_front(all)
     }
@@ -277,7 +316,7 @@ impl<P: ImportanceProvider> DeployPlanner<P> {
         s.planner.solve(self.space, hi)?;
         let probe = |t0: u64| -> Option<(f64, PlanOutcome)> {
             let plan = s.planner.solve(self.space, t0)?;
-            let segs = segments_from_s(self.l, &plan.s);
+            let segs = plan.kept_segments(self.l);
             let ms = s.lat.network_ms(&segs)?;
             Some((ms, plan))
         };
@@ -285,7 +324,7 @@ impl<P: ImportanceProvider> DeployPlanner<P> {
         // answer — no smaller budget can beat its importance
         if let Some((ms, plan)) = probe(hi) {
             if ms <= target_ms {
-                return Some(self.point(idx, s.lat.ticks_to_ms(hi), plan));
+                return Some(self.point(idx, self.space, s.lat.ticks_to_ms(hi), plan));
             }
         }
         // smallest feasible budget (feasibility IS monotone in T0)
@@ -308,7 +347,7 @@ impl<P: ImportanceProvider> DeployPlanner<P> {
                 if ms <= target_ms {
                     // t0_ms records the PRODUCING budget (round-trips
                     // through ms_to_ticks), not the requested target
-                    return Some(self.point(idx, s.lat.ticks_to_ms(t0), plan));
+                    return Some(self.point(idx, self.space, s.lat.ticks_to_ms(t0), plan));
                 }
             }
         }
@@ -321,21 +360,35 @@ impl<P: ImportanceProvider> DeployPlanner<P> {
 /// hardware; B.3-normalized once when `alpha != 0`).  The single
 /// registration path behind `Pipeline::plan_deploy` (disk-cached
 /// tables) and the artifact-free CLI sweep (directly measured tables).
+/// A deletion view (`del`, normalized under the same alpha) arms the
+/// layer-merge space; without one `Space::LayerMerge` degenerates to
+/// `Space::Extended`.
 pub fn deploy_from_tables(
     cfg: &ArchConfig,
     lats: Vec<BlockLatencies>,
     imp: &ImpTable,
+    del: Option<&ImpTable>,
     alpha: f64,
-    extended_space: bool,
+    space: Space,
 ) -> DeployPlanner<TableImportance> {
-    let space = if extended_space { Space::Extended } else { Space::Base };
     let mut imp = imp.clone();
     if alpha != 0.0 {
         normalize::normalize(&mut imp, alpha);
     }
+    let del = del.map(|d| {
+        let mut d = d.clone();
+        if alpha != 0.0 {
+            normalize::normalize(&mut d, alpha);
+        }
+        d
+    });
     let mut dp = DeployPlanner::new(cfg.spec.l(), space);
     for lat in lats {
-        dp.add_source(lat, TableImportance::new(cfg, imp.clone()));
+        let ti = match &del {
+            Some(d) => TableImportance::with_deletion(cfg, imp.clone(), d.clone()),
+            None => TableImportance::new(cfg, imp.clone()),
+        };
+        dp.add_source(lat, ti);
     }
     dp
 }
@@ -371,7 +424,7 @@ mod tests {
     use crate::latency::{devices, gpu_model::ExecMode};
     use crate::model::spec::testutil::tiny_config;
     use crate::planner::frontier::TableImportance;
-    use crate::planner::solver::testutil::RandInstance;
+    use crate::planner::testkit::RandInstance;
     use crate::util::prop::forall;
     use crate::util::rng::Rng;
 
@@ -389,14 +442,23 @@ mod tests {
         BlockLatencies::new(label.into(), 1, 1.0, entries)
     }
 
-    fn rand_deploy(rng: &mut Rng, l: usize, n_sources: usize) -> DeployPlanner<RandInstance> {
-        let mut dp = DeployPlanner::new(l, Space::Extended);
+    fn rand_deploy_in(
+        rng: &mut Rng,
+        l: usize,
+        n_sources: usize,
+        space: Space,
+    ) -> DeployPlanner<RandInstance> {
+        let mut dp = DeployPlanner::new(l, space);
         for k in 0..n_sources {
             let inst = RandInstance::gen(rng, l);
             let lat = lat_of(&inst.t, &format!("rand/{k}"));
             dp.add_source(lat, inst);
         }
         dp
+    }
+
+    fn rand_deploy(rng: &mut Rng, l: usize, n_sources: usize) -> DeployPlanner<RandInstance> {
+        rand_deploy_in(rng, l, n_sources, Space::Extended)
     }
 
     fn ladders(dp: &DeployPlanner<RandInstance>, rng: &mut Rng) -> Vec<Vec<f64>> {
@@ -478,14 +540,59 @@ mod tests {
                     "label/index provenance mismatch"
                 );
                 // the plan re-prices to the recorded latency under ITS
-                // OWN source table
-                let segs = segments_from_s(l, &p.plan.s);
+                // OWN source table (kept segments only — deleted spans
+                // are identities and must not be billed)
+                let segs = p.plan.kept_segments(l);
                 let ms = dp.sources()[p.source_idx].lat.network_ms(&segs);
                 crate::prop_assert!(
                     ms == Some(p.est_ms),
                     "est_ms {} does not re-price ({:?})",
                     p.est_ms,
                     ms
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mixed_family_joint_pareto_has_solver_provenance() {
+        // frontiers from every solver family merged into one joint set:
+        // still dominance-free, every point labelled with the family
+        // that produced it, and the layer-merge family never absent for
+        // a reason other than losing on merit (its optimum dominates
+        // the extended optimum at equal budget by construction)
+        forall(15, 76, |rng| {
+            let l = 3 + rng.below(4);
+            let dp = rand_deploy(rng, l, 1 + rng.below(2));
+            let budgets = ladders(&dp, rng);
+            let spaces = [Space::Base, Space::Extended, Space::LayerMerge];
+            let joint = dp.joint_pareto_spaces(&spaces, &budgets);
+            let labels: Vec<&'static str> = spaces.iter().map(|s| s.label()).collect();
+            for p in &joint {
+                crate::prop_assert!(
+                    labels.contains(&p.solver),
+                    "unknown solver label {}",
+                    p.solver
+                );
+                crate::prop_assert!(
+                    p.solver == "layermerge" || p.plan.deleted.is_empty(),
+                    "non-layer-merge point carries deletions"
+                );
+            }
+            for (n, p) in joint.iter().enumerate() {
+                for (m, q) in joint.iter().enumerate() {
+                    if n != m {
+                        crate::prop_assert!(!q.dominates(p), "dominated point in mixed joint set");
+                    }
+                }
+            }
+            // the mixed set weakly covers the single-family set: adding
+            // families can only improve the front
+            for p in dp.joint_pareto(&budgets) {
+                crate::prop_assert!(
+                    joint.iter().any(|q| q.covers(&p)),
+                    "mixed-family front fails to cover a single-family point"
                 );
             }
             Ok(())
@@ -608,6 +715,34 @@ mod tests {
     }
 
     #[test]
+    fn layer_merge_points_price_kept_segments_only() {
+        // a deployment planner in the layer-merge space: every frontier
+        // and calibration point must re-price from kept segments (a
+        // deleted span billed as a conv would overstate est_ms)
+        forall(15, 77, |rng| {
+            let l = 3 + rng.below(4);
+            let dp = rand_deploy_in(rng, l, 1, Space::LayerMerge);
+            let budgets: Vec<f64> = (0..5).map(|_| 2.0 + rng.below(120) as f64).collect();
+            for p in dp.frontier(0, &budgets).into_iter().flatten() {
+                assert_eq!(p.solver, "layermerge");
+                let ms = dp.sources()[0].lat.network_ms(&p.plan.kept_segments(l));
+                crate::prop_assert!(ms == Some(p.est_ms), "est_ms does not re-price");
+                // ticks agree with the ms pricing at scale 1.0 (1 tick
+                // = 1 ms in lat_of): deleted spans cost nothing
+                crate::prop_assert!(
+                    (p.est_ms - p.plan.est_ticks as f64).abs() < 1e-9,
+                    "tick/ms pricing diverges on a layer-merge plan"
+                );
+            }
+            if let Some(got) = dp.calibrate(0, 3.0 + rng.below(120) as f64) {
+                let ms = dp.sources()[0].lat.network_ms(&got.plan.kept_segments(l));
+                crate::prop_assert!(ms == Some(got.est_ms), "calibrated est_ms does not re-price");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn calibration_never_overshoots_on_random_instances() {
         forall(20, 74, |rng| {
             let l = 3 + rng.below(4);
@@ -621,7 +756,7 @@ mod tests {
                         got.est_ms
                     );
                     // the result re-prices under the source table
-                    let segs = segments_from_s(l, &got.plan.s);
+                    let segs = got.plan.kept_segments(l);
                     let ms = dp.sources()[0].lat.network_ms(&segs);
                     crate::prop_assert!(ms == Some(got.est_ms), "est_ms does not re-price");
                 }

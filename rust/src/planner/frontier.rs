@@ -22,20 +22,50 @@ use std::cell::RefCell;
 use std::rc::Rc;
 
 use crate::dp::extended::{self, Stage3, Stage4Table};
+use crate::dp::layer_merge::{self, LayerMergeTable};
 use crate::dp::stage1::{self, LatTable, Stage1};
 use crate::dp::stage2::{self, Stage2Table};
+use crate::dp::stage2::NEG_INF;
 use crate::importance::table::ImpTable;
 use crate::model::spec::{ArchConfig, ACT_RELU6};
 
 use super::solver::{ImportanceProvider, PlanOutcome};
 
 /// Which solution space to plan in.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Space {
     /// Algorithms 1+2 (B = A)
     Base,
     /// Algorithms 3+4 over (boundary, activation-state)
     Extended,
+    /// the LayerMerge follow-up's joint (delete, linearize) space
+    LayerMerge,
+}
+
+impl Space {
+    /// The CLI/report label (`--solver` grammar, Pareto provenance).
+    pub fn label(self) -> &'static str {
+        match self {
+            Space::Base => "twostage",
+            Space::Extended => "extended",
+            Space::LayerMerge => "layermerge",
+        }
+    }
+
+    /// Parse a `--solver` token (aliases accepted, case-insensitive).
+    pub fn parse(s: &str) -> Option<Space> {
+        match s.to_ascii_lowercase().as_str() {
+            "twostage" | "two-stage" | "base" => Some(Space::Base),
+            "extended" | "ext" => Some(Space::Extended),
+            "layermerge" | "layer-merge" | "lm" => Some(Space::LayerMerge),
+            _ => None,
+        }
+    }
+
+    /// Every space the CLI can ask for, in containment order.
+    pub fn all() -> [Space; 3] {
+        [Space::Base, Space::Extended, Space::LayerMerge]
+    }
 }
 
 /// Budget-independent products memoized over a fixed (T, I) pair.
@@ -46,6 +76,7 @@ pub struct Planner<P: ImportanceProvider> {
     s3: RefCell<Option<Rc<Stage3>>>,
     base_tab: RefCell<Option<Rc<Stage2Table>>>,
     ext_tab: RefCell<Option<Rc<Stage4Table>>>,
+    lm_tab: RefCell<Option<Rc<LayerMergeTable>>>,
 }
 
 impl<P: ImportanceProvider> Planner<P> {
@@ -59,6 +90,7 @@ impl<P: ImportanceProvider> Planner<P> {
             s3: RefCell::new(None),
             base_tab: RefCell::new(None),
             ext_tab: RefCell::new(None),
+            lm_tab: RefCell::new(None),
         }
     }
 
@@ -112,6 +144,22 @@ impl<P: ImportanceProvider> Planner<P> {
         tab
     }
 
+    /// Layer-merge table covering at least `t0` (kept; grows
+    /// monotonically).  Shares the stage-3 product with the extended
+    /// space — switching spaces on one Planner never rebuilds it.
+    fn lm_table(&self, t0: u64) -> Rc<LayerMergeTable> {
+        if let Some(tab) = self.lm_tab.borrow().as_ref() {
+            if tab.t0_max() >= t0 {
+                return tab.clone();
+            }
+        }
+        let s3 = self.stage3();
+        let d = |i: usize, j: usize, a: u8, b: u8| self.imp.del(i, j, a, b);
+        let tab = Rc::new(layer_merge::build(self.l, &self.s1, &s3, &d, t0));
+        *self.lm_tab.borrow_mut() = Some(tab.clone());
+        tab
+    }
+
     /// Jointly optimal plan under the strict integer budget `t0`.
     pub fn solve(&self, space: Space, t0: u64) -> Option<PlanOutcome> {
         match space {
@@ -121,6 +169,7 @@ impl<P: ImportanceProvider> Planner<P> {
                     b: sol.a.clone(),
                     a: sol.a,
                     s: sol.s,
+                    deleted: Vec::new(),
                     imp_total: sol.objective,
                     est_ticks: sol.latency,
                 })
@@ -132,6 +181,19 @@ impl<P: ImportanceProvider> Planner<P> {
                     a: sol.a,
                     b: sol.b,
                     s: sol.s,
+                    deleted: Vec::new(),
+                    imp_total: sol.objective,
+                    est_ticks: sol.latency,
+                })
+            }
+            Space::LayerMerge => {
+                let s3 = self.stage3();
+                let tab = self.lm_table(t0);
+                tab.extract(&self.s1, &s3, t0).map(|sol| PlanOutcome {
+                    a: sol.a,
+                    b: sol.b,
+                    s: sol.s,
+                    deleted: sol.deleted,
                     imp_total: sol.objective,
                     est_ticks: sol.latency,
                 })
@@ -191,15 +253,21 @@ impl<P: ImportanceProvider> Planner<P> {
             Space::Extended => {
                 let _ = self.ext_table(t0_max);
             }
+            Space::LayerMerge => {
+                let _ = self.lm_table(t0_max);
+            }
         }
         budgets.iter().map(|&t0| self.solve(space, t0)).collect()
     }
 }
 
 /// `ImpTable` + the architecture's original activation states — the
-/// coordinator-side `ImportanceProvider` (both solution spaces).
+/// coordinator-side `ImportanceProvider` (all solution spaces).
 pub struct TableImportance {
     table: ImpTable,
+    /// deletion-view importance for the layer-merge space; `None`
+    /// means no span is deletable (del == NEG_INF everywhere)
+    deletion: Option<ImpTable>,
     /// original endpoint state per boundary 0..=L (virtual ends "on")
     orig_on: Vec<bool>,
 }
@@ -211,11 +279,23 @@ impl TableImportance {
         for x in 1..l {
             orig_on[x] = cfg.spec.layer(x).act == ACT_RELU6;
         }
-        TableImportance { table, orig_on }
+        TableImportance { table, deletion: None, orig_on }
+    }
+
+    /// Attach a deletion view (layer-merge space); without one the
+    /// layer-merge solver degenerates to the extended solver.
+    pub fn with_deletion(cfg: &ArchConfig, table: ImpTable, deletion: ImpTable) -> TableImportance {
+        let mut ti = TableImportance::new(cfg, table);
+        ti.deletion = Some(deletion);
+        ti
     }
 
     pub fn table(&self) -> &ImpTable {
         &self.table
+    }
+
+    pub fn deletion_table(&self) -> Option<&ImpTable> {
+        self.deletion.as_ref()
     }
 }
 
@@ -227,6 +307,13 @@ impl ImportanceProvider for TableImportance {
     fn ext(&self, i: usize, j: usize, a: u8, b: u8) -> f64 {
         self.table.get(i, j, a, b)
     }
+
+    fn del(&self, i: usize, j: usize, a: u8, b: u8) -> f64 {
+        match &self.deletion {
+            Some(d) => d.get(i, j, a, b),
+            None => NEG_INF,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -234,8 +321,8 @@ mod tests {
     use super::*;
     use crate::coordinator::experiments::proxy_importance;
     use crate::model::spec::testutil::tiny_config;
-    use crate::planner::solver::testutil::RandInstance;
-    use crate::planner::solver::{ExtendedSolver, Solver, TwoStageSolver};
+    use crate::planner::solver::{ExtendedSolver, LayerMergeSolver, Solver, TwoStageSolver};
+    use crate::planner::testkit::RandInstance;
     use crate::util::prop::forall;
 
     fn same(
@@ -249,6 +336,7 @@ mod tests {
                 if x.a == y.a
                     && x.b == y.b
                     && x.s == y.s
+                    && x.deleted == y.deleted
                     && x.est_ticks == y.est_ticks
                     && (x.imp_total - y.imp_total).abs() < 1e-9 =>
             {
@@ -259,9 +347,22 @@ mod tests {
     }
 
     #[test]
+    fn space_labels_round_trip() {
+        for space in Space::all() {
+            assert_eq!(Space::parse(space.label()), Some(space));
+        }
+        assert_eq!(Space::parse("base"), Some(Space::Base));
+        assert_eq!(Space::parse("two-stage"), Some(Space::Base));
+        assert_eq!(Space::parse("ext"), Some(Space::Extended));
+        assert_eq!(Space::parse("layer-merge"), Some(Space::LayerMerge));
+        assert_eq!(Space::parse("LayerMerge"), Some(Space::LayerMerge));
+        assert_eq!(Space::parse("nope"), None);
+    }
+
+    #[test]
     fn planner_matches_stateless_solvers() {
         // the memoized path (shared stage-1/stage-3, grown tables) must
-        // agree with a fresh solver run at every budget, in both spaces
+        // agree with a fresh solver run at every budget, in all spaces
         forall(25, 61, |rng| {
             let l = 2 + rng.below(6);
             let inst = RandInstance::gen(rng, l);
@@ -279,6 +380,11 @@ mod tests {
                     &ExtendedSolver.solve(&inst.t, &inst, t0),
                     "extended",
                 )?;
+                same(
+                    &planner.solve(Space::LayerMerge, t0),
+                    &LayerMergeSolver.solve(&inst.t, &inst, t0),
+                    "layer-merge",
+                )?;
             }
             Ok(())
         });
@@ -291,7 +397,7 @@ mod tests {
             let inst = RandInstance::gen(rng, l);
             let budgets: Vec<u64> =
                 (0..(3 + rng.below(5))).map(|_| 5 + rng.below(140) as u64).collect();
-            for space in [Space::Base, Space::Extended] {
+            for space in Space::all() {
                 let planner = Planner::new(&inst.t, &inst);
                 let swept = planner.solve_frontier(space, &budgets);
                 // fresh planner per budget = fully independent solves
@@ -326,13 +432,31 @@ mod tests {
     }
 
     #[test]
+    fn deletion_view_defaults_to_neg_inf() {
+        // TableImportance without a deletion table must make the
+        // layer-merge space collapse onto the extended space
+        let cfg = tiny_config();
+        let imp = proxy_importance(&cfg);
+        let ti = TableImportance::new(&cfg, imp.clone());
+        for p in &cfg.probes {
+            assert_eq!(ti.del(p.i, p.j, p.a, p.b), crate::dp::stage2::NEG_INF);
+        }
+        let mut del = crate::importance::table::ImpTable::new(0.0, "deletion-test");
+        del.insert(2, 3, 1, 1, -0.5);
+        let ti2 = TableImportance::with_deletion(&cfg, imp, del);
+        assert_eq!(ti2.del(2, 3, 1, 1), -0.5);
+        assert_eq!(ti2.del(1, 2, 1, 1), crate::dp::stage2::NEG_INF);
+        assert!(ti2.deletion_table().is_some());
+    }
+
+    #[test]
     fn objective_weakly_improves_with_budget() {
         forall(15, 63, |rng| {
             let l = 3 + rng.below(5);
             let inst = RandInstance::gen(rng, l);
             let planner = Planner::new(&inst.t, &inst);
             let budgets: Vec<u64> = vec![10, 30, 60, 120, 240];
-            for space in [Space::Base, Space::Extended] {
+            for space in Space::all() {
                 let outs = planner.solve_frontier(space, &budgets);
                 let mut prev = f64::NEG_INFINITY;
                 for out in outs.into_iter().flatten() {

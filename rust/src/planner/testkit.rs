@@ -1,0 +1,265 @@
+//! Shared seeded test harness for the solver family.
+//!
+//! One random-instance generator for every solver property test (the
+//! ad-hoc generators previously copy-pasted across `dp/stage2.rs`,
+//! `dp/extended.rs`, and `planner/solver.rs` all fold into
+//! [`RandInstance`]), plus first-principles plan validators.  Compiled
+//! unconditionally — not `#[cfg(test)]` — so benches (`bench_dp`) can
+//! correctness-gate against the same instances before timing.
+
+use crate::dp::stage1::{Cost, LatTable, INF};
+use crate::dp::stage2::NEG_INF;
+use crate::planner::solver::{ImportanceProvider, PlanOutcome};
+use crate::util::rng::Rng;
+
+/// Random dense importance over random merge-legal segments, with
+/// probe-rule-shaped validity (mirrors specs.enumerate_probes):
+/// interior boundaries whose original activation is relu6 cannot be
+/// probed with that endpoint off, virtual endpoints are always on.
+/// Carries all three importance views — `base`, `ext`, and a sparse
+/// random deletion view `del` (layer-merge space) under the same
+/// endpoint-state legality.
+pub struct RandInstance {
+    pub l: usize,
+    pub t: LatTable,
+    ext: Vec<f64>,
+    del: Vec<f64>,
+    pub orig_on: Vec<bool>,
+}
+
+impl RandInstance {
+    pub fn gen(rng: &mut Rng, l: usize) -> RandInstance {
+        let mut t = LatTable::new(l);
+        let mut ext = vec![NEG_INF; (l + 1) * (l + 1) * 4];
+        let mut del = vec![NEG_INF; (l + 1) * (l + 1) * 4];
+        let mut orig_on = vec![true; l + 1];
+        for x in 1..l {
+            orig_on[x] = rng.uniform() < 0.5;
+        }
+        let legal = |i: usize, j: usize, a: u8, b: u8, orig_on: &[bool]| {
+            !((i == 0 && a == 0)
+                || (j == l && b == 0)
+                || (i > 0 && orig_on[i] && a == 0)
+                || (j < l && orig_on[j] && b == 0))
+        };
+        for i in 0..l {
+            for j in i + 1..=l {
+                let mergeable = j == i + 1 || rng.uniform() < 0.6;
+                if mergeable {
+                    t.set(i, j, 1 + rng.below(30) as u64);
+                    for a in 0..2u8 {
+                        for b in 0..2u8 {
+                            if !legal(i, j, a, b, &orig_on) {
+                                continue;
+                            }
+                            let v = -(rng.uniform() as f64) * (j - i) as f64
+                                + 0.1 * (a as f64 + b as f64);
+                            ext[((i * (l + 1) + j) * 2 + a as usize) * 2 + b as usize] = v;
+                        }
+                    }
+                }
+                // deletion legality is independent of mergeability (an
+                // identity needs no latency entry); usually costlier in
+                // importance than keeping, but latency-free
+                if rng.uniform() < 0.35 {
+                    for a in 0..2u8 {
+                        for b in 0..2u8 {
+                            if !legal(i, j, a, b, &orig_on) {
+                                continue;
+                            }
+                            let v = -(0.3 + 1.2 * rng.uniform() as f64) * (j - i) as f64
+                                + 0.05 * (a as f64 + b as f64);
+                            del[((i * (l + 1) + j) * 2 + a as usize) * 2 + b as usize] = v;
+                        }
+                    }
+                }
+            }
+        }
+        RandInstance { l, t, ext, del, orig_on }
+    }
+
+    /// The base-space importance as the dense matrix shape the brute
+    /// oracle (`brute::solve_base`) consumes.
+    pub fn base_matrix(&self) -> Vec<Vec<f64>> {
+        let mut m = vec![vec![NEG_INF; self.l + 1]; self.l + 1];
+        for (i, row) in m.iter_mut().enumerate() {
+            for (j, v) in row.iter_mut().enumerate().take(self.l + 1).skip(i + 1) {
+                *v = self.base(i, j);
+            }
+        }
+        m
+    }
+}
+
+impl ImportanceProvider for RandInstance {
+    fn base(&self, i: usize, j: usize) -> f64 {
+        self.ext(i, j, self.orig_on[i] as u8, self.orig_on[j] as u8)
+    }
+
+    fn ext(&self, i: usize, j: usize, a: u8, b: u8) -> f64 {
+        self.ext[((i * (self.l + 1) + j) * 2 + a as usize) * 2 + b as usize]
+    }
+
+    fn del(&self, i: usize, j: usize, a: u8, b: u8) -> f64 {
+        self.del[((i * (self.l + 1) + j) * 2 + a as usize) * 2 + b as usize]
+    }
+}
+
+/// Random integer latency table alone (stage-1-level tests): singleton
+/// segments always present, longer merges with probability `merge_p`.
+pub fn rand_lat_table(rng: &mut Rng, l: usize, merge_p: f32) -> LatTable {
+    let mut t = LatTable::new(l);
+    for i in 0..l {
+        for j in i + 1..=l {
+            if j == i + 1 {
+                t.set(i, j, 1 + rng.below(50) as Cost);
+            } else if rng.uniform() < merge_p {
+                t.set(i, j, 1 + rng.below(100) as Cost);
+            }
+        }
+    }
+    t
+}
+
+/// Re-derive a plan's objective and latency from first principles — no
+/// DP tables involved — and check them against the `PlanOutcome`
+/// fields and the strict budget.  Valid for the EXTENDED-family
+/// solvers (`ExtendedSolver`, `LayerMergeSolver`), where membership in
+/// A means "boundary state 1": the objective is the sum of `ext` (or
+/// `del` for deleted spans) over the consecutive blocks of
+/// {0} ∪ B ∪ {L}, and the latency is the sum of the raw `LatTable`
+/// entries over the kept S-segments (each is exactly one merged conv).
+pub fn recheck_extended_family(
+    t: &LatTable,
+    imp: &dyn ImportanceProvider,
+    out: &PlanOutcome,
+    t0: u64,
+) -> Result<(), String> {
+    let l = t.l;
+    let state = |x: usize| -> u8 {
+        if x == 0 || x == l || out.a.contains(&x) {
+            1
+        } else {
+            0
+        }
+    };
+    let mut pts = vec![0usize];
+    pts.extend(out.b.iter().copied().filter(|&x| x > 0 && x < l));
+    pts.push(l);
+    pts.sort_unstable();
+    pts.dedup();
+    let mut obj = 0.0;
+    for w in pts.windows(2) {
+        let (i, j) = (w[0], w[1]);
+        let v = if out.deleted.contains(&(i, j)) {
+            imp.del(i, j, state(i), state(j))
+        } else {
+            imp.ext(i, j, state(i), state(j))
+        };
+        if v == NEG_INF {
+            return Err(format!("block ({i}, {j}] has invalid importance in plan {out:?}"));
+        }
+        obj += v;
+    }
+    if (obj - out.imp_total).abs() > 1e-6 {
+        return Err(format!("recomputed objective {obj} != imp_total {}", out.imp_total));
+    }
+    let mut lat: u64 = 0;
+    for (u, v) in out.kept_segments(l) {
+        let c = t.get(u, v);
+        if c >= INF {
+            return Err(format!("kept segment ({u}, {v}] is not merge-legal"));
+        }
+        lat += c;
+    }
+    if lat != out.est_ticks {
+        return Err(format!("recomputed latency {lat} != est_ticks {}", out.est_ticks));
+    }
+    if lat >= t0 {
+        return Err(format!("latency {lat} violates strict budget {t0}"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_respects_probe_rules() {
+        let mut rng = Rng::new(99);
+        for _ in 0..20 {
+            let l = 2 + rng.below(6);
+            let inst = RandInstance::gen(&mut rng, l);
+            for i in 0..l {
+                for j in i + 1..=l {
+                    for (a, b) in [(0u8, 0u8), (0, 1), (1, 0), (1, 1)] {
+                        let illegal = (i == 0 && a == 0)
+                            || (j == l && b == 0)
+                            || (i > 0 && inst.orig_on[i] && a == 0)
+                            || (j < l && inst.orig_on[j] && b == 0);
+                        if illegal {
+                            assert_eq!(inst.ext(i, j, a, b), NEG_INF);
+                            assert_eq!(
+                                ImportanceProvider::del(&inst, i, j, a, b),
+                                NEG_INF
+                            );
+                        }
+                    }
+                }
+            }
+            // singleton segments always merge-legal
+            for i in 0..l {
+                assert!(inst.t.get(i, i + 1) < INF);
+            }
+        }
+    }
+
+    #[test]
+    fn base_matrix_matches_base_view() {
+        let mut rng = Rng::new(100);
+        let inst = RandInstance::gen(&mut rng, 5);
+        let m = inst.base_matrix();
+        for i in 0..5 {
+            for j in i + 1..=5 {
+                assert_eq!(m[i][j], inst.base(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn recheck_accepts_a_hand_built_plan() {
+        // 2 layers, both kept unmerged, boundary 1 active
+        let mut t = LatTable::new(2);
+        t.set(0, 1, 3);
+        t.set(1, 2, 4);
+        struct Fixed;
+        impl ImportanceProvider for Fixed {
+            fn base(&self, i: usize, j: usize) -> f64 {
+                self.ext(i, j, 1, 1)
+            }
+            fn ext(&self, i: usize, j: usize, _a: u8, _b: u8) -> f64 {
+                if j == i + 1 {
+                    -0.25
+                } else {
+                    NEG_INF
+                }
+            }
+        }
+        let out = PlanOutcome {
+            a: vec![1],
+            b: vec![1],
+            s: vec![1],
+            deleted: Vec::new(),
+            imp_total: -0.5,
+            est_ticks: 7,
+        };
+        recheck_extended_family(&t, &Fixed, &out, 8).unwrap();
+        // and rejects a budget violation
+        assert!(recheck_extended_family(&t, &Fixed, &out, 7).is_err());
+        // and a wrong objective
+        let mut bad = out.clone();
+        bad.imp_total = -0.4;
+        assert!(recheck_extended_family(&t, &Fixed, &bad, 8).is_err());
+    }
+}

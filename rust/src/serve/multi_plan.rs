@@ -83,6 +83,18 @@ impl MultiPlanEngine {
         if points.is_empty() {
             bail!("multi-plan engine needs at least one frontier point");
         }
+        // layer-merge plans can delete spans outright; the merged-net
+        // builder has no identity-bypass block yet, so refuse loudly
+        // rather than serve a network missing layers
+        if let Some(p) = points.iter().find(|p| !p.plan.deleted.is_empty()) {
+            bail!(
+                "frontier point [{}] deletes spans {:?}: merged-net execution of \
+                 deletions is not implemented — serve from the twostage/extended \
+                 frontier instead",
+                p.solver,
+                p.plan.deleted
+            );
+        }
         let mut sorted: Vec<&ParetoPoint> = points.iter().collect();
         // total_cmp: a NaN estimate must not panic the sort (it orders
         // after every finite value, i.e. least-accurate last)
@@ -779,12 +791,14 @@ mod tests {
         let mk = |est: f64, s: Vec<usize>, a: Vec<usize>| ParetoPoint {
             source: "test".into(),
             source_idx: 0,
+            solver: "extended",
             t0_ms: est,
             est_ms: est,
             plan: crate::planner::solver::PlanOutcome {
                 a,
                 b: Vec::new(),
                 s,
+                deleted: Vec::new(),
                 imp_total: 1.0,
                 est_ticks: 0,
             },

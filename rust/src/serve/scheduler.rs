@@ -833,9 +833,17 @@ mod tests {
         ParetoPoint {
             source: "test".into(),
             source_idx: 0,
+            solver: "extended",
             t0_ms: est_ms,
             est_ms,
-            plan: PlanOutcome { a, b: Vec::new(), s, imp_total: imp, est_ticks: 0 },
+            plan: PlanOutcome {
+                a,
+                b: Vec::new(),
+                s,
+                deleted: Vec::new(),
+                imp_total: imp,
+                est_ticks: 0,
+            },
         }
     }
 

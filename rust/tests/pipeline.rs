@@ -10,6 +10,7 @@ use repro::coordinator::pipeline::{LatencyCfg, Pipeline};
 use repro::coordinator::server::{spawn_load, Server, ServerConfig};
 use repro::data::synth::SynthSpec;
 use repro::model::spec::ArchConfig;
+use repro::planner::frontier::Space;
 use repro::runtime::engine::Engine;
 use repro::tensor::Tensor;
 use repro::trainer::sgd::{cosine_lr, TrainConfig, TrainState};
@@ -53,7 +54,7 @@ fn dp_plan_respects_budget_and_structure() {
     let vanilla = pipe.vanilla_latency_ms(&lat).unwrap();
     let mut prev_obj = f64::NEG_INFINITY;
     for frac in [0.9, 0.75, 0.6, 0.5] {
-        let out = pipe.plan(&lat, &imp, vanilla * frac, 1.6, true).unwrap();
+        let out = pipe.plan(&lat, &imp, vanilla * frac, 1.6, Space::Extended).unwrap();
         assert!(out.est_latency_ms < vanilla * frac + 1e-9);
         // A subset of S; S only contains legal boundaries
         for a in &out.a {
@@ -131,7 +132,7 @@ fn ours_dominates_ds_at_matched_budget_latency() {
     for ds in ds_ladder(&pipe.cfg, &imp).unwrap() {
         let segs = repro::merge::plan::segments_from_s(pipe.cfg.spec.l(), &ds.s);
         let ds_ms: f64 = segs.iter().map(|&(i, j)| lat.ms_of(i, j).unwrap()).sum();
-        let out = pipe.plan(&lat, &imp, ds_ms * 1.001, 1.6, true).unwrap();
+        let out = pipe.plan(&lat, &imp, ds_ms * 1.001, 1.6, Space::Extended).unwrap();
         assert!(
             out.est_latency_ms <= ds_ms * 1.001,
             "{}: ours {} > ds {}",
@@ -235,6 +236,7 @@ fn plan_pass2_merged_graph_matches_chained_executor() {
         a,
         s,
         b: vec![],
+        deleted: vec![],
         objective: 0.0,
         est_latency_ms: 0.0,
         lat_source: "plan".into(),
