@@ -24,6 +24,7 @@ use repro::kernels::pool::Pool;
 use repro::latency::source::SourceSpec;
 use repro::latency::table::BlockLatencies;
 use repro::model::spec::testutil::tiny_config;
+use repro::obs::span::{self, ObsLevel};
 use repro::planner::deploy::{DeployPlanner, ParetoPoint};
 use repro::planner::frontier::{Space, TableImportance};
 use repro::serve::admission::AdmissionCfg;
@@ -201,6 +202,38 @@ fn main() {
         fault_cells.push((policy.name(), cell));
     }
 
+    // obs-overhead sweep: the heavy steal cell with the span recorder
+    // off / spans / full.  The observability contract is "free when
+    // off, bounded when on" — the reply-contract asserts inside
+    // run_cell gate correctness at every level, and the drained event
+    // count shows the recorder actually fired.
+    let mut obs_cells = Vec::new();
+    for level in [ObsLevel::Off, ObsLevel::Spans, ObsLevel::Full] {
+        span::set_level(level);
+        let stats = run_cell(&work, Policy::WorkSteal, 400, false, 0, None);
+        span::set_level(ObsLevel::Off);
+        let (events, _threads) = span::take_events();
+        println!(
+            "obs {:<5} served {:>4} p50 {:>7.2} ms p99 {:>7.2} ms \
+             throughput {:>7.1} rps ({} span events)",
+            level.name(),
+            stats.served,
+            stats.percentile_ms(0.5),
+            stats.percentile_ms(0.99),
+            stats.throughput(),
+            events.len(),
+        );
+        assert!(
+            level == ObsLevel::Off || !events.is_empty(),
+            "enabled recorder must capture events"
+        );
+        let mut cell = cell_json(&stats);
+        if let Json::Obj(m) = &mut cell {
+            m.insert("span_events".into(), Json::int(events.len() as i64));
+        }
+        obs_cells.push((level.name(), cell));
+    }
+
     // "holds the SLO" requires EVIDENCE: an empty percentile (0.0 on
     // zero served) must not read as a pass
     let steal_holds_slo = overload_steal_served > 0 && overload_steal_p99 <= SLO_MS;
@@ -227,6 +260,7 @@ fn main() {
                 ("cells", Json::obj_from(fault_cells)),
             ]),
         ),
+        ("obs_overhead", Json::obj_from(obs_cells)),
         (
             "acceptance",
             Json::obj_from(vec![

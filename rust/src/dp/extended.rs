@@ -194,6 +194,11 @@ impl Stage4Table {
         (self.n_t - 1) as u64
     }
 
+    /// Number of DP cells the table holds (planner build metrics).
+    pub fn cells(&self) -> usize {
+        self.d.len()
+    }
+
     #[inline]
     fn idx(&self, l: usize, t: usize, a: usize) -> usize {
         (l * self.n_t + t) * 2 + a

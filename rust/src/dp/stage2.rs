@@ -103,6 +103,11 @@ impl Stage2Table {
         (self.n_t - 1) as u64
     }
 
+    /// Number of DP cells the table holds (planner build metrics).
+    pub fn cells(&self) -> usize {
+        self.d.len()
+    }
+
     /// Optimal objective at strict budget `t0` (NEG_INF = infeasible).
     pub fn objective(&self, t0: u64) -> f64 {
         assert!(t0 <= self.t0_max(), "budget {t0} beyond table max {}", self.t0_max());

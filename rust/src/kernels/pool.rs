@@ -141,18 +141,23 @@ impl Pool {
         let panics: Mutex<Vec<TaskPanic>> = Mutex::new(Vec::new());
         let threads = self.workers.min(n_chunks);
         std::thread::scope(|s| {
-            for _ in 0..threads {
-                s.spawn(|| loop {
-                    // pop one chunk per lock; contention is one lock per
-                    // chunk, negligible next to the chunk's GEMM work
-                    let item = lock_recover(&queue).next();
-                    match item {
-                        Some((n, c)) => {
-                            if let Some(tp) = run(n, c) {
-                                lock_recover(&panics).push(tp);
+            let (queue, panics, run) = (&queue, &panics, &run);
+            for w in 0..threads {
+                s.spawn(move || {
+                    crate::obs::span::register_worker("chunk-worker", w);
+                    loop {
+                        // pop one chunk per lock; contention is one lock
+                        // per chunk, negligible next to the chunk's GEMM
+                        // work
+                        let item = lock_recover(queue).next();
+                        match item {
+                            Some((n, c)) => {
+                                if let Some(tp) = run(n, c) {
+                                    lock_recover(panics).push(tp);
+                                }
                             }
+                            None => break,
                         }
-                        None => break,
                     }
                 });
             }
@@ -214,14 +219,18 @@ impl Pool {
             (0..n).map(|_| Mutex::new(None)).collect();
         let threads = self.workers.min(n);
         std::thread::scope(|s| {
-            for _ in 0..threads {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
+            let (next, slots, run) = (&next, &slots, &run);
+            for w in 0..threads {
+                s.spawn(move || {
+                    crate::obs::span::register_worker("steal-worker", w);
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let r = run(i);
+                        *lock_recover(&slots[i]) = Some(r);
                     }
-                    let r = run(i);
-                    *lock_recover(&slots[i]) = Some(r);
                 });
             }
         });
@@ -411,5 +420,30 @@ mod tests {
             });
         });
         assert!(panic_message(caught.unwrap_err().as_ref()).contains("panicked"));
+    }
+
+    #[test]
+    fn schedule_determinism_holds_with_spans_enabled() {
+        // worker-name registration and span recording observe the
+        // schedule; they must never change chunk contents or task order
+        use crate::obs::span::{set_level, take_events, test_lock, ObsLevel};
+        let work = |n: usize, c: &mut [f32]| {
+            for (k, v) in c.iter_mut().enumerate() {
+                *v = (n * 1000 + k) as f32;
+            }
+        };
+        let _l = test_lock();
+        set_level(ObsLevel::Off);
+        let mut base = vec![0.0f32; 512];
+        Pool::new(4).for_each_chunk(&mut base, 33, work);
+        let tasks_base: Vec<usize> = Pool::new(4).run_tasks(64, |i| i * i);
+        set_level(ObsLevel::Full);
+        let mut on = vec![0.0f32; 512];
+        Pool::new(4).for_each_chunk(&mut on, 33, work);
+        let tasks_on: Vec<usize> = Pool::new(4).run_tasks(64, |i| i * i);
+        set_level(ObsLevel::Off);
+        let _ = take_events();
+        assert_eq!(base, on, "chunk contents changed with spans on");
+        assert_eq!(tasks_base, tasks_on, "task order changed with spans on");
     }
 }

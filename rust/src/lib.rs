@@ -72,6 +72,20 @@
 //!                delays, NaN poisoning on a deterministic schedule),
 //!                `stats` (percentiles, shed counters, the serve JSON
 //!                report).
+//!   obs        — zero-dependency observability spine: `span` (RAII
+//!                span recorder, per-thread buffers into one sink,
+//!                off/spans/full level gate — off records nothing so
+//!                the determinism contracts are untouched), `metrics`
+//!                (named counters/gauges + log-bucketed histograms
+//!                with O(1) record and ~1% quantile error, JSON +
+//!                Prometheus exposition), `timeline` (per-request
+//!                `ReqTrace` lifecycle stages), `trace_export`
+//!                (Chrome trace-event JSON for chrome://tracing /
+//!                Perfetto).  Wired through serve (request stages,
+//!                breaker/switch instants, fault-delay spans),
+//!                runtime (per-layer kernel spans at level full),
+//!                kernels (pool worker tid registration), and planner
+//!                (memo hit/miss + table-build metrics).
 //!   coordinator— pipeline stages (pretrain -> tables -> plan -> finetune
 //!                -> merge -> eval), experiment runners; `server` is a
 //!                thin shim re-exporting the serve subsystem (plus the
@@ -182,6 +196,13 @@ pub mod runtime {
     pub mod engine;
     pub mod host_exec;
     pub mod manifest;
+}
+
+pub mod obs {
+    pub mod metrics;
+    pub mod span;
+    pub mod timeline;
+    pub mod trace_export;
 }
 
 pub mod serve {

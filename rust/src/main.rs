@@ -24,6 +24,9 @@ use repro::latency::source::SourceSpec;
 use repro::latency::table::BlockLatencies;
 use repro::model::cost;
 use repro::model::spec::ArchConfig;
+use repro::obs::metrics::Registry;
+use repro::obs::span::ObsLevel;
+use repro::obs::trace_export;
 use repro::planner::deploy::DeployPlanner;
 use repro::planner::frontier::{Space, TableImportance};
 use repro::runtime::engine::Engine;
@@ -42,13 +45,15 @@ fn usage() -> &'static str {
        plan       --arch A --t0 MS [--alpha X --solver F] (writes artifacts/plans/)\n\
        sweep      [--arch A|tiny] [--source SPEC[,SPEC...]] [--pareto]\n\
                   [--target-ms MS] [--points N | --budgets MS,MS,...]\n\
-                  [--alpha X --solver F[,F...]]  per-device frontiers from\n\
+                  [--alpha X --solver F[,F...]] [--obs]  per-device frontiers from\n\
                   one planner pass each; --pareto merges every\n\
                   (source, solver) frontier into the joint Pareto CSV\n\
                   (source + solver provenance per row);\n\
                   --target-ms auto-calibrates the budget per source;\n\
                   --scale X pins ticks/ms (default: auto-calibrated\n\
-                  per source from its measured block range)\n\
+                  per source from its measured block range);\n\
+                  --obs prints planner build/memo telemetry\n\
+                  (Prometheus text) after the sweep\n\
        compress   --arch A --t0 MS [--alpha X --finetune-steps N --kd --backend B]\n\
        eval       --arch A [--ckpt PATH --backend B]\n\
        serve      --arch A [--clients N --requests N --max-batch N --max-wait-ms N]\n\
@@ -59,6 +64,7 @@ fn usage() -> &'static str {
                   [--retries N --probe-interval W]\n\
                   [--faults panic:<p>,delay:<ms>:<p>,nan:<p>\n\
                   --fault-seed S]\n\
+                  [--obs off|spans|full --trace OUT.json --metrics OUT.json]\n\
                   (host backend: artifact-free — prices blocks on the\n\
                   native kernels AND layout it serves with, picks plans\n\
                   off that frontier; --arch tiny = built-in fixture.\n\
@@ -74,6 +80,12 @@ fn usage() -> &'static str {
                   activations — to exercise panic isolation, retries,\n\
                   and the per-plan circuit breakers; --probe-interval W\n\
                   spaces half-open breaker probes >= W waves apart;\n\
+                  --obs sets the span level (default spans; full adds\n\
+                  per-layer kernel + per-task pool spans; off records\n\
+                  nothing — counters stay on either way); --trace\n\
+                  writes a Chrome trace-event JSON for chrome://tracing\n\
+                  or ui.perfetto.dev; --metrics writes the counter/\n\
+                  histogram snapshot JSON;\n\
                   writes reports/serve_<arch>.json)\n\
      --source SPEC grammar (the latency-source registry):\n\
        analytical/<device>[/fused|eager]   roofline model; devices:\n\
@@ -486,6 +498,11 @@ fn main() -> Result<()> {
                     }
                 }
             }
+            if args.bool_flag("obs") {
+                // planner build/memo telemetry (table builds, memo
+                // hits, cell counts) accumulates in the global registry
+                print!("{}", Registry::global().render_prometheus());
+            }
         }
         "plan-demo" => {
             // write a plan from the structural proxy importance (no
@@ -734,6 +751,15 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
     let layout = Layout::parse(&args.str_or("layout", "nchw"))?;
     let precision = Precision::parse(&args.str_or("precision", "exact"))?;
     let policy = Policy::parse(&args.str_or("policy", "drain"))?;
+    // observability: spans by default (cheap, lifecycle-level); `full`
+    // adds per-layer kernel + per-task pool spans; `off` silences the
+    // recorder entirely.  Counters are always on — they are
+    // event-granular and cannot perturb results.
+    let obs_level = ObsLevel::parse(&args.str_or("obs", "spans"))?;
+    repro::obs::span::set_level(obs_level);
+    let trace_path = args.str_opt("trace");
+    let metrics_path = args.str_opt("metrics");
+    let registry = std::sync::Arc::new(Registry::new());
     let default_source = {
         let mut s = String::from("host");
         if layout == Layout::Nhwc {
@@ -907,6 +933,7 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
         },
         faults,
         fault_seed: args.u64_or("fault-seed", 1)?,
+        metrics: Some(registry.clone()),
         ..SchedulerConfig::default()
     };
     let mut sched = Scheduler::new(mp, &[3, hw, hw], scfg)?;
@@ -1005,5 +1032,26 @@ fn serve_host(args: &Args, root: &std::path::Path) -> Result<()> {
     let path = dir.join(format!("serve_{arch}.json"));
     std::fs::write(&path, stats.report_json(policy.name(), slo_ms).to_string())?;
     println!("serve report written to {}", path.display());
+    // metrics/stats cross-check: the registry mirrors every ServeStats
+    // counter; drift here is a bug, not a tuning matter
+    match stats.diff_registry(&registry) {
+        None => {}
+        Some((name, stat, counter)) => println!(
+            "[serve:host] WARNING metrics registry drifted from stats on {name}: \
+             stats {stat} vs counter {counter}"
+        ),
+    }
+    if let Some(mp) = metrics_path {
+        let mpath = PathBuf::from(&mp);
+        std::fs::write(&mpath, registry.snapshot_json().to_string())?;
+        println!("metrics snapshot written to {}", mpath.display());
+    }
+    if let Some(tp) = trace_path {
+        let n = trace_export::write_chrome_trace(std::path::Path::new(&tp))?;
+        println!(
+            "chrome trace ({n} events) written to {tp} — load in chrome://tracing \
+             or ui.perfetto.dev"
+        );
+    }
     Ok(())
 }

@@ -1,0 +1,407 @@
+//! Process-wide metrics: named counters, gauges, and log-bucketed
+//! histograms with a JSON snapshot and a Prometheus-style text
+//! exposition.
+//!
+//! Counters and gauges are plain name → value maps behind one mutex;
+//! recording is a lock + BTreeMap probe, which is cheap at the event
+//! granularity they are used for (sheds, retries, breaker trips — not
+//! per-element kernel work).  Histograms are log-bucketed: bucket
+//! boundaries grow geometrically by [`GROWTH`] so a single `record` is
+//! O(1) (one `ln`, one index increment) and any reported quantile is
+//! within ~1% relative error of the exact order statistic.  That bound
+//! is pinned by tests in `serve/stats.rs` against the exact sorted-vec
+//! percentile on seeded traces.
+//!
+//! A registry is an ordinary value — `serve` attaches a fresh one per
+//! scheduler run so tests never share counters — while deep layers
+//! that cannot thread a handle (the planner's memo tables) record into
+//! [`Registry::global`].
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+
+use crate::util::json::Json;
+
+/// Geometric growth factor between histogram bucket boundaries.  With
+/// 2% growth the geometric midpoint of a bucket is at most ~1% away
+/// (relative) from any sample that landed in it.
+const GROWTH: f64 = 1.02;
+/// Lower edge of bucket 1.  Samples at or below this land in bucket 0
+/// and are reported as `HIST_MIN` (clamped to the exact observed min).
+const HIST_MIN: f64 = 1e-6;
+/// Bucket count: enough to cover `HIST_MIN * GROWTH^n` up to ~1e7,
+/// i.e. nanoseconds through hours when samples are milliseconds.
+const N_BUCKETS: usize = 1520;
+
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Fixed-layout logarithmic histogram: O(1) record, ~1% relative
+/// error on quantiles, no allocation after the first record.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    /// Lazily allocated on first record so an empty histogram is tiny.
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    /// Non-finite samples are counted here and excluded from quantiles.
+    non_finite: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            counts: Vec::new(),
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            non_finite: 0,
+        }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    /// Bucket index for a finite sample.  0 holds everything at or
+    /// below `HIST_MIN` (including zeros and negatives); the last
+    /// bucket holds the overflow tail.
+    fn bucket_of(v: f64) -> usize {
+        if v <= HIST_MIN {
+            return 0;
+        }
+        let i = ((v / HIST_MIN).ln() / GROWTH.ln()).floor() as usize + 1;
+        i.min(N_BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of bucket `i` — the representative value a
+    /// quantile query reports for samples that landed there.
+    fn representative(i: usize) -> f64 {
+        if i == 0 {
+            return HIST_MIN;
+        }
+        HIST_MIN * GROWTH.powf(i as f64 - 0.5)
+    }
+
+    /// O(1): one logarithm and one slot increment.  Non-finite
+    /// samples are tallied separately and never enter the quantiles.
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            self.non_finite += 1;
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = vec![0u64; N_BUCKETS];
+        }
+        self.counts[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn non_finite(&self) -> u64 {
+        self.non_finite
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Quantile `p` in [0, 1].  Walks the cumulative counts to the
+    /// bucket holding rank `p * (count - 1)` and reports its geometric
+    /// midpoint, clamped into the exact observed [min, max] so p0 and
+    /// p100 are exact.  Empty histogram reports 0.0.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if p <= 0.0 {
+            return self.min;
+        }
+        if p >= 1.0 {
+            return self.max;
+        }
+        let target = p * (self.count - 1) as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum as f64 > target {
+                return Self::representative(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    fn summary_json(&self) -> Json {
+        Json::obj_from(vec![
+            ("count", Json::int(self.count as i64)),
+            ("non_finite", Json::int(self.non_finite as i64)),
+            ("sum", Json::num(self.sum)),
+            ("min", Json::num(self.min())),
+            ("max", Json::num(self.max())),
+            ("mean", Json::num(self.mean())),
+            ("p50", Json::num(self.percentile(0.50))),
+            ("p95", Json::num(self.percentile(0.95))),
+            ("p99", Json::num(self.percentile(0.99))),
+        ])
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, LogHistogram>,
+}
+
+/// Registry of named counters, gauges, and histograms.  Interior
+/// mutability: every method takes `&self`, so a registry can be shared
+/// across the scheduler and its helpers without threading `&mut`.
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// The process-wide registry for layers that cannot carry a
+    /// handle (planner memo tables, DP builds).  Serve runs attach
+    /// their own per-run registry instead, so test runs never share
+    /// request counters through this.
+    pub fn global() -> &'static Registry {
+        static G: OnceLock<Registry> = OnceLock::new();
+        G.get_or_init(Registry::new)
+    }
+
+    pub fn counter_add(&self, name: &str, delta: u64) {
+        let mut g = lock_recover(&self.inner);
+        match g.counters.get_mut(name) {
+            Some(v) => *v += delta,
+            None => {
+                g.counters.insert(name.to_string(), delta);
+            }
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        lock_recover(&self.inner).counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        lock_recover(&self.inner).gauges.insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        lock_recover(&self.inner).gauges.get(name).copied()
+    }
+
+    /// Record one sample into the named histogram (created on first
+    /// use).  O(1) past the name probe.
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut g = lock_recover(&self.inner);
+        match g.hists.get_mut(name) {
+            Some(h) => h.record(v),
+            None => {
+                let mut h = LogHistogram::new();
+                h.record(v);
+                g.hists.insert(name.to_string(), h);
+            }
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<LogHistogram> {
+        lock_recover(&self.inner).hists.get(name).cloned()
+    }
+
+    /// Drop every metric.  Test hook; also used when a long-lived
+    /// process wants a fresh window.
+    pub fn reset(&self) {
+        let mut g = lock_recover(&self.inner);
+        g.counters.clear();
+        g.gauges.clear();
+        g.hists.clear();
+    }
+
+    /// Full snapshot as `{"counters": {...}, "gauges": {...},
+    /// "histograms": {name: {count, sum, min, max, mean, p50, p95,
+    /// p99}}}` — the shape `serve --metrics` writes.
+    pub fn snapshot_json(&self) -> Json {
+        let g = lock_recover(&self.inner);
+        let counters = g
+            .counters
+            .iter()
+            .map(|(k, v)| (k.as_str(), Json::int(*v as i64)))
+            .collect::<Vec<_>>();
+        let gauges = g
+            .gauges
+            .iter()
+            .map(|(k, v)| (k.as_str(), Json::num(*v)))
+            .collect::<Vec<_>>();
+        let hists = g
+            .hists
+            .iter()
+            .map(|(k, h)| (k.as_str(), h.summary_json()))
+            .collect::<Vec<_>>();
+        Json::obj_from(vec![
+            ("counters", Json::obj_from(counters)),
+            ("gauges", Json::obj_from(gauges)),
+            ("histograms", Json::obj_from(hists)),
+        ])
+    }
+
+    /// Prometheus text exposition: counters as `counter`, gauges as
+    /// `gauge`, histograms as `summary` quantile lines plus
+    /// `_sum`/`_count`.
+    pub fn render_prometheus(&self) -> String {
+        let g = lock_recover(&self.inner);
+        let mut out = String::new();
+        for (k, v) in &g.counters {
+            out.push_str(&format!("# TYPE {k} counter\n{k} {v}\n"));
+        }
+        for (k, v) in &g.gauges {
+            out.push_str(&format!("# TYPE {k} gauge\n{k} {v}\n"));
+        }
+        for (k, h) in &g.hists {
+            out.push_str(&format!("# TYPE {k} summary\n"));
+            for (q, p) in [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
+                out.push_str(&format!("{k}{{quantile=\"{p}\"}} {}\n", h.percentile(q)));
+            }
+            out.push_str(&format!("{k}_sum {}\n{k}_count {}\n", h.sum(), h.count()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_round_trip() {
+        let r = Registry::new();
+        r.counter_add("requests_offered", 3);
+        r.counter_add("requests_offered", 2);
+        r.gauge_set("active_plan", 1.0);
+        r.gauge_set("active_plan", 2.0);
+        assert_eq!(r.counter("requests_offered"), 5);
+        assert_eq!(r.counter("absent"), 0);
+        assert_eq!(r.gauge("active_plan"), Some(2.0));
+        assert_eq!(r.gauge("absent"), None);
+    }
+
+    #[test]
+    fn histogram_quantiles_stay_within_relative_error() {
+        let mut h = LogHistogram::new();
+        // 1..=1000 ms: exact p-th percentile of 1..=n is ~p*n.
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        for (p, exact) in [(0.5, 500.5), (0.95, 950.05), (0.99, 990.01)] {
+            let got = h.percentile(p);
+            let rel = (got - exact).abs() / exact;
+            assert!(rel < 0.02, "p{p}: got {got}, exact {exact}, rel {rel}");
+        }
+        // p0/p100 exact by clamping.
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.percentile(1.0), 1000.0);
+    }
+
+    #[test]
+    fn histogram_edge_cases() {
+        let h = LogHistogram::new();
+        assert_eq!(h.percentile(0.5), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+
+        let mut h = LogHistogram::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(0.0); // at-or-below HIST_MIN → bucket 0, reported as min
+        h.record(5.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.non_finite(), 2);
+        assert_eq!(h.percentile(0.0), 0.0);
+        assert_eq!(h.percentile(1.0), 5.0);
+    }
+
+    #[test]
+    fn single_sample_is_exact_at_every_quantile() {
+        let mut h = LogHistogram::new();
+        h.record(3.25);
+        for p in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.percentile(p), 3.25);
+        }
+    }
+
+    #[test]
+    fn snapshot_and_prometheus_expose_all_kinds() {
+        let r = Registry::new();
+        r.counter_add("shed_total", 7);
+        r.gauge_set("queue_depth", 4.0);
+        r.observe("latency_ms", 2.0);
+        r.observe("latency_ms", 4.0);
+        let js = r.snapshot_json();
+        assert_eq!(js.get("counters").unwrap().get("shed_total").unwrap().usize().unwrap(), 7);
+        assert_eq!(js.get("gauges").unwrap().get("queue_depth").unwrap().f64().unwrap(), 4.0);
+        let h = js.get("histograms").unwrap().get("latency_ms").unwrap();
+        assert_eq!(h.get("count").unwrap().usize().unwrap(), 2);
+        assert!(h.get("p50").unwrap().f64().unwrap() > 0.0);
+
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE shed_total counter"));
+        assert!(text.contains("shed_total 7"));
+        assert!(text.contains("# TYPE queue_depth gauge"));
+        assert!(text.contains("# TYPE latency_ms summary"));
+        assert!(text.contains("latency_ms_count 2"));
+        assert!(text.contains("latency_ms{quantile=\"0.95\"}"));
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let r = Registry::new();
+        r.counter_add("a", 1);
+        r.observe("h", 1.0);
+        r.reset();
+        assert_eq!(r.counter("a"), 0);
+        assert!(r.histogram("h").is_none());
+    }
+}

@@ -1,0 +1,447 @@
+//! Lightweight span recorder: RAII guards over [`Instant`], buffered
+//! per thread and flushed into one shared sink.
+//!
+//! The whole module is gated on a single process-wide [`ObsLevel`]
+//! loaded with one relaxed atomic read.  At `Off` (the default, and
+//! the state every test runs under unless it opts in) a span guard is
+//! two plain fields and a clock read — no allocation, no lock, no
+//! buffer touch — so the exact-tier byte-identity and deterministic
+//! pool-schedule contracts are untouched: spans observe timing, they
+//! never touch tensor data or task order.  `Spans` records the serve
+//! lifecycle (request stages, dispatch waves, breaker/switch events);
+//! `Full` additionally records per-layer kernel spans and per-task
+//! pool spans.
+//!
+//! Category taxonomy (the `cat` field, fixed `&'static str`s):
+//!
+//! | cat      | emitted by                                            |
+//! |----------|-------------------------------------------------------|
+//! | `req`    | per-request lifecycle stages (`obs::timeline`)        |
+//! | `serve`  | scheduler waves, retries, breaker + switch instants   |
+//! | `exec`   | whole-forward execution (`MultiPlanEngine`)           |
+//! | `kernel` | per-layer kernel work (`HostExec`, level `Full`)      |
+//! | `pool`   | per-task steal-pool work (level `Full`)               |
+//! | `fault`  | injected chaos delays — never attributed to `exec`    |
+//! | `plan`   | planner table builds / frontier extracts              |
+//!
+//! Timestamps are microseconds since the recorder epoch (first event
+//! or first `set_level` call), matching the Chrome trace-event `ts`
+//! unit so `obs::trace_export` can write them out unmodified.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+/// How much the recorder captures.  One process-wide atomic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ObsLevel {
+    /// Record nothing (default).
+    Off = 0,
+    /// Request lifecycle + scheduler + fault spans.
+    Spans = 1,
+    /// Everything, including per-layer kernel and per-task pool spans.
+    Full = 2,
+}
+
+impl ObsLevel {
+    pub fn parse(s: &str) -> Result<ObsLevel> {
+        match s {
+            "off" => Ok(ObsLevel::Off),
+            "spans" => Ok(ObsLevel::Spans),
+            "full" => Ok(ObsLevel::Full),
+            other => bail!("unknown obs level '{other}' (expected off|spans|full)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ObsLevel::Off => "off",
+            ObsLevel::Spans => "spans",
+            ObsLevel::Full => "full",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+pub fn set_level(l: ObsLevel) {
+    // Pin the epoch no later than enabling, so no recorded Instant
+    // can precede it (saturating subtraction guards stragglers).
+    if l != ObsLevel::Off {
+        let _ = sink();
+    }
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> ObsLevel {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => ObsLevel::Off,
+        1 => ObsLevel::Spans,
+        _ => ObsLevel::Full,
+    }
+}
+
+/// True at `Spans` or `Full` — the one branch every disabled call pays.
+#[inline]
+pub fn enabled() -> bool {
+    LEVEL.load(Ordering::Relaxed) >= ObsLevel::Spans as u8
+}
+
+/// True only at `Full` (per-layer kernel / per-task pool spans).
+#[inline]
+pub fn is_full() -> bool {
+    LEVEL.load(Ordering::Relaxed) >= ObsLevel::Full as u8
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A duration (`ph: "X"` in the Chrome trace).
+    Complete,
+    /// A point event (`ph: "i"`).
+    Instant,
+}
+
+/// One recorded event.  `name`/`cat` are `&'static str` so recording
+/// never allocates; `arg` is a free-form numeric payload (plan index,
+/// layer index, attempt number; -1 = none).
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    pub cat: &'static str,
+    pub name: &'static str,
+    pub kind: EventKind,
+    pub tid: u64,
+    /// Microseconds since the recorder epoch.
+    pub t0_us: u64,
+    pub dur_us: u64,
+    pub arg: i64,
+}
+
+/// Shared sink: the epoch plus everything flushed out of per-thread
+/// buffers.  Capped so a forgotten `--trace` on a long run cannot eat
+/// unbounded memory; overflow is counted, not silently dropped.
+const SINK_CAP: usize = 1 << 20;
+/// Per-thread buffer length that triggers a flush into the sink.
+const FLUSH_AT: usize = 256;
+
+struct Sink {
+    epoch: Instant,
+    events: Mutex<Vec<SpanEvent>>,
+    names: Mutex<Vec<(u64, String)>>,
+    dropped: AtomicU64,
+}
+
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn sink() -> &'static Sink {
+    static SINK: OnceLock<Sink> = OnceLock::new();
+    SINK.get_or_init(|| Sink {
+        epoch: Instant::now(),
+        events: Mutex::new(Vec::new()),
+        names: Mutex::new(Vec::new()),
+        dropped: AtomicU64::new(0),
+    })
+}
+
+/// Microseconds since the recorder epoch (0 for pre-epoch instants).
+pub fn micros_since_epoch(t: Instant) -> u64 {
+    t.saturating_duration_since(sink().epoch).as_micros() as u64
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+
+struct ThreadBuf {
+    tid: u64,
+    buf: Vec<SpanEvent>,
+}
+
+impl ThreadBuf {
+    fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        let s = sink();
+        let mut ev = lock_recover(&s.events);
+        let room = SINK_CAP.saturating_sub(ev.len());
+        if room < self.buf.len() {
+            s.dropped
+                .fetch_add((self.buf.len() - room) as u64, Ordering::Relaxed);
+        }
+        ev.extend(self.buf.drain(..).take(room));
+        self.buf.clear();
+    }
+}
+
+impl Drop for ThreadBuf {
+    // Scoped pool workers exit at scope end, so their remaining
+    // events land in the sink before the dispatching wave returns.
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static TLS: RefCell<ThreadBuf> = RefCell::new(ThreadBuf {
+        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        buf: Vec::new(),
+    });
+}
+
+fn push(ev: SpanEvent) {
+    TLS.with(|b| {
+        let mut b = b.borrow_mut();
+        b.buf.push(ev);
+        if b.buf.len() >= FLUSH_AT {
+            b.flush();
+        }
+    });
+}
+
+fn current_tid() -> u64 {
+    TLS.with(|b| b.borrow().tid)
+}
+
+/// Name the calling thread in trace exports ("steal-worker-3", ...).
+/// No-op when recording is off.
+pub fn register_thread(name: &str) {
+    if !enabled() {
+        return;
+    }
+    let tid = current_tid();
+    lock_recover(&sink().names).push((tid, name.to_string()));
+}
+
+/// Name a pool worker (`<prefix>-<idx>`) in trace exports, without
+/// paying the format when recording is off.
+pub fn register_worker(prefix: &str, idx: usize) {
+    if !enabled() {
+        return;
+    }
+    register_thread(&format!("{prefix}-{idx}"));
+}
+
+/// RAII span: records a `Complete` event over its lifetime when
+/// `active`.  Construct via [`span`], [`span_arg`], or
+/// [`span_full_arg`]; inactive guards do nothing on drop.
+pub struct SpanGuard {
+    cat: &'static str,
+    name: &'static str,
+    arg: i64,
+    start: Instant,
+    active: bool,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let t0 = micros_since_epoch(self.start);
+        let t1 = micros_since_epoch(Instant::now());
+        push(SpanEvent {
+            cat: self.cat,
+            name: self.name,
+            kind: EventKind::Complete,
+            tid: current_tid(),
+            t0_us: t0,
+            dur_us: t1.saturating_sub(t0),
+            arg: self.arg,
+        });
+    }
+}
+
+pub fn span(cat: &'static str, name: &'static str) -> SpanGuard {
+    span_arg(cat, name, -1)
+}
+
+pub fn span_arg(cat: &'static str, name: &'static str, arg: i64) -> SpanGuard {
+    SpanGuard {
+        cat,
+        name,
+        arg,
+        start: Instant::now(),
+        active: enabled(),
+    }
+}
+
+/// Span active only at [`ObsLevel::Full`] (per-layer kernels,
+/// per-task pool work).
+pub fn span_full_arg(cat: &'static str, name: &'static str, arg: i64) -> SpanGuard {
+    SpanGuard {
+        cat,
+        name,
+        arg,
+        start: Instant::now(),
+        active: is_full(),
+    }
+}
+
+/// Record a point event (breaker trip, plan switch, shed, retry).
+pub fn instant(cat: &'static str, name: &'static str, arg: i64) {
+    if !enabled() {
+        return;
+    }
+    push(SpanEvent {
+        cat,
+        name,
+        kind: EventKind::Instant,
+        tid: current_tid(),
+        t0_us: micros_since_epoch(Instant::now()),
+        dur_us: 0,
+        arg,
+    });
+}
+
+/// Record a `Complete` event over an explicit interval — used by
+/// `obs::timeline` to close a stage retroactively.
+pub fn event_between(
+    cat: &'static str,
+    name: &'static str,
+    start: Instant,
+    end: Instant,
+    arg: i64,
+) {
+    if !enabled() {
+        return;
+    }
+    push(SpanEvent {
+        cat,
+        name,
+        kind: EventKind::Complete,
+        tid: current_tid(),
+        t0_us: micros_since_epoch(start),
+        dur_us: end.saturating_duration_since(start).as_micros() as u64,
+        arg,
+    });
+}
+
+/// Drain the sink: the calling thread's buffer is flushed first, then
+/// every event and thread-name registration accumulated so far is
+/// moved out.  Buffers of *live* other threads flush on their next
+/// 256th event or at thread exit — the serve CLI drains after the
+/// scheduler (and every scoped worker) has returned.
+pub fn take_events() -> (Vec<SpanEvent>, Vec<(u64, String)>) {
+    TLS.with(|b| b.borrow_mut().flush());
+    let s = sink();
+    let events = std::mem::take(&mut *lock_recover(&s.events));
+    let names = std::mem::take(&mut *lock_recover(&s.names));
+    (events, names)
+}
+
+/// Events lost to the sink cap since process start.
+pub fn dropped_events() -> u64 {
+    sink().dropped.load(Ordering::Relaxed)
+}
+
+/// Serializes tests (and benches) that mutate the process-wide level
+/// or drain the shared sink.  Not for production use.
+#[doc(hidden)]
+pub fn test_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `obs_span!(cat, name)` / `obs_span!(cat, name, arg)` — drop an
+/// RAII span guard into the current scope.
+#[macro_export]
+macro_rules! obs_span {
+    ($cat:expr, $name:expr) => {
+        let _obs_span_guard = $crate::obs::span::span($cat, $name);
+    };
+    ($cat:expr, $name:expr, $arg:expr) => {
+        let _obs_span_guard = $crate::obs::span::span_arg($cat, $name, $arg);
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_guard_records_nothing() {
+        let _l = test_lock();
+        set_level(ObsLevel::Off);
+        let before = take_events().0.len();
+        {
+            let _g = span("serve", "dispatch");
+            instant("serve", "plan_switch", 1);
+        }
+        assert_eq!(take_events().0.len(), 0, "off level must record nothing");
+        let _ = before;
+    }
+
+    #[test]
+    fn guard_records_complete_event_with_duration() {
+        let _l = test_lock();
+        set_level(ObsLevel::Spans);
+        let _ = take_events();
+        {
+            let _g = span_arg("serve", "dispatch", 7);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        instant("serve", "breaker_open", 0);
+        set_level(ObsLevel::Off);
+        let (events, _) = take_events();
+        let d = events
+            .iter()
+            .find(|e| e.name == "dispatch" && e.cat == "serve")
+            .expect("dispatch span recorded");
+        assert_eq!(d.kind, EventKind::Complete);
+        assert_eq!(d.arg, 7);
+        assert!(d.dur_us >= 1_000, "2ms sleep must show up, got {}us", d.dur_us);
+        assert!(events
+            .iter()
+            .any(|e| e.name == "breaker_open" && e.kind == EventKind::Instant));
+    }
+
+    #[test]
+    fn full_only_spans_respect_level() {
+        let _l = test_lock();
+        set_level(ObsLevel::Spans);
+        let _ = take_events();
+        {
+            let _g = span_full_arg("kernel", "conv", 0);
+        }
+        assert!(
+            !take_events().0.iter().any(|e| e.cat == "kernel"),
+            "full-only span must not record at spans level"
+        );
+        set_level(ObsLevel::Full);
+        {
+            let _g = span_full_arg("kernel", "conv", 3);
+        }
+        set_level(ObsLevel::Off);
+        let (events, _) = take_events();
+        let k = events.iter().find(|e| e.cat == "kernel").expect("kernel span");
+        assert_eq!(k.arg, 3);
+    }
+
+    #[test]
+    fn worker_threads_flush_on_exit_with_registered_names() {
+        let _l = test_lock();
+        set_level(ObsLevel::Spans);
+        let _ = take_events();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                register_thread("test-worker");
+                let _g = span("pool", "task");
+            });
+        });
+        set_level(ObsLevel::Off);
+        let (events, names) = take_events();
+        let t = events.iter().find(|e| e.name == "task").expect("worker span flushed");
+        assert!(names.iter().any(|(tid, n)| *tid == t.tid && n == "test-worker"));
+    }
+
+    #[test]
+    fn obs_level_parse_round_trips() {
+        for l in [ObsLevel::Off, ObsLevel::Spans, ObsLevel::Full] {
+            assert_eq!(ObsLevel::parse(l.name()).unwrap(), l);
+        }
+        assert!(ObsLevel::parse("verbose").is_err());
+    }
+}

@@ -1,0 +1,102 @@
+//! Request-lifecycle plumbing: a [`ReqTrace`] rides alongside each
+//! queued request in the scheduler and stamps out one `req`-category
+//! span per lifecycle stage — admission → queue wait → dispatch →
+//! reply — plus instant events for sheds and retries, so every
+//! rejected or retried request is visible on the trace, not just the
+//! aggregate counters.
+//!
+//! A `ReqTrace` is two words (a stage-start [`Instant`] and an active
+//! flag latched from the obs level at creation); when recording is
+//! off every method is a single branch, so the scheduler carries them
+//! unconditionally.
+
+use std::time::Instant;
+
+use crate::obs::span;
+
+/// Category all request-lifecycle events are filed under.
+pub const CAT: &str = "req";
+
+/// Per-request stage tracker.  Created when the request reaches the
+/// scheduler; each [`mark`](ReqTrace::mark) closes the stage that
+/// began at the previous mark (or at creation) and starts the next.
+#[derive(Debug)]
+pub struct ReqTrace {
+    active: bool,
+    t_mark: Instant,
+}
+
+impl ReqTrace {
+    /// Latch the obs level: a trace created while recording is off
+    /// stays silent for its whole life (cheap and unambiguous even if
+    /// the level flips mid-request).
+    pub fn start() -> ReqTrace {
+        ReqTrace {
+            active: span::enabled(),
+            t_mark: Instant::now(),
+        }
+    }
+
+    /// Close the current stage as a span named `stage` spanning
+    /// [previous mark, now), then start the next stage at now.
+    pub fn mark(&mut self, stage: &'static str) {
+        if !self.active {
+            return;
+        }
+        let now = Instant::now();
+        span::event_between(CAT, stage, self.t_mark, now, -1);
+        self.t_mark = now;
+    }
+
+    /// Record a point event on the request's lifecycle (shed reason,
+    /// retry) without closing the running stage.
+    pub fn instant(&self, name: &'static str, arg: i64) {
+        if !self.active {
+            return;
+        }
+        span::instant(CAT, name, arg);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::{set_level, take_events, test_lock, EventKind, ObsLevel};
+
+    #[test]
+    fn marks_emit_contiguous_stages() {
+        let _l = test_lock();
+        set_level(ObsLevel::Spans);
+        let _ = take_events();
+        let mut tr = ReqTrace::start();
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        tr.mark("admission");
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        tr.mark("queue");
+        tr.instant("shed_deadline", 0);
+        set_level(ObsLevel::Off);
+        let (events, _) = take_events();
+        let adm = events.iter().find(|e| e.name == "admission").expect("admission span");
+        let q = events.iter().find(|e| e.name == "queue").expect("queue span");
+        assert_eq!(adm.cat, CAT);
+        assert_eq!(adm.kind, EventKind::Complete);
+        // Stages are contiguous: queue starts where admission ended.
+        assert_eq!(adm.t0_us + adm.dur_us, q.t0_us);
+        assert!(events
+            .iter()
+            .any(|e| e.name == "shed_deadline" && e.kind == EventKind::Instant));
+    }
+
+    #[test]
+    fn inactive_trace_is_silent_even_if_level_rises_later() {
+        let _l = test_lock();
+        set_level(ObsLevel::Off);
+        let mut tr = ReqTrace::start();
+        set_level(ObsLevel::Spans);
+        let _ = take_events();
+        tr.mark("admission");
+        tr.instant("retry", 1);
+        set_level(ObsLevel::Off);
+        assert!(take_events().0.is_empty());
+    }
+}

@@ -1,0 +1,164 @@
+//! Chrome trace-event JSON writer.
+//!
+//! Serializes the span recorder's events into the trace-event format
+//! that `chrome://tracing` and [Perfetto](https://ui.perfetto.dev)
+//! load directly: one object with `displayTimeUnit` and a
+//! `traceEvents` array of `ph: "X"` complete events (ts/dur in
+//! microseconds), `ph: "i"` instants, and `ph: "M"` thread-name
+//! metadata so pool workers show up as named tracks.  Everything runs
+//! under one synthetic pid (this is a single-process runtime); tids
+//! are the recorder's per-thread ids.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::obs::span::{self, EventKind, SpanEvent};
+use crate::util::json::Json;
+
+/// The synthetic process id every event is filed under.
+const PID: i64 = 1;
+
+fn meta_thread_name(tid: u64, name: &str) -> Json {
+    Json::obj_from(vec![
+        ("ph", Json::str_of("M")),
+        ("name", Json::str_of("thread_name")),
+        ("pid", Json::int(PID)),
+        ("tid", Json::int(tid as i64)),
+        (
+            "args",
+            Json::obj_from(vec![("name", Json::str_of(name))]),
+        ),
+    ])
+}
+
+fn trace_event(e: &SpanEvent) -> Json {
+    let mut fields = vec![
+        ("name", Json::str_of(e.name)),
+        ("cat", Json::str_of(e.cat)),
+        ("pid", Json::int(PID)),
+        ("tid", Json::int(e.tid as i64)),
+        ("ts", Json::int(e.t0_us as i64)),
+    ];
+    match e.kind {
+        EventKind::Complete => {
+            fields.push(("ph", Json::str_of("X")));
+            fields.push(("dur", Json::int(e.dur_us as i64)));
+        }
+        EventKind::Instant => {
+            fields.push(("ph", Json::str_of("i")));
+            // Thread-scoped instant: renders as a tick on its track.
+            fields.push(("s", Json::str_of("t")));
+        }
+    }
+    if e.arg >= 0 {
+        fields.push(("args", Json::obj_from(vec![("v", Json::int(e.arg))])));
+    }
+    Json::obj_from(fields)
+}
+
+/// Build the trace document from explicit events + thread names.
+/// Threads that recorded events but never registered a name get a
+/// generated `thread-<tid>` track name.
+pub fn chrome_trace(events: &[SpanEvent], names: &[(u64, String)], dropped: u64) -> Json {
+    let mut out: Vec<Json> = Vec::with_capacity(events.len() + names.len() + 1);
+    let mut named: Vec<u64> = names.iter().map(|(t, _)| *t).collect();
+    for (tid, name) in names {
+        out.push(meta_thread_name(*tid, name));
+    }
+    for e in events {
+        if !named.contains(&e.tid) {
+            named.push(e.tid);
+            out.push(meta_thread_name(e.tid, &format!("thread-{}", e.tid)));
+        }
+        out.push(trace_event(e));
+    }
+    let mut top = vec![
+        ("displayTimeUnit", Json::str_of("ms")),
+        ("traceEvents", Json::Arr(out)),
+    ];
+    if dropped > 0 {
+        top.push(("droppedEvents", Json::int(dropped as i64)));
+    }
+    Json::obj_from(top)
+}
+
+/// Drain the global recorder and write a Chrome trace to `path`.
+pub fn write_chrome_trace(path: &Path) -> Result<usize> {
+    let (events, names) = span::take_events();
+    let doc = chrome_trace(&events, &names, span::dropped_events());
+    std::fs::write(path, doc.to_string())
+        .with_context(|| format!("writing chrome trace to {}", path.display()))?;
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(cat: &'static str, name: &'static str, kind: EventKind, tid: u64) -> SpanEvent {
+        SpanEvent {
+            cat,
+            name,
+            kind,
+            tid,
+            t0_us: 10,
+            dur_us: 5,
+            arg: if name == "dispatch" { 2 } else { -1 },
+        }
+    }
+
+    fn field<'a>(e: &'a Json, key: &str) -> &'a str {
+        e.opt(key).and_then(|v| v.str().ok()).unwrap_or("")
+    }
+
+    #[test]
+    fn trace_document_round_trips_through_the_json_parser() {
+        let events = vec![
+            ev("serve", "dispatch", EventKind::Complete, 0),
+            ev("serve", "breaker_open", EventKind::Instant, 0),
+            ev("kernel", "conv", EventKind::Complete, 3),
+        ];
+        let names = vec![(3u64, "steal-worker-0".to_string())];
+        let doc = chrome_trace(&events, &names, 0);
+        let parsed = Json::parse(&doc.to_string()).expect("trace is valid JSON");
+        assert_eq!(parsed.get("displayTimeUnit").unwrap().str().unwrap(), "ms");
+        let evs = parsed.get("traceEvents").unwrap().arr().unwrap();
+        // 3 events + metadata for tids {3 (named), 0 (generated)}.
+        assert_eq!(evs.len(), 5);
+
+        let dispatch = evs.iter().find(|e| field(e, "name") == "dispatch").unwrap();
+        assert_eq!(field(dispatch, "ph"), "X");
+        assert_eq!(field(dispatch, "cat"), "serve");
+        assert_eq!(dispatch.get("ts").unwrap().usize().unwrap(), 10);
+        assert_eq!(dispatch.get("dur").unwrap().usize().unwrap(), 5);
+        assert_eq!(dispatch.get("args").unwrap().get("v").unwrap().usize().unwrap(), 2);
+
+        let instant = evs
+            .iter()
+            .find(|e| field(e, "name") == "breaker_open")
+            .unwrap();
+        assert_eq!(field(instant, "ph"), "i");
+        assert_eq!(field(instant, "s"), "t");
+
+        let metas: Vec<_> = evs.iter().filter(|e| field(e, "ph") == "M").collect();
+        assert_eq!(metas.len(), 2);
+        assert!(metas.iter().any(|m| m
+            .get("args")
+            .unwrap()
+            .get("name")
+            .unwrap()
+            .str()
+            .unwrap()
+            == "steal-worker-0"));
+    }
+
+    #[test]
+    fn dropped_events_are_surfaced() {
+        let doc = chrome_trace(&[], &[], 12);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("droppedEvents").unwrap().usize().unwrap(), 12);
+        let doc = chrome_trace(&[], &[], 0);
+        assert!(Json::parse(&doc.to_string()).unwrap().opt("droppedEvents").is_none());
+    }
+}

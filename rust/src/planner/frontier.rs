@@ -20,6 +20,7 @@
 
 use std::cell::RefCell;
 use std::rc::Rc;
+use std::time::Instant;
 
 use crate::dp::extended::{self, Stage3, Stage4Table};
 use crate::dp::layer_merge::{self, LayerMergeTable};
@@ -28,8 +29,26 @@ use crate::dp::stage2::{self, Stage2Table};
 use crate::dp::stage2::NEG_INF;
 use crate::importance::table::ImpTable;
 use crate::model::spec::{ArchConfig, ACT_RELU6};
+use crate::obs::metrics::Registry;
+use crate::obs::span;
 
 use super::solver::{ImportanceProvider, PlanOutcome};
+
+/// Planner builds go to the process-wide registry (planners are
+/// created deep inside the coordinator — threading a per-run registry
+/// through every call path isn't worth it for build-shape telemetry):
+/// `planner_memo_hit`/`planner_memo_miss` counters plus
+/// `planner_build_ms` / `planner_build_cells` histograms.
+fn note_build(t_build: Instant, cells: usize) {
+    let reg = Registry::global();
+    reg.counter_add("planner_memo_miss", 1);
+    reg.observe("planner_build_ms", t_build.elapsed().as_secs_f64() * 1e3);
+    reg.observe("planner_build_cells", cells as f64);
+}
+
+fn note_memo_hit() {
+    Registry::global().counter_add("planner_memo_hit", 1);
+}
 
 /// Which solution space to plan in.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -122,11 +141,15 @@ impl<P: ImportanceProvider> Planner<P> {
     fn base_table(&self, t0: u64) -> Rc<Stage2Table> {
         if let Some(tab) = self.base_tab.borrow().as_ref() {
             if tab.t0_max() >= t0 {
+                note_memo_hit();
                 return tab.clone();
             }
         }
+        let _build_span = span::span_arg("plan", "build_stage2", t0 as i64);
+        let t_build = Instant::now();
         let f = |i: usize, j: usize| self.imp.base(i, j);
         let tab = Rc::new(stage2::build(self.l, &self.s1, &f, t0));
+        note_build(t_build, tab.cells());
         *self.base_tab.borrow_mut() = Some(tab.clone());
         tab
     }
@@ -135,11 +158,15 @@ impl<P: ImportanceProvider> Planner<P> {
     fn ext_table(&self, t0: u64) -> Rc<Stage4Table> {
         if let Some(tab) = self.ext_tab.borrow().as_ref() {
             if tab.t0_max() >= t0 {
+                note_memo_hit();
                 return tab.clone();
             }
         }
         let s3 = self.stage3();
+        let _build_span = span::span_arg("plan", "build_stage4", t0 as i64);
+        let t_build = Instant::now();
         let tab = Rc::new(extended::build(self.l, &self.s1, &s3, t0));
+        note_build(t_build, tab.cells());
         *self.ext_tab.borrow_mut() = Some(tab.clone());
         tab
     }
@@ -150,12 +177,16 @@ impl<P: ImportanceProvider> Planner<P> {
     fn lm_table(&self, t0: u64) -> Rc<LayerMergeTable> {
         if let Some(tab) = self.lm_tab.borrow().as_ref() {
             if tab.t0_max() >= t0 {
+                note_memo_hit();
                 return tab.clone();
             }
         }
         let s3 = self.stage3();
+        let _build_span = span::span_arg("plan", "build_layer_merge", t0 as i64);
+        let t_build = Instant::now();
         let d = |i: usize, j: usize, a: u8, b: u8| self.imp.del(i, j, a, b);
         let tab = Rc::new(layer_merge::build(self.l, &self.s1, &s3, &d, t0));
+        note_build(t_build, tab.cells());
         *self.lm_tab.borrow_mut() = Some(tab.clone());
         tab
     }
@@ -257,7 +288,13 @@ impl<P: ImportanceProvider> Planner<P> {
                 let _ = self.lm_table(t0_max);
             }
         }
-        budgets.iter().map(|&t0| self.solve(space, t0)).collect()
+        let _extract_span = span::span_arg("plan", "frontier_extract", budgets.len() as i64);
+        let t_extract = Instant::now();
+        let out: Vec<Option<PlanOutcome>> =
+            budgets.iter().map(|&t0| self.solve(space, t0)).collect();
+        Registry::global()
+            .observe("planner_frontier_extract_ms", t_extract.elapsed().as_secs_f64() * 1e3);
+        out
     }
 }
 
@@ -447,6 +484,26 @@ mod tests {
         assert_eq!(ti2.del(2, 3, 1, 1), -0.5);
         assert_eq!(ti2.del(1, 2, 1, 1), crate::dp::stage2::NEG_INF);
         assert!(ti2.deletion_table().is_some());
+    }
+
+    #[test]
+    fn planner_builds_and_memo_hits_reach_the_global_registry() {
+        // global registry: other tests may be adding concurrently, so
+        // pin deltas with >= on before/after snapshots
+        let reg = Registry::global();
+        let miss0 = reg.counter("planner_memo_miss");
+        let hit0 = reg.counter("planner_memo_hit");
+        let mut rng = crate::util::rng::Rng::new(0xAB);
+        let inst = RandInstance::gen(&mut rng, 4);
+        let planner = Planner::new(&inst.t, &inst);
+        let _ = planner.solve(Space::Base, 60); // cold: build (miss)
+        let _ = planner.solve(Space::Base, 30); // smaller budget: memo hit
+        assert!(reg.counter("planner_memo_miss") >= miss0 + 1, "build not counted");
+        assert!(reg.counter("planner_memo_hit") >= hit0 + 1, "memo hit not counted");
+        let cells = reg.histogram("planner_build_cells").expect("build histogram");
+        assert!(cells.count() >= 1);
+        assert!(cells.max() >= 1.0, "stage-2 table has cells");
+        assert!(reg.histogram("planner_build_ms").is_some());
     }
 
     #[test]

@@ -55,6 +55,7 @@ use crate::kernels::winograd::{
     transform_weights, WinogradWeights,
 };
 use crate::merge::plan::{MergedLayer, MergedNet};
+use crate::obs::span;
 use crate::tensor::Tensor;
 use crate::trainer::eval::EvalResult;
 
@@ -377,6 +378,35 @@ impl HostExec {
                 Precision::Int8 => self.quant_packs.get(li).and_then(|o| o.as_ref()),
                 _ => None,
             };
+            let pointwise = ml.k == 1 && ml.groups == 1 && ml.stride == 1 && ml.pad == 0;
+            // per-layer kernel span (level `full` only): named for the
+            // branch this layer actually takes, arg = layer index.  The
+            // guard covers the conv + epilogue + pool chain; at lower
+            // levels it is inert and the chain is untouched.
+            let kname: &'static str = if qp.is_some() {
+                if nhwc { "conv_i8_nhwc" } else { "conv_i8" }
+            } else if fast && !nhwc {
+                if wino.is_some() {
+                    "conv_winograd"
+                } else if ml.groups == 1 {
+                    "conv_fused"
+                } else {
+                    "conv_grouped"
+                }
+            } else if fast && nhwc {
+                if wino.is_some() {
+                    "conv_winograd_nhwc"
+                } else if pointwise {
+                    "conv_pointwise_nhwc"
+                } else {
+                    "conv_packed_nhwc"
+                }
+            } else if nhwc {
+                "conv_exact_nhwc"
+            } else {
+                "conv_exact"
+            };
+            let _layer_span = span::span_full_arg("kernel", kname, li as i64);
             let mut y = if let Some(qw) = qp {
                 // int8 tier: dense convs run the integer GEMM with the
                 // requantize epilogue fused; the activation quantizes
@@ -416,7 +446,6 @@ impl HostExec {
                     y
                 }
             } else if fast && nhwc {
-                let pointwise = ml.k == 1 && ml.groups == 1 && ml.stride == 1 && ml.pad == 0;
                 if let Some(ww) = wino {
                     conv2d_winograd_fused_nhwc(&self.pool, &cur, ww, Some(&b.data), resid, ml.act)?
                 } else if pointwise {
@@ -572,6 +601,40 @@ mod tests {
         assert!(exec.logits(&poisoned).unwrap().data.iter().all(|v| v.is_nan()));
         let err = exec.logits_checked(&poisoned).unwrap_err().to_string();
         assert!(err.contains("non-finite logit"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn obs_level_never_perturbs_exact_logits() {
+        // the blast-radius contract: spans observe timing only — the
+        // exact tier stays byte-identical at every obs level, kernel
+        // spans included
+        use crate::obs::span::{set_level, take_events, test_lock, ObsLevel};
+        let cfg = tiny_config();
+        let ps = ParamSet::synthetic(&cfg, 34);
+        let net = build_merged(&cfg, &ps, &[1, 4, 5], &[4]).unwrap();
+        let exec = HostExec::new(net).unwrap();
+        let hw = cfg.spec.input_hw;
+        let x = rand_input(&[2, 3, hw, hw], 11);
+        let _l = test_lock();
+        set_level(ObsLevel::Off);
+        let base = exec.logits(&x).unwrap();
+        for level in [ObsLevel::Spans, ObsLevel::Full] {
+            set_level(level);
+            let y = exec.logits(&x).unwrap();
+            assert!(
+                bits_equal(&base.data, &y.data),
+                "obs level {} changed exact-tier logits",
+                level.name()
+            );
+        }
+        set_level(ObsLevel::Off);
+        let (events, _) = take_events();
+        // the Full pass must actually have recorded per-layer spans —
+        // otherwise this test pins nothing
+        assert!(
+            events.iter().any(|e| e.cat == "kernel" && e.name == "conv_exact"),
+            "full level recorded no kernel spans"
+        );
     }
 
     #[test]

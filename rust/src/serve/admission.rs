@@ -47,6 +47,18 @@ impl ShedReason {
             ShedReason::Timeout => "timeout",
         }
     }
+
+    /// The metrics-registry counter this shed reason increments
+    /// (`requests_shed_<name>`); pinned by `ServeStats::diff_registry`.
+    pub fn counter_name(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "requests_shed_queue_full",
+            ShedReason::Deadline => "requests_shed_deadline",
+            ShedReason::Malformed => "requests_shed_malformed",
+            ShedReason::Internal => "requests_shed_internal",
+            ShedReason::Timeout => "requests_shed_timeout",
+        }
+    }
 }
 
 #[derive(Debug, Clone, Default)]

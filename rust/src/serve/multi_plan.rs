@@ -31,6 +31,7 @@ use crate::kernels::conv::{Layout, Precision};
 use crate::kernels::pool::Pool;
 use crate::merge::plan::build_merged;
 use crate::model::spec::ArchConfig;
+use crate::obs::span;
 use crate::planner::deploy::ParetoPoint;
 use crate::runtime::host_exec::HostExec;
 use crate::tensor::Tensor;
@@ -191,6 +192,10 @@ impl MultiPlanEngine {
     /// activation surfaces as a recoverable `Err` — one rejected
     /// request — never a silently-served NaN prediction.
     pub fn logits_with(&self, plan: usize, x: &Tensor) -> Result<Tensor> {
+        // one `exec` span per forward; injected chaos delays are timed
+        // under `fault` in the scheduler, so this span is honest
+        // compute time
+        let _exec_span = span::span_arg("exec", "logits", plan as i64);
         self.execs[plan].logits_checked(x)
     }
 }

@@ -68,6 +68,7 @@
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -75,6 +76,9 @@ use anyhow::{bail, Result};
 use crate::data::synth::SynthSpec;
 use crate::kernels::elementwise::argmax;
 use crate::kernels::pool::Pool;
+use crate::obs::metrics::Registry;
+use crate::obs::span;
+use crate::obs::timeline::ReqTrace;
 use crate::serve::admission::{Admission, AdmissionCfg, ShedReason};
 use crate::serve::faults::{injected_panic, poison_nan, FaultInjector, FaultSpec};
 use crate::serve::multi_plan::{BreakerBoard, BreakerCfg, BreakerEvent, MultiPlanEngine, SloController};
@@ -180,6 +184,12 @@ pub struct SchedulerConfig {
     pub faults: Option<FaultSpec>,
     /// seed for the injected fault schedule
     pub fault_seed: u64,
+    /// metrics registry the scheduler mirrors its counters into
+    /// (request/shed/retry/breaker accounting, latency histogram);
+    /// None = a private registry nobody reads.  Counter recording is
+    /// always on — it is event-granular and cannot perturb results —
+    /// while *span* recording is gated by [`crate::obs::span::level`].
+    pub metrics: Option<Arc<Registry>>,
 }
 
 impl Default for SchedulerConfig {
@@ -199,6 +209,7 @@ impl Default for SchedulerConfig {
             breaker: BreakerCfg::default(),
             faults: None,
             fault_seed: 0,
+            metrics: None,
         }
     }
 }
@@ -221,6 +232,17 @@ pub struct Scheduler {
     steal_pool: Pool,
     image_shape: Vec<usize>,
     image_elems: usize,
+    /// the registry from `cfg.metrics`, or a private default — always
+    /// present so the recording paths never branch on Option
+    metrics: Arc<Registry>,
+}
+
+/// A queued request plus its lifecycle trace: the trace rides with
+/// the request from admission through dispatch so every stage span
+/// (and every shed/retry instant) lands on the right interval.
+struct Tracked {
+    req: Request,
+    trace: ReqTrace,
 }
 
 /// One dispatch wave's aggregate result: served latencies (ms) for the
@@ -233,9 +255,10 @@ struct WaveOutcome {
 }
 
 /// Reply, counting (not discarding) sends whose receiver hung up.
-fn send_reply(stats: &mut ServeStats, tx: &Sender<Reply>, reply: Reply) {
+fn send_reply(stats: &mut ServeStats, metrics: &Registry, tx: &Sender<Reply>, reply: Reply) {
     if tx.send(reply).is_err() {
         stats.reply_dropped += 1;
+        metrics.counter_add("reply_dropped", 1);
     }
 }
 
@@ -265,6 +288,7 @@ impl Scheduler {
             .clone()
             .filter(|f| !f.is_noop())
             .map(|f| FaultInjector::new(f, cfg.fault_seed));
+        let metrics = cfg.metrics.clone().unwrap_or_default();
         Ok(Scheduler {
             engine,
             admission,
@@ -275,7 +299,29 @@ impl Scheduler {
             image_shape: image_shape.to_vec(),
             image_elems: image_shape.iter().product(),
             cfg,
+            metrics,
         })
+    }
+
+    /// The registry this scheduler mirrors its counters into.
+    pub fn metrics(&self) -> &Arc<Registry> {
+        &self.metrics
+    }
+
+    /// Shed accounting, mirrored: ServeStats counter + registry.
+    fn note_shed(&self, stats: &mut ServeStats, reason: ShedReason) {
+        stats.shed(reason);
+        self.metrics.counter_add(reason.counter_name(), 1);
+        self.metrics.counter_add("requests_offered", 1);
+    }
+
+    /// Served accounting, mirrored: ServeStats + registry + latency
+    /// histogram.
+    fn note_served(&self, stats: &mut ServeStats, ms: f64, plan: usize) {
+        stats.record_on_plan(ms, plan);
+        self.metrics.counter_add("requests_served", 1);
+        self.metrics.counter_add("requests_offered", 1);
+        self.metrics.observe("serve_latency_ms", ms);
     }
 
     pub fn image_elems(&self) -> usize {
@@ -286,8 +332,9 @@ impl Scheduler {
     /// returns serving statistics.
     pub fn run(&mut self, rx: Receiver<Request>) -> Result<ServeStats> {
         let mut stats = ServeStats::with_plans(self.engine.len());
-        let mut queue: VecDeque<Request> = VecDeque::new();
+        let mut queue: VecDeque<Tracked> = VecDeque::new();
         let mut recent: VecDeque<f64> = VecDeque::new();
+        self.metrics.gauge_set("active_plan", self.engine.active() as f64);
         let est_table = self.engine.est_ms_table();
         let mut open = true;
         let mut waves = 0usize;
@@ -334,13 +381,21 @@ impl Scheduler {
             let est_exec = self.engine.est_exec(self.engine.active());
             let now = Instant::now();
             let mut live = Vec::with_capacity(batch.len());
-            for r in batch {
-                match self.admission.viable(r.submitted, r.deadline, now, est_exec) {
-                    Ok(()) => live.push(r),
+            for mut t in batch {
+                // queue-wait stage ends here, shed or dispatched
+                t.trace.mark("queue");
+                match self.admission.viable(t.req.submitted, t.req.deadline, now, est_exec) {
+                    Ok(()) => live.push(t),
                     Err(reason) => {
-                        stats.shed(reason);
-                        let latency = r.submitted.elapsed();
-                        send_reply(&mut stats, &r.reply, Reply::Rejected { reason, latency });
+                        t.trace.instant(reason.name(), -1);
+                        self.note_shed(&mut stats, reason);
+                        let latency = t.req.submitted.elapsed();
+                        send_reply(
+                            &mut stats,
+                            &self.metrics,
+                            &t.req.reply,
+                            Reply::Rejected { reason, latency },
+                        );
                     }
                 }
             }
@@ -351,9 +406,12 @@ impl Scheduler {
             let wave_plan = self.engine.active();
             let seq0 = seq;
             seq += live.len() as u64;
-            let outcome = match self.cfg.policy {
-                Policy::WorkSteal => self.dispatch_steal(live, seq0, &mut stats),
-                _ => self.dispatch_batch(live, seq0, &mut stats),
+            let outcome = {
+                let _wave_span = span::span_arg("serve", "dispatch", wave_plan as i64);
+                match self.cfg.policy {
+                    Policy::WorkSteal => self.dispatch_steal(live, seq0, &mut stats),
+                    _ => self.dispatch_batch(live, seq0, &mut stats),
+                }
             };
             waves += 1;
             stats.batches += 1;
@@ -372,9 +430,19 @@ impl Scheduler {
             events.extend(self.breakers.tick_wave());
             for &(plan, ev) in &events {
                 match ev {
-                    BreakerEvent::Open => stats.breaker_trips += 1,
-                    BreakerEvent::Close => stats.breaker_recoveries += 1,
-                    BreakerEvent::HalfOpen => {}
+                    BreakerEvent::Open => {
+                        stats.breaker_trips += 1;
+                        self.metrics.counter_add("breaker_trips", 1);
+                        span::instant("serve", "breaker_open", plan as i64);
+                    }
+                    BreakerEvent::Close => {
+                        stats.breaker_recoveries += 1;
+                        self.metrics.counter_add("breaker_recoveries", 1);
+                        span::instant("serve", "breaker_close", plan as i64);
+                    }
+                    BreakerEvent::HalfOpen => {
+                        span::instant("serve", "breaker_half_open", plan as i64);
+                    }
                 }
                 stats.breaker_log.push((waves, plan, ev.name()));
             }
@@ -397,6 +465,9 @@ impl Scheduler {
                             self.engine.set_active(next);
                             stats.plan_switches += 1;
                             stats.switch_log.push((waves, active, next));
+                            self.metrics.counter_add("plan_switches", 1);
+                            self.metrics.gauge_set("active_plan", next as f64);
+                            span::instant("serve", "plan_switch", next as i64);
                             // the window measured the OLD plan; start fresh
                             recent.clear();
                         }
@@ -429,6 +500,9 @@ impl Scheduler {
                 self.engine.set_active(next);
                 stats.plan_switches += 1;
                 stats.switch_log.push((wave, active, next));
+                self.metrics.counter_add("plan_switches", 1);
+                self.metrics.gauge_set("active_plan", next as f64);
+                span::instant("serve", "plan_switch", next as i64);
                 true
             }
             _ => false,
@@ -436,19 +510,23 @@ impl Scheduler {
     }
 
     /// Arrival path: validate + admit, or reject with an explicit reply.
-    fn enqueue(&self, r: Request, queue: &mut VecDeque<Request>, stats: &mut ServeStats) {
+    fn enqueue(&self, r: Request, queue: &mut VecDeque<Tracked>, stats: &mut ServeStats) {
+        let mut trace = ReqTrace::start();
         let reason = if r.image.len() != self.image_elems {
             Some(ShedReason::Malformed)
         } else {
             self.admission.admit(queue.len()).err()
         };
+        // admission stage: arrival at the scheduler through the verdict
+        trace.mark("admission");
         match reason {
             Some(reason) => {
-                stats.shed(reason);
+                trace.instant(reason.name(), -1);
+                self.note_shed(stats, reason);
                 let latency = r.submitted.elapsed();
-                send_reply(stats, &r.reply, Reply::Rejected { reason, latency });
+                send_reply(stats, &self.metrics, &r.reply, Reply::Rejected { reason, latency });
             }
-            None => queue.push_back(r),
+            None => queue.push_back(Tracked { req: r, trace }),
         }
     }
 
@@ -459,17 +537,18 @@ impl Scheduler {
     /// MicroBatch policy's defining move.
     fn gather_batch(
         &self,
-        queue: &mut VecDeque<Request>,
+        queue: &mut VecDeque<Tracked>,
         rx: &Receiver<Request>,
         open: &mut bool,
         stats: &mut ServeStats,
         deadline_aware: bool,
-    ) -> Vec<Request> {
+    ) -> Vec<Tracked> {
         let first = queue.pop_front().expect("gather_batch on empty queue");
         let mut wait_until = Instant::now() + self.cfg.max_wait;
         if deadline_aware {
             let est = self.engine.est_exec(self.engine.active());
-            if let Some(d) = self.admission.deadline_for(first.submitted, first.deadline) {
+            if let Some(d) = self.admission.deadline_for(first.req.submitted, first.req.deadline)
+            {
                 if let Some(slack_end) = d.checked_sub(est) {
                     wait_until = wait_until.min(slack_end);
                 }
@@ -511,7 +590,7 @@ impl Scheduler {
     /// (`Internal`) or the batch's latest deadline cannot fit another
     /// attempt (`Timeout`).  Failure answers every member `Rejected` —
     /// the reply contract holds on every path.
-    fn dispatch_batch(&self, batch: Vec<Request>, seq0: u64, stats: &mut ServeStats) -> WaveOutcome {
+    fn dispatch_batch(&self, batch: Vec<Tracked>, seq0: u64, stats: &mut ServeStats) -> WaveOutcome {
         let bs = batch.len();
         let plan = self.engine.active();
         let shape = [&[bs][..], self.image_shape.as_slice()].concat();
@@ -520,16 +599,16 @@ impl Scheduler {
         // it cannot fit another attempt, nobody in the batch can win
         let budget = batch
             .iter()
-            .filter_map(|r| self.admission.deadline_for(r.submitted, r.deadline))
+            .filter_map(|t| self.admission.deadline_for(t.req.submitted, t.req.deadline))
             .max();
         let mut attempt = 0u32;
         let fail_reason = loop {
             let mut x = Tensor::zeros(&shape);
             let mut delay = Duration::ZERO;
             let mut panic_any = false;
-            for (n, r) in batch.iter().enumerate() {
+            for (n, t) in batch.iter().enumerate() {
                 let dst = &mut x.data[n * self.image_elems..(n + 1) * self.image_elems];
-                dst.copy_from_slice(&r.image);
+                dst.copy_from_slice(&t.req.image);
                 if let Some(inj) = self.injector.as_ref() {
                     let fault = inj.decide(seq0 + n as u64, attempt);
                     if fault.nan {
@@ -542,6 +621,9 @@ impl Scheduler {
                 }
             }
             if delay > Duration::ZERO {
+                // chaos latency is its own trace category: attributing
+                // the injected sleep to `exec` would misblame kernels
+                let _fault_span = span::span("fault", "injected_delay");
                 std::thread::sleep(delay);
             }
             let out = catch_unwind(AssertUnwindSafe(|| -> Result<Tensor> {
@@ -554,15 +636,17 @@ impl Scheduler {
                 Ok(Ok(logits)) => {
                     let nc = logits.shape[1];
                     let mut lats = Vec::with_capacity(bs);
-                    for (n, r) in batch.into_iter().enumerate() {
+                    for (n, mut t) in batch.into_iter().enumerate() {
                         let pred = argmax(&logits.data[n * nc..(n + 1) * nc]);
-                        let latency = r.submitted.elapsed();
+                        t.trace.mark("dispatch");
+                        let latency = t.req.submitted.elapsed();
                         let ms = latency.as_secs_f64() * 1e3;
-                        stats.record_on_plan(ms, plan);
+                        self.note_served(stats, ms, plan);
                         lats.push(ms);
                         send_reply(
                             stats,
-                            &r.reply,
+                            &self.metrics,
+                            &t.req.reply,
                             Reply::Served { pred, latency, batch_size: bs, plan },
                         );
                     }
@@ -570,6 +654,7 @@ impl Scheduler {
                 }
                 Ok(Err(_)) | Err(_) => {
                     stats.exec_failures += 1;
+                    self.metrics.counter_add("exec_failures", 1);
                     if attempt as usize >= self.cfg.retries {
                         break ShedReason::Internal;
                     }
@@ -579,15 +664,25 @@ impl Scheduler {
                         }
                     }
                     stats.retries += 1;
+                    self.metrics.counter_add("exec_retries", 1);
+                    span::instant("serve", "retry", attempt as i64);
+                    let _backoff_span = span::span("serve", "retry_backoff");
                     std::thread::sleep(self.cfg.retry_backoff * (1u32 << attempt.min(6)));
                     attempt += 1;
                 }
             }
         };
-        for r in batch {
-            stats.shed(fail_reason);
-            let latency = r.submitted.elapsed();
-            send_reply(stats, &r.reply, Reply::Rejected { reason: fail_reason, latency });
+        for mut t in batch {
+            t.trace.mark("dispatch");
+            t.trace.instant(fail_reason.name(), -1);
+            self.note_shed(stats, fail_reason);
+            let latency = t.req.submitted.elapsed();
+            send_reply(
+                stats,
+                &self.metrics,
+                &t.req.reply,
+                Reply::Rejected { reason: fail_reason, latency },
+            );
         }
         WaveOutcome { lats: Vec::new(), ok: vec![false; bs] }
     }
@@ -600,7 +695,7 @@ impl Scheduler {
     /// deadline-derived retry budget, behind the pool's panic
     /// isolation: one blown-up request answers `Rejected`, its wave
     /// mates are untouched.
-    fn dispatch_steal(&self, reqs: Vec<Request>, seq0: u64, stats: &mut ServeStats) -> WaveOutcome {
+    fn dispatch_steal(&self, reqs: Vec<Tracked>, seq0: u64, stats: &mut ServeStats) -> WaveOutcome {
         let plan = self.engine.active();
         let shape = [&[1usize][..], self.image_shape.as_slice()].concat();
         let engine = &self.engine;
@@ -615,13 +710,17 @@ impl Scheduler {
             attempts: u32,
         }
         let tasks = self.steal_pool.try_run_tasks(reqs.len(), |i| {
-            let r = &reqs[i];
+            let r = &reqs[i].req;
+            let _task_span = span::span_full_arg("pool", "task", i as i64);
             let tseq = seq0 + i as u64;
             let budget = admission.deadline_for(r.submitted, r.deadline);
             let mut attempt = 0u32;
             loop {
                 let fault = injector.map(|f| f.decide(tseq, attempt)).unwrap_or_default();
                 if let Some(d) = fault.delay {
+                    // see dispatch_batch: injected sleeps are `fault`,
+                    // never billed against exec/kernel time
+                    let _fault_span = span::span("fault", "injected_delay");
                     std::thread::sleep(d);
                 }
                 let out = catch_unwind(AssertUnwindSafe(|| -> Result<usize> {
@@ -664,7 +763,7 @@ impl Scheduler {
         });
         let mut lats = Vec::with_capacity(reqs.len());
         let mut ok = Vec::with_capacity(reqs.len());
-        for (r, task) in reqs.into_iter().zip(tasks) {
+        for (mut t, task) in reqs.into_iter().zip(tasks) {
             // the pool-level Err means a panic ESCAPED the per-attempt
             // catch above (shouldn't happen); treat it as one exhausted
             // request, not a process problem
@@ -672,28 +771,39 @@ impl Scheduler {
                 debug_assert!(false, "panic escaped the attempt loop: {tp}");
                 TaskDone { result: Err(ShedReason::Internal), attempts: 1 }
             });
+            let failed_attempts = task.attempts as usize - 1;
+            stats.retries += failed_attempts;
+            self.metrics.counter_add("exec_retries", failed_attempts as u64);
+            t.trace.mark("dispatch");
             match task.result {
                 Ok(pred) => {
-                    stats.exec_failures += task.attempts as usize - 1;
-                    stats.retries += task.attempts as usize - 1;
-                    let latency = r.submitted.elapsed();
+                    stats.exec_failures += failed_attempts;
+                    self.metrics.counter_add("exec_failures", failed_attempts as u64);
+                    let latency = t.req.submitted.elapsed();
                     let ms = latency.as_secs_f64() * 1e3;
-                    stats.record_on_plan(ms, plan);
+                    self.note_served(stats, ms, plan);
                     lats.push(ms);
                     ok.push(true);
                     send_reply(
                         stats,
-                        &r.reply,
+                        &self.metrics,
+                        &t.req.reply,
                         Reply::Served { pred, latency, batch_size: 1, plan },
                     );
                 }
                 Err(reason) => {
                     stats.exec_failures += task.attempts as usize;
-                    stats.retries += task.attempts as usize - 1;
-                    stats.shed(reason);
+                    self.metrics.counter_add("exec_failures", task.attempts as u64);
+                    t.trace.instant(reason.name(), -1);
+                    self.note_shed(stats, reason);
                     ok.push(false);
-                    let latency = r.submitted.elapsed();
-                    send_reply(stats, &r.reply, Reply::Rejected { reason, latency });
+                    let latency = t.req.submitted.elapsed();
+                    send_reply(
+                        stats,
+                        &self.metrics,
+                        &t.req.reply,
+                        Reply::Rejected { reason, latency },
+                    );
                 }
             }
         }
@@ -1270,6 +1380,89 @@ mod tests {
         for p in [Policy::DrainBatch, Policy::MicroBatch, Policy::WorkSteal] {
             assert_eq!(Policy::parse(p.name()).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn metrics_registry_agrees_with_stats_counters() {
+        // the obs acceptance gate: every counter the registry exposes
+        // must equal the ServeStats the report prints — under chaos,
+        // retries, sheds, and breaker churn, on a per-run registry
+        crate::serve::faults::silence_injected_panics();
+        let reg = Arc::new(Registry::new());
+        let spec = FaultSpec {
+            panic_p: 0.4,
+            delay_ms: 0.5,
+            delay_p: 0.2,
+            ..Default::default()
+        };
+        let slo_ms = 2.0;
+        let (engine, hw) = engine2(31, 1.0, 0.2);
+        let cfg = SchedulerConfig {
+            policy: Policy::WorkSteal,
+            max_batch: 4,
+            max_wait: Duration::from_micros(300),
+            admission: AdmissionCfg::slo(3, slo_ms),
+            slo_ms,
+            steal_workers: 2,
+            retries: 1,
+            retry_backoff: Duration::from_micros(50),
+            breaker: BreakerCfg { threshold: 3, cooldown_waves: 3, probe_interval: 1 },
+            faults: Some(spec),
+            fault_seed: 99,
+            metrics: Some(reg.clone()),
+            ..SchedulerConfig::default()
+        };
+        let mut sched = Scheduler::new(engine, &[3, hw, hw], cfg).unwrap();
+        let n = 60;
+        let gaps = burst_trace(17, n, 150, 8);
+        let (rx, gen) = spawn_open_load(&data_for(hw), n, gaps);
+        let stats = sched.run(rx).unwrap();
+        gen.join().unwrap();
+        assert_eq!(stats.offered(), n);
+        if let Some((name, stat, counter)) = stats.diff_registry(&reg) {
+            panic!("registry drifted from stats on {name}: stats {stat} vs counter {counter}");
+        }
+        // the active-plan gauge always names a real resident plan
+        let active = reg.gauge("active_plan").expect("active_plan gauge set") as usize;
+        assert!(active < 2, "active_plan gauge out of range: {active}");
+    }
+
+    #[test]
+    fn injected_delay_spans_land_in_the_fault_category() {
+        // satellite fix: chaos sleeps must be attributed to `fault`,
+        // never `exec`/`kernel`, so flamegraphs blame the injector
+        use crate::obs::span::{set_level, take_events, test_lock, ObsLevel};
+        let _l = test_lock();
+        set_level(ObsLevel::Spans);
+        let _ = take_events();
+        let spec = FaultSpec { delay_ms: 1.0, delay_p: 1.0, ..Default::default() };
+        for policy in [Policy::WorkSteal, Policy::DrainBatch] {
+            let (engine, hw) = engine2(41, 1.0, 0.2);
+            let cfg = SchedulerConfig {
+                policy,
+                max_batch: 4,
+                max_wait: Duration::from_micros(300),
+                steal_workers: 2,
+                faults: Some(spec.clone()),
+                fault_seed: 5,
+                ..SchedulerConfig::default()
+            };
+            let mut sched = Scheduler::new(engine, &[3, hw, hw], cfg).unwrap();
+            let (rx, gen) = spawn_open_load(&data_for(hw), 8, vec![100]);
+            sched.run(rx).unwrap();
+            gen.join().unwrap();
+        }
+        set_level(ObsLevel::Off);
+        let (events, _) = take_events();
+        let delays: Vec<_> = events.iter().filter(|e| e.name == "injected_delay").collect();
+        assert!(!delays.is_empty(), "delay_p 1.0 must record injected-delay spans");
+        for d in &delays {
+            assert_eq!(d.cat, "fault", "injected delay billed to {} not fault", d.cat);
+        }
+        assert!(
+            events.iter().any(|e| e.name == "dispatch" && e.cat == "serve"),
+            "dispatch wave spans missing from the trace"
+        );
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use std::time::Duration;
 
+use crate::obs::metrics::{LogHistogram, Registry};
 use crate::serve::admission::ShedReason;
 use crate::util::json::Json;
 
@@ -55,10 +56,13 @@ pub struct ServeStats {
     latencies_ms: Vec<f64>,
     pub wall: Duration,
     /// sorted view of `latencies_ms`, built lazily on the first
-    /// percentile query and reused until the samples change — report
-    /// paths ask for p50/p95/p99 back to back and used to re-sort the
-    /// full vector for each
+    /// exact-percentile query and reused until the samples change
     sorted_cache: std::cell::RefCell<Vec<f64>>,
+    /// log-bucketed latency histogram fed in lockstep with
+    /// `latencies_ms` — the O(1)-record path `percentile_ms` reads;
+    /// the sorted vector stays as the exact reference behind
+    /// [`ServeStats::percentile_ms_exact`] and the agreement tests
+    lat_hist: LogHistogram,
 }
 
 impl ServeStats {
@@ -69,6 +73,7 @@ impl ServeStats {
 
     pub fn record(&mut self, latency_ms: f64) {
         self.latencies_ms.push(latency_ms);
+        self.lat_hist.record(latency_ms);
         self.served += 1;
     }
 
@@ -114,10 +119,21 @@ impl ServeStats {
         self.shed_total() as f64 / offered as f64
     }
 
-    /// Percentile with linear interpolation between order statistics
-    /// (the numpy default), over a cached sorted view.  0.0 with no
-    /// recorded requests.
+    /// Percentile off the log-bucketed histogram: O(1) per recorded
+    /// sample, one bucket walk per query, within ~1% relative error of
+    /// [`ServeStats::percentile_ms_exact`] (agreement is pinned by a
+    /// seeded test below).  p0/p100 are exact; non-finite samples are
+    /// excluded.  0.0 with no recorded requests.
     pub fn percentile_ms(&self, p: f64) -> f64 {
+        self.lat_hist.percentile(p)
+    }
+
+    /// The exact interpolating percentile over a cached sorted view —
+    /// the pre-histogram reference path, kept for tests and for
+    /// anything that needs the true order statistic (re-sorts once per
+    /// sample-count change, so recording is no longer O(1) amortized
+    /// if this is queried per window).
+    pub fn percentile_ms_exact(&self, p: f64) -> f64 {
         if self.latencies_ms.is_empty() {
             return 0.0;
         }
@@ -147,6 +163,58 @@ impl ServeStats {
         self.served as f64 / self.batches as f64
     }
 
+    /// The fault-and-resilience section of the report, grouped so the
+    /// serve JSON is the single fleet-level record (ROADMAP item 3).
+    /// These are the same counters the scheduler mirrors into its
+    /// metrics [`Registry`] — [`ServeStats::agrees_with_registry`]
+    /// pins the two accountings against each other.
+    fn faults_json(&self) -> Json {
+        Json::obj_from(vec![
+            ("retries", Json::int(self.retries as i64)),
+            ("exec_failures", Json::int(self.exec_failures as i64)),
+            ("breaker_trips", Json::int(self.breaker_trips as i64)),
+            ("breaker_recoveries", Json::int(self.breaker_recoveries as i64)),
+            ("reply_dropped", Json::int(self.reply_dropped as i64)),
+            (
+                "shed_by_reason",
+                Json::obj_from(vec![
+                    ("queue_full", Json::int(self.shed_queue as i64)),
+                    ("deadline", Json::int(self.shed_deadline as i64)),
+                    ("malformed", Json::int(self.shed_malformed as i64)),
+                    ("internal", Json::int(self.shed_internal as i64)),
+                    ("timeout", Json::int(self.shed_timeout as i64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Cross-check this stats object against the scheduler's metrics
+    /// registry: every request/shed/retry/breaker counter must match
+    /// exactly (the two are incremented on independent code paths).
+    /// Returns the first mismatch as `(name, stats_value,
+    /// registry_value)`, or `None` when they agree.
+    pub fn diff_registry(&self, reg: &Registry) -> Option<(&'static str, u64, u64)> {
+        let pairs: [(&'static str, u64); 13] = [
+            ("requests_offered", self.offered() as u64),
+            ("requests_served", self.served as u64),
+            ("requests_shed_queue_full", self.shed_queue as u64),
+            ("requests_shed_deadline", self.shed_deadline as u64),
+            ("requests_shed_malformed", self.shed_malformed as u64),
+            ("requests_shed_internal", self.shed_internal as u64),
+            ("requests_shed_timeout", self.shed_timeout as u64),
+            ("exec_retries", self.retries as u64),
+            ("exec_failures", self.exec_failures as u64),
+            ("breaker_trips", self.breaker_trips as u64),
+            ("breaker_recoveries", self.breaker_recoveries as u64),
+            ("plan_switches", self.plan_switches as u64),
+            ("reply_dropped", self.reply_dropped as u64),
+        ];
+        pairs
+            .into_iter()
+            .find(|&(name, v)| reg.counter(name) != v)
+            .map(|(name, v)| (name, v, reg.counter(name)))
+    }
+
     /// The serve report record: one JSON object per run, written by the
     /// CLI next to the frontier CSVs and by `bench_serve`.
     pub fn report_json(&self, policy: &str, slo_ms: f64) -> Json {
@@ -165,6 +233,7 @@ impl ServeStats {
             ("exec_failures", Json::int(self.exec_failures as i64)),
             ("breaker_trips", Json::int(self.breaker_trips as i64)),
             ("breaker_recoveries", Json::int(self.breaker_recoveries as i64)),
+            ("faults", self.faults_json()),
             ("shed_rate", Json::num(self.shed_rate())),
             ("p50_ms", Json::num(self.percentile_ms(0.5))),
             ("p95_ms", Json::num(self.percentile_ms(0.95))),
@@ -201,6 +270,10 @@ impl ServeStats {
 
     #[cfg(test)]
     pub(crate) fn set_samples(&mut self, samples: Vec<f64>) {
+        self.lat_hist = LogHistogram::new();
+        for &v in &samples {
+            self.lat_hist.record(v);
+        }
         self.latencies_ms = samples;
     }
 }
@@ -245,7 +318,9 @@ mod tests {
         s.served = 5;
         s.batches = 2;
         s.wall = Duration::from_secs(1);
-        assert_eq!(s.percentile_ms(0.5), 3.0);
+        assert_eq!(s.percentile_ms_exact(0.5), 3.0);
+        // histogram path: within bucket error of the exact statistic
+        assert!((s.percentile_ms(0.5) - 3.0).abs() / 3.0 < 0.02);
         assert!(s.percentile_ms(0.95) >= 4.0);
         assert_eq!(s.throughput(), 5.0);
         assert_eq!(s.mean_batch(), 2.5);
@@ -254,12 +329,16 @@ mod tests {
     #[test]
     fn percentiles_interpolate_and_cover_tails() {
         // pin p50/p95/p99 on a known 1..=100 sample: rank = 99 * p,
-        // linear interpolation between order statistics
+        // linear interpolation between order statistics (the exact
+        // sorted-vec path kept behind tests)
         let mut s = ServeStats::default();
         s.set_samples((1..=100).rev().map(|x| x as f64).collect());
-        assert!((s.percentile_ms(0.50) - 50.5).abs() < 1e-12);
-        assert!((s.percentile_ms(0.95) - 95.05).abs() < 1e-12);
-        assert!((s.percentile_ms(0.99) - 99.01).abs() < 1e-12);
+        assert!((s.percentile_ms_exact(0.50) - 50.5).abs() < 1e-12);
+        assert!((s.percentile_ms_exact(0.95) - 95.05).abs() < 1e-12);
+        assert!((s.percentile_ms_exact(0.99) - 99.01).abs() < 1e-12);
+        assert_eq!(s.percentile_ms_exact(0.0), 1.0);
+        assert_eq!(s.percentile_ms_exact(1.0), 100.0);
+        // the histogram path pins the tails exactly too
         assert_eq!(s.percentile_ms(0.0), 1.0);
         assert_eq!(s.percentile_ms(1.0), 100.0);
 
@@ -267,11 +346,12 @@ mod tests {
         // samples it returned 4.0 for p95 — now nearly the max
         let mut t = ServeStats::default();
         t.set_samples(vec![1.0, 2.0, 3.0, 4.0, 100.0]);
-        assert!((t.percentile_ms(0.95) - 80.8).abs() < 1e-9);
+        assert!((t.percentile_ms_exact(0.95) - 80.8).abs() < 1e-9);
 
         // degenerate single sample
         let mut one = ServeStats::default();
         one.set_samples(vec![7.0]);
+        assert_eq!(one.percentile_ms_exact(0.99), 7.0);
         assert_eq!(one.percentile_ms(0.99), 7.0);
     }
 
@@ -280,12 +360,39 @@ mod tests {
         let mut s = ServeStats::default();
         s.record(5.0);
         s.record(1.0);
-        assert_eq!(s.percentile_ms(0.0), 1.0);
-        assert_eq!(s.percentile_ms(1.0), 5.0);
+        assert_eq!(s.percentile_ms_exact(0.0), 1.0);
+        assert_eq!(s.percentile_ms_exact(1.0), 5.0);
         // appending invalidates the cached view (length changes)
         s.record(0.5);
+        assert_eq!(s.percentile_ms_exact(0.0), 0.5);
+        // record() feeds the histogram in lockstep
         assert_eq!(s.percentile_ms(0.0), 0.5);
+        assert_eq!(s.percentile_ms(1.0), 5.0);
         assert_eq!(s.served, 3);
+    }
+
+    #[test]
+    fn histogram_tracks_exact_percentiles_within_bucket_error() {
+        // the satellite pin: the O(1) histogram path agrees with the
+        // exact order statistic within the log-bucket relative error
+        // on a seeded heavy-tailed trace
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xC0FFEE);
+        let mut s = ServeStats::default();
+        for _ in 0..5000 {
+            // lognormal-ish: sub-ms floor with a long tail
+            let v = 0.2 + (rng.uniform() as f64) * 3.0 + (rng.normal() as f64).exp();
+            s.record(v.abs().max(1e-3));
+        }
+        for p in [0.5, 0.9, 0.95, 0.99, 0.999] {
+            let exact = s.percentile_ms_exact(p);
+            let approx = s.percentile_ms(p);
+            let rel = (approx - exact).abs() / exact;
+            assert!(
+                rel < 0.02,
+                "p{p}: histogram {approx} vs exact {exact} (rel {rel})"
+            );
+        }
     }
 
     #[test]
@@ -313,11 +420,15 @@ mod tests {
         // aborted the whole report on one NaN sample
         let mut s = ServeStats::default();
         s.set_samples(vec![3.0, f64::NAN, 1.0, 2.0]);
-        assert_eq!(s.percentile_ms(0.0), 1.0);
-        // NaN orders last under total_cmp, so p100 is NaN — ugly but
-        // honest, and crucially not a panic
-        assert!(s.percentile_ms(1.0).is_nan());
-        assert_eq!(s.percentile_ms(0.5), 2.5);
+        assert_eq!(s.percentile_ms_exact(0.0), 1.0);
+        // NaN orders last under total_cmp, so exact p100 is NaN — ugly
+        // but honest, and crucially not a panic
+        assert!(s.percentile_ms_exact(1.0).is_nan());
+        assert_eq!(s.percentile_ms_exact(0.5), 2.5);
+        // the histogram path excludes non-finite samples outright, so
+        // the report percentiles stay finite under a clock anomaly
+        assert_eq!(s.percentile_ms(1.0), 3.0);
+        assert!(s.percentile_ms(0.5).is_finite());
     }
 
     #[test]
@@ -344,9 +455,39 @@ mod tests {
         let log = j.get("breaker_log").unwrap().arr().unwrap();
         assert_eq!(log.len(), 2);
         assert_eq!(log[0].arr().unwrap()[2].str().unwrap(), "open");
+        // the grouped faults{} section mirrors the flat counters
+        let f = j.get("faults").unwrap();
+        assert_eq!(f.get("retries").unwrap().usize().unwrap(), 4);
+        assert_eq!(f.get("exec_failures").unwrap().usize().unwrap(), 5);
+        assert_eq!(f.get("breaker_trips").unwrap().usize().unwrap(), 2);
+        assert_eq!(f.get("reply_dropped").unwrap().usize().unwrap(), 3);
+        let by = f.get("shed_by_reason").unwrap();
+        assert_eq!(by.get("timeout").unwrap().usize().unwrap(), 1);
+        assert_eq!(by.get("internal").unwrap().usize().unwrap(), 1);
+        assert_eq!(by.get("queue_full").unwrap().usize().unwrap(), 0);
         // round-trips through the parser
         let back = Json::parse(&j.to_string()).unwrap();
         assert_eq!(back.get("breaker_log").unwrap().arr().unwrap().len(), 2);
+        assert_eq!(
+            back.get("faults").unwrap().get("retries").unwrap().usize().unwrap(),
+            4
+        );
+    }
+
+    #[test]
+    fn diff_registry_finds_drift_and_accepts_agreement() {
+        let mut s = ServeStats::default();
+        s.record(1.0);
+        s.shed(ShedReason::QueueFull);
+        s.retries = 2;
+        let reg = Registry::new();
+        reg.counter_add("requests_offered", 2);
+        reg.counter_add("requests_served", 1);
+        reg.counter_add("requests_shed_queue_full", 1);
+        reg.counter_add("exec_retries", 2);
+        assert_eq!(s.diff_registry(&reg), None);
+        reg.counter_add("exec_retries", 1);
+        assert_eq!(s.diff_registry(&reg), Some(("exec_retries", 2, 3)));
     }
 
     #[test]
